@@ -1,0 +1,56 @@
+//! Scenario driver for the paper's §6.5 scalability study: how much of
+//! the fine-grain DVFS opportunity survives as V/f domains grow from one
+//! CU to half the chip — the question an SoC architect asks when deciding
+//! how many IVR rails to budget.
+//!
+//! Usage: cargo run --release --example domain_granularity
+
+use pcstall::config::SimConfig;
+use pcstall::dvfs::manager::{DvfsManager, Policy, RunMode};
+use pcstall::dvfs::objective::Objective;
+use pcstall::models::EstModel;
+use pcstall::power::params::F_STATIC_IDX;
+use pcstall::stats::emit::print_table;
+use pcstall::workloads;
+
+fn main() {
+    let n_cu = 8;
+    let grans = [1usize, 2, 4];
+    let workload_set = ["comd", "hacc", "xsbench", "dgemm", "BwdBN"];
+
+    let mut rows = Vec::new();
+    for &g in &grans {
+        let mut imp_pc = Vec::new();
+        let mut imp_crisp = Vec::new();
+        let mut imp_or = Vec::new();
+        for wl_name in workload_set {
+            let run = |policy: Policy| {
+                let mut cfg = SimConfig::default();
+                cfg.gpu.n_cu = n_cu;
+                cfg.gpu.n_wf = 16;
+                cfg.dvfs.cus_per_domain = g;
+                let wl = workloads::build(wl_name, 0.08);
+                let mut mgr = DvfsManager::new(cfg, &wl, policy, Objective::Ed2p);
+                mgr.run(RunMode::Completion { max_epochs: 100_000 }, wl_name)
+            };
+            let base = run(Policy::Static(F_STATIC_IDX)).ed2p();
+            imp_crisp.push((1.0 - run(Policy::Reactive(EstModel::Crisp)).ed2p() / base) * 100.0);
+            imp_pc.push((1.0 - run(Policy::PcStall).ed2p() / base) * 100.0);
+            imp_or.push((1.0 - run(Policy::Oracle).ed2p() / base) * 100.0);
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        rows.push(vec![
+            format!("{g} CU/domain ({} domains)", n_cu / g),
+            format!("{:+.1}%", mean(&imp_crisp)),
+            format!("{:+.1}%", mean(&imp_pc)),
+            format!("{:+.1}%", mean(&imp_or)),
+        ]);
+    }
+    print_table(
+        "ED²P improvement vs static 1.7 GHz by V/f-domain granularity (§6.5)",
+        &["granularity", "CRISP", "PCSTALL", "ORACLE"],
+        &rows,
+    );
+    println!("\npaper: opportunity shrinks with coarser domains; PCSTALL keeps");
+    println!("most of ORACLE's win even at large granularity (18% vs 24% @32CU).");
+}

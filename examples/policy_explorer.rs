@@ -1,0 +1,72 @@
+//! Scenario driver: sweep every policy × objective on one workload and
+//! print the power/performance trade-off surface — the tool a power
+//! architect would use to pick an operating policy for a product.
+//!
+//! Usage: cargo run --release --example policy_explorer [-- <workload>]
+
+use pcstall::config::SimConfig;
+use pcstall::dvfs::manager::{DvfsManager, Policy, RunMode};
+use pcstall::dvfs::objective::Objective;
+use pcstall::power::params::{FREQS_GHZ, N_FREQ};
+use pcstall::stats::emit::print_table;
+use pcstall::workloads;
+
+fn main() {
+    let wl_name = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with("--"))
+        .unwrap_or_else(|| "BwdBN".to_string());
+    let mut cfg = SimConfig::default();
+    cfg.gpu.n_cu = 8;
+    cfg.gpu.n_wf = 16;
+
+    let objectives = [
+        Objective::Edp,
+        Objective::Ed2p,
+        Objective::EnergyBound { max_slowdown: 0.05 },
+        Objective::EnergyBound { max_slowdown: 0.10 },
+    ];
+    let mut policies = vec![
+        Policy::Static(0),
+        Policy::Static(4),
+        Policy::Static(N_FREQ - 1),
+    ];
+    policies.extend(Policy::all_dvfs());
+
+    let mut rows = Vec::new();
+    for p in policies {
+        for (oi, &obj) in objectives.iter().enumerate() {
+            // statics ignore the objective; run them once
+            if matches!(p, Policy::Static(_)) && oi > 0 {
+                continue;
+            }
+            let wl = workloads::build(&wl_name, 0.1);
+            let mut mgr = DvfsManager::new(cfg.clone(), &wl, p, obj);
+            let r = mgr.run(RunMode::Completion { max_epochs: 100_000 }, &wl_name);
+            let share = r.freq_time_share();
+            let dominant = share
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(k, s)| format!("{:.1}GHz {:.0}%", FREQS_GHZ[k], s * 100.0))
+                .unwrap();
+            rows.push(vec![
+                r.policy.clone(),
+                r.objective.clone(),
+                format!("{:.2}", r.total_time_ns / 1e6),
+                format!("{:.4}", r.total_energy_j),
+                format!("{:.3e}", r.edp()),
+                format!("{:.3e}", r.ed2p()),
+                format!("{:.3}", r.mean_accuracy),
+                dominant,
+            ]);
+        }
+    }
+    print_table(
+        &format!("policy × objective surface — workload {wl_name}"),
+        &[
+            "policy", "objective", "time_ms", "energy_J", "EDP", "ED2P", "accuracy", "dominant f",
+        ],
+        &rows,
+    );
+}

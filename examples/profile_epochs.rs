@@ -1,0 +1,23 @@
+//! Profiling helper: run compute-heavy epochs in a tight loop.
+use pcstall::config::SimConfig;
+use pcstall::sim::gpu::Gpu;
+use pcstall::workloads;
+fn main() {
+    let mut cfg = SimConfig::default();
+    cfg.gpu.n_cu = 8; cfg.gpu.n_wf = 16;
+    let spec = workloads::build("hacc", 1.0);
+    let mut g = Gpu::new(cfg);
+    g.load_workload(spec.launches(), spec.rounds);
+    let t0 = std::time::Instant::now();
+    let mut n = 0u64;
+    while t0.elapsed().as_secs_f64() < 4.0 {
+        g.run_epoch();
+        n += 1;
+        if g.workload_done() {
+            let spec = workloads::build("hacc", 1.0);
+            g.load_workload(spec.launches(), spec.rounds);
+        }
+    }
+    let cycles: u64 = g.cus.iter().map(|c| c.counters.cycles).sum();
+    println!("epochs {n}, last epoch cycles {cycles}, {:.1} epochs/s", n as f64 / 4.0);
+}

@@ -1,0 +1,31 @@
+//! Quickstart: one workload, PCSTALL vs static 1.7 GHz, ED²P report.
+use pcstall::config::SimConfig;
+use pcstall::dvfs::manager::{DvfsManager, Policy, RunMode};
+use pcstall::dvfs::objective::Objective;
+use pcstall::workloads;
+
+fn main() {
+    let mut cfg = SimConfig::small();
+    cfg.gpu.n_cu = 8;
+    cfg.gpu.n_wf = 16;
+    let wl = workloads::build("comd", 0.2);
+
+    let t0 = std::time::Instant::now();
+    let mut m = DvfsManager::new(cfg.clone(), &wl, Policy::Static(4), Objective::Ed2p);
+    let st = m.run(RunMode::Completion { max_epochs: 5000 }, "comd");
+    println!("static: {} epochs, {:.2?}, E={:.4} J, done={}", st.records.len(), t0.elapsed(), st.total_energy_j, st.completed);
+
+    let t0 = std::time::Instant::now();
+    let mut m = DvfsManager::new(cfg.clone(), &wl, Policy::PcStall, Objective::Ed2p);
+    let pc = m.run(RunMode::Completion { max_epochs: 5000 }, "comd");
+    println!("pcstall: {} epochs, {:.2?}, E={:.4} J done={}", pc.records.len(), t0.elapsed(), pc.total_energy_j, pc.completed);
+
+    let t0 = std::time::Instant::now();
+    let mut m = DvfsManager::new(cfg, &wl, Policy::Oracle, Objective::Ed2p);
+    let or = m.run(RunMode::Completion { max_epochs: 5000 }, "comd");
+    println!("oracle: {} epochs, {:.2?}, E={:.4} J done={}", or.records.len(), t0.elapsed(), or.total_energy_j, or.completed);
+
+    println!("ED2P: static {:.4e}  pcstall {:.4e} ({:+.1}%)  oracle {:.4e} ({:+.1}%)",
+        st.ed2p(), pc.ed2p(), (pc.ed2p()/st.ed2p()-1.0)*100.0, or.ed2p(), (or.ed2p()/st.ed2p()-1.0)*100.0);
+    println!("accuracy: pcstall {:.3} oracle {:.3}", pc.mean_accuracy, or.mean_accuracy);
+}

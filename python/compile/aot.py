@@ -1,0 +1,107 @@
+"""AOT lowering: jax ``dvfs_step`` -> HLO text for the Rust PJRT runtime.
+
+HLO *text* (NOT ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids
+which the ``xla`` crate's bundled xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and
+round-trips cleanly — see /opt/xla-example/README.md.
+
+Usage (from ``make artifacts``):
+    cd python && python -m compile.aot --out ../artifacts/dvfs_step.hlo.txt
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import params as P
+from .model import dvfs_step, example_args
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_path: str, n_cu: int = P.N_CU, n_wf: int = P.N_WF) -> dict:
+    lowered = jax.jit(dvfs_step).lower(*example_args(n_cu=n_cu, n_wf=n_wf))
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write(text)
+
+    # Metadata sidecar: the Rust runtime validates shapes + constants hash
+    # so a stale artifact fails loudly instead of silently mispredicting.
+    meta = {
+        "artifact": os.path.basename(out_path),
+        "n_cu": n_cu,
+        "n_wf": n_wf,
+        "n_dom": n_cu,
+        "n_freq": P.N_FREQ,
+        "freqs_ghz": P.FREQS_GHZ,
+        "constants": {
+            "v0": P.V0_VOLTS,
+            "kv": P.KV_VOLTS_PER_GHZ,
+            "vnom": P.V_NOM,
+            "c1": P.C1_W,
+            "c2": P.C2_W,
+            "l0": P.L0_W,
+            "lv": P.LV_PER_VOLT,
+            "eta0": P.ETA0,
+            "eta_slope": P.ETA_SLOPE,
+            "eps": P.EPS,
+        },
+        "hlo_sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "inputs": [
+            {"name": "instr", "shape": [n_cu, n_wf]},
+            {"name": "t_core_ns", "shape": [n_cu, n_wf]},
+            {"name": "age_factor", "shape": [n_cu, n_wf]},
+            {"name": "freq_ghz", "shape": [n_cu]},
+            {"name": "pred_sens", "shape": [n_cu]},
+            {"name": "pred_i0", "shape": [n_cu]},
+            {"name": "mask", "shape": [n_cu]},
+            {"name": "n_exp", "shape": [1]},
+            {"name": "epoch_ns", "shape": [1]},
+        ],
+        "outputs": [
+            {"name": "sens_wf", "shape": [n_cu, n_wf]},
+            {"name": "sens_cu", "shape": [n_cu]},
+            {"name": "i0_cu", "shape": [n_cu]},
+            {"name": "pred_instr", "shape": [n_cu, P.N_FREQ]},
+            {"name": "power_w", "shape": [n_cu, P.N_FREQ]},
+            {"name": "ednp", "shape": [n_cu, P.N_FREQ]},
+            {"name": "best_idx", "shape": [n_cu]},
+        ],
+    }
+    meta_path = os.path.splitext(out_path)[0]
+    if meta_path.endswith(".hlo"):
+        meta_path = meta_path[: -len(".hlo")]
+    meta_path += ".meta.json"
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/dvfs_step.hlo.txt")
+    ap.add_argument("--n-cu", type=int, default=P.N_CU)
+    ap.add_argument("--n-wf", type=int, default=P.N_WF)
+    args = ap.parse_args()
+    meta = build(args.out, n_cu=args.n_cu, n_wf=args.n_wf)
+    print(
+        f"wrote {args.out} (n_cu={meta['n_cu']}, n_wf={meta['n_wf']}, "
+        f"sha256={meta['hlo_sha256'][:12]}...)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Pure-jnp reference oracle for the two Pallas kernels.
+
+These functions define the *semantics* of the DVFS step; the Pallas
+kernels in ``sensitivity.py`` / ``selector.py`` must match them under
+``jnp.allclose`` (pytest + hypothesis enforce this).  The Rust native
+implementation (``rust/src/dvfs/native.rs``) mirrors the same math and a
+parity integration test compares it against the AOT artifact.
+"""
+
+import jax.numpy as jnp
+
+from .. import params as P
+
+
+def wf_sensitivity_ref(instr, t_core_ns, age_factor, freq_ghz, epoch_ns):
+    """Wavefront-level STALL-model sensitivity estimate (paper §4.4).
+
+    ``Sens_WF = IPC_WF x T_core,WF`` normalized by the wavefront's
+    scheduling-age contention factor.
+
+    Args:
+      instr:       [n_cu, n_wf] f32 — instructions committed this epoch.
+      t_core_ns:   [n_cu, n_wf] f32 — non-stalled (core) time in ns.
+      age_factor:  [n_cu, n_wf] f32 — contention normalization in (0, 1].
+      freq_ghz:    [n_cu]       f32 — CU operating frequency this epoch.
+      epoch_ns:    scalar f32   — epoch duration (IPC denominator).
+
+    Returns:
+      sens_wf: [n_cu, n_wf] — per-wavefront dI/df (instr per GHz).
+      sens_cu: [n_cu]       — CU-level sensitivity (sum over wavefronts).
+      i0_cu:   [n_cu]       — CU-level intercept of I_f = I0 + S*f, >= 0.
+    """
+    instr = jnp.asarray(instr, jnp.float32)
+    t_core_ns = jnp.asarray(t_core_ns, jnp.float32)
+    age_factor = jnp.asarray(age_factor, jnp.float32)
+    freq_ghz = jnp.asarray(freq_ghz, jnp.float32)
+
+    f_col = freq_ghz[:, None]
+    cycles_epoch = jnp.float32(epoch_ns) * f_col  # epoch cycles at f
+    ipc = instr / jnp.maximum(cycles_epoch, P.EPS)
+    sens_wf = ipc * t_core_ns * age_factor
+    sens_cu = jnp.sum(sens_wf, axis=1)
+    i0_cu = jnp.maximum(jnp.sum(instr, axis=1) - sens_cu * freq_ghz, 0.0)
+    return sens_wf, sens_cu, i0_cu
+
+
+def freq_grid_ref(sens_dom, i0_dom, mask, n_exp, epoch_ns):
+    """Objective-grid evaluation over all (domain x V/f-state) pairs.
+
+    For each domain d and frequency state k:
+      I[d,k]    = max(I0[d] + S[d] * f_k, eps)        predicted instructions
+      rate[d,k] = I / epoch_ns                        Ginstr/s
+      P[d,k]    = (C1 V^2 rate + C2 V^2 f + L0 e^{LV (V - Vnom)}) / eta(f)
+      ednp[d,k] = P / rate^n_exp   (n_exp = 2 -> EDP, 3 -> ED^2P)
+
+    Masked-out domains get ednp = +inf on all but state 0 so argmin is
+    deterministic.
+
+    Args:
+      sens_dom: [n_dom] f32 — predicted sensitivity per domain.
+      i0_dom:   [n_dom] f32 — predicted intercept per domain.
+      mask:     [n_dom] f32 — 1.0 for active domains, 0.0 for padding.
+      n_exp:    scalar f32 — delay exponent + 1 (ED^{n}P => n + 1).
+      epoch_ns: scalar f32 — epoch duration in nanoseconds.
+
+    Returns:
+      pred_instr: [n_dom, N_FREQ]
+      power_w:    [n_dom, N_FREQ]
+      ednp:       [n_dom, N_FREQ]
+      best_idx:   [n_dom] f32 — argmin_k ednp (index as float).
+    """
+    sens_dom = jnp.asarray(sens_dom, jnp.float32)
+    i0_dom = jnp.asarray(i0_dom, jnp.float32)
+    mask = jnp.asarray(mask, jnp.float32)
+    n_exp = jnp.float32(n_exp)
+    epoch_ns = jnp.float32(epoch_ns)
+
+    freqs = jnp.asarray(P.FREQS_GHZ, jnp.float32)[None, :]  # [1, NF]
+    volts = P.V0_VOLTS + P.KV_VOLTS_PER_GHZ * (freqs - P.F_MIN_GHZ)
+    eta = P.ETA0 + P.ETA_SLOPE * (freqs - P.F_MIN_GHZ) / (
+        P.F_MAX_GHZ - P.F_MIN_GHZ
+    )
+
+    pred_instr = jnp.maximum(i0_dom[:, None] + sens_dom[:, None] * freqs, P.EPS)
+    rate = pred_instr / epoch_ns  # Ginstr/s
+    v2 = volts * volts
+    p_dyn = P.C1_W * v2 * rate + P.C2_W * v2 * freqs
+    p_leak = P.L0_W * jnp.exp(P.LV_PER_VOLT * (volts - P.V_NOM))
+    power_w = (p_dyn + p_leak) / eta
+
+    ednp = power_w / jnp.power(jnp.maximum(rate, P.EPS), n_exp)
+    inactive = mask[:, None] < 0.5
+    col = jnp.arange(ednp.shape[1], dtype=jnp.float32)[None, :]
+    ednp = jnp.where(inactive & (col > 0.0), jnp.float32(jnp.inf), ednp)
+    best_idx = jnp.argmin(ednp, axis=1).astype(jnp.float32)
+    return pred_instr, power_w, ednp, best_idx
+
+
+def dvfs_step_ref(
+    instr, t_core_ns, age_factor, freq_ghz, pred_sens, pred_i0, mask, n_exp, epoch_ns
+):
+    """Full per-epoch DVFS step = estimation (update path) + selection
+    (lookup path).  Matches ``model.dvfs_step``."""
+    sens_wf, sens_cu, i0_cu = wf_sensitivity_ref(
+        instr, t_core_ns, age_factor, freq_ghz, epoch_ns
+    )
+    pred_instr, power_w, ednp, best_idx = freq_grid_ref(
+        pred_sens, pred_i0, mask, n_exp, epoch_ns
+    )
+    return sens_wf, sens_cu, i0_cu, pred_instr, power_w, ednp, best_idx

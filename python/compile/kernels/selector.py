@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: DVFS objective-grid evaluation + argmin selection.
+
+For every V/f domain the kernel evaluates the predicted instruction
+count, power, and ED^nP objective at all ``N_FREQ`` V/f states, then
+reduces to the argmin state — the tensorized analogue of the per-domain
+hardware comparator tree the paper's DVFS manager would use.
+
+The frequency axis (10 states) lives on lanes (padded to 128 on real
+TPUs); voltage/eta curves are computed in-register from an iota instead
+of a lookup table so the kernel has no gather.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import params as P
+
+
+def _grid_kernel(
+    sens_ref, i0_ref, mask_ref, nexp_ref, epoch_ref,
+    instr_ref, power_ref, ednp_ref, best_ref,
+):
+    sens = sens_ref[...]  # [rows]
+    i0 = i0_ref[...]
+    mask = mask_ref[...]
+    n_exp = nexp_ref[0]
+    epoch_ns = epoch_ref[0]
+
+    rows = sens.shape[0]
+    nf = P.N_FREQ
+    k = jax.lax.broadcasted_iota(jnp.float32, (rows, nf), 1)
+    freqs = P.F_MIN_GHZ + 0.1 * k
+    volts = P.V0_VOLTS + P.KV_VOLTS_PER_GHZ * (freqs - P.F_MIN_GHZ)
+    eta = P.ETA0 + P.ETA_SLOPE * (freqs - P.F_MIN_GHZ) / (
+        P.F_MAX_GHZ - P.F_MIN_GHZ
+    )
+
+    pred_instr = jnp.maximum(i0[:, None] + sens[:, None] * freqs, P.EPS)
+    rate = pred_instr / epoch_ns
+    v2 = volts * volts
+    p_dyn = P.C1_W * v2 * rate + P.C2_W * v2 * freqs
+    p_leak = P.L0_W * jnp.exp(P.LV_PER_VOLT * (volts - P.V_NOM))
+    power = (p_dyn + p_leak) / eta
+
+    ednp = power / jnp.power(jnp.maximum(rate, P.EPS), n_exp)
+    inactive = mask[:, None] < 0.5
+    ednp = jnp.where(inactive & (k > 0.0), jnp.float32(jnp.inf), ednp)
+
+    instr_ref[...] = pred_instr
+    power_ref[...] = power
+    ednp_ref[...] = ednp
+    best_ref[...] = jnp.argmin(ednp, axis=1).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def freq_grid(sens_dom, i0_dom, mask, n_exp, epoch_ns, *, interpret=True):
+    """Pallas-call wrapper.
+
+    Args:
+      sens_dom, i0_dom, mask: ``[n_dom]`` f32.
+      n_exp, epoch_ns: ``[1]`` f32 (scalar prefetch-style operands).
+
+    Returns ``(pred_instr, power_w, ednp)`` each ``[n_dom, N_FREQ]`` and
+    ``best_idx`` ``[n_dom]``.
+    """
+    n_dom = sens_dom.shape[0]
+    # §Perf L2: single whole-array block (see sensitivity.py).
+    rows = n_dom
+    grid = (n_dom // rows,)
+
+    vec_spec = pl.BlockSpec((rows,), lambda i: (i,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    mat_spec = pl.BlockSpec((rows, P.N_FREQ), lambda i: (i, 0))
+
+    return pl.pallas_call(
+        _grid_kernel,
+        grid=grid,
+        in_specs=[vec_spec, vec_spec, vec_spec, scalar_spec, scalar_spec],
+        out_specs=[mat_spec, mat_spec, mat_spec, vec_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_dom, P.N_FREQ), jnp.float32),
+            jax.ShapeDtypeStruct((n_dom, P.N_FREQ), jnp.float32),
+            jax.ShapeDtypeStruct((n_dom, P.N_FREQ), jnp.float32),
+            jax.ShapeDtypeStruct((n_dom,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        sens_dom.astype(jnp.float32),
+        i0_dom.astype(jnp.float32),
+        mask.astype(jnp.float32),
+        jnp.asarray(n_exp, jnp.float32).reshape(1),
+        jnp.asarray(epoch_ns, jnp.float32).reshape(1),
+    )

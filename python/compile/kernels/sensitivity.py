@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: batched wavefront-level sensitivity estimation.
+
+This is the paper's per-wavefront STALL estimator (§4.4) recast as one
+tensor kernel over the whole ``[n_cu, n_wf]`` wavefront grid instead of
+64 per-CU hardware state machines — see DESIGN.md §Hardware-Adaptation.
+
+TPU mapping notes (the kernel is lowered with ``interpret=True`` for the
+CPU PJRT runtime; the BlockSpec structure is what we would ship to a real
+TPU):
+
+* The whole problem (64 x 40 x 4 B per operand ≈ 10 KiB x 4 operands) is
+  VMEM-resident; we still tile over CU rows so the same kernel scales to
+  larger GPUs without spilling.
+* The wavefront axis is the lane axis; 40 lanes pad to 128 on real
+  hardware.  All ops are elementwise + a lane-axis reduction, so the
+  roofline is VPU/memory — the MXU is intentionally unused.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import params as P
+
+
+def _sens_kernel(instr_ref, tcore_ref, age_ref, freq_ref, epoch_ref, sens_ref, senscu_ref, i0_ref):
+    """One CU-row tile: sens_wf = IPC * T_core * age, plus row reductions.
+
+    IPC is the wavefront's *epoch-wide* commit rate in instructions per
+    cycle (instr / (epoch * f)); multiplied by the core (non-stalled)
+    time it yields dI/df, and the relative-age factor redistributes the
+    estimate across contending wavefronts (paper §4.4).
+    """
+    instr = instr_ref[...]
+    t_core = tcore_ref[...]
+    age = age_ref[...]
+    freq = freq_ref[...]  # [rows]
+    epoch_ns = epoch_ref[0]
+
+    f_col = freq[:, None]
+    cycles_epoch = epoch_ns * f_col
+    ipc = instr / jnp.maximum(cycles_epoch, P.EPS)
+    sens_wf = ipc * t_core * age
+
+    sens_cu = jnp.sum(sens_wf, axis=1)
+    i0_cu = jnp.maximum(jnp.sum(instr, axis=1) - sens_cu * freq, 0.0)
+
+    sens_ref[...] = sens_wf
+    senscu_ref[...] = sens_cu
+    i0_ref[...] = i0_cu
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wf_sensitivity(instr, t_core_ns, age_factor, freq_ghz, epoch_ns, *, interpret=True):
+    """Pallas-call wrapper; shapes ``[n_cu, n_wf]`` + ``[n_cu]`` + ``[1]``.
+
+    Returns ``(sens_wf [n_cu, n_wf], sens_cu [n_cu], i0_cu [n_cu])``.
+    """
+    n_cu, n_wf = instr.shape
+    # §Perf L2: a gridded pallas_call lowers (in interpret mode) to an HLO
+    # while-loop — 8 sequential trips blocked XLA fusion and tripled the
+    # artifact's execute time.  The whole [64, 40] problem is ~10 KiB (VMEM-
+    # trivial), so use one whole-array block; the row-tiling BlockSpec
+    # structure below still scales the kernel to larger GPUs.
+    rows = n_cu
+    grid = (n_cu // rows,)
+
+    mat_spec = pl.BlockSpec((rows, n_wf), lambda i: (i, 0))
+    vec_spec = pl.BlockSpec((rows,), lambda i: (i,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+
+    return pl.pallas_call(
+        _sens_kernel,
+        grid=grid,
+        in_specs=[mat_spec, mat_spec, mat_spec, vec_spec, scalar_spec],
+        out_specs=[mat_spec, vec_spec, vec_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_cu, n_wf), jnp.float32),
+            jax.ShapeDtypeStruct((n_cu,), jnp.float32),
+            jax.ShapeDtypeStruct((n_cu,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        instr.astype(jnp.float32),
+        t_core_ns.astype(jnp.float32),
+        age_factor.astype(jnp.float32),
+        freq_ghz.astype(jnp.float32),
+        jnp.asarray(epoch_ns, jnp.float32).reshape(1),
+    )

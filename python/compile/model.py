@@ -1,0 +1,59 @@
+"""L2: the per-epoch DVFS-step compute graph.
+
+Composes the two Pallas kernels (wavefront sensitivity estimation +
+frequency objective grid) into the single function that is AOT-lowered
+to ``artifacts/dvfs_step.hlo.txt`` and executed from the Rust
+coordinator's epoch loop.  Python never runs at simulation time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import params as P
+from .kernels.selector import freq_grid
+from .kernels.sensitivity import wf_sensitivity
+
+
+def dvfs_step(
+    instr, t_core_ns, age_factor, freq_ghz, pred_sens, pred_i0, mask, n_exp, epoch_ns
+):
+    """One DVFS epoch boundary.
+
+    Update path: estimate per-wavefront and per-CU sensitivity of the
+    *elapsed* epoch (feeds the PC table / reactive state in Rust).
+
+    Lookup path: given the predicted sensitivity/intercept of the *next*
+    epoch per domain, evaluate the objective grid and pick the best V/f
+    state per domain.
+
+    All array shapes are static; the artifact is built at the 64-CU GPU
+    default and Rust masks/pads for smaller configurations.
+
+    Returns a 7-tuple:
+      sens_wf [n_cu, n_wf], sens_cu [n_cu], i0_cu [n_cu],
+      pred_instr [n_dom, NF], power_w [n_dom, NF], ednp [n_dom, NF],
+      best_idx [n_dom].
+    """
+    sens_wf, sens_cu, i0_cu = wf_sensitivity(
+        instr, t_core_ns, age_factor, freq_ghz, epoch_ns
+    )
+    pred_instr, power_w, ednp, best_idx = freq_grid(
+        pred_sens, pred_i0, mask, n_exp, epoch_ns
+    )
+    return sens_wf, sens_cu, i0_cu, pred_instr, power_w, ednp, best_idx
+
+
+def example_args(n_cu=P.N_CU, n_wf=P.N_WF, n_dom=P.N_CU):
+    """ShapeDtypeStructs used for AOT lowering (order matches dvfs_step)."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n_cu, n_wf), f32),  # instr
+        jax.ShapeDtypeStruct((n_cu, n_wf), f32),  # t_core_ns
+        jax.ShapeDtypeStruct((n_cu, n_wf), f32),  # age_factor
+        jax.ShapeDtypeStruct((n_cu,), f32),       # freq_ghz
+        jax.ShapeDtypeStruct((n_dom,), f32),      # pred_sens
+        jax.ShapeDtypeStruct((n_dom,), f32),      # pred_i0
+        jax.ShapeDtypeStruct((n_dom,), f32),      # mask
+        jax.ShapeDtypeStruct((1,), f32),          # n_exp
+        jax.ShapeDtypeStruct((1,), f32),          # epoch_ns
+    )

@@ -1,0 +1,61 @@
+"""Shared physical/model constants for the PCSTALL DVFS step.
+
+These constants are the single Python-side source of truth; the Rust
+coordinator mirrors them in ``rust/src/power/params.rs``.  A parity
+integration test (``rust/tests/pjrt_parity.rs``) executes the AOT artifact
+and the native Rust implementation on the same inputs and asserts
+agreement to 1e-4, so any drift between the two copies is caught in CI.
+
+Units used throughout the stack:
+
+* frequency      — GHz
+* time           — nanoseconds (epoch durations, core/stall time)
+* sensitivity    — instructions per GHz over one epoch (dI/df)
+* power          — watts (per CU / per V/f domain)
+* rate           — Giga-instructions per second (= instructions / ns)
+"""
+
+# --- V/f operating points (paper §5: 1.3–2.2 GHz in 100 MHz steps) -------
+N_FREQ = 10
+FREQS_GHZ = [1.3 + 0.1 * i for i in range(N_FREQ)]
+F_MIN_GHZ = FREQS_GHZ[0]
+F_MAX_GHZ = FREQS_GHZ[-1]
+F_STATIC_GHZ = 1.7  # the paper's normalization point (Figs. 15, 17)
+
+# --- voltage curve (linear over the IVR range, paper §5.4) ---------------
+# V(f) = V0 + KV * (f - F_MIN);  1.3 GHz -> 0.75 V, 2.2 GHz -> 1.05 V
+V0_VOLTS = 0.75
+KV_VOLTS_PER_GHZ = (1.05 - 0.75) / (F_MAX_GHZ - F_MIN_GHZ)
+V_NOM = 0.90  # leakage reference voltage
+
+# --- per-CU power model: P = C1*V^2*rate + C2*V^2*f + leak(V), / eta ------
+# C1: instruction-driven switching (W per V^2 per Ginstr/s)
+# C2: clock-tree + idle pipeline switching (W per V^2 per GHz)
+# L0/LV: leakage magnitude and exponential voltage slope (paper notes the
+#        leakage variation over the small IVR range is mild).
+C1_W = 0.9
+C2_W = 0.6
+L0_W = 0.35
+LV_PER_VOLT = 2.0
+
+# --- IVR conversion efficiency per state (paper's DLDO, §5 power model) --
+# eta(f) = ETA0 + ETA_SLOPE * (f - F_MIN) / (F_MAX - F_MIN)
+ETA0 = 0.88
+ETA_SLOPE = 0.05
+
+# --- default artifact shapes (64-CU Vega-class GPU, 40 WF slots / CU) ----
+N_CU = 64
+N_WF = 40
+
+# numerical floor used by both kernels when dividing by core cycles/rate
+EPS = 1e-6
+
+
+def voltage(f_ghz):
+    """V(f) on the IVR line."""
+    return V0_VOLTS + KV_VOLTS_PER_GHZ * (f_ghz - F_MIN_GHZ)
+
+
+def ivr_eta(f_ghz):
+    """IVR conversion efficiency at the state supplying frequency f."""
+    return ETA0 + ETA_SLOPE * (f_ghz - F_MIN_GHZ) / (F_MAX_GHZ - F_MIN_GHZ)

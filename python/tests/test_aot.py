@@ -1,0 +1,51 @@
+"""AOT artifact build checks: HLO text is parseable-shaped, metadata is
+consistent, and the lowering contains no TPU-only custom calls."""
+
+import json
+import os
+import tempfile
+
+from compile import params as P
+from compile.aot import build
+
+
+def test_build_writes_hlo_and_meta():
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "dvfs_step.hlo.txt")
+        meta = build(out, n_cu=8, n_wf=8)
+        text = open(out).read()
+        assert text.startswith("HloModule")
+        # all 9 params and the 7-tuple root must be present
+        assert "f32[8,8]" in text
+        assert meta["n_cu"] == 8 and meta["n_wf"] == 8
+        sidecar = json.load(open(os.path.join(d, "dvfs_step.meta.json")))
+        assert sidecar["hlo_sha256"] == meta["hlo_sha256"]
+        assert len(sidecar["inputs"]) == 9
+        assert len(sidecar["outputs"]) == 7
+
+
+def test_no_mosaic_custom_call():
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "a.hlo.txt")
+        build(out, n_cu=8, n_wf=8)
+        text = open(out).read().lower()
+        assert "mosaic" not in text
+        assert "custom-call" not in text
+
+
+def test_constants_match_params():
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "a.hlo.txt")
+        meta = build(out, n_cu=8, n_wf=8)
+        c = meta["constants"]
+        assert c["c1"] == P.C1_W and c["c2"] == P.C2_W
+        assert c["v0"] == P.V0_VOLTS
+        assert meta["freqs_ghz"][0] == P.F_MIN_GHZ
+        assert len(meta["freqs_ghz"]) == P.N_FREQ
+
+
+def test_build_is_deterministic():
+    with tempfile.TemporaryDirectory() as d:
+        m1 = build(os.path.join(d, "a.hlo.txt"), n_cu=8, n_wf=8)
+        m2 = build(os.path.join(d, "b.hlo.txt"), n_cu=8, n_wf=8)
+        assert m1["hlo_sha256"] == m2["hlo_sha256"]

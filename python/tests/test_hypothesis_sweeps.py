@@ -1,0 +1,109 @@
+"""Hypothesis property sweeps: Pallas kernels vs the jnp reference across
+randomized shapes and value regimes (including degenerate epochs)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from compile import params as P
+from compile.kernels.ref import freq_grid_ref, wf_sensitivity_ref
+from compile.kernels.sensitivity import wf_sensitivity
+from compile.kernels.selector import freq_grid
+
+_shapes = st.tuples(st.integers(1, 32), st.integers(1, 48))
+
+
+def _finite_f32(lo, hi):
+    # snap bounds to exactly-representable f32 values (hypothesis requires it)
+    lo = float(np.nextafter(np.float32(lo), np.float32(np.inf)))
+    hi = float(np.nextafter(np.float32(hi), np.float32(-np.inf)))
+    return st.floats(
+        min_value=lo, max_value=hi, allow_nan=False, allow_infinity=False, width=32
+    )
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    shape=_shapes,
+    data=st.data(),
+)
+def test_wf_sensitivity_matches_ref(shape, data):
+    n_cu, n_wf = shape
+    instr = data.draw(
+        hnp.arrays(np.float32, (n_cu, n_wf), elements=_finite_f32(0.0, 1e5))
+    )
+    t_core = data.draw(
+        hnp.arrays(np.float32, (n_cu, n_wf), elements=_finite_f32(0.0, 1e5))
+    )
+    age = data.draw(
+        hnp.arrays(np.float32, (n_cu, n_wf), elements=_finite_f32(0.0, 1.0))
+    )
+    freq = data.draw(
+        hnp.arrays(np.float32, (n_cu,), elements=_finite_f32(P.F_MIN_GHZ, P.F_MAX_GHZ))
+    )
+    epoch_ns = np.float32(1000.0)
+    got = wf_sensitivity(instr, t_core, age, freq, epoch_ns)
+    want = wf_sensitivity_ref(instr, t_core, age, freq, epoch_ns)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=3e-5, atol=1e-4
+        )
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n_dom=st.integers(1, 64),
+    n_exp=st.sampled_from([1.0, 2.0, 3.0]),
+    epoch_ns=st.sampled_from([1_000.0, 10_000.0, 50_000.0, 100_000.0]),
+    data=st.data(),
+)
+def test_freq_grid_matches_ref(n_dom, n_exp, epoch_ns, data):
+    sens = data.draw(
+        hnp.arrays(np.float32, (n_dom,), elements=_finite_f32(0.0, 50.0 * epoch_ns))
+    )
+    i0 = data.draw(
+        hnp.arrays(np.float32, (n_dom,), elements=_finite_f32(0.0, 4.0 * epoch_ns))
+    )
+    mask_bits = data.draw(st.lists(st.booleans(), min_size=n_dom, max_size=n_dom))
+    mask = np.asarray(mask_bits, np.float32)
+    got = freq_grid(sens, i0, mask, n_exp, epoch_ns)
+    want = freq_grid_ref(sens, i0, mask, n_exp, epoch_ns)
+    for g, w in zip(got, want):
+        g, w = np.asarray(g), np.asarray(w)
+        finite = np.isfinite(w)
+        assert (np.isfinite(g) == finite).all()
+        np.testing.assert_allclose(g[finite], w[finite], rtol=3e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_dom=st.integers(1, 16),
+    data=st.data(),
+)
+def test_best_idx_is_true_argmin(n_dom, data):
+    """best_idx must be consistent with the emitted ednp grid."""
+    sens = data.draw(
+        hnp.arrays(np.float32, (n_dom,), elements=_finite_f32(0.0, 4e4))
+    )
+    i0 = data.draw(hnp.arrays(np.float32, (n_dom,), elements=_finite_f32(0.0, 4e3)))
+    mask = np.ones((n_dom,), np.float32)
+    _, _, ednp, best = freq_grid(sens, i0, mask, 3.0, 1000.0)
+    ednp, best = np.asarray(ednp), np.asarray(best).astype(int)
+    np.testing.assert_array_equal(best, np.argmin(ednp, axis=1))
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_sensitivity_scale_invariance(data):
+    """Scaling instr and t_core by the same time factor scales sens by the
+    same factor (the estimator is epoch-length covariant)."""
+    rngseed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(rngseed)
+    k = data.draw(st.sampled_from([2.0, 5.0, 10.0]))
+    instr = rng.uniform(1.0, 1e3, (4, 8)).astype(np.float32)
+    t_core = rng.uniform(1.0, 1e3, (4, 8)).astype(np.float32)
+    age = np.ones((4, 8), np.float32)
+    freq = np.full((4,), 1.8, np.float32)
+    s1, _, _ = wf_sensitivity(instr, t_core, age, freq, 1000.0)
+    s2, _, _ = wf_sensitivity(instr * k, t_core * k, age, freq, np.float32(1000.0 * k))
+    np.testing.assert_allclose(np.asarray(s2), k * np.asarray(s1), rtol=1e-3)

@@ -1,0 +1,110 @@
+"""Pallas freq_grid kernel vs reference + semantic checks on the DVFS
+objective (the physics the whole evaluation rests on)."""
+
+import numpy as np
+import pytest
+
+from compile import params as P
+from compile.kernels.ref import freq_grid_ref
+from compile.kernels.selector import freq_grid
+
+
+def rand_inputs(rng, n_dom, epoch_ns=1000.0):
+    sens = rng.uniform(0.0, 40.0 * epoch_ns, (n_dom,)).astype(np.float32)
+    i0 = rng.uniform(0.0, 2.0 * epoch_ns, (n_dom,)).astype(np.float32)
+    mask = np.ones((n_dom,), np.float32)
+    return sens, i0, mask
+
+
+def run_both(sens, i0, mask, n_exp=3.0, epoch_ns=1000.0):
+    got = freq_grid(sens, i0, mask, n_exp, epoch_ns)
+    want = freq_grid_ref(sens, i0, mask, n_exp, epoch_ns)
+    return got, want
+
+
+@pytest.mark.parametrize("n_dom", [1, 2, 8, 64])
+@pytest.mark.parametrize("n_exp", [1.0, 2.0, 3.0])
+def test_matches_ref(n_dom, n_exp):
+    rng = np.random.default_rng(int(n_dom * 10 + n_exp))
+    got, want = run_both(*rand_inputs(rng, n_dom), n_exp=n_exp)
+    for g, w in zip(got, want):
+        g, w = np.asarray(g), np.asarray(w)
+        finite = np.isfinite(w)
+        np.testing.assert_allclose(g[finite], w[finite], rtol=2e-5, atol=1e-6)
+        assert (np.isfinite(g) == finite).all()
+
+
+def test_compute_bound_domain_prefers_high_freq_ed2p():
+    """Pure compute phase under ED^2P should select the top V/f state
+    (paper Fig. 16: dgemm/hacc live at high frequencies)."""
+    epoch = 1000.0
+    sens = np.array([40.0 * epoch], np.float32)  # 40 fully-busy wavefronts
+    i0 = np.array([0.0], np.float32)
+    *_, best = freq_grid(sens, i0, np.ones(1, np.float32), 3.0, epoch)
+    assert int(np.asarray(best)[0]) == P.N_FREQ - 1
+
+
+def test_memory_bound_domain_prefers_low_freq():
+    """Zero sensitivity: instructions don't scale with f, so the lowest
+    V/f state minimizes every ED^nP (paper Fig. 16: hpgmg/xsbench)."""
+    epoch = 1000.0
+    sens = np.array([0.0], np.float32)
+    i0 = np.array([800.0], np.float32)
+    for n_exp in (1.0, 2.0, 3.0):
+        *_, best = freq_grid(sens, i0, np.ones(1, np.float32), n_exp, epoch)
+        assert int(np.asarray(best)[0]) == 0
+
+
+def test_intermediate_sensitivity_midrange():
+    """Sweeping sensitivity from 0 to max moves the chosen state
+    monotonically upward through the range."""
+    epoch = 1000.0
+    chosen = []
+    for s in np.linspace(0.0, 40.0 * epoch, 24, dtype=np.float32):
+        *_, best = freq_grid(
+            np.array([s], np.float32),
+            np.array([200.0], np.float32),
+            np.ones(1, np.float32),
+            3.0,
+            epoch,
+        )
+        chosen.append(int(np.asarray(best)[0]))
+    assert chosen == sorted(chosen)
+    assert chosen[0] == 0 and chosen[-1] == P.N_FREQ - 1
+
+
+def test_power_increases_with_frequency():
+    rng = np.random.default_rng(3)
+    sens, i0, mask = rand_inputs(rng, 8)
+    _, power, _, _ = freq_grid(sens, i0, mask, 3.0, 1000.0)
+    power = np.asarray(power)
+    assert (np.diff(power, axis=1) > 0.0).all()
+
+
+def test_pred_instr_linear_in_frequency():
+    sens = np.array([1000.0], np.float32)
+    i0 = np.array([500.0], np.float32)
+    instr, *_ = freq_grid(sens, i0, np.ones(1, np.float32), 3.0, 1000.0)
+    instr = np.asarray(instr)[0]
+    for k, f in enumerate(P.FREQS_GHZ):
+        np.testing.assert_allclose(instr[k], 500.0 + 1000.0 * f, rtol=1e-5)
+
+
+def test_masked_domain_argmin_is_state_zero():
+    sens = np.array([40000.0, 40000.0], np.float32)
+    i0 = np.zeros(2, np.float32)
+    mask = np.array([1.0, 0.0], np.float32)
+    _, _, ednp, best = freq_grid(sens, i0, mask, 3.0, 1000.0)
+    assert int(np.asarray(best)[1]) == 0
+    assert np.isinf(np.asarray(ednp)[1, 1:]).all()
+
+
+def test_edp_vs_ed2p_ordering():
+    """ED^2P weights delay more -> chosen frequency under ED^2P is >= the
+    EDP choice for the same phase (paper §6.3: EDP gains are milder)."""
+    rng = np.random.default_rng(5)
+    for _ in range(32):
+        sens, i0, mask = rand_inputs(rng, 4)
+        *_, b_edp = freq_grid(sens, i0, mask, 2.0, 1000.0)
+        *_, b_ed2p = freq_grid(sens, i0, mask, 3.0, 1000.0)
+        assert (np.asarray(b_ed2p) >= np.asarray(b_edp)).all()

@@ -1,0 +1,105 @@
+"""Pallas wf_sensitivity kernel vs pure-jnp reference — the core L1
+correctness signal, plus semantic unit checks on the estimator itself."""
+
+import numpy as np
+import pytest
+
+from compile import params as P
+from compile.kernels.ref import wf_sensitivity_ref
+from compile.kernels.sensitivity import wf_sensitivity
+
+
+def rand_inputs(rng, n_cu, n_wf, epoch_ns=1000.0):
+    instr = rng.uniform(0.0, 2.5 * epoch_ns, (n_cu, n_wf)).astype(np.float32)
+    t_core = rng.uniform(0.0, epoch_ns, (n_cu, n_wf)).astype(np.float32)
+    age = rng.uniform(0.05, 1.0, (n_cu, n_wf)).astype(np.float32)
+    freq = rng.uniform(P.F_MIN_GHZ, P.F_MAX_GHZ, (n_cu,)).astype(np.float32)
+    return instr, t_core, age, freq, np.float32(epoch_ns)
+
+
+def assert_matches_ref(instr, t_core, age, freq, epoch_ns):
+    got = wf_sensitivity(instr, t_core, age, freq, epoch_ns)
+    want = wf_sensitivity_ref(instr, t_core, age, freq, epoch_ns)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n_cu", [1, 3, 8, 16, 64])
+@pytest.mark.parametrize("n_wf", [1, 7, 40])
+def test_matches_ref_shapes(n_cu, n_wf):
+    rng = np.random.default_rng(n_cu * 100 + n_wf)
+    assert_matches_ref(*rand_inputs(rng, n_cu, n_wf))
+
+
+def test_zero_core_time_gives_zero_sensitivity():
+    """A fully memory-stalled wavefront (t_core = 0) has sensitivity 0."""
+    instr = np.full((4, 8), 100.0, np.float32)
+    t_core = np.zeros((4, 8), np.float32)
+    age = np.ones((4, 8), np.float32)
+    freq = np.full((4,), 1.7, np.float32)
+    sens_wf, sens_cu, i0_cu = wf_sensitivity(instr, t_core, age, freq, 1000.0)
+    np.testing.assert_allclose(np.asarray(sens_wf), 0.0, atol=1e-3)
+    # everything becomes intercept: these instructions arrive regardless of f
+    np.testing.assert_allclose(np.asarray(i0_cu), 800.0, rtol=1e-4)
+
+
+def test_fully_compute_bound_wavefront():
+    """t_core == epoch and IPC == 1: sens == epoch_ns, I0 == 0."""
+    epoch = 1000.0
+    f = 2.0
+    instr = np.full((8, 8), epoch * f, np.float32)  # 1 instr / cycle
+    t_core = np.full((8, 8), epoch, np.float32)
+    age = np.ones((8, 8), np.float32)
+    freq = np.full((8,), f, np.float32)
+    sens_wf, sens_cu, i0_cu = wf_sensitivity(instr, t_core, age, freq, epoch)
+    np.testing.assert_allclose(np.asarray(sens_wf), epoch, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(sens_cu), 8 * epoch, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(i0_cu), 0.0, atol=1e-1)
+
+
+def test_age_factor_scales_linearly():
+    rng = np.random.default_rng(7)
+    instr, t_core, _, freq, epoch = rand_inputs(rng, 8, 8)
+    ones = np.ones((8, 8), np.float32)
+    halves = np.full((8, 8), 0.5, np.float32)
+    s1, _, _ = wf_sensitivity(instr, t_core, ones, freq, epoch)
+    s2, _, _ = wf_sensitivity(instr, t_core, halves, freq, epoch)
+    np.testing.assert_allclose(np.asarray(s2), 0.5 * np.asarray(s1), rtol=1e-5)
+
+
+def test_sensitivity_is_commutative_across_wavefronts():
+    """Paper §4.2: domain sensitivity is the *sum* of WF sensitivities —
+    permuting wavefront slots must not change the CU aggregate."""
+    rng = np.random.default_rng(11)
+    instr, t_core, age, freq, epoch = rand_inputs(rng, 8, 16)
+    perm = rng.permutation(16)
+    _, sens_cu_a, i0_a = wf_sensitivity(instr, t_core, age, freq, epoch)
+    _, sens_cu_b, i0_b = wf_sensitivity(
+        instr[:, perm], t_core[:, perm], age[:, perm], freq, epoch
+    )
+    np.testing.assert_allclose(np.asarray(sens_cu_a), np.asarray(sens_cu_b), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(i0_a), np.asarray(i0_b), rtol=1e-4, atol=1e-3)
+
+
+def test_intercept_nonnegative():
+    rng = np.random.default_rng(13)
+    for _ in range(16):
+        instr, t_core, age, freq, epoch = rand_inputs(rng, 8, 8)
+        _, _, i0 = wf_sensitivity(instr, t_core, age, freq, epoch)
+        assert (np.asarray(i0) >= 0.0).all()
+
+
+def test_noninterpret_lowering_has_no_custom_call():
+    """interpret=True must lower to plain HLO the CPU PJRT client can run."""
+    import jax
+    import jax.numpy as jnp
+
+    spec = [
+        jnp.zeros((8, 8), jnp.float32),
+        jnp.zeros((8, 8), jnp.float32),
+        jnp.ones((8, 8), jnp.float32),
+        jnp.full((8,), 1.7, jnp.float32),
+        jnp.full((1,), 1000.0, jnp.float32),
+    ]
+    text = jax.jit(lambda a, b, c, d, e: wf_sensitivity(a, b, c, d, e)).lower(*spec).as_text()
+    assert "mosaic" not in text.lower()

@@ -1,0 +1,36 @@
+//! Bench form of Fig. 1a: end-to-end ED²P runs across epoch durations.
+//! Reports wall time per configuration and the resulting improvement so
+//! perf regressions in the full pipeline are visible.
+
+use pcstall::dvfs::manager::{DvfsManager, Policy, RunMode};
+use pcstall::dvfs::objective::Objective;
+use pcstall::power::params::F_STATIC_IDX;
+use pcstall::stats::bench::fmt_ns;
+use pcstall::workloads;
+
+fn run(epoch_ns: f64, policy: Policy) -> (f64, std::time::Duration) {
+    let mut cfg = pcstall::config::SimConfig::default();
+    cfg.gpu.n_cu = 8;
+    cfg.gpu.n_wf = 16;
+    cfg.dvfs.epoch_ns = epoch_ns;
+    let wl = workloads::build("comd", 0.1);
+    let mut mgr = DvfsManager::new(cfg, &wl, policy, Objective::Ed2p);
+    let t0 = std::time::Instant::now();
+    let r = mgr.run(RunMode::Completion { max_epochs: 400_000 }, "comd");
+    (r.ed2p(), t0.elapsed())
+}
+
+fn main() {
+    println!("== fig1a bench: epoch-duration sweep (comd, 8CU) ==");
+    for &epoch_ns in &[1_000.0, 10_000.0, 50_000.0, 100_000.0] {
+        let (base, t_base) = run(epoch_ns, Policy::Static(F_STATIC_IDX));
+        let (pc, t_pc) = run(epoch_ns, Policy::PcStall);
+        println!(
+            "epoch {:>6}ns  static {}  pcstall {}  ED2P improvement {:+.1}%",
+            epoch_ns,
+            fmt_ns(t_base.as_nanos() as f64),
+            fmt_ns(t_pc.as_nanos() as f64),
+            (1.0 - pc / base) * 100.0,
+        );
+    }
+}

@@ -1,0 +1,25 @@
+//! Bench form of Fig. 14: per-design accuracy measurement runs, timed.
+
+use pcstall::dvfs::manager::{DvfsManager, Policy, RunMode};
+use pcstall::dvfs::objective::Objective;
+use pcstall::stats::bench::fmt_ns;
+use pcstall::workloads;
+
+fn main() {
+    println!("== fig14 bench: accuracy runs per design (comd, 8CU, 60 epochs) ==");
+    for d in Policy::all_dvfs() {
+        let mut cfg = pcstall::config::SimConfig::default();
+        cfg.gpu.n_cu = 8;
+        cfg.gpu.n_wf = 16;
+        let wl = workloads::build("comd", 0.2);
+        let mut mgr = DvfsManager::new(cfg, &wl, d, Objective::Ed2p);
+        let t0 = std::time::Instant::now();
+        let r = mgr.run(RunMode::Epochs(60), "comd");
+        println!(
+            "{:<8} accuracy {:.3}   wall {}",
+            r.policy,
+            r.mean_accuracy,
+            fmt_ns(t0.elapsed().as_nanos() as f64)
+        );
+    }
+}

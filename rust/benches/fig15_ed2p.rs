@@ -1,0 +1,44 @@
+//! Bench form of Fig. 15: full completion runs for the headline ED²P
+//! table on a 3-workload subset, timed per design.
+
+use pcstall::dvfs::manager::{DvfsManager, Policy, RunMode};
+use pcstall::dvfs::objective::Objective;
+use pcstall::models::EstModel;
+use pcstall::power::params::F_STATIC_IDX;
+use pcstall::stats::bench::fmt_ns;
+use pcstall::util::geomean;
+use pcstall::workloads;
+
+fn main() {
+    println!("== fig15 bench: ED²P completion runs (8CU) ==");
+    let designs = [
+        Policy::Static(F_STATIC_IDX),
+        Policy::Reactive(EstModel::Crisp),
+        Policy::PcStall,
+        Policy::Oracle,
+    ];
+    let wls = ["comd", "hacc", "xsbench"];
+    let mut base = vec![0.0; wls.len()];
+    for d in designs {
+        let mut norms = Vec::new();
+        let t0 = std::time::Instant::now();
+        for (i, wl_name) in wls.iter().enumerate() {
+            let mut cfg = pcstall::config::SimConfig::default();
+            cfg.gpu.n_cu = 8;
+            cfg.gpu.n_wf = 16;
+            let wl = workloads::build(wl_name, 0.1);
+            let mut mgr = DvfsManager::new(cfg, &wl, d, Objective::Ed2p);
+            let r = mgr.run(RunMode::Completion { max_epochs: 100_000 }, wl_name);
+            if matches!(d, Policy::Static(_)) {
+                base[i] = r.ed2p();
+            }
+            norms.push(r.ed2p() / if base[i] > 0.0 { base[i] } else { r.ed2p() });
+        }
+        println!(
+            "{:<12} geomean norm ED²P {:.3}   wall {}",
+            d.name(),
+            geomean(&norms),
+            fmt_ns(t0.elapsed().as_nanos() as f64)
+        );
+    }
+}

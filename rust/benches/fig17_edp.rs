@@ -1,0 +1,34 @@
+//! Bench form of Fig. 17: EDP-objective completion runs across epoch
+//! durations (PCSTALL vs static), timed.
+
+use pcstall::dvfs::manager::{DvfsManager, Policy, RunMode};
+use pcstall::dvfs::objective::Objective;
+use pcstall::power::params::F_STATIC_IDX;
+use pcstall::stats::bench::fmt_ns;
+use pcstall::workloads;
+
+fn main() {
+    println!("== fig17 bench: EDP epoch sweep (BwdBN, 8CU) ==");
+    for &epoch_ns in &[1_000.0, 10_000.0, 100_000.0] {
+        let run = |p: Policy| {
+            let mut cfg = pcstall::config::SimConfig::default();
+            cfg.gpu.n_cu = 8;
+            cfg.gpu.n_wf = 16;
+            cfg.dvfs.epoch_ns = epoch_ns;
+            let wl = workloads::build("BwdBN", 0.1);
+            let mut mgr = DvfsManager::new(cfg, &wl, p, Objective::Edp);
+            let t0 = std::time::Instant::now();
+            let r = mgr.run(RunMode::Completion { max_epochs: 400_000 }, "BwdBN");
+            (r.edp(), t0.elapsed())
+        };
+        let (base, tb) = run(Policy::Static(F_STATIC_IDX));
+        let (pc, tp) = run(Policy::PcStall);
+        println!(
+            "epoch {:>6}ns  EDP improvement {:+.1}%  (static {} / pcstall {})",
+            epoch_ns,
+            (1.0 - pc / base) * 100.0,
+            fmt_ns(tb.as_nanos() as f64),
+            fmt_ns(tp.as_nanos() as f64),
+        );
+    }
+}

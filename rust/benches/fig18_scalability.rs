@@ -1,0 +1,31 @@
+//! Bench form of Fig. 18b: V/f-domain granularity sweep, timed.
+
+use pcstall::dvfs::manager::{DvfsManager, Policy, RunMode};
+use pcstall::dvfs::objective::Objective;
+use pcstall::power::params::F_STATIC_IDX;
+use pcstall::stats::bench::fmt_ns;
+use pcstall::workloads;
+
+fn main() {
+    println!("== fig18b bench: domain granularity sweep (comd, 8CU) ==");
+    for &g in &[1usize, 2, 4] {
+        let run = |p: Policy| {
+            let mut cfg = pcstall::config::SimConfig::default();
+            cfg.gpu.n_cu = 8;
+            cfg.gpu.n_wf = 16;
+            cfg.dvfs.cus_per_domain = g;
+            let wl = workloads::build("comd", 0.1);
+            let mut mgr = DvfsManager::new(cfg, &wl, p, Objective::Ed2p);
+            let t0 = std::time::Instant::now();
+            let r = mgr.run(RunMode::Completion { max_epochs: 100_000 }, "comd");
+            (r.ed2p(), t0.elapsed())
+        };
+        let (base, _) = run(Policy::Static(F_STATIC_IDX));
+        let (pc, t) = run(Policy::PcStall);
+        println!(
+            "{g} CU/domain: ED²P improvement {:+.1}%  wall {}",
+            (1.0 - pc / base) * 100.0,
+            fmt_ns(t.as_nanos() as f64)
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! PJRT-vs-native backend comparison on the epoch hot path — quantifies
+//! the cost of executing the AOT artifact at every epoch boundary.
+
+use pcstall::dvfs::native::{DvfsStepBackend, NativeBackend, StepInputs};
+use pcstall::runtime::{find_artifact, PjrtBackend};
+use pcstall::stats::bench::bench;
+use pcstall::util::SplitMix64;
+
+fn inputs(n_cu: usize, n_wf: usize) -> StepInputs {
+    let mut rng = SplitMix64::new(7);
+    let mut inp = StepInputs::zeros(n_cu, n_wf);
+    for v in inp.instr.iter_mut() {
+        *v = (rng.next_f64() * 2000.0) as f32;
+    }
+    for v in inp.t_core_ns.iter_mut() {
+        *v = (rng.next_f64() * 1000.0) as f32;
+    }
+    for d in 0..n_cu {
+        inp.pred_sens[d] = (rng.next_f64() * 30_000.0) as f32;
+        inp.pred_i0[d] = (rng.next_f64() * 1_000.0) as f32;
+    }
+    inp
+}
+
+fn main() {
+    println!("== runtime selector: native vs PJRT ==");
+    let inp = inputs(64, 40);
+
+    let mut native = NativeBackend::default();
+    bench("native backend 64x40", || {
+        let _ = native.step(&inp).unwrap();
+    });
+
+    match find_artifact(None).map(|p| PjrtBackend::load(&p)) {
+        Some(Ok(mut pjrt)) => {
+            bench("pjrt backend 64x40 (AOT artifact)", || {
+                let _ = pjrt.step(&inp).unwrap();
+            });
+            let small = inputs(8, 16);
+            bench("pjrt backend 8x16 (padded to 64x40)", || {
+                let _ = pjrt.step(&small).unwrap();
+            });
+        }
+        Some(Err(e)) => println!("pjrt load failed: {e:#}"),
+        None => println!("no artifact found — run `make artifacts` for the PJRT numbers"),
+    }
+}

@@ -1,0 +1,95 @@
+//! Hot-path microbenchmarks: simulator epoch stepping, oracle sampling,
+//! snapshotting, and the native dvfs_step.  These are the L3 profiling
+//! targets of the §Perf pass (EXPERIMENTS.md).
+
+use pcstall::config::SimConfig;
+use pcstall::dvfs::native::{dvfs_step_native, StepInputs};
+use pcstall::power::PowerParams;
+use pcstall::predictors::OracleSampler;
+use pcstall::sim::gpu::Gpu;
+use pcstall::stats::bench::{bench, bench_cfg};
+use pcstall::util::SplitMix64;
+use pcstall::workloads;
+use std::time::Duration;
+
+fn gpu(n_cu: usize, n_wf: usize, wl: &str) -> Gpu {
+    let mut cfg = SimConfig::default();
+    cfg.gpu.n_cu = n_cu;
+    cfg.gpu.n_wf = n_wf;
+    let spec = workloads::build(wl, 1.0);
+    let mut g = Gpu::new(cfg);
+    g.load_workload(spec.launches(), spec.rounds);
+    g.run_epoch(); // warm
+    g
+}
+
+fn main() {
+    println!("== sim hot path ==");
+    for (wl, tag) in [("hacc", "compute"), ("xsbench", "membound"), ("comd", "mixed")] {
+        let mut g = gpu(8, 16, wl);
+        let r = bench(&format!("epoch 8CUx16WF {tag}"), || {
+            g.run_epoch();
+        });
+        let cycles: u64 = g.cus.iter().map(|c| c.counters.cycles).sum();
+        let rate = cycles as f64 / r.median_ns();
+        println!("    -> {:.1} M CU-cycles/s", rate * 1e3);
+    }
+
+    {
+        let mut g = gpu(64, 40, "comd");
+        let r = bench_cfg(
+            "epoch 64CUx40WF comd (paper scale)",
+            Duration::from_millis(400),
+            5,
+            50,
+            &mut || {
+                g.run_epoch();
+            },
+        );
+        let cycles: u64 = g.cus.iter().map(|c| c.counters.cycles).sum();
+        println!(
+            "    -> {:.1} M CU-cycles/s",
+            cycles as f64 / r.median_ns() * 1e3
+        );
+    }
+
+    {
+        let g = gpu(8, 16, "comd");
+        let sampler = OracleSampler::default();
+        bench_cfg(
+            "oracle sample (10 pre-executions, 8CU)",
+            Duration::from_millis(400),
+            5,
+            50,
+            &mut || {
+                let _ = sampler.sample(&g);
+            },
+        );
+    }
+
+    {
+        let g = gpu(8, 16, "comd");
+        bench("gpu snapshot clone (8CU)", || {
+            let _ = g.snapshot();
+        });
+        let g64 = gpu(64, 40, "comd");
+        bench("gpu snapshot clone (64CU)", || {
+            let _ = g64.snapshot();
+        });
+    }
+
+    {
+        let mut rng = SplitMix64::new(1);
+        let mut inp = StepInputs::zeros(64, 40);
+        for v in inp.instr.iter_mut() {
+            *v = (rng.next_f64() * 2000.0) as f32;
+        }
+        for v in inp.t_core_ns.iter_mut() {
+            *v = (rng.next_f64() * 1000.0) as f32;
+        }
+        let p = PowerParams::default();
+        bench("native dvfs_step 64x40", || {
+            let _ = dvfs_step_native(&inp, &p);
+        });
+    }
+}

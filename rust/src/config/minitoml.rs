@@ -1,0 +1,202 @@
+//! A tiny TOML-subset parser (offline environment — no external crates).
+//!
+//! Supported: `[section]` headers, `key = value` pairs with integer,
+//! float, boolean and double-quoted string values, `#` comments, blank
+//! lines.  Nested tables beyond one level, arrays and dates are not
+//! needed by [`crate::SimConfig`] and are rejected loudly.
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    /// Best-effort parse used by CLI overrides (no quoting required).
+    pub fn parse(s: &str) -> Value {
+        if let Ok(i) = s.parse::<i64>() {
+            Value::Int(i)
+        } else if let Ok(f) = s.parse::<f64>() {
+            Value::Float(f)
+        } else if let Ok(b) = s.parse::<bool>() {
+            Value::Bool(b)
+        } else {
+            Value::Str(s.trim_matches('"').to_string())
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parse TOML-subset text into a flat `section.key -> value` list
+/// (top-level keys have no section prefix).
+pub fn parse(text: &str) -> anyhow::Result<Vec<(String, Value)>> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow::anyhow!("line {}: unterminated section", lineno + 1))?
+                .trim();
+            if name.is_empty() || name.contains('[') {
+                anyhow::bail!("line {}: bad section name: {name}", lineno + 1);
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            anyhow::bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(value.trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.push((full, value));
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(q) = s.strip_prefix('"') {
+        let inner = q.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        return Err("arrays are not supported by minitoml".into());
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let kv = parse(
+            r#"
+# top comment
+seed = 42
+[gpu]
+n_cu = 64          # trailing comment
+mem_freq_ghz = 1.6
+name = "vega"
+big = 1_000_000
+[dvfs]
+enabled = true
+"#,
+        )
+        .unwrap();
+        assert!(kv.contains(&("seed".into(), Value::Int(42))));
+        assert!(kv.contains(&("gpu.n_cu".into(), Value::Int(64))));
+        assert!(kv.contains(&("gpu.mem_freq_ghz".into(), Value::Float(1.6))));
+        assert!(kv.contains(&("gpu.name".into(), Value::Str("vega".into()))));
+        assert!(kv.contains(&("gpu.big".into(), Value::Int(1_000_000))));
+        assert!(kv.contains(&("dvfs.enabled".into(), Value::Bool(true))));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("novalue\n").is_err());
+        assert!(parse("k = [1, 2]\n").is_err());
+        assert!(parse("k = \"unterminated\n").is_err());
+        assert!(parse("= 3\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let kv = parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(kv[0].1, Value::Str("a#b".into()));
+    }
+
+    #[test]
+    fn value_coercions() {
+        assert_eq!(Value::Int(3).as_float(), Some(3.0));
+        assert_eq!(Value::Float(3.0).as_int(), Some(3));
+        assert_eq!(Value::Float(3.5).as_int(), None);
+        assert_eq!(Value::Str("x".into()).as_float(), None);
+        assert_eq!(Value::Bool(true).as_bool(), Some(true));
+        assert_eq!(Value::Str("s".into()).as_str(), Some("s"));
+    }
+
+    #[test]
+    fn cli_value_parse() {
+        assert_eq!(Value::parse("42"), Value::Int(42));
+        assert_eq!(Value::parse("4.5"), Value::Float(4.5));
+        assert_eq!(Value::parse("true"), Value::Bool(true));
+        assert_eq!(Value::parse("abc"), Value::Str("abc".into()));
+    }
+}

@@ -1,0 +1,352 @@
+//! Layered configuration system: compiled defaults → TOML file →
+//! CLI `--set section.key=value` overrides.
+//!
+//! The build environment is fully offline (no serde/toml crates), so this
+//! module ships a small self-contained TOML-subset parser
+//! ([`minitoml`]) covering what configs need: `[section]` headers,
+//! integer/float/bool/string values, comments, and blank lines.
+
+pub mod minitoml;
+
+use crate::power::PowerParams;
+
+/// GPU shape + timing parameters (the paper's 64-CU Vega-class part).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuConfig {
+    /// Number of compute units.
+    pub n_cu: usize,
+    /// Wavefront slots per CU (paper: ~40 waves).
+    pub n_wf: usize,
+    /// Instructions issued per CU per cycle (4 SIMDs on GCN3).
+    pub issue_width: usize,
+    /// Wavefronts per workgroup (barrier scope).
+    pub wf_per_wg: usize,
+    /// Fixed memory/L2 domain frequency (paper: 1.6 GHz).
+    pub mem_freq_ghz: f64,
+    /// L1 vector cache: total bytes / line bytes / associativity.
+    pub l1_bytes: usize,
+    pub l1_line: usize,
+    pub l1_ways: usize,
+    /// L1 hit latency in CU cycles (GPU L1s are slow).
+    pub l1_hit_cycles: u32,
+    /// Shared L2: total bytes / banks / associativity.
+    pub l2_bytes: usize,
+    pub l2_banks: usize,
+    pub l2_ways: usize,
+    /// L2 hit latency in ns (fixed 1.6 GHz domain).
+    pub l2_hit_ns: f64,
+    /// L2 bank service time per access in ns (queueing granularity).
+    pub l2_service_ns: f64,
+    /// DRAM latency in ns and bandwidth in bytes/ns (GB/s).
+    pub dram_ns: f64,
+    pub dram_bw_bytes_per_ns: f64,
+    /// Coupling quantum for cross-CU contention statistics (ns).
+    pub quantum_ns: f64,
+}
+
+impl Default for GpuConfig {
+    fn default() -> Self {
+        Self {
+            n_cu: 64,
+            n_wf: 40,
+            issue_width: 4,
+            wf_per_wg: 4,
+            mem_freq_ghz: 1.6,
+            l1_bytes: 16 * 1024,
+            l1_line: 64,
+            l1_ways: 4,
+            l1_hit_cycles: 24,
+            l2_bytes: 4 * 1024 * 1024,
+            l2_banks: 16,
+            l2_ways: 16,
+            l2_hit_ns: 90.0,
+            l2_service_ns: 2.0,
+            dram_ns: 250.0,
+            dram_bw_bytes_per_ns: 448.0,
+            quantum_ns: 200.0,
+        }
+    }
+}
+
+/// DVFS mechanism parameters (paper §5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DvfsConfig {
+    /// Epoch duration in ns (1 µs default — the paper's headline regime).
+    pub epoch_ns: f64,
+    /// CUs per V/f domain (1 = paper default; §6.5 sweeps 2..32).
+    pub cus_per_domain: usize,
+    /// Explicit V/f transition latency in ns; negative derives the paper's
+    /// scaling (4 ns @1 µs … 400 ns @100 µs) from the epoch length.
+    pub transition_ns: f64,
+    /// PC-table entries per instance (paper: 128).
+    pub pc_table_entries: usize,
+    /// PC index offset bits over *byte* PCs (paper: 4 ⇒ ~4 instructions).
+    pub pc_offset_bits: u32,
+    /// EWMA weight for PC-table updates (1.0 = overwrite, paper default).
+    pub pc_update_alpha: f64,
+    /// Share one PC table across this many CUs (paper: per-CU or shared).
+    pub pc_table_share: usize,
+}
+
+impl Default for DvfsConfig {
+    fn default() -> Self {
+        Self {
+            epoch_ns: 1_000.0,
+            cus_per_domain: 1,
+            transition_ns: -1.0,
+            pc_table_entries: 128,
+            pc_offset_bits: 4,
+            pc_update_alpha: 1.0,
+            pc_table_share: 1,
+        }
+    }
+}
+
+impl DvfsConfig {
+    /// Paper §5: transition latency grows with epoch length (slower IVR
+    /// technology suffices for coarser epochs): 4 ns at 1 µs, 40 ns at
+    /// 10 µs, 200 ns at 50 µs, 400 ns at 100 µs — i.e. ~0.4% of epoch.
+    pub fn transition_latency_ns(&self) -> f64 {
+        if self.transition_ns >= 0.0 {
+            self.transition_ns
+        } else {
+            0.004 * self.epoch_ns
+        }
+    }
+}
+
+/// Top-level simulation configuration.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SimConfig {
+    pub gpu: GpuConfig,
+    pub dvfs: DvfsConfig,
+    pub power: PowerParams,
+    /// Master seed for workload generation.
+    pub seed: u64,
+}
+
+macro_rules! config_fields {
+    ($self:ident, $apply:ident) => {
+        // (key path, getter expression, setter closure)
+        $apply!("gpu.n_cu", usize, $self.gpu.n_cu);
+        $apply!("gpu.n_wf", usize, $self.gpu.n_wf);
+        $apply!("gpu.issue_width", usize, $self.gpu.issue_width);
+        $apply!("gpu.wf_per_wg", usize, $self.gpu.wf_per_wg);
+        $apply!("gpu.mem_freq_ghz", f64, $self.gpu.mem_freq_ghz);
+        $apply!("gpu.l1_bytes", usize, $self.gpu.l1_bytes);
+        $apply!("gpu.l1_line", usize, $self.gpu.l1_line);
+        $apply!("gpu.l1_ways", usize, $self.gpu.l1_ways);
+        $apply!("gpu.l1_hit_cycles", u32, $self.gpu.l1_hit_cycles);
+        $apply!("gpu.l2_bytes", usize, $self.gpu.l2_bytes);
+        $apply!("gpu.l2_banks", usize, $self.gpu.l2_banks);
+        $apply!("gpu.l2_ways", usize, $self.gpu.l2_ways);
+        $apply!("gpu.l2_hit_ns", f64, $self.gpu.l2_hit_ns);
+        $apply!("gpu.l2_service_ns", f64, $self.gpu.l2_service_ns);
+        $apply!("gpu.dram_ns", f64, $self.gpu.dram_ns);
+        $apply!("gpu.dram_bw_bytes_per_ns", f64, $self.gpu.dram_bw_bytes_per_ns);
+        $apply!("gpu.quantum_ns", f64, $self.gpu.quantum_ns);
+        $apply!("dvfs.epoch_ns", f64, $self.dvfs.epoch_ns);
+        $apply!("dvfs.cus_per_domain", usize, $self.dvfs.cus_per_domain);
+        $apply!("dvfs.transition_ns", f64, $self.dvfs.transition_ns);
+        $apply!("dvfs.pc_table_entries", usize, $self.dvfs.pc_table_entries);
+        $apply!("dvfs.pc_offset_bits", u32, $self.dvfs.pc_offset_bits);
+        $apply!("dvfs.pc_update_alpha", f64, $self.dvfs.pc_update_alpha);
+        $apply!("dvfs.pc_table_share", usize, $self.dvfs.pc_table_share);
+        $apply!("power.f_min_ghz", f64, $self.power.f_min_ghz);
+        $apply!("power.f_max_ghz", f64, $self.power.f_max_ghz);
+        $apply!("power.v0", f64, $self.power.v0);
+        $apply!("power.kv", f64, $self.power.kv);
+        $apply!("power.v_nom", f64, $self.power.v_nom);
+        $apply!("power.c1", f64, $self.power.c1);
+        $apply!("power.c2", f64, $self.power.c2);
+        $apply!("power.l0", f64, $self.power.l0);
+        $apply!("power.lv", f64, $self.power.lv);
+        $apply!("power.eta0", f64, $self.power.eta0);
+        $apply!("power.eta_slope", f64, $self.power.eta_slope);
+        $apply!("power.rail_cj", f64, $self.power.rail_cj);
+        $apply!("seed", u64, $self.seed);
+    };
+}
+
+impl SimConfig {
+    /// Parse from TOML-subset text, starting from defaults.
+    pub fn from_toml(text: &str) -> anyhow::Result<Self> {
+        let mut cfg = Self::default();
+        for (key, value) in minitoml::parse(text)? {
+            cfg.set_key(&key, &value)
+                .map_err(|e| anyhow::anyhow!("config key {key}: {e}"))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a TOML file.
+    pub fn from_path(path: &std::path::Path) -> anyhow::Result<Self> {
+        Self::from_toml(&std::fs::read_to_string(path)?)
+    }
+
+    /// Apply a `section.key=value` override (CLI `--set`).
+    pub fn apply_override(&mut self, spec: &str) -> anyhow::Result<()> {
+        let (key, value) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("override must be key=value: {spec}"))?;
+        self.set_key(key.trim(), &minitoml::Value::parse(value.trim()))
+            .map_err(|e| anyhow::anyhow!("override {spec}: {e}"))
+    }
+
+    fn set_key(&mut self, key: &str, value: &minitoml::Value) -> Result<(), String> {
+        macro_rules! apply {
+            ($name:literal, usize, $field:expr) => {
+                if key == $name {
+                    $field = value.as_int().ok_or("expected integer")? as usize;
+                    return Ok(());
+                }
+            };
+            ($name:literal, u32, $field:expr) => {
+                if key == $name {
+                    $field = value.as_int().ok_or("expected integer")? as u32;
+                    return Ok(());
+                }
+            };
+            ($name:literal, u64, $field:expr) => {
+                if key == $name {
+                    $field = value.as_int().ok_or("expected integer")? as u64;
+                    return Ok(());
+                }
+            };
+            ($name:literal, f64, $field:expr) => {
+                if key == $name {
+                    $field = value.as_float().ok_or("expected number")?;
+                    return Ok(());
+                }
+            };
+        }
+        config_fields!(self, apply);
+        Err(format!("unknown config key: {key}"))
+    }
+
+    /// Serialize to TOML (used by `pcstall config dump`).
+    pub fn to_toml(&self) -> String {
+        let mut out = String::new();
+        #[allow(unused_assignments)]
+        let mut section = "";
+        macro_rules! apply {
+            ($name:literal, $_ty:ident, $field:expr) => {{
+                let (sec, leaf) = match $name.split_once('.') {
+                    Some((s, l)) => (s, l),
+                    None => ("", $name),
+                };
+                if sec != section {
+                    if !out.is_empty() {
+                        out.push('\n');
+                    }
+                    out.push_str(&format!("[{sec}]\n"));
+                    section = sec;
+                }
+                out.push_str(&format!("{leaf} = {}\n", $field));
+            }};
+        }
+        // top-level keys must come first in TOML
+        out.push_str(&format!("seed = {}\n", self.seed));
+        let this = self;
+        macro_rules! apply_skip_seed {
+            ("seed", $t:ident, $f:expr) => {};
+            ($name:literal, $t:ident, $f:expr) => {
+                apply!($name, $t, $f)
+            };
+        }
+        config_fields!(this, apply_skip_seed);
+        out
+    }
+
+    /// A scaled-down preset for fast CI runs and unit tests.
+    pub fn small() -> Self {
+        let mut c = Self::default();
+        c.gpu.n_cu = 4;
+        c.gpu.n_wf = 8;
+        c.gpu.l2_bytes = 512 * 1024;
+        c
+    }
+
+    /// The paper's full 64-CU configuration.
+    pub fn paper() -> Self {
+        Self::default()
+    }
+
+    /// Number of V/f domains implied by the GPU shape.
+    pub fn n_domains(&self) -> usize {
+        self.gpu.n_cu.div_ceil(self.dvfs.cus_per_domain)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_shape() {
+        let c = SimConfig::default();
+        assert_eq!(c.gpu.n_cu, 64);
+        assert_eq!(c.gpu.n_wf, 40);
+        assert_eq!(c.dvfs.pc_table_entries, 128);
+        assert_eq!(c.dvfs.pc_offset_bits, 4);
+        assert_eq!(c.n_domains(), 64);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let mut c = SimConfig::default();
+        c.seed = 99;
+        c.gpu.n_cu = 16;
+        c.dvfs.epoch_ns = 50_000.0;
+        let t = c.to_toml();
+        let c2 = SimConfig::from_toml(&t).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn parse_partial_config_keeps_defaults() {
+        let c = SimConfig::from_toml("[gpu]\nn_cu = 8\n").unwrap();
+        assert_eq!(c.gpu.n_cu, 8);
+        assert_eq!(c.gpu.n_wf, 40); // default preserved
+    }
+
+    #[test]
+    fn transition_latency_scales_with_epoch() {
+        let mut d = DvfsConfig::default();
+        d.epoch_ns = 1_000.0;
+        assert!((d.transition_latency_ns() - 4.0).abs() < 1e-9);
+        d.epoch_ns = 100_000.0;
+        assert!((d.transition_latency_ns() - 400.0).abs() < 1e-9);
+        d.transition_ns = 7.0;
+        assert_eq!(d.transition_latency_ns(), 7.0);
+    }
+
+    #[test]
+    fn apply_override_patches_nested_keys() {
+        let mut c = SimConfig::default();
+        c.apply_override("gpu.n_cu=8").unwrap();
+        assert_eq!(c.gpu.n_cu, 8);
+        c.apply_override("dvfs.epoch_ns=50000").unwrap();
+        assert!((c.dvfs.epoch_ns - 50_000.0).abs() < 1e-9);
+        c.apply_override("power.c1=1.5").unwrap();
+        assert!((c.power.c1 - 1.5).abs() < 1e-12);
+        c.apply_override("seed=123").unwrap();
+        assert_eq!(c.seed, 123);
+    }
+
+    #[test]
+    fn apply_override_rejects_unknown_keys() {
+        let mut c = SimConfig::default();
+        assert!(c.apply_override("gpu.bogus=1").is_err());
+        assert!(c.apply_override("no_equals").is_err());
+        assert!(c.apply_override("gpu.n_cu=notanumber").is_err());
+    }
+
+    #[test]
+    fn domains_round_up() {
+        let mut c = SimConfig::default();
+        c.gpu.n_cu = 10;
+        c.dvfs.cus_per_domain = 4;
+        assert_eq!(c.n_domains(), 3);
+    }
+}

@@ -1,0 +1,12 @@
+//! DVFS core: the sensitivity metric, objective functions, the native
+//! mirror of the AOT compute graph, and the per-epoch manager.
+
+pub mod manager;
+pub mod native;
+pub mod objective;
+pub mod sensitivity;
+
+pub use manager::{DvfsManager, Policy};
+pub use crate::stats::RunResult;
+pub use objective::Objective;
+pub use sensitivity::SensEstimate;

@@ -1,0 +1,329 @@
+//! Native (pure-Rust) mirror of the AOT `dvfs_step` compute graph.
+//!
+//! Implements exactly the math of the two Pallas kernels
+//! (`python/compile/kernels/{sensitivity,selector}.py`).  Used for
+//! differential testing against the PJRT artifact
+//! (`rust/tests/pjrt_parity.rs`) and as the fallback backend when no
+//! artifact is present.  Arithmetic is done in f32 where the kernels use
+//! f32 so parity holds to ~1e-5.
+
+use crate::power::params::{N_FREQ, PowerParams};
+
+/// Inputs of one DVFS step (shapes follow the artifact metadata).
+#[derive(Debug, Clone, Default)]
+pub struct StepInputs {
+    /// `[n_cu * n_wf]`, row-major.
+    pub instr: Vec<f32>,
+    pub t_core_ns: Vec<f32>,
+    pub age_factor: Vec<f32>,
+    /// `[n_cu]`.
+    pub freq_ghz: Vec<f32>,
+    /// `[n_dom]` (padded to n_cu for the artifact).
+    pub pred_sens: Vec<f32>,
+    pub pred_i0: Vec<f32>,
+    pub mask: Vec<f32>,
+    /// ED^nP exponent (2 = EDP, 3 = ED²P).
+    pub n_exp: f32,
+    pub epoch_ns: f32,
+    pub n_cu: usize,
+    pub n_wf: usize,
+}
+
+/// Outputs of one DVFS step.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StepOutputs {
+    /// `[n_cu * n_wf]` row-major.
+    pub sens_wf: Vec<f32>,
+    /// `[n_cu]`.
+    pub sens_cu: Vec<f32>,
+    pub i0_cu: Vec<f32>,
+    /// `[n_dom * N_FREQ]` row-major.
+    pub pred_instr: Vec<f32>,
+    pub power_w: Vec<f32>,
+    pub ednp: Vec<f32>,
+    /// `[n_dom]`.
+    pub best_idx: Vec<f32>,
+}
+
+const EPS: f32 = 1e-6;
+
+/// Backend abstraction: native math or the PJRT-compiled artifact.
+pub trait DvfsStepBackend {
+    fn step(&mut self, inp: &StepInputs) -> anyhow::Result<StepOutputs>;
+    fn name(&self) -> &'static str;
+}
+
+/// The pure-Rust backend.
+#[derive(Debug, Clone, Default)]
+pub struct NativeBackend {
+    pub params: PowerParams,
+}
+
+impl DvfsStepBackend for NativeBackend {
+    fn step(&mut self, inp: &StepInputs) -> anyhow::Result<StepOutputs> {
+        Ok(dvfs_step_native(inp, &self.params))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Kernel 1 mirror: wavefront sensitivity estimation.
+pub fn wf_sensitivity_native(inp: &StepInputs) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (n_cu, n_wf) = (inp.n_cu, inp.n_wf);
+    let mut sens_wf = vec![0f32; n_cu * n_wf];
+    let mut sens_cu = vec![0f32; n_cu];
+    let mut i0_cu = vec![0f32; n_cu];
+    for c in 0..n_cu {
+        let f = inp.freq_ghz[c];
+        let cycles_epoch = inp.epoch_ns * f;
+        let mut sum_sens = 0f32;
+        let mut sum_instr = 0f32;
+        for w in 0..n_wf {
+            let idx = c * n_wf + w;
+            let ipc = inp.instr[idx] / cycles_epoch.max(EPS);
+            let s = ipc * inp.t_core_ns[idx] * inp.age_factor[idx];
+            sens_wf[idx] = s;
+            sum_sens += s;
+            sum_instr += inp.instr[idx];
+        }
+        sens_cu[c] = sum_sens;
+        i0_cu[c] = (sum_instr - sum_sens * f).max(0.0);
+    }
+    (sens_wf, sens_cu, i0_cu)
+}
+
+/// Kernel 2 mirror for a single domain row.
+pub fn eval_grid_row(
+    sens: f64,
+    i0: f64,
+    n_exp: f64,
+    epoch_ns: f64,
+    p: &PowerParams,
+) -> ([f64; N_FREQ], [f64; N_FREQ], [f64; N_FREQ]) {
+    let mut instr = [0f64; N_FREQ];
+    let mut power = [0f64; N_FREQ];
+    let mut ednp = [0f64; N_FREQ];
+    for k in 0..N_FREQ {
+        let f = p.f_min_ghz + 0.1 * k as f64;
+        let v = p.v0 + p.kv * (f - p.f_min_ghz);
+        let eta = p.eta0 + p.eta_slope * (f - p.f_min_ghz) / (p.f_max_ghz - p.f_min_ghz);
+        let i = (i0 + sens * f).max(EPS as f64);
+        let rate = i / epoch_ns;
+        let v2 = v * v;
+        let pw = (p.c1 * v2 * rate + p.c2 * v2 * f
+            + p.l0 * (p.lv * (v - p.v_nom)).exp())
+            / eta;
+        instr[k] = i;
+        power[k] = pw;
+        ednp[k] = pw / rate.max(EPS as f64).powf(n_exp);
+    }
+    (instr, power, ednp)
+}
+
+/// Kernel 2 mirror: full grid in f32 (exact artifact semantics incl.
+/// the masked-domain +inf rule).
+pub fn freq_grid_native(
+    pred_sens: &[f32],
+    pred_i0: &[f32],
+    mask: &[f32],
+    n_exp: f32,
+    epoch_ns: f32,
+    p: &PowerParams,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let n_dom = pred_sens.len();
+    let mut instr = vec![0f32; n_dom * N_FREQ];
+    let mut power = vec![0f32; n_dom * N_FREQ];
+    let mut ednp = vec![0f32; n_dom * N_FREQ];
+    let mut best = vec![0f32; n_dom];
+    for d in 0..n_dom {
+        let mut best_k = 0usize;
+        let mut best_v = f32::INFINITY;
+        for k in 0..N_FREQ {
+            let f = (p.f_min_ghz + 0.1 * k as f64) as f32;
+            let v = (p.v0 as f32) + (p.kv as f32) * (f - p.f_min_ghz as f32);
+            let eta = (p.eta0 as f32)
+                + (p.eta_slope as f32) * (f - p.f_min_ghz as f32)
+                    / (p.f_max_ghz - p.f_min_ghz) as f32;
+            let i = (pred_i0[d] + pred_sens[d] * f).max(EPS);
+            let rate = i / epoch_ns;
+            let v2 = v * v;
+            let pw = ((p.c1 as f32) * v2 * rate
+                + (p.c2 as f32) * v2 * f
+                + (p.l0 as f32) * ((p.lv as f32) * (v - p.v_nom as f32)).exp())
+                / eta;
+            let idx = d * N_FREQ + k;
+            instr[idx] = i;
+            power[idx] = pw;
+            let mut e = pw / rate.max(EPS).powf(n_exp);
+            if mask[d] < 0.5 && k > 0 {
+                e = f32::INFINITY;
+            }
+            ednp[idx] = e;
+            if e < best_v {
+                best_v = e;
+                best_k = k;
+            }
+        }
+        best[d] = best_k as f32;
+    }
+    (instr, power, ednp, best)
+}
+
+/// The full step (mirror of `python/compile/model.py::dvfs_step`).
+pub fn dvfs_step_native(inp: &StepInputs, p: &PowerParams) -> StepOutputs {
+    let (sens_wf, sens_cu, i0_cu) = wf_sensitivity_native(inp);
+    let (pred_instr, power_w, ednp, best_idx) = freq_grid_native(
+        &inp.pred_sens,
+        &inp.pred_i0,
+        &inp.mask,
+        inp.n_exp,
+        inp.epoch_ns,
+        p,
+    );
+    StepOutputs {
+        sens_wf,
+        sens_cu,
+        i0_cu,
+        pred_instr,
+        power_w,
+        ednp,
+        best_idx,
+    }
+}
+
+impl StepInputs {
+    /// Build an input bundle with sane shapes (helper for tests/benches).
+    pub fn zeros(n_cu: usize, n_wf: usize) -> Self {
+        StepInputs {
+            instr: vec![0.0; n_cu * n_wf],
+            t_core_ns: vec![0.0; n_cu * n_wf],
+            age_factor: vec![1.0; n_cu * n_wf],
+            freq_ghz: vec![1.7; n_cu],
+            pred_sens: vec![0.0; n_cu],
+            pred_i0: vec![0.0; n_cu],
+            mask: vec![1.0; n_cu],
+            n_exp: 3.0,
+            epoch_ns: 1000.0,
+            n_cu,
+            n_wf,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> PowerParams {
+        PowerParams::default()
+    }
+
+    #[test]
+    fn wf_sensitivity_matches_model_module() {
+        // native.rs and models::estimate_wf must agree (two mirrors of the
+        // same kernel).
+        let mut inp = StepInputs::zeros(2, 3);
+        inp.instr = vec![100.0, 0.0, 550.0, 80.0, 1200.0, 10.0];
+        inp.t_core_ns = vec![400.0, 0.0, 900.0, 100.0, 1000.0, 5.0];
+        inp.age_factor = vec![1.0, 1.0, 0.5, 0.8, 0.3, 1.0];
+        inp.freq_ghz = vec![1.5, 2.1];
+        let (sens_wf, sens_cu, i0_cu) = wf_sensitivity_native(&inp);
+        for c in 0..2 {
+            let mut sum_s = 0.0;
+            let mut sum_i = 0.0;
+            for w in 0..3 {
+                let idx = c * 3 + w;
+                let e = crate::models::estimate_wf(
+                    inp.instr[idx] as f64,
+                    inp.t_core_ns[idx] as f64,
+                    inp.age_factor[idx] as f64,
+                    inp.freq_ghz[c] as f64,
+                    inp.epoch_ns as f64,
+                );
+                assert!(
+                    (sens_wf[idx] as f64 - e.sens).abs() < 1e-3 * e.sens.abs().max(1.0),
+                    "mismatch at {idx}"
+                );
+                sum_s += e.sens;
+                sum_i += inp.instr[idx] as f64;
+            }
+            assert!((sens_cu[c] as f64 - sum_s).abs() < 1e-2);
+            assert!((i0_cu[c] as f64 - (sum_i - sum_s * inp.freq_ghz[c] as f64).max(0.0)).abs() < 0.5);
+        }
+    }
+
+    #[test]
+    fn grid_f32_f64_mirrors_agree() {
+        let p = params();
+        let (i64g, p64g, e64g) = eval_grid_row(12_345.0, 678.0, 3.0, 1000.0, &p);
+        let (i32g, p32g, e32g, _) = freq_grid_native(
+            &[12_345.0],
+            &[678.0],
+            &[1.0],
+            3.0,
+            1000.0,
+            &p,
+        );
+        for k in 0..N_FREQ {
+            assert!((i64g[k] - i32g[k] as f64).abs() / i64g[k] < 1e-4);
+            assert!((p64g[k] - p32g[k] as f64).abs() / p64g[k] < 1e-4);
+            assert!((e64g[k] - e32g[k] as f64).abs() / e64g[k] < 1e-3);
+        }
+    }
+
+    #[test]
+    fn best_idx_is_argmin_of_ednp() {
+        let (_, _, ednp, best) = freq_grid_native(
+            &[0.0, 40_000.0, 5_000.0],
+            &[800.0, 0.0, 400.0],
+            &[1.0, 1.0, 1.0],
+            3.0,
+            1000.0,
+            &params(),
+        );
+        for d in 0..3 {
+            let row = &ednp[d * N_FREQ..(d + 1) * N_FREQ];
+            let argmin = row
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(best[d] as usize, argmin);
+        }
+    }
+
+    #[test]
+    fn masked_domain_selects_state_zero() {
+        let (_, _, ednp, best) = freq_grid_native(
+            &[40_000.0],
+            &[0.0],
+            &[0.0],
+            3.0,
+            1000.0,
+            &params(),
+        );
+        assert_eq!(best[0], 0.0);
+        assert!(ednp[1..N_FREQ].iter().all(|e| e.is_infinite()));
+    }
+
+    #[test]
+    fn full_step_composes_both_kernels() {
+        let mut inp = StepInputs::zeros(4, 8);
+        for i in 0..inp.instr.len() {
+            inp.instr[i] = (i as f32 * 37.0) % 900.0;
+            inp.t_core_ns[i] = (i as f32 * 53.0) % 1000.0;
+        }
+        inp.pred_sens = vec![100.0, 30_000.0, 0.0, 5_000.0];
+        inp.pred_i0 = vec![50.0, 0.0, 700.0, 200.0];
+        let out = dvfs_step_native(&inp, &params());
+        assert_eq!(out.sens_wf.len(), 32);
+        assert_eq!(out.pred_instr.len(), 4 * N_FREQ);
+        assert_eq!(out.best_idx.len(), 4);
+        // memory-bound domain 2 picks state 0; compute-bound domain 1 top
+        assert_eq!(out.best_idx[2], 0.0);
+        assert_eq!(out.best_idx[1] as usize, N_FREQ - 1);
+    }
+}

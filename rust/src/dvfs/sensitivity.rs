@@ -1,0 +1,135 @@
+//! The frequency-sensitivity metric (paper §3.2).
+//!
+//! A fixed-time epoch's phase is characterised by the linear model
+//! `I_f = I0 + S·f`: `S` (instructions per GHz) is the *sensitivity* —
+//! high for compute phases, ~0 for memory-bound phases — and `I0` the
+//! frequency-independent intercept.
+
+use crate::power::params::{FREQS_GHZ, N_FREQ};
+use crate::util::linreg;
+
+/// A phase estimate for one scope (wavefront / CU / domain).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SensEstimate {
+    /// dI/df in instructions per GHz over the epoch.
+    pub sens: f64,
+    /// Intercept instructions (work that arrives regardless of f).
+    pub i0: f64,
+}
+
+impl SensEstimate {
+    pub fn new(sens: f64, i0: f64) -> Self {
+        SensEstimate { sens, i0 }
+    }
+
+    /// Predicted instructions at frequency `f_ghz`.
+    #[inline]
+    pub fn instr_at(&self, f_ghz: f64) -> f64 {
+        (self.i0 + self.sens * f_ghz).max(0.0)
+    }
+
+    /// Sensitivities are commutative across scopes (paper §4.2).
+    pub fn sum(estimates: impl IntoIterator<Item = SensEstimate>) -> SensEstimate {
+        let mut total = SensEstimate::default();
+        for e in estimates {
+            total.sens += e.sens;
+            total.i0 += e.i0;
+        }
+        total
+    }
+
+    /// Fit from (frequency, instructions) samples — the oracle's
+    /// regression over pre-executed epochs (paper §5.1).
+    pub fn fit(freqs_ghz: &[f64], instr: &[f64]) -> (SensEstimate, f64) {
+        let (i0, s, r2) = linreg(freqs_ghz, instr);
+        (
+            SensEstimate {
+                sens: s,
+                i0: i0.max(0.0),
+            },
+            r2,
+        )
+    }
+}
+
+/// Relative sensitivity change between consecutive epochs — the paper's
+/// variability metric (Figs. 7, 10, 11).  Symmetric, in [0, 2].
+pub fn relative_change(prev: f64, cur: f64) -> f64 {
+    let denom = 0.5 * (prev.abs() + cur.abs());
+    if denom < 1e-9 {
+        0.0
+    } else {
+        (cur - prev).abs() / denom
+    }
+}
+
+/// Prediction accuracy of an instruction-count forecast (paper §6.1):
+/// `1 − |pred − actual| / max(pred, actual)`, clamped to [0, 1].
+pub fn prediction_accuracy(predicted: f64, actual: f64) -> f64 {
+    let m = predicted.max(actual);
+    if m < 1.0 {
+        return 1.0; // both ~zero: trivially right
+    }
+    (1.0 - (predicted - actual).abs() / m).clamp(0.0, 1.0)
+}
+
+/// Instructions sampled at every ladder frequency (oracle ground truth).
+pub type FreqSamples = [f64; N_FREQ];
+
+/// Regress a [`FreqSamples`] row against the ladder.
+pub fn fit_ladder(samples: &FreqSamples) -> (SensEstimate, f64) {
+    SensEstimate::fit(&FREQS_GHZ, samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instr_at_is_linear_and_clamped() {
+        let e = SensEstimate::new(100.0, 500.0);
+        assert_eq!(e.instr_at(2.0), 700.0);
+        let neg = SensEstimate::new(-400.0, 100.0);
+        assert_eq!(neg.instr_at(2.0), 0.0);
+    }
+
+    #[test]
+    fn sum_is_componentwise() {
+        let t = SensEstimate::sum([SensEstimate::new(1.0, 2.0), SensEstimate::new(3.0, 4.0)]);
+        assert_eq!((t.sens, t.i0), (4.0, 6.0));
+    }
+
+    #[test]
+    fn fit_recovers_linear_phase() {
+        let samples: Vec<f64> = FREQS_GHZ.iter().map(|f| 200.0 + 150.0 * f).collect();
+        let (e, r2) = SensEstimate::fit(&FREQS_GHZ, &samples);
+        assert!((e.sens - 150.0).abs() < 1e-9);
+        assert!((e.i0 - 200.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_clamps_negative_intercept() {
+        // steep line through the origin region: intercept may fit negative
+        let samples: Vec<f64> = FREQS_GHZ.iter().map(|f| (1000.0 * (f - 1.4)).max(0.0)).collect();
+        let (e, _) = SensEstimate::fit(&FREQS_GHZ, &samples);
+        assert!(e.i0 >= 0.0);
+    }
+
+    #[test]
+    fn relative_change_bounds() {
+        assert_eq!(relative_change(0.0, 0.0), 0.0);
+        assert!((relative_change(100.0, 100.0)).abs() < 1e-12);
+        assert!((relative_change(100.0, 0.0) - 2.0).abs() < 1e-12);
+        assert!((relative_change(100.0, 150.0) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_metric_properties() {
+        assert_eq!(prediction_accuracy(100.0, 100.0), 1.0);
+        assert_eq!(prediction_accuracy(0.0, 0.0), 1.0);
+        assert!((prediction_accuracy(50.0, 100.0) - 0.5).abs() < 1e-12);
+        assert!((prediction_accuracy(100.0, 50.0) - 0.5).abs() < 1e-12);
+        assert_eq!(prediction_accuracy(0.0, 1000.0), 0.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Experiment harness: one entry per paper figure/table (DESIGN.md §3).
+//!
+//! Every experiment regenerates the *shape* of its paper artifact —
+//! workloads, parameter sweeps, baselines and the same rows/series —
+//! printed as a terminal table and written to `results/<id>.csv`.
+//! Absolute numbers differ (our substrate is a simulator, not the
+//! authors' testbed); orderings and approximate factors are the
+//! reproduction target.
+
+pub mod characterization;
+pub mod evaluation;
+
+use std::path::PathBuf;
+
+use crate::config::SimConfig;
+use crate::stats::emit::CsvTable;
+
+/// Experiment scale preset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// CI-speed: 4 CUs, 6 workloads, short runs.
+    Quick,
+    /// Development default: 8 CUs, all 16 workloads.
+    Default,
+    /// Paper shape: 64 CUs, 40 WFs (slow!).
+    Full,
+}
+
+/// Options shared by all experiments.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    pub scale: Scale,
+    pub out_dir: PathBuf,
+    /// Use the PJRT artifact backend in manager runs when available.
+    pub use_pjrt: bool,
+    pub seed: u64,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            scale: Scale::Default,
+            out_dir: PathBuf::from("results"),
+            use_pjrt: false,
+            seed: 0,
+        }
+    }
+}
+
+impl ExpOptions {
+    /// Base simulator config for this scale.
+    pub fn base_cfg(&self) -> SimConfig {
+        let mut c = SimConfig::default();
+        match self.scale {
+            Scale::Quick => {
+                c.gpu.n_cu = 4;
+                c.gpu.n_wf = 8;
+                c.gpu.l2_bytes = 512 * 1024;
+            }
+            Scale::Default => {
+                c.gpu.n_cu = 8;
+                c.gpu.n_wf = 16;
+                c.gpu.l2_bytes = 1024 * 1024;
+            }
+            Scale::Full => {}
+        }
+        c.seed = self.seed;
+        c
+    }
+
+    /// Workload subset for heavyweight sweeps.
+    pub fn workloads(&self) -> Vec<&'static str> {
+        match self.scale {
+            Scale::Quick => vec!["comd", "hpgmg", "xsbench", "hacc", "dgemm", "BwdBN"],
+            _ => crate::workloads::names(),
+        }
+    }
+
+    /// Smaller subset for epoch-length sweeps (each point is a full run).
+    pub fn sweep_workloads(&self) -> Vec<&'static str> {
+        match self.scale {
+            Scale::Quick => vec!["comd", "xsbench", "hacc", "dgemm"],
+            _ => vec![
+                "comd", "hpgmg", "xsbench", "hacc", "quickS", "dgemm", "BwdBN", "FwdSoft",
+            ],
+        }
+    }
+
+    /// Completion-run waves multiplier (controls run length).
+    pub fn waves_scale(&self) -> f64 {
+        match self.scale {
+            Scale::Quick => 0.05,
+            Scale::Default => 0.1,
+            Scale::Full => 1.0,
+        }
+    }
+
+    /// Characterization trace length in epochs.
+    pub fn trace_epochs(&self) -> u64 {
+        match self.scale {
+            Scale::Quick => 40,
+            Scale::Default => 120,
+            Scale::Full => 400,
+        }
+    }
+
+    /// Save a table under `results/` and print it.
+    pub fn emit(&self, id: &str, title: &str, table: &CsvTable) {
+        let path = self.out_dir.join(format!("{id}.csv"));
+        if let Err(e) = table.write(&path) {
+            eprintln!("[harness] failed to write {}: {e}", path.display());
+        } else {
+            println!("[harness] wrote {}", path.display());
+        }
+        crate::stats::emit::print_table(
+            title,
+            &table.header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+            &table.rows,
+        );
+    }
+}
+
+/// Registry of every experiment id.
+pub fn all_experiments() -> Vec<&'static str> {
+    vec![
+        "fig1a", "fig1b", "fig5", "fig6", "fig7", "fig8", "fig10", "fig11a", "fig11b",
+        "table1", "oracle-validation", "fig14", "fig15", "fig16", "fig17", "fig18a", "fig18b",
+        "ablation-table-size", "ablation-alpha", "ablation-table-share",
+    ]
+}
+
+/// Run one experiment by id.
+pub fn run_experiment(id: &str, opts: &ExpOptions) -> anyhow::Result<()> {
+    match id {
+        "fig1a" => evaluation::fig1a(opts),
+        "fig1b" => evaluation::fig1b(opts),
+        "fig5" => characterization::fig5(opts),
+        "fig6" => characterization::fig6(opts),
+        "fig7" => characterization::fig7(opts),
+        "fig8" => characterization::fig8(opts),
+        "fig10" => characterization::fig10(opts),
+        "fig11a" => characterization::fig11a(opts),
+        "fig11b" => characterization::fig11b(opts),
+        "table1" => evaluation::table1(opts),
+        "oracle-validation" => characterization::oracle_validation(opts),
+        "fig14" => evaluation::fig14(opts),
+        "fig15" => evaluation::fig15(opts),
+        "fig16" => evaluation::fig16(opts),
+        "fig17" => evaluation::fig17(opts),
+        "fig18a" => evaluation::fig18a(opts),
+        "fig18b" => evaluation::fig18b(opts),
+        "ablation-table-size" => evaluation::ablation_table_size(opts),
+        "ablation-alpha" => evaluation::ablation_alpha(opts),
+        "ablation-table-share" => evaluation::ablation_table_share(opts),
+        "all" => {
+            for e in all_experiments() {
+                println!("\n########## experiment {e} ##########");
+                run_experiment(e, opts)?;
+            }
+            Ok(())
+        }
+        _ => anyhow::bail!("unknown experiment '{id}' (see `pcstall list`)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_paper_artifacts() {
+        let ids = all_experiments();
+        // every evaluation figure + table of the paper
+        for want in [
+            "fig1a", "fig1b", "fig5", "fig6", "fig7", "fig8", "fig10", "fig11a", "fig11b",
+            "table1", "fig14", "fig15", "fig16", "fig17", "fig18a", "fig18b",
+        ] {
+            assert!(ids.contains(&want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn scales_shrink_config() {
+        let q = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        };
+        let f = ExpOptions {
+            scale: Scale::Full,
+            ..Default::default()
+        };
+        assert!(q.base_cfg().gpu.n_cu < f.base_cfg().gpu.n_cu);
+        assert_eq!(f.base_cfg().gpu.n_cu, 64);
+        assert!(q.workloads().len() < f.workloads().len());
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run_experiment("nope", &ExpOptions::default()).is_err());
+    }
+}

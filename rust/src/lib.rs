@@ -1,0 +1,42 @@
+//! # PCSTALL — fine-grain GPU DVFS via PC-based sensitivity prediction
+//!
+//! A from-scratch reproduction of *"Predict; Don't React for Enabling
+//! Efficient Fine-Grain DVFS in GPUs"* (Bharadwaj et al., AMD, 2022).
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`sim`] — the substrate: a deterministic, snapshot-able,
+//!   wavefront-level GPU timing simulator (the paper's gem5 GCN3 stand-in)
+//!   with per-CU V/f domains, async vector memory + `s_waitcnt` semantics,
+//!   an L1/L2/DRAM hierarchy and quantum-coupled cross-CU contention.
+//! * [`workloads`] — seeded synthetic generators reproducing the phase
+//!   character of the paper's Table II applications (ECP proxies +
+//!   DeepBench/DNNMark kernels).
+//! * [`power`] — the CV²Af + leakage + IVR-efficiency power model shared
+//!   (constant-for-constant) with the Python/Pallas artifact.
+//! * [`models`] — frequency-sensitivity estimation models: STALL, LEAD,
+//!   CRIT, CRISP (CU-level baselines) and the paper's wavefront-level
+//!   STALL estimator.
+//! * [`predictors`] — reactive (last-value), PC-indexed table (PCSTALL),
+//!   and the fork-pre-execute oracle.
+//! * [`dvfs`] — sensitivity metric, objective functions, the per-epoch
+//!   DVFS manager, and the native mirror of the AOT compute graph.
+//! * [`runtime`] — PJRT bridge: loads `artifacts/dvfs_step.hlo.txt` and
+//!   executes it on the epoch hot path (Python never runs at sim time).
+//! * [`harness`] — one experiment per paper figure/table (see DESIGN.md).
+
+pub mod config;
+pub mod dvfs;
+pub mod harness;
+pub mod models;
+pub mod power;
+pub mod predictors;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod util;
+pub mod workloads;
+
+pub use config::SimConfig;
+pub use dvfs::manager::DvfsManager;
+pub use sim::gpu::Gpu;

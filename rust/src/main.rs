@@ -1,0 +1,297 @@
+//! `pcstall` — leader entrypoint + CLI.
+//!
+//! Subcommands (hand-rolled parser; offline environment has no clap):
+//!
+//! ```text
+//! pcstall simulate  --workload comd --policy pcstall [--objective ed2p]
+//!                   [--epochs N | --completion] [--epoch-ns X]
+//!                   [--config file.toml] [--set k=v ...]
+//!                   [--backend native|pjrt] [--json out.json]
+//! pcstall experiment <id|all> [--quick|--full] [--out results/] [--pjrt]
+//! pcstall list
+//! pcstall config dump [--set k=v ...]
+//! pcstall table1
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use pcstall::config::SimConfig;
+use pcstall::dvfs::manager::{DvfsManager, Policy, RunMode};
+use pcstall::dvfs::objective::Objective;
+use pcstall::harness::{all_experiments, run_experiment, ExpOptions, Scale};
+use pcstall::stats::emit::Json;
+use pcstall::workloads;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "simulate" => simulate(&args[1..]),
+        "experiment" => experiment(&args[1..]),
+        "list" => list(),
+        "config" => config_cmd(&args[1..]),
+        "table1" => run_experiment("table1", &ExpOptions::default()),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try `pcstall help`)"),
+    }
+}
+
+const HELP: &str = r#"pcstall — PC-based fine-grain DVFS for GPUs (paper reproduction)
+
+USAGE:
+  pcstall simulate --workload <name> --policy <p> [options]
+  pcstall experiment <id|all> [--quick|--full] [--out dir] [--pjrt]
+  pcstall list
+  pcstall config dump [--set k=v ...]
+  pcstall table1
+
+SIMULATE OPTIONS:
+  --workload <name>     one of `pcstall list` (required)
+  --policy <p>          stall|lead|crit|crisp|accreac|pcstall|accpc|oracle|static:<ghz>
+  --objective <o>       edp|ed2p|energy@<pct>     (default ed2p)
+  --epochs <n>          run exactly n epochs      (default: run to completion)
+  --epoch-ns <x>        epoch duration override
+  --waves-scale <x>     workload length multiplier (default 0.1)
+  --config <file>       TOML config
+  --set k=v             config override (repeatable)
+  --backend native|pjrt compute backend            (default native)
+  --json <file>         dump the run result as JSON
+"#;
+
+/// Pull `--key value` / `--flag` options out of an arg list.
+struct Opts {
+    args: Vec<String>,
+}
+
+impl Opts {
+    fn new(args: &[String]) -> Self {
+        Opts {
+            args: args.to_vec(),
+        }
+    }
+
+    fn take(&mut self, key: &str) -> Option<String> {
+        let pos = self.args.iter().position(|a| a == key)?;
+        if pos + 1 >= self.args.len() {
+            return None;
+        }
+        let v = self.args.remove(pos + 1);
+        self.args.remove(pos);
+        Some(v)
+    }
+
+    fn take_all(&mut self, key: &str) -> Vec<String> {
+        let mut out = Vec::new();
+        while let Some(v) = self.take(key) {
+            out.push(v);
+        }
+        out
+    }
+
+    fn take_flag(&mut self, key: &str) -> bool {
+        if let Some(pos) = self.args.iter().position(|a| a == key) {
+            self.args.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn finish(self) -> Result<Vec<String>> {
+        for a in &self.args {
+            if a.starts_with("--") {
+                anyhow::bail!("unknown option: {a}");
+            }
+        }
+        Ok(self.args)
+    }
+}
+
+fn parse_objective(s: &str) -> Result<Objective> {
+    let lower = s.to_ascii_lowercase();
+    Ok(match lower.as_str() {
+        "edp" => Objective::Edp,
+        "ed2p" => Objective::Ed2p,
+        _ => {
+            if let Some(pct) = lower.strip_prefix("energy@") {
+                let p: f64 = pct.trim_end_matches('%').parse()?;
+                Objective::EnergyBound {
+                    max_slowdown: p / 100.0,
+                }
+            } else {
+                anyhow::bail!("unknown objective '{s}' (edp|ed2p|energy@<pct>)");
+            }
+        }
+    })
+}
+
+fn simulate(args: &[String]) -> Result<()> {
+    let mut o = Opts::new(args);
+    let workload = o
+        .take("--workload")
+        .ok_or_else(|| anyhow::anyhow!("--workload is required"))?;
+    let policy = Policy::parse(&o.take("--policy").unwrap_or_else(|| "pcstall".into()))?;
+    let objective = parse_objective(&o.take("--objective").unwrap_or_else(|| "ed2p".into()))?;
+    let epochs = o.take("--epochs").map(|s| s.parse::<u64>()).transpose()?;
+    let epoch_ns = o.take("--epoch-ns").map(|s| s.parse::<f64>()).transpose()?;
+    let waves: f64 = o.take("--waves-scale").unwrap_or_else(|| "0.1".into()).parse()?;
+    let cfg_path = o.take("--config");
+    let sets = o.take_all("--set");
+    let backend = o.take("--backend").unwrap_or_else(|| "native".into());
+    let json_out = o.take("--json").map(PathBuf::from);
+    o.finish()?;
+
+    let mut cfg = match cfg_path {
+        Some(p) => SimConfig::from_path(std::path::Path::new(&p))?,
+        None => {
+            let mut c = SimConfig::default();
+            c.gpu.n_cu = 8;
+            c.gpu.n_wf = 16;
+            c
+        }
+    };
+    for s in sets {
+        cfg.apply_override(&s)?;
+    }
+    if let Some(e) = epoch_ns {
+        cfg.dvfs.epoch_ns = e;
+    }
+
+    anyhow::ensure!(
+        workloads::names().contains(&workload.as_str()),
+        "unknown workload '{workload}' (see `pcstall list`)"
+    );
+    let wl = workloads::build(&workload, waves);
+
+    let mut mgr = match backend.as_str() {
+        "native" => DvfsManager::new(cfg, &wl, policy, objective),
+        "pjrt" => DvfsManager::with_backend(
+            cfg,
+            &wl,
+            policy,
+            objective,
+            pcstall::runtime::best_backend(None),
+        ),
+        other => anyhow::bail!("unknown backend '{other}'"),
+    };
+    let mode = match epochs {
+        Some(n) => RunMode::Epochs(n),
+        None => RunMode::Completion {
+            max_epochs: 200_000,
+        },
+    };
+    let t0 = std::time::Instant::now();
+    let r = mgr.run(mode, &workload);
+    let dt = t0.elapsed();
+
+    println!("workload   : {}", r.workload);
+    println!("policy     : {}", r.policy);
+    println!("objective  : {}", r.objective);
+    println!("epochs     : {} ({}completed)", r.records.len(), if r.completed { "" } else { "NOT " });
+    println!("sim time   : {:.3} ms simulated in {:.2?}", r.total_time_ns / 1e6, dt);
+    println!("instructions: {:.3e}", r.total_instr);
+    println!("energy     : {:.6} J", r.total_energy_j);
+    println!("EDP        : {:.4e} J*s", r.edp());
+    println!("ED2P       : {:.4e} J*s^2", r.ed2p());
+    println!("accuracy   : {:.3}", r.mean_accuracy);
+    let share = r.freq_time_share();
+    println!(
+        "freq share : {}",
+        share
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| **s > 0.005)
+            .map(|(k, s)| format!("{:.1}GHz:{:.0}%", 1.3 + 0.1 * k as f64, s * 100.0))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+
+    if let Some(path) = json_out {
+        let j = Json::obj(vec![
+            ("workload", Json::Str(r.workload.clone())),
+            ("policy", Json::Str(r.policy.clone())),
+            ("objective", Json::Str(r.objective.clone())),
+            ("epochs", Json::Num(r.records.len() as f64)),
+            ("completed", Json::Bool(r.completed)),
+            ("total_instr", Json::Num(r.total_instr)),
+            ("energy_j", Json::Num(r.total_energy_j)),
+            ("time_ns", Json::Num(r.total_time_ns)),
+            ("edp", Json::Num(r.edp())),
+            ("ed2p", Json::Num(r.ed2p())),
+            ("accuracy", Json::Num(r.mean_accuracy)),
+            ("freq_share", Json::nums(&share)),
+        ]);
+        j.write(&path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn experiment(args: &[String]) -> Result<()> {
+    let mut o = Opts::new(args);
+    let mut opts = ExpOptions::default();
+    if o.take_flag("--quick") {
+        opts.scale = Scale::Quick;
+    }
+    if o.take_flag("--full") {
+        opts.scale = Scale::Full;
+    }
+    if let Some(dir) = o.take("--out") {
+        opts.out_dir = PathBuf::from(dir);
+    }
+    opts.use_pjrt = o.take_flag("--pjrt");
+    if let Some(seed) = o.take("--seed") {
+        opts.seed = seed.parse()?;
+    }
+    let rest = o.finish()?;
+    let id = rest.first().map(|s| s.as_str()).unwrap_or("all");
+    let t0 = std::time::Instant::now();
+    run_experiment(id, &opts)?;
+    println!("\n[experiment {id} done in {:.1?}]", t0.elapsed());
+    Ok(())
+}
+
+fn list() -> Result<()> {
+    println!("workloads (paper Table II):");
+    for w in workloads::names() {
+        let spec = workloads::build(w, 1.0);
+        println!("  {:<10} {} kernel(s)", w, spec.kernels.len());
+    }
+    println!("\npolicies (paper Table III):");
+    for p in ["stall", "lead", "crit", "crisp", "accreac", "pcstall", "accpc", "oracle", "static:<ghz>"] {
+        println!("  {p}");
+    }
+    println!("\nexperiments:");
+    for e in all_experiments() {
+        println!("  {e}");
+    }
+    Ok(())
+}
+
+fn config_cmd(args: &[String]) -> Result<()> {
+    let mut o = Opts::new(args);
+    let sets = o.take_all("--set");
+    let rest = o.finish()?;
+    anyhow::ensure!(
+        rest.first().map(|s| s.as_str()) == Some("dump"),
+        "usage: pcstall config dump [--set k=v ...]"
+    );
+    let mut cfg = SimConfig::default();
+    for s in sets {
+        cfg.apply_override(&s)?;
+    }
+    print!("{}", cfg.to_toml());
+    Ok(())
+}

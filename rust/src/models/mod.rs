@@ -1,0 +1,273 @@
+//! Frequency-sensitivity estimation models (paper §2.3, Table III).
+//!
+//! Every CU-level model reduces the elapsed epoch to an *(asynchronous
+//! time, core time)* split at the operating frequency f₁, then converts
+//! to the linear `(S, I0)` phase estimate by evaluating the classic DVFS
+//! time-scaling identity
+//!
+//! `T(f₂) = T_async + (f₁ / f₂) · T_core`
+//!
+//! at the ladder endpoints.  The wavefront-level model (PCSTALL's
+//! estimator) works per wavefront instead and is the native mirror of the
+//! Pallas `wf_sensitivity` kernel.
+
+use crate::config::SimConfig;
+use crate::dvfs::sensitivity::SensEstimate;
+use crate::power::params::{FREQS_GHZ, N_FREQ};
+use crate::sim::cu::EpochCounters;
+use crate::sim::gpu::EpochObservation;
+use crate::sim::ps_to_ns;
+
+/// CU-level estimation models from the literature (paper Table III).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EstModel {
+    /// Stall model [Keramidas'10]: async time = cycles with no issue while
+    /// memory-blocked.  Ignores memory-level parallelism.
+    Stall,
+    /// Leading Load [Keramidas'10, Eyerman'10, Rountree'11]: async time =
+    /// accumulated latency of loads issued with no other load in flight.
+    Lead,
+    /// Critical Path [Miftakhutdinov'12]: async time = intervals where the
+    /// oldest (criticality proxy) wavefront is memory-blocked.
+    Crit,
+    /// CRISP [Nath & Tullsen '15]: Critical-path extended with GPU store
+    /// stalls and compute/memory overlap credit.
+    Crisp,
+}
+
+impl EstModel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EstModel::Stall => "STALL",
+            EstModel::Lead => "LEAD",
+            EstModel::Crit => "CRIT",
+            EstModel::Crisp => "CRISP",
+        }
+    }
+
+    pub fn all() -> [EstModel; 4] {
+        [EstModel::Stall, EstModel::Lead, EstModel::Crit, EstModel::Crisp]
+    }
+
+    /// Asynchronous (frequency-independent) time for the epoch, ns.
+    fn t_async_ns(&self, c: &EpochCounters) -> f64 {
+        let epoch = ps_to_ns(c.epoch_ps);
+        let t = match self {
+            EstModel::Stall => ps_to_ns(c.stall_all_ps),
+            EstModel::Lead => ps_to_ns(c.lead_load_ps),
+            EstModel::Crit => ps_to_ns(c.crit_ps),
+            EstModel::Crisp => {
+                // Store stalls add memory time the CRIT proxy misses;
+                // issue/memory overlap is compute the CU got "for free"
+                // during memory waits and is credited back to core time.
+                let base = ps_to_ns(c.crit_ps) + ps_to_ns(c.store_stall_ps);
+                base - 0.5 * ps_to_ns(c.overlap_ps).min(base)
+            }
+        };
+        t.clamp(0.0, epoch)
+    }
+}
+
+/// Estimate a CU's `(S, I0)` from its epoch counters.
+pub fn estimate_cu(model: EstModel, c: &EpochCounters) -> SensEstimate {
+    let epoch_ns = ps_to_ns(c.epoch_ps);
+    let i1 = c.instr as f64;
+    if epoch_ns <= 0.0 || i1 <= 0.0 {
+        return SensEstimate::default();
+    }
+    let f1 = c.freq_ghz;
+    let t_async = model.t_async_ns(c);
+    let t_core = epoch_ns - t_async;
+
+    // Fixed work (i1) takes T(f2) = t_async + t_core * f1/f2; a fixed-time
+    // epoch therefore commits I(f2) = i1 * epoch / T(f2).
+    let i_at = |f2: f64| -> f64 {
+        let t = t_async + t_core * f1 / f2;
+        if t <= 1e-9 {
+            i1
+        } else {
+            i1 * epoch_ns / t
+        }
+    };
+    let (f_lo, f_hi) = (FREQS_GHZ[0], FREQS_GHZ[N_FREQ - 1]);
+    let sens = (i_at(f_hi) - i_at(f_lo)) / (f_hi - f_lo);
+    let i0 = (i1 - sens * f1).max(0.0);
+    SensEstimate::new(sens, i0)
+}
+
+/// Wavefront-level STALL estimate for one slot — the native mirror of the
+/// Pallas `wf_sensitivity` kernel (python/compile/kernels/sensitivity.py).
+/// IPC is the epoch-wide commit rate (instr per epoch cycle at f).
+#[inline]
+pub fn estimate_wf(
+    instr: f64,
+    t_core_ns: f64,
+    age_factor: f64,
+    freq_ghz: f64,
+    epoch_ns: f64,
+) -> SensEstimate {
+    const EPS: f64 = 1e-6;
+    let cycles_epoch = epoch_ns * freq_ghz;
+    let ipc = instr / cycles_epoch.max(EPS);
+    let sens = ipc * t_core_ns * age_factor;
+    // Per-WF intercept (clamped at CU aggregation, matching the kernel).
+    let i0 = instr - sens * freq_ghz;
+    SensEstimate::new(sens, i0)
+}
+
+/// Per-CU wavefront-aggregated estimates for a whole observation
+/// (the update path of PCSTALL).  Returns (per-CU per-slot, per-CU sums).
+pub fn estimate_wf_all(
+    ob: &EpochObservation,
+    _cfg: &SimConfig,
+) -> (Vec<Vec<SensEstimate>>, Vec<SensEstimate>) {
+    let mut per_wf = Vec::with_capacity(ob.cu.len());
+    let mut per_cu = Vec::with_capacity(ob.cu.len());
+    for c in 0..ob.cu.len() {
+        let f = ob.cu[c].freq_ghz;
+        let mut slots = Vec::with_capacity(ob.wf_instr[c].len());
+        let mut sum_sens = 0.0;
+        let mut sum_instr = 0.0;
+        for w in 0..ob.wf_instr[c].len() {
+            let e = estimate_wf(
+                ob.wf_instr[c][w] as f64,
+                ob.wf_core_ns[c][w] as f64,
+                ob.wf_age_factor[c][w] as f64,
+                f,
+                ob.epoch_ns,
+            );
+            sum_sens += e.sens;
+            sum_instr += ob.wf_instr[c][w] as f64;
+            slots.push(e);
+        }
+        let i0_cu = (sum_instr - sum_sens * f).max(0.0);
+        per_wf.push(slots);
+        per_cu.push(SensEstimate::new(sum_sens, i0_cu));
+    }
+    (per_wf, per_cu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::ns_to_ps;
+
+    fn counters(
+        instr: u64,
+        epoch_ns: f64,
+        f: f64,
+        stall_ns: f64,
+        lead_ns: f64,
+        crit_ns: f64,
+    ) -> EpochCounters {
+        EpochCounters {
+            instr,
+            epoch_ps: ns_to_ps(epoch_ns),
+            freq_ghz: f,
+            stall_all_ps: ns_to_ps(stall_ns),
+            lead_load_ps: ns_to_ps(lead_ns),
+            crit_ps: ns_to_ps(crit_ns),
+            ..EpochCounters::default()
+        }
+    }
+
+    #[test]
+    fn pure_compute_epoch_has_full_sensitivity() {
+        // no async time: instructions scale ∝ f
+        let c = counters(1700, 1000.0, 1.7, 0.0, 0.0, 0.0);
+        for m in EstModel::all() {
+            let e = estimate_cu(m, &c);
+            // I(f) = 1000 * f exactly => S = 1000, I0 = 0
+            assert!((e.sens - 1000.0).abs() < 1.0, "{m:?}: {e:?}");
+            assert!(e.i0.abs() < 1.0, "{m:?}: {e:?}");
+        }
+    }
+
+    #[test]
+    fn fully_async_epoch_has_zero_sensitivity() {
+        let c = counters(200, 1000.0, 1.7, 1000.0, 1000.0, 1000.0);
+        for m in EstModel::all() {
+            let e = estimate_cu(m, &c);
+            assert!(e.sens.abs() < 1e-6, "{m:?}: {e:?}");
+            assert!((e.i0 - 200.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn half_stalled_epoch_interpolates() {
+        let c = counters(1000, 1000.0, 1.7, 500.0, 500.0, 500.0);
+        let e = estimate_cu(EstModel::Stall, &c);
+        assert!(e.sens > 100.0 && e.sens < 1000.0, "{e:?}");
+        // prediction at f1 must reproduce the observation
+        assert!((e.instr_at(1.7) - 1000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn zero_instr_epoch_is_neutral() {
+        let c = counters(0, 1000.0, 1.7, 100.0, 0.0, 0.0);
+        for m in EstModel::all() {
+            assert_eq!(estimate_cu(m, &c), SensEstimate::default());
+        }
+    }
+
+    #[test]
+    fn crisp_overlap_credit_raises_sensitivity() {
+        let mut c = counters(1000, 1000.0, 1.7, 600.0, 600.0, 600.0);
+        let no_overlap = estimate_cu(EstModel::Crisp, &c);
+        c.overlap_ps = ns_to_ps(400.0);
+        let with_overlap = estimate_cu(EstModel::Crisp, &c);
+        assert!(
+            with_overlap.sens > no_overlap.sens,
+            "overlap credit must shift time toward core: {no_overlap:?} vs {with_overlap:?}"
+        );
+    }
+
+    #[test]
+    fn crisp_store_stalls_lower_sensitivity() {
+        let mut c = counters(1000, 1000.0, 1.7, 300.0, 300.0, 300.0);
+        let without = estimate_cu(EstModel::Crisp, &c);
+        c.store_stall_ps = ns_to_ps(300.0);
+        let with = estimate_cu(EstModel::Crisp, &c);
+        assert!(with.sens < without.sens);
+    }
+
+    #[test]
+    fn estimate_at_operating_point_is_consistent() {
+        // All models must reproduce the measured I at the measured f.
+        let c = counters(1234, 1000.0, 2.0, 313.0, 288.0, 300.0);
+        for m in EstModel::all() {
+            let e = estimate_cu(m, &c);
+            assert!(
+                (e.instr_at(2.0) - 1234.0).abs() < 2.0,
+                "{m:?} inconsistent at f1: {e:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn wf_estimate_matches_kernel_semantics() {
+        // ipc = instr / (epoch * f); sens = ipc * t_core * age
+        let e = estimate_wf(800.0, 400.0, 0.5, 2.0, 1000.0);
+        let ipc = 800.0 / (1000.0 * 2.0);
+        assert!((e.sens - ipc * 400.0 * 0.5).abs() < 1e-9);
+        assert!((e.i0 - (800.0 - e.sens * 2.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wf_estimate_zero_core_time() {
+        let e = estimate_wf(100.0, 0.0, 1.0, 2.0, 1000.0);
+        assert!(e.sens.abs() < 1e-3);
+        assert!((e.i0 - 100.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn wf_estimate_fully_busy_wavefront_recovers_rate() {
+        // WF always unstalled committing 1 instr/cycle at f=2 over a 1µs
+        // epoch: sens = dI/df = epoch_ns
+        let epoch = 1000.0;
+        let f = 2.0;
+        let e = estimate_wf(epoch * f, epoch, 1.0, f, epoch);
+        assert!((e.sens - epoch).abs() < 1e-6, "{e:?}");
+        assert!(e.i0.abs() < 1e-3);
+    }
+}

@@ -1,0 +1,153 @@
+//! Per-CU power model (paper §5 "Power Model").
+//!
+//! `P(f, rate) = (C1·V²·rate + C2·V²·f + L0·e^{LV(V−Vnom)}) / η(f)`
+//!
+//! * the first term is instruction-driven switching (activity ∝ committed
+//!   instruction rate, the paper's performance-counter-based estimate),
+//! * the second is clock-tree/pipeline switching that burns with every
+//!   cycle regardless of useful work,
+//! * leakage is exponential in voltage but nearly flat over the small IVR
+//!   range (the paper's observation),
+//! * η is the IVR conversion efficiency at the chosen state.
+//!
+//! The constants here **must** stay identical to
+//! `python/compile/params.py`; `rust/tests/pjrt_parity.rs` executes the
+//! AOT artifact against [`crate::dvfs::native`] to enforce it.
+
+pub mod params;
+
+pub use params::PowerParams;
+
+/// Energy/power bookkeeping for one V/f domain over one epoch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpochPower {
+    /// Average total power over the epoch (W).
+    pub power_w: f64,
+    /// Energy consumed over the epoch (J).
+    pub energy_j: f64,
+}
+
+impl PowerParams {
+    /// Supply voltage on the IVR line at frequency `f_ghz`.
+    #[inline]
+    pub fn voltage(&self, f_ghz: f64) -> f64 {
+        self.v0 + self.kv * (f_ghz - self.f_min_ghz)
+    }
+
+    /// IVR conversion efficiency at the state supplying `f_ghz`.
+    #[inline]
+    pub fn ivr_eta(&self, f_ghz: f64) -> f64 {
+        self.eta0 + self.eta_slope * (f_ghz - self.f_min_ghz) / (self.f_max_ghz - self.f_min_ghz)
+    }
+
+    /// Total CU power at frequency `f_ghz` with committed instruction rate
+    /// `rate_gips` (Giga-instructions per second = instructions per ns).
+    #[inline]
+    pub fn power_w(&self, f_ghz: f64, rate_gips: f64) -> f64 {
+        let v = self.voltage(f_ghz);
+        let v2 = v * v;
+        let p_dyn = self.c1 * v2 * rate_gips + self.c2 * v2 * f_ghz;
+        let p_leak = self.l0 * (self.lv * (v - self.v_nom)).exp();
+        (p_dyn + p_leak) / self.ivr_eta(f_ghz)
+    }
+
+    /// Power + energy for an epoch of `epoch_ns` in which `instr`
+    /// instructions were committed at `f_ghz`.
+    pub fn epoch_power(&self, f_ghz: f64, instr: f64, epoch_ns: f64) -> EpochPower {
+        let rate = instr / epoch_ns.max(1e-9);
+        let p = self.power_w(f_ghz, rate);
+        EpochPower {
+            power_w: p,
+            energy_j: p * epoch_ns * 1e-9,
+        }
+    }
+
+    /// Energy cost of one V/f transition (charging/discharging the domain
+    /// rail); amortized against the epoch by the manager.
+    #[inline]
+    pub fn transition_energy_j(&self, f_from_ghz: f64, f_to_ghz: f64) -> f64 {
+        let dv = (self.voltage(f_to_ghz) - self.voltage(f_from_ghz)).abs();
+        // E ≈ C_rail · V · ΔV; C_rail folded into a fitted constant.
+        self.rail_cj * dv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> PowerParams {
+        PowerParams::default()
+    }
+
+    #[test]
+    fn voltage_endpoints_match_paper_range() {
+        let p = p();
+        assert!((p.voltage(1.3) - 0.75).abs() < 1e-12);
+        assert!((p.voltage(2.2) - 1.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_monotonic_in_frequency_at_fixed_rate() {
+        let p = p();
+        let mut last = 0.0;
+        for i in 0..10 {
+            let f = 1.3 + 0.1 * i as f64;
+            let w = p.power_w(f, 1.0);
+            assert!(w > last, "power must rise with f: {w} !> {last}");
+            last = w;
+        }
+    }
+
+    #[test]
+    fn power_monotonic_in_rate() {
+        let p = p();
+        assert!(p.power_w(1.7, 2.0) > p.power_w(1.7, 1.0));
+    }
+
+    #[test]
+    fn cubic_scaling_shape() {
+        // Dynamic power at max-vs-min state for a compute-bound phase
+        // (rate ∝ f) should scale super-linearly (~V²f ⇒ ×(1.4)²×1.69 ≈ 3.3).
+        let p = p();
+        let lo = p.power_w(1.3, 1.3);
+        let hi = p.power_w(2.2, 2.2);
+        let ratio = hi / lo;
+        assert!(
+            (2.5..4.5).contains(&ratio),
+            "compute-bound power ratio {ratio} outside plausible cubic band"
+        );
+    }
+
+    #[test]
+    fn leakage_flat_over_ivr_range() {
+        // Paper: "leakage power at the different operating states does not
+        // significantly vary across the small voltage range".
+        let p = p();
+        let leak = |f: f64| p.l0 * (p.lv * (p.voltage(f) - p.v_nom)).exp();
+        assert!(leak(2.2) / leak(1.3) < 2.0);
+    }
+
+    #[test]
+    fn epoch_energy_integrates_power() {
+        let p = p();
+        let e = p.epoch_power(1.7, 1700.0, 1000.0);
+        assert!((e.energy_j - e.power_w * 1e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn transition_energy_zero_for_same_state() {
+        let p = p();
+        assert_eq!(p.transition_energy_j(1.7, 1.7), 0.0);
+        assert!(p.transition_energy_j(1.3, 2.2) > 0.0);
+    }
+
+    #[test]
+    fn per_cu_power_in_plausible_gpu_band() {
+        // A compute-bound CU at 2.2 GHz should land in the single-digit
+        // watt range (64 CUs ≈ a 200–350 W board).
+        let p = p();
+        let w = p.power_w(2.2, 2.2);
+        assert!((2.0..8.0).contains(&w), "per-CU power {w} W implausible");
+    }
+}

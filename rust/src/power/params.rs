@@ -1,0 +1,101 @@
+//! Power/V-f constants — the Rust mirror of `python/compile/params.py`.
+//!
+//! Keep the two files in lockstep; `rust/tests/pjrt_parity.rs` fails if
+//! they drift (it compares the AOT artifact, built from the Python
+//! constants, against the native implementation built from these).
+
+
+/// Number of V/f states (paper §5: 1.3–2.2 GHz at 100 MHz steps).
+pub const N_FREQ: usize = 10;
+
+/// The discrete frequency ladder in GHz.
+pub const FREQS_GHZ: [f64; N_FREQ] = [1.3, 1.4, 1.5, 1.6, 1.7, 1.8, 1.9, 2.0, 2.1, 2.2];
+
+/// Paper's static normalization point (Figs. 15/17).
+pub const F_STATIC_GHZ: f64 = 1.7;
+
+/// Index of [`F_STATIC_GHZ`] in [`FREQS_GHZ`].
+pub const F_STATIC_IDX: usize = 4;
+
+/// Numerical floor shared with the kernels.
+pub const EPS: f64 = 1e-6;
+
+/// All tunable power-model constants.  `Default` gives the values baked
+/// into the AOT artifact.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerParams {
+    pub f_min_ghz: f64,
+    pub f_max_ghz: f64,
+    /// Voltage at `f_min` (V).
+    pub v0: f64,
+    /// Voltage slope (V per GHz).
+    pub kv: f64,
+    /// Leakage reference voltage (V).
+    pub v_nom: f64,
+    /// Instruction-driven switching (W per V² per Ginstr/s).
+    pub c1: f64,
+    /// Clock-tree switching (W per V² per GHz).
+    pub c2: f64,
+    /// Leakage magnitude at `v_nom` (W).
+    pub l0: f64,
+    /// Leakage exponential slope (1/V).
+    pub lv: f64,
+    /// IVR efficiency at the lowest state.
+    pub eta0: f64,
+    /// IVR efficiency rise from lowest to highest state.
+    pub eta_slope: f64,
+    /// Rail charge constant for transition energy (J per V).
+    pub rail_cj: f64,
+}
+
+impl Default for PowerParams {
+    fn default() -> Self {
+        Self {
+            f_min_ghz: 1.3,
+            f_max_ghz: 2.2,
+            v0: 0.75,
+            kv: (1.05 - 0.75) / (2.2 - 1.3),
+            v_nom: 0.90,
+            c1: 0.9,
+            c2: 0.6,
+            l0: 0.35,
+            lv: 2.0,
+            eta0: 0.88,
+            eta_slope: 0.05,
+            rail_cj: 2e-9,
+        }
+    }
+}
+
+/// Nearest ladder index for an arbitrary frequency (clamped).
+pub fn freq_index(f_ghz: f64) -> usize {
+    let idx = ((f_ghz - FREQS_GHZ[0]) / 0.1).round() as isize;
+    idx.clamp(0, (N_FREQ - 1) as isize) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_is_uniform_100mhz() {
+        for w in FREQS_GHZ.windows(2) {
+            assert!((w[1] - w[0] - 0.1).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn static_index_is_1p7() {
+        assert!((FREQS_GHZ[F_STATIC_IDX] - F_STATIC_GHZ).abs() < 1e-12);
+    }
+
+    #[test]
+    fn freq_index_roundtrip() {
+        for (i, f) in FREQS_GHZ.iter().enumerate() {
+            assert_eq!(freq_index(*f), i);
+        }
+        assert_eq!(freq_index(0.5), 0);
+        assert_eq!(freq_index(9.9), N_FREQ - 1);
+        assert_eq!(freq_index(1.74), 4);
+    }
+}

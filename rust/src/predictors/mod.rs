@@ -1,0 +1,10 @@
+//! Prediction mechanisms (paper §2.4, §4.3–4.4): last-value reactive,
+//! the PC-indexed sensitivity table (PCSTALL), and the fork-pre-execute
+//! oracle.
+
+pub mod oracle;
+pub mod pc_table;
+pub mod storage;
+
+pub use oracle::{OracleSample, OracleSampler};
+pub use pc_table::{PcTables, ReactiveState};

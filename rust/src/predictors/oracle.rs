@@ -1,0 +1,280 @@
+//! Fork-Pre-Execute oracle (paper §5.1, Fig. 13).
+//!
+//! At an epoch boundary the simulator state is snapshotted (the paper's
+//! process *fork*), the upcoming epoch is pre-executed once per V/f
+//! state with frequencies *shuffled* across domains (so every domain
+//! visits every state exactly once across the 10 samples, and
+//! cross-domain interference is averaged out), per-domain and per-slot
+//! instruction counts are regressed against frequency, and the state is
+//! restored for the real execution.
+//!
+//! This is both the ground-truth generator (ORACLE / ACCREAC / ACCPC in
+//! Table III) and the measurement instrument for the characterization
+//! experiments (Figs. 5–11).
+
+use crate::dvfs::sensitivity::SensEstimate;
+use crate::power::params::{FREQS_GHZ, N_FREQ};
+use crate::sim::gpu::Gpu;
+use crate::util::linreg;
+
+/// Result of pre-executing one epoch at all ladder states.
+#[derive(Debug, Clone)]
+pub struct OracleSample {
+    /// Accurate per-domain estimates of the sampled epoch.
+    pub dom: Vec<SensEstimate>,
+    /// Regression quality per domain.
+    pub dom_r2: Vec<f64>,
+    /// Measured instructions per domain at each ladder state
+    /// (`[n_dom][N_FREQ]`), aligned to the shuffle.
+    pub dom_instr_at: Vec<[f64; N_FREQ]>,
+    /// Accurate per-CU, per-slot estimates (ACCPC's table payload).
+    pub wf: Vec<Vec<SensEstimate>>,
+    /// Per-CU, per-slot epoch-start PC/kernel (table update keys) and
+    /// active flags, captured from the sampled epoch.
+    pub wf_start_pc: Vec<Vec<u32>>,
+    pub wf_start_kernel: Vec<Vec<u32>>,
+    pub wf_active: Vec<Vec<bool>>,
+}
+
+/// The sampler.  Stateless; holds only tunables.
+#[derive(Debug, Clone, Copy)]
+pub struct OracleSampler {
+    /// Number of sampling processes (paper: one per V/f state).
+    pub n_samples: usize,
+}
+
+impl Default for OracleSampler {
+    fn default() -> Self {
+        OracleSampler { n_samples: N_FREQ }
+    }
+}
+
+impl OracleSampler {
+    /// Pre-execute the next epoch of `gpu` (left untouched — all work
+    /// happens on clones, the in-process analogue of fork).
+    pub fn sample(&self, gpu: &Gpu) -> OracleSample {
+        let n_dom = gpu.n_domains();
+        let n_cu = gpu.cfg.gpu.n_cu;
+        let n_wf = gpu.cfg.gpu.n_wf;
+
+        // sampled instruction counts: [sample][domain], [sample][cu][slot]
+        let mut dom_instr = vec![vec![0f64; n_dom]; self.n_samples];
+        let mut wf_instr = vec![vec![vec![0f32; n_wf]; n_cu]; self.n_samples];
+        let mut dom_freq = vec![vec![0f64; n_dom]; self.n_samples];
+        let mut keys: Option<(Vec<Vec<u32>>, Vec<Vec<u32>>, Vec<Vec<bool>>)> = None;
+
+        for k in 0..self.n_samples {
+            let mut sim = gpu.clone();
+            // Shuffled assignment: domain d runs at state (d + k) mod 10.
+            for d in 0..n_dom {
+                let f = FREQS_GHZ[(d + k) % N_FREQ];
+                sim.set_domain_frequency(d, f);
+                dom_freq[k][d] = f;
+            }
+            let ob = sim.run_epoch();
+            for d in 0..n_dom {
+                dom_instr[k][d] = sim
+                    .domain_cus(d)
+                    .map(|c| sim.cus[c].counters.instr as f64)
+                    .sum();
+            }
+            for c in 0..n_cu {
+                for w in 0..n_wf {
+                    wf_instr[k][c][w] = ob.wf_instr[c][w];
+                }
+            }
+            if keys.is_none() {
+                keys = Some((ob.wf_start_pc, ob.wf_start_kernel, ob.wf_active));
+            }
+        }
+
+        // Per-domain regression over the (freq, instr) samples.
+        let mut dom = Vec::with_capacity(n_dom);
+        let mut dom_r2 = Vec::with_capacity(n_dom);
+        let mut dom_instr_at = Vec::with_capacity(n_dom);
+        for d in 0..n_dom {
+            let xs: Vec<f64> = (0..self.n_samples).map(|k| dom_freq[k][d]).collect();
+            let ys: Vec<f64> = (0..self.n_samples).map(|k| dom_instr[k][d]).collect();
+            let (i0, s, r2) = linreg(&xs, &ys);
+            dom.push(SensEstimate::new(s, i0.max(0.0)));
+            dom_r2.push(r2);
+            // reorder measurements onto the ladder
+            let mut at = [0f64; N_FREQ];
+            for k in 0..self.n_samples {
+                let idx = crate::power::params::freq_index(dom_freq[k][d]);
+                at[idx] = dom_instr[k][d];
+            }
+            dom_instr_at.push(at);
+        }
+
+        // Per-slot regression (all CUs of a domain share its frequency).
+        let mut wf = Vec::with_capacity(n_cu);
+        for c in 0..n_cu {
+            let d = gpu.cu_domain(c);
+            let xs: Vec<f64> = (0..self.n_samples).map(|k| dom_freq[k][d]).collect();
+            let mut slots = Vec::with_capacity(n_wf);
+            for w in 0..n_wf {
+                let ys: Vec<f64> = (0..self.n_samples)
+                    .map(|k| wf_instr[k][c][w] as f64)
+                    .collect();
+                let (i0, s, _) = linreg(&xs, &ys);
+                slots.push(SensEstimate::new(s.max(0.0), i0.max(0.0)));
+            }
+            wf.push(slots);
+        }
+
+        let (wf_start_pc, wf_start_kernel, wf_active) = keys.unwrap();
+        OracleSample {
+            dom,
+            dom_r2,
+            dom_instr_at,
+            wf,
+            wf_start_pc,
+            wf_start_kernel,
+            wf_active,
+        }
+    }
+
+    /// Validation metric (paper §5.1: 97.6% with 10 processes): compare
+    /// each domain's regression prediction at its *re-executed* frequency
+    /// with the instructions the real execution committed.
+    pub fn validate(&self, gpu: &Gpu, chosen_freq_ghz: &[f64]) -> f64 {
+        let sample = self.sample(gpu);
+        let mut sim = gpu.clone();
+        for (d, &f) in chosen_freq_ghz.iter().enumerate() {
+            sim.set_domain_frequency(d, f);
+        }
+        sim.run_epoch();
+        let mut accs = Vec::new();
+        for d in 0..gpu.n_domains() {
+            let actual: f64 = sim
+                .domain_cus(d)
+                .map(|c| sim.cus[c].counters.instr as f64)
+                .sum();
+            let predicted = sample.dom[d].instr_at(chosen_freq_ghz[d]);
+            accs.push(crate::dvfs::sensitivity::prediction_accuracy(
+                predicted, actual,
+            ));
+        }
+        accs.iter().sum::<f64>() / accs.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::sim::gpu::KernelLaunch;
+    use crate::sim::isa::{Op, Pattern, ProgramBuilder};
+    use std::sync::Arc;
+
+    fn gpu_with(compute: bool) -> Gpu {
+        let mut cfg = SimConfig::small();
+        cfg.gpu.n_cu = 4;
+        cfg.gpu.n_wf = 8;
+        let mut g = Gpu::new(cfg);
+        let mut b = ProgramBuilder::new();
+        if compute {
+            b.with_loop(0, 5000, 0, |b| {
+                b.push(Op::VAlu { cycles: 1 });
+            });
+        } else {
+            b.with_loop(0, 5000, 0, |b| {
+                b.push(Op::Load {
+                    pattern: Pattern::Random {
+                        region: 1,
+                        working_set: 256 << 20,
+                    },
+                    fan: 1,
+                });
+                b.push(Op::WaitCnt { max: 0 });
+            });
+        }
+        g.load_workload(
+            vec![KernelLaunch {
+                program: Arc::new(b.build(0, "t")),
+                waves_per_cu: 16,
+            }],
+            1,
+        );
+        // settle one epoch so wavefronts are mid-flight
+        g.run_epoch();
+        g
+    }
+
+    #[test]
+    fn sample_leaves_gpu_untouched() {
+        let g = gpu_with(true);
+        let before = g.total_instr();
+        let now = g.now_ps;
+        OracleSampler::default().sample(&g);
+        assert_eq!(g.total_instr(), before);
+        assert_eq!(g.now_ps, now);
+    }
+
+    #[test]
+    fn compute_bound_epoch_regresses_high_sensitivity() {
+        let g = gpu_with(true);
+        let s = OracleSampler::default().sample(&g);
+        for d in 0..g.n_domains() {
+            assert!(
+                s.dom[d].sens > 500.0,
+                "domain {d} sens {} too low for pure compute",
+                s.dom[d].sens
+            );
+            assert!(s.dom_r2[d] > 0.95, "R² {} too low", s.dom_r2[d]);
+        }
+    }
+
+    #[test]
+    fn memory_bound_epoch_regresses_low_sensitivity() {
+        let g = gpu_with(false);
+        let s = OracleSampler::default().sample(&g);
+        let mean_sens: f64 =
+            s.dom.iter().map(|e| e.sens).sum::<f64>() / s.dom.len() as f64;
+        let mean_i0: f64 = s.dom.iter().map(|e| e.i0).sum::<f64>() / s.dom.len() as f64;
+        assert!(
+            mean_sens < 0.3 * mean_i0.max(1.0),
+            "memory-bound sens {mean_sens} vs i0 {mean_i0}"
+        );
+    }
+
+    #[test]
+    fn shuffle_covers_every_state_per_domain() {
+        let g = gpu_with(true);
+        let s = OracleSampler::default().sample(&g);
+        // dom_instr_at has a measurement at every ladder slot
+        for d in 0..g.n_domains() {
+            for k in 0..N_FREQ {
+                assert!(
+                    s.dom_instr_at[d][k] > 0.0,
+                    "domain {d} state {k} never sampled"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn validation_accuracy_is_high() {
+        let g = gpu_with(true);
+        let freqs: Vec<f64> = (0..g.n_domains())
+            .map(|d| FREQS_GHZ[d % N_FREQ])
+            .collect();
+        let acc = OracleSampler::default().validate(&g, &freqs);
+        // paper reports 97.6% with 10 sampling processes
+        assert!(acc > 0.90, "oracle validation accuracy {acc}");
+    }
+
+    #[test]
+    fn per_wavefront_estimates_sum_to_domain_scale() {
+        let g = gpu_with(true);
+        let s = OracleSampler::default().sample(&g);
+        let wf_total: f64 = s.wf.iter().flatten().map(|e| e.sens).sum();
+        let dom_total: f64 = s.dom.iter().map(|e| e.sens).sum();
+        // per-slot regressions are noisier but must be the same magnitude
+        assert!(
+            wf_total > 0.3 * dom_total && wf_total < 3.0 * dom_total.max(1.0),
+            "wf {wf_total} vs dom {dom_total}"
+        );
+    }
+}

@@ -1,0 +1,270 @@
+//! The PC-indexed sensitivity table (paper §4.4, Fig. 12) and the
+//! last-value reactive predictor it is compared against (Fig. 3a).
+//!
+//! Table mechanics follow the paper: each wavefront indexes with its
+//! *starting PC* for the update path and its *current PC* for the lookup
+//! path; entries store the sensitivity of the time epoch that started at
+//! that PC.  Instruction PCs are converted to byte addresses (4-byte
+//! encoded ISA) before applying the configurable offset shift, so
+//! `pc_offset_bits = 4` groups ~4 instructions per entry exactly as in
+//! Fig. 11b.  Tables may be shared by several CUs (`pc_table_share`).
+
+use crate::config::DvfsConfig;
+use crate::dvfs::sensitivity::SensEstimate;
+
+/// One table entry: the (S, I0) estimate of the epoch that began at this
+/// PC bucket, plus a valid bit.
+#[derive(Debug, Clone, Copy, Default)]
+struct Entry {
+    sens: f32,
+    i0: f32,
+    valid: bool,
+}
+
+/// One physical PC table instance.
+#[derive(Debug, Clone)]
+struct Table {
+    entries: Vec<Entry>,
+    mask: usize,
+    offset_bits: u32,
+    alpha: f32,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Table {
+    fn new(n_entries: usize, offset_bits: u32, alpha: f64) -> Self {
+        let n = n_entries.next_power_of_two().max(2);
+        Table {
+            entries: vec![Entry::default(); n],
+            mask: n - 1,
+            offset_bits,
+            alpha: alpha as f32,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Fig. 12 indexing: byte-PC shifted by the offset, XOR-folded with
+    /// the kernel id so distinct kernels do not systematically alias.
+    #[inline]
+    fn index(&self, kernel_id: u32, pc: u32) -> usize {
+        let byte_pc = (pc as u64) << 2; // 4-byte encoded instructions
+        let bucket = byte_pc >> self.offset_bits;
+        (bucket as usize ^ (kernel_id as usize).wrapping_mul(0x9E37_79B9)) & self.mask
+    }
+
+    fn update(&mut self, kernel_id: u32, pc: u32, est: SensEstimate) {
+        let idx = self.index(kernel_id, pc);
+        let alpha = self.alpha;
+        let e = &mut self.entries[idx];
+        if e.valid && alpha < 1.0 {
+            e.sens = alpha * est.sens as f32 + (1.0 - alpha) * e.sens;
+            e.i0 = alpha * est.i0 as f32 + (1.0 - alpha) * e.i0;
+        } else {
+            e.sens = est.sens as f32;
+            e.i0 = est.i0 as f32;
+            e.valid = true;
+        }
+    }
+
+    fn lookup(&mut self, kernel_id: u32, pc: u32) -> Option<SensEstimate> {
+        let e = self.entries[self.index(kernel_id, pc)];
+        if e.valid {
+            self.hits += 1;
+            Some(SensEstimate::new(e.sens as f64, e.i0 as f64))
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+}
+
+/// The full PCSTALL predictor state: one table per `pc_table_share` CUs
+/// plus the per-slot last-value fallback used before an entry exists.
+#[derive(Debug, Clone)]
+pub struct PcTables {
+    tables: Vec<Table>,
+    share: usize,
+    /// Per-CU, per-slot estimate of the elapsed epoch (miss fallback).
+    last_wf: Vec<Vec<SensEstimate>>,
+}
+
+impl PcTables {
+    pub fn new(cfg: &DvfsConfig, n_cu: usize, n_wf: usize) -> Self {
+        let share = cfg.pc_table_share.max(1);
+        let n_tables = n_cu.div_ceil(share);
+        PcTables {
+            tables: (0..n_tables)
+                .map(|_| Table::new(cfg.pc_table_entries, cfg.pc_offset_bits, cfg.pc_update_alpha))
+                .collect(),
+            share,
+            last_wf: vec![vec![SensEstimate::default(); n_wf]; n_cu],
+        }
+    }
+
+    #[inline]
+    fn table_of(&mut self, cu: usize) -> &mut Table {
+        let i = cu / self.share;
+        &mut self.tables[i]
+    }
+
+    /// Update path (end of epoch): store each wavefront's estimate under
+    /// its epoch-start PC.
+    pub fn update_wf(&mut self, cu: usize, kernel_id: u32, start_pc: u32, est: SensEstimate) {
+        self.table_of(cu).update(kernel_id, start_pc, est);
+    }
+
+    /// Remember the slot's elapsed-epoch estimate (lookup-miss fallback).
+    pub fn remember_last(&mut self, cu: usize, slot: usize, est: SensEstimate) {
+        self.last_wf[cu][slot] = est;
+    }
+
+    /// Lookup path (start of epoch): predict a wavefront's next-epoch
+    /// estimate from its current PC; fall back to the slot's last value.
+    pub fn lookup_wf(&mut self, cu: usize, slot: usize, kernel_id: u32, pc: u32) -> SensEstimate {
+        match self.table_of(cu).lookup(kernel_id, pc) {
+            Some(e) => e,
+            None => self.last_wf[cu][slot],
+        }
+    }
+
+    /// Aggregate table hit-rate (the paper's 128-entry sizing argument).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = self
+            .tables
+            .iter()
+            .fold((0u64, 0u64), |(h, m), t| (h + t.hits, m + t.misses));
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    pub fn n_tables(&self) -> usize {
+        self.tables.len()
+    }
+}
+
+/// Last-value (reactive) predictor state for CU-level models (Fig. 3a).
+#[derive(Debug, Clone)]
+pub struct ReactiveState {
+    /// Per-CU estimate of the elapsed epoch.
+    pub last_cu: Vec<SensEstimate>,
+}
+
+impl ReactiveState {
+    pub fn new(n_cu: usize) -> Self {
+        ReactiveState {
+            last_cu: vec![SensEstimate::default(); n_cu],
+        }
+    }
+
+    pub fn update(&mut self, cu: usize, est: SensEstimate) {
+        self.last_cu[cu] = est;
+    }
+
+    /// Predict a domain as the sum of its member CUs' last estimates.
+    pub fn predict_domain(&self, cus: std::ops::Range<usize>) -> SensEstimate {
+        SensEstimate::sum(cus.map(|c| self.last_cu[c]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DvfsConfig {
+        DvfsConfig::default()
+    }
+
+    #[test]
+    fn lookup_returns_updated_entry() {
+        let mut t = PcTables::new(&cfg(), 2, 4);
+        t.update_wf(0, 1, 100, SensEstimate::new(42.0, 7.0));
+        let e = t.lookup_wf(0, 0, 1, 100);
+        assert!((e.sens - 42.0).abs() < 1e-6);
+        assert!((e.i0 - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nearby_pcs_share_a_bucket() {
+        // offset 4 bits over byte PCs = 4 instructions per bucket
+        let mut t = PcTables::new(&cfg(), 1, 4);
+        t.update_wf(0, 0, 100, SensEstimate::new(9.0, 1.0));
+        // pc 101..103 are in the same 4-instruction bucket
+        assert!((t.lookup_wf(0, 0, 0, 101).sens - 9.0).abs() < 1e-6);
+        assert!((t.lookup_wf(0, 0, 0, 103).sens - 9.0).abs() < 1e-6);
+        // pc 104 is the next bucket -> miss -> fallback (0)
+        assert_eq!(t.lookup_wf(0, 0, 0, 104).sens, 0.0);
+    }
+
+    #[test]
+    fn offset_zero_separates_adjacent_pcs() {
+        let mut c = cfg();
+        c.pc_offset_bits = 0;
+        let mut t = PcTables::new(&c, 1, 4);
+        t.update_wf(0, 0, 10, SensEstimate::new(5.0, 0.0));
+        assert_eq!(t.lookup_wf(0, 0, 0, 11).sens, 0.0); // different bucket
+    }
+
+    #[test]
+    fn miss_falls_back_to_last_value() {
+        let mut t = PcTables::new(&cfg(), 1, 4);
+        t.remember_last(0, 2, SensEstimate::new(33.0, 3.0));
+        let e = t.lookup_wf(0, 2, 0, 999);
+        assert!((e.sens - 33.0).abs() < 1e-6);
+        assert!(t.hit_rate() < 1.0);
+    }
+
+    #[test]
+    fn different_kernels_do_not_collide_systematically() {
+        let mut t = PcTables::new(&cfg(), 1, 4);
+        t.update_wf(0, 0, 16, SensEstimate::new(1.0, 0.0));
+        t.update_wf(0, 1, 16, SensEstimate::new(2.0, 0.0));
+        // same PC in kernel 0 still sees its own entry
+        assert!((t.lookup_wf(0, 0, 0, 16).sens - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shared_tables_cover_multiple_cus() {
+        let mut c = cfg();
+        c.pc_table_share = 4;
+        let mut t = PcTables::new(&c, 8, 4);
+        assert_eq!(t.n_tables(), 2);
+        // update from CU 0 is visible to CU 3 (same table)...
+        t.update_wf(0, 0, 40, SensEstimate::new(11.0, 0.0));
+        assert!((t.lookup_wf(3, 0, 0, 40).sens - 11.0).abs() < 1e-6);
+        // ...but not to CU 4 (different table)
+        assert_eq!(t.lookup_wf(4, 0, 0, 40).sens, 0.0);
+    }
+
+    #[test]
+    fn ewma_update_blends() {
+        let mut c = cfg();
+        c.pc_update_alpha = 0.5;
+        let mut t = PcTables::new(&c, 1, 4);
+        t.update_wf(0, 0, 0, SensEstimate::new(10.0, 0.0));
+        t.update_wf(0, 0, 0, SensEstimate::new(20.0, 0.0));
+        assert!((t.lookup_wf(0, 0, 0, 0).sens - 15.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hit_rate_accumulates() {
+        let mut t = PcTables::new(&cfg(), 1, 4);
+        t.update_wf(0, 0, 0, SensEstimate::new(1.0, 0.0));
+        t.lookup_wf(0, 0, 0, 0); // hit
+        t.lookup_wf(0, 0, 0, 8); // different bucket -> miss
+        assert!((t.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reactive_predicts_domain_sum() {
+        let mut r = ReactiveState::new(4);
+        r.update(0, SensEstimate::new(1.0, 10.0));
+        r.update(1, SensEstimate::new(2.0, 20.0));
+        let d = r.predict_domain(0..2);
+        assert_eq!((d.sens, d.i0), (3.0, 30.0));
+    }
+}

@@ -1,0 +1,106 @@
+//! Hardware storage overhead model (paper Table I).
+//!
+//! PCSTALL per instance: a 128-entry sensitivity table (8-bit quantized
+//! sensitivity per entry), one starting-PC index register per wavefront
+//! slot (index bits only), and one stall-time register per slot.  The
+//! CU-level baselines only need a handful of counters.
+
+use crate::config::DvfsConfig;
+
+/// Storage breakdown in bytes for one predictor instance.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StorageOverhead {
+    pub design: &'static str,
+    pub items: Vec<(String, u64)>,
+}
+
+impl StorageOverhead {
+    pub fn total_bytes(&self) -> u64 {
+        self.items.iter().map(|(_, b)| *b).sum()
+    }
+}
+
+/// Table I rows for every evaluated design.
+pub fn table1(cfg: &DvfsConfig, n_wf: usize) -> Vec<StorageOverhead> {
+    let entries = cfg.pc_table_entries as u64;
+    let wf = n_wf as u64;
+    vec![
+        StorageOverhead {
+            design: "PCSTALL",
+            items: vec![
+                // 8-bit quantized sensitivity per entry
+                (format!("Sensitivity table ({entries} entries)"), entries),
+                // index bits of the starting PC per slot: log2(entries) +
+                // offset bits ≈ 11 bits → 1 byte of index per slot as in
+                // the paper's "only index bits" note
+                (format!("Starting-PC registers ({wf}x)"), wf),
+                // 32-bit stall-time accumulator per slot
+                (format!("Stall-time registers ({wf}x)"), 4 * wf),
+            ],
+        },
+        StorageOverhead {
+            design: "CRISP",
+            items: vec![
+                ("Critical-path timestamps".into(), 3 * 8),
+                ("Store-stall counter".into(), 8),
+                ("Overlap counter".into(), 8),
+                ("Extrapolation registers".into(), 2 * 8),
+            ],
+        },
+        StorageOverhead {
+            design: "CRIT",
+            items: vec![
+                ("Critical-path timestamps".into(), 3 * 8),
+                ("Async accumulator".into(), 8),
+            ],
+        },
+        StorageOverhead {
+            design: "LEAD",
+            items: vec![
+                ("Leading-load latency counter".into(), 8),
+                ("In-flight load counter".into(), 2),
+            ],
+        },
+        StorageOverhead {
+            design: "STALL",
+            items: vec![("Stall cycle counter".into(), 4)],
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcstall_matches_paper_total() {
+        // Paper Table I: 128 + 40 + 160 = 328 bytes per instance.
+        let t = table1(&DvfsConfig::default(), 40);
+        let pcstall = &t[0];
+        assert_eq!(pcstall.design, "PCSTALL");
+        assert_eq!(pcstall.total_bytes(), 328);
+    }
+
+    #[test]
+    fn baselines_are_tiny() {
+        let t = table1(&DvfsConfig::default(), 40);
+        for row in &t[1..] {
+            assert!(
+                row.total_bytes() < 64,
+                "{} uses {} bytes",
+                row.design,
+                row.total_bytes()
+            );
+        }
+        // STALL is the smallest (paper: 4 bytes)
+        assert_eq!(t.last().unwrap().total_bytes(), 4);
+    }
+
+    #[test]
+    fn overhead_scales_with_table_size() {
+        let mut cfg = DvfsConfig::default();
+        cfg.pc_table_entries = 256;
+        let t = table1(&cfg, 40);
+        assert_eq!(t[0].total_bytes(), 256 + 40 + 160);
+    }
+}

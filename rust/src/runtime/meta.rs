@@ -1,0 +1,127 @@
+//! Artifact metadata sidecar: shapes + constants hash emitted by
+//! `python/compile/aot.py`.  A stale artifact fails loudly at load time
+//! instead of silently mispredicting.
+//!
+//! The sidecar is JSON; this module includes a minimal JSON reader for
+//! the flat fields we need (offline environment — no serde).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Parsed metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub n_cu: usize,
+    pub n_wf: usize,
+    pub n_freq: usize,
+    pub hlo_sha256: String,
+}
+
+/// `foo.hlo.txt` → `foo.meta.json`.
+pub fn sidecar_path(artifact: &Path) -> PathBuf {
+    let name = artifact
+        .file_name()
+        .and_then(|s| s.to_str())
+        .unwrap_or_default();
+    let base = name
+        .strip_suffix(".hlo.txt")
+        .unwrap_or(name.strip_suffix(".txt").unwrap_or(name));
+    artifact.with_file_name(format!("{base}.meta.json"))
+}
+
+impl ArtifactMeta {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(ArtifactMeta {
+            n_cu: json_uint(&text, "n_cu").context("n_cu missing")?,
+            n_wf: json_uint(&text, "n_wf").context("n_wf missing")?,
+            n_freq: json_uint(&text, "n_freq").context("n_freq missing")?,
+            hlo_sha256: json_string(&text, "hlo_sha256").context("hlo_sha256 missing")?,
+        })
+    }
+
+    /// Cheap consistency checks against the HLO text itself.
+    pub fn validate_against_hlo(&self, hlo_path: &Path) -> Result<()> {
+        anyhow::ensure!(
+            self.n_freq == crate::power::params::N_FREQ,
+            "artifact built for {} V/f states, binary expects {}",
+            self.n_freq,
+            crate::power::params::N_FREQ
+        );
+        let text = std::fs::read_to_string(hlo_path)?;
+        let shape = format!("f32[{},{}]", self.n_cu, self.n_wf);
+        anyhow::ensure!(
+            text.contains(&shape),
+            "HLO does not contain the {shape} parameter the metadata promises — stale sidecar?"
+        );
+        Ok(())
+    }
+}
+
+/// Extract `"key": <uint>` from flat JSON.
+fn json_uint(text: &str, key: &str) -> Option<usize> {
+    let needle = format!("\"{key}\"");
+    let at = text.find(&needle)?;
+    let rest = &text[at + needle.len()..];
+    let rest = rest.trim_start().strip_prefix(':')?.trim_start();
+    let end = rest
+        .find(|c: char| !c.is_ascii_digit())
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Extract `"key": "<string>"` from flat JSON.
+fn json_string(text: &str, key: &str) -> Option<String> {
+    let needle = format!("\"{key}\"");
+    let at = text.find(&needle)?;
+    let rest = &text[at + needle.len()..];
+    let rest = rest.trim_start().strip_prefix(':')?.trim_start();
+    let rest = rest.strip_prefix('"')?;
+    let end = rest.find('"')?;
+    Some(rest[..end].to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+  "artifact": "dvfs_step.hlo.txt",
+  "n_cu": 64,
+  "n_wf": 40,
+  "n_dom": 64,
+  "n_freq": 10,
+  "hlo_sha256": "abc123def"
+}"#;
+
+    #[test]
+    fn parses_flat_fields() {
+        assert_eq!(json_uint(SAMPLE, "n_cu"), Some(64));
+        assert_eq!(json_uint(SAMPLE, "n_wf"), Some(40));
+        assert_eq!(json_uint(SAMPLE, "n_freq"), Some(10));
+        assert_eq!(json_string(SAMPLE, "hlo_sha256").as_deref(), Some("abc123def"));
+        assert_eq!(json_uint(SAMPLE, "missing"), None);
+    }
+
+    #[test]
+    fn sidecar_path_strips_hlo_suffix() {
+        assert_eq!(
+            sidecar_path(Path::new("artifacts/dvfs_step.hlo.txt")),
+            PathBuf::from("artifacts/dvfs_step.meta.json")
+        );
+    }
+
+    #[test]
+    fn load_roundtrip_via_tempfile() {
+        let dir = std::env::temp_dir().join("pcstall_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.meta.json");
+        std::fs::write(&p, SAMPLE).unwrap();
+        let m = ArtifactMeta::load(&p).unwrap();
+        assert_eq!(m.n_cu, 64);
+        assert_eq!(m.n_wf, 40);
+        assert_eq!(m.hlo_sha256, "abc123def");
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,176 @@
+//! PJRT runtime bridge (the AOT hot path).
+//!
+//! Loads the HLO-text artifact produced by `python/compile/aot.py`,
+//! compiles it once on the PJRT CPU client, and executes it at every
+//! epoch boundary.  Python never runs at simulation time — the artifact
+//! plus this module make the binary self-contained.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod meta;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::dvfs::native::{DvfsStepBackend, StepInputs, StepOutputs};
+use crate::power::params::N_FREQ;
+use meta::ArtifactMeta;
+
+/// Default artifact location relative to the repo root.
+pub const DEFAULT_ARTIFACT: &str = "artifacts/dvfs_step.hlo.txt";
+
+/// Locate the artifact from the current dir or ancestors (tests run from
+/// various working directories).
+pub fn find_artifact(explicit: Option<&Path>) -> Option<PathBuf> {
+    if let Some(p) = explicit {
+        return p.exists().then(|| p.to_path_buf());
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join(DEFAULT_ARTIFACT);
+        if cand.exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// The PJRT-backed `dvfs_step` executor.
+pub struct PjrtBackend {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+impl PjrtBackend {
+    /// Load + compile the artifact at `path` (metadata sidecar expected
+    /// next to it).
+    pub fn load(path: &Path) -> Result<Self> {
+        let meta_path = meta::sidecar_path(path);
+        let meta = ArtifactMeta::load(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        meta.validate_against_hlo(path)?;
+
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling dvfs_step")?;
+        Ok(PjrtBackend { exe, meta })
+    }
+
+    /// Load from the default search path.
+    pub fn load_default() -> Result<Self> {
+        let path = find_artifact(None)
+            .context("artifacts/dvfs_step.hlo.txt not found — run `make artifacts`")?;
+        Self::load(&path)
+    }
+
+    fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    fn literal_1d(data: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+}
+
+impl DvfsStepBackend for PjrtBackend {
+    fn step(&mut self, inp: &StepInputs) -> Result<StepOutputs> {
+        let (n_cu, n_wf) = (self.meta.n_cu, self.meta.n_wf);
+        anyhow::ensure!(
+            inp.n_cu <= n_cu && inp.n_wf <= n_wf,
+            "inputs ({}x{}) exceed artifact shape ({n_cu}x{n_wf}) — rebuild with `make artifacts`",
+            inp.n_cu,
+            inp.n_wf
+        );
+
+        // Pad simulator shapes up to the artifact's static shapes.
+        let pad2 = |src: &[f32], fill: f32| -> Vec<f32> {
+            let mut v = vec![fill; n_cu * n_wf];
+            for c in 0..inp.n_cu {
+                let s = c * inp.n_wf;
+                let d = c * n_wf;
+                v[d..d + inp.n_wf].copy_from_slice(&src[s..s + inp.n_wf]);
+            }
+            v
+        };
+        let pad1 = |src: &[f32], fill: f32| -> Vec<f32> {
+            let mut v = vec![fill; n_cu];
+            v[..src.len().min(n_cu)].copy_from_slice(&src[..src.len().min(n_cu)]);
+            v
+        };
+
+        let instr = Self::literal_2d(&pad2(&inp.instr, 0.0), n_cu, n_wf)?;
+        let t_core = Self::literal_2d(&pad2(&inp.t_core_ns, 0.0), n_cu, n_wf)?;
+        let age = Self::literal_2d(&pad2(&inp.age_factor, 1.0), n_cu, n_wf)?;
+        let freq = Self::literal_1d(&pad1(&inp.freq_ghz, 1.7));
+        let pred_sens = Self::literal_1d(&pad1(&inp.pred_sens, 0.0));
+        let pred_i0 = Self::literal_1d(&pad1(&inp.pred_i0, 0.0));
+        let mask = Self::literal_1d(&pad1(&inp.mask, 0.0));
+        let n_exp = Self::literal_1d(&[inp.n_exp]);
+        let epoch = Self::literal_1d(&[inp.epoch_ns]);
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[
+                instr, t_core, age, freq, pred_sens, pred_i0, mask, n_exp, epoch,
+            ])?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 7, "expected 7 outputs, got {}", outs.len());
+
+        let take = |lit: &xla::Literal| -> Result<Vec<f32>> { Ok(lit.to_vec::<f32>()?) };
+        let full = StepOutputs {
+            sens_wf: take(&outs[0])?,
+            sens_cu: take(&outs[1])?,
+            i0_cu: take(&outs[2])?,
+            pred_instr: take(&outs[3])?,
+            power_w: take(&outs[4])?,
+            ednp: take(&outs[5])?,
+            best_idx: take(&outs[6])?,
+        };
+
+        // Slice padding back off for the caller's shapes.
+        let mut out = StepOutputs::default();
+        out.sens_wf = (0..inp.n_cu)
+            .flat_map(|c| full.sens_wf[c * n_wf..c * n_wf + inp.n_wf].to_vec())
+            .collect();
+        out.sens_cu = full.sens_cu[..inp.n_cu].to_vec();
+        out.i0_cu = full.i0_cu[..inp.n_cu].to_vec();
+        out.pred_instr = full.pred_instr[..inp.n_cu * N_FREQ].to_vec();
+        out.power_w = full.power_w[..inp.n_cu * N_FREQ].to_vec();
+        out.ednp = full.ednp[..inp.n_cu * N_FREQ].to_vec();
+        out.best_idx = full.best_idx[..inp.n_cu].to_vec();
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Load the best available backend: PJRT if the artifact exists, native
+/// otherwise (with a warning so CI logs show which path ran).
+pub fn best_backend(artifact: Option<&Path>) -> Box<dyn DvfsStepBackend> {
+    match find_artifact(artifact) {
+        Some(path) => match PjrtBackend::load(&path) {
+            Ok(b) => {
+                eprintln!("[runtime] PJRT backend: {}", path.display());
+                return Box::new(b);
+            }
+            Err(e) => {
+                eprintln!("[runtime] PJRT load failed ({e:#}); falling back to native");
+            }
+        },
+        None => {
+            eprintln!("[runtime] no artifact found; using native backend (run `make artifacts`)");
+        }
+    }
+    Box::new(crate::dvfs::native::NativeBackend::default())
+}

@@ -1,0 +1,861 @@
+//! Compute unit: oldest-first wavefront scheduler, in-order per-wavefront
+//! execution, asynchronous vector memory, and the per-epoch counters every
+//! estimation model consumes.
+//!
+//! Timing discipline: the CU owns a picosecond-resolution local clock
+//! aligned to its V/f-domain cycle grid.  Execution advances cycle by
+//! cycle while work is issuable and *skips* directly to the next wake-up
+//! event (memory response / VALU completion) when it is not — this keeps
+//! memory-bound phases cheap to simulate without losing the interval
+//! accounting the STALL/LEAD/CRIT/CRISP models need.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+
+use super::isa::{Instr, Op, Pattern, Program};
+use super::memory::{Cache, MemSystem};
+use super::wavefront::{WaitState, Wavefront};
+use super::cycle_ps;
+use crate::config::GpuConfig;
+use crate::util::{hash2, hash3};
+
+/// A pending memory response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemResponse {
+    pub at_ps: u64,
+    /// Tie-break sequence for deterministic ordering.
+    pub seq: u64,
+    pub slot: u8,
+    pub is_store: bool,
+    /// Leading load (no other loads in flight CU-wide at issue).
+    pub leading: bool,
+    pub issued_ps: u64,
+}
+
+impl Ord for MemResponse {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at_ps, self.seq).cmp(&(other.at_ps, other.seq))
+    }
+}
+
+impl PartialOrd for MemResponse {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Per-epoch CU-level counters — the raw material for every CU-level
+/// estimation model (paper §2.3).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EpochCounters {
+    /// Instructions committed.
+    pub instr: u64,
+    /// Cycles with at least one instruction issued.
+    pub issued_cycles: u64,
+    /// Total CU cycles elapsed (incl. skipped-idle cycles).
+    pub cycles: u64,
+    /// STALL model: time with no issue while ≥1 WF memory-blocked (ps).
+    pub stall_all_ps: u64,
+    /// CRIT model: time the oldest active WF was memory-blocked (ps).
+    pub crit_ps: u64,
+    /// LEAD model: accumulated leading-load latency (ps).
+    pub lead_load_ps: u64,
+    /// CRISP: no-issue time attributable purely to store waits (ps).
+    pub store_stall_ps: u64,
+    /// CRISP: memory wait time overlapped with issue (ps).
+    pub overlap_ps: u64,
+    /// Actual accounted epoch duration (ps).
+    pub epoch_ps: u64,
+    /// Operating frequency during the epoch (GHz).
+    pub freq_ghz: f64,
+    /// Loads issued / L1 hits (phase diagnostics).
+    pub loads: u64,
+    pub l1_hits: u64,
+}
+
+/// One compute unit.
+#[derive(Debug, Clone)]
+pub struct Cu {
+    pub id: usize,
+    pub freq_ghz: f64,
+    /// CU-local clock (ps, aligned to the cycle grid of the current freq).
+    pub now_ps: u64,
+    /// V/f transition blackout: no issue until this time.
+    pub transition_until_ps: u64,
+    pub wavefronts: Vec<Wavefront>,
+    /// Active slots in age order (oldest first).
+    order: Vec<u8>,
+    
+    responses: BinaryHeap<Reverse<MemResponse>>,
+    resp_seq: u64,
+    pub l1: Cache,
+    pub counters: EpochCounters,
+    /// Cumulative committed instructions (work-based termination).
+    pub total_instr: u64,
+    /// Time of the most recent instruction commit (completion timing).
+    pub last_commit_ps: u64,
+    /// Current kernel.
+    
+    program: Option<Arc<Program>>,
+    /// Waves still to dispatch for the current kernel.
+    pub pending_waves: u64,
+    /// Completed waves for the current kernel.
+    pub done_waves: u64,
+    next_age: u64,
+    next_global_id: u64,
+    /// Scheduler shape.
+    issue_width: usize,
+    wf_per_wg: usize,
+    l1_hit_cycles: u32,
+    /// CU-wide outstanding loads (leading-load detection).
+    outstanding_loads_cu: u32,
+    /// Memory-blocked WF count (STALL interval accounting).
+    n_mem_waiting: u32,
+    /// Memory-blocked WFs whose outstanding ops are stores only.
+    n_store_only: u32,
+}
+
+
+impl Cu {
+    pub fn new(id: usize, cfg: &GpuConfig, freq_ghz: f64) -> Self {
+        Cu {
+            id,
+            freq_ghz,
+            now_ps: 0,
+            transition_until_ps: 0,
+            wavefronts: (0..cfg.n_wf).map(|s| Wavefront::empty(s as u8)).collect(),
+            order: Vec::with_capacity(cfg.n_wf),
+            responses: BinaryHeap::new(),
+            resp_seq: 0,
+            l1: Cache::new(cfg.l1_bytes, cfg.l1_line, cfg.l1_ways),
+            counters: EpochCounters::default(),
+            total_instr: 0,
+            last_commit_ps: 0,
+            program: None,
+            pending_waves: 0,
+            done_waves: 0,
+            next_age: 0,
+            next_global_id: (id as u64) << 32,
+            issue_width: cfg.issue_width.max(1),
+            wf_per_wg: cfg.wf_per_wg.max(1),
+            l1_hit_cycles: cfg.l1_hit_cycles,
+            outstanding_loads_cu: 0,
+            n_mem_waiting: 0,
+            n_store_only: 0,
+        }
+    }
+
+    /// Load a kernel and fill wavefront slots.
+    pub fn load_kernel(&mut self, program: Arc<Program>, waves: u64) {
+        self.program = Some(program);
+        self.pending_waves = waves;
+        self.done_waves = 0;
+        self.l1.flush();
+        // Drain any stale responses (previous kernel's slots are gone).
+        self.responses.clear();
+        self.outstanding_loads_cu = 0;
+        self.n_mem_waiting = 0;
+        self.n_store_only = 0;
+        self.order.clear();
+        for s in 0..self.wavefronts.len() {
+            self.wavefronts[s] = Wavefront::empty(s as u8);
+            if self.pending_waves > 0 {
+                self.dispatch_into(s);
+            }
+        }
+    }
+
+    pub fn program(&self) -> Option<&Arc<Program>> {
+        self.program.as_ref()
+    }
+
+    pub fn kernel_id(&self) -> u32 {
+        self.program.as_ref().map(|p| p.kernel_id).unwrap_or(0)
+    }
+
+    /// All waves dispatched and completed?
+    pub fn kernel_done(&self) -> bool {
+        self.pending_waves == 0 && self.order.is_empty()
+    }
+
+    /// Number of currently active wavefronts.
+    pub fn active_wavefronts(&self) -> usize {
+        self.order.len()
+    }
+
+    fn dispatch_into(&mut self, slot: usize) {
+        debug_assert!(self.pending_waves > 0);
+        self.pending_waves -= 1;
+        let age = self.next_age;
+        self.next_age += 1;
+        let gid = self.next_global_id;
+        self.next_global_id += 1;
+        self.wavefronts[slot].dispatch(gid, age, self.now_ps);
+        self.order.push(slot as u8);
+    }
+
+    /// Change domain frequency.  Issue stalls for `transition_ps` when the
+    /// state actually changes (IVR + FLL settling).
+    pub fn set_frequency(&mut self, f_ghz: f64, transition_ps: u64) {
+        if (f_ghz - self.freq_ghz).abs() > 1e-9 {
+            self.freq_ghz = f_ghz;
+            self.transition_until_ps = self.now_ps + transition_ps;
+        }
+    }
+
+    /// Reset epoch counters; flush blocked-time accounting baselines.
+    pub fn begin_epoch(&mut self) {
+        self.counters = EpochCounters {
+            freq_ghz: self.freq_ghz,
+            ..EpochCounters::default()
+        };
+        let kid = self.kernel_id();
+        let now = self.now_ps;
+        for wf in &mut self.wavefronts {
+            wf.begin_epoch(kid);
+            if wf.active && wf.waiting != WaitState::None {
+                wf.block_start_ps = now;
+            }
+        }
+    }
+
+    /// Flush partial blocked intervals at epoch end.
+    pub fn end_epoch(&mut self) {
+        let now = self.now_ps;
+        for wf in &mut self.wavefronts {
+            if wf.active && wf.block_start_ps < now {
+                match wf.waiting {
+                    WaitState::WaitCnt { .. } => {
+                        wf.ep.stall_ps += now - wf.block_start_ps;
+                        wf.block_start_ps = now;
+                    }
+                    WaitState::Barrier => {
+                        wf.ep.barrier_ps += now - wf.block_start_ps;
+                        wf.block_start_ps = now;
+                    }
+                    WaitState::None => {}
+                }
+            }
+        }
+    }
+
+    /// Advance this CU to absolute time `t_end_ps`.
+    pub fn run_until(&mut self, t_end_ps: u64, mem: &mut MemSystem) {
+        let cyc = cycle_ps(self.freq_ghz);
+        // Hoist the program out of the Option<Arc> — dereferencing it per
+        // instruction costs ~10% of the whole simulator (§Perf).
+        let program = match &self.program {
+            Some(p) => p.clone(),
+            None => return,
+        };
+        let instrs: &[Instr] = &program.instrs;
+        while self.now_ps < t_end_ps {
+            self.drain_responses();
+
+            // V/f transition blackout: nothing issues.
+            if self.transition_until_ps > self.now_ps {
+                let t = self.transition_until_ps.min(t_end_ps);
+                let dt = t - self.now_ps;
+                self.account_interval(dt, false);
+                self.counters.cycles += dt / cyc;
+                self.now_ps = t;
+                continue;
+            }
+
+            let issued = self.issue_cycle(instrs, mem, cyc);
+            let dt = cyc.min(t_end_ps - self.now_ps);
+            self.account_interval(dt, issued > 0);
+            self.counters.cycles += 1;
+            if issued > 0 {
+                self.counters.issued_cycles += 1;
+            }
+            self.now_ps += dt;
+
+            // Nothing issued: skip ahead to the next possible event.
+            if issued == 0 && self.now_ps < t_end_ps {
+                let wake = self.next_wake(t_end_ps);
+                if wake > self.now_ps {
+                    // stay on the cycle grid
+                    let steps = (wake - self.now_ps).div_ceil(cyc);
+                    let target = (self.now_ps + steps * cyc).min(t_end_ps);
+                    let dt2 = target - self.now_ps;
+                    self.account_interval(dt2, false);
+                    self.counters.cycles += dt2 / cyc;
+                    self.now_ps = target;
+                }
+            }
+        }
+    }
+
+    /// Earliest future event that could unblock issue.  `now_ps` has
+    /// already advanced past the no-issue cycle, so a WF whose `busy_until`
+    /// has just elapsed makes "now" the wake time (no skip allowed).
+    fn next_wake(&self, t_end_ps: u64) -> u64 {
+        let mut wake = t_end_ps;
+        if let Some(Reverse(r)) = self.responses.peek() {
+            wake = wake.min(r.at_ps);
+        }
+        for &s in &self.order {
+            let wf = &self.wavefronts[s as usize];
+            if wf.waiting == WaitState::None {
+                if wf.busy_until_ps <= self.now_ps {
+                    return self.now_ps; // ready right now — do not skip
+                }
+                wake = wake.min(wf.busy_until_ps);
+            }
+        }
+        wake.max(self.now_ps)
+    }
+
+    /// Interval accounting for the CU-level estimation models.
+    #[inline]
+    fn account_interval(&mut self, dt: u64, issued: bool) {
+        if dt == 0 {
+            return;
+        }
+        self.counters.epoch_ps += dt;
+        let n_load_waiting = self.n_mem_waiting - self.n_store_only;
+        if !issued && self.n_mem_waiting > 0 {
+            self.counters.stall_all_ps += dt;
+            if n_load_waiting == 0 {
+                self.counters.store_stall_ps += dt;
+            }
+        }
+        if issued && self.n_mem_waiting > 0 {
+            self.counters.overlap_ps += dt;
+        }
+        // CRIT: oldest active WF memory-blocked.
+        if let Some(&s) = self.order.first() {
+            if self.wavefronts[s as usize].mem_waiting() {
+                self.counters.crit_ps += dt;
+            }
+        }
+    }
+
+    /// Deliver all responses with `at_ps <= now`.
+    fn drain_responses(&mut self) {
+        while let Some(Reverse(r)) = self.responses.peek() {
+            if r.at_ps > self.now_ps {
+                break;
+            }
+            let r = self.responses.pop().unwrap().0;
+            self.handle_response(r);
+        }
+    }
+
+    fn handle_response(&mut self, r: MemResponse) {
+        let now = self.now_ps;
+        let was_store_only = self.wavefronts[r.slot as usize].store_only_waiting();
+        {
+            let wf = &mut self.wavefronts[r.slot as usize];
+            if r.is_store {
+                wf.outstanding_stores = wf.outstanding_stores.saturating_sub(1);
+            } else {
+                wf.outstanding_loads = wf.outstanding_loads.saturating_sub(1);
+            }
+        }
+        if !r.is_store {
+            self.outstanding_loads_cu = self.outstanding_loads_cu.saturating_sub(1);
+            if r.leading {
+                self.counters.lead_load_ps += now.saturating_sub(r.issued_ps);
+            }
+        }
+        let wf = &mut self.wavefronts[r.slot as usize];
+        let is_store_only = wf.store_only_waiting();
+        if was_store_only && !is_store_only {
+            self.n_store_only -= 1;
+        } else if !was_store_only && is_store_only {
+            self.n_store_only += 1;
+        }
+        // Unblock s_waitcnt if satisfied.
+        if let WaitState::WaitCnt { max } = wf.waiting {
+            if wf.outstanding() <= max {
+                wf.ep.stall_ps += now.saturating_sub(wf.block_start_ps);
+                wf.waiting = WaitState::None;
+                wf.busy_until_ps = wf.busy_until_ps.max(now);
+                self.n_mem_waiting -= 1;
+                if is_store_only {
+                    self.n_store_only -= 1;
+                }
+            }
+        }
+    }
+
+    /// One issue cycle: pick up to `issue_width` ready WFs oldest-first.
+    fn issue_cycle(&mut self, instrs: &[Instr], mem: &mut MemSystem, cyc: u64) -> usize {
+        let now = self.now_ps;
+        let mut issued = 0usize;
+        let mut i = 0usize;
+        while i < self.order.len() {
+            let slot = self.order[i] as usize;
+            if !self.wavefronts[slot].ready(now) {
+                i += 1;
+                continue;
+            }
+            if issued < self.issue_width {
+                issued += 1;
+                self.wavefronts[slot].ep.issue_won += 1;
+                let removed = self.execute(slot, instrs, mem, cyc);
+                // execute may remove `slot` from order (EndPgm without
+                // redispatch); only advance when it didn't shift under us.
+                if !removed {
+                    i += 1;
+                }
+            } else {
+                self.wavefronts[slot].ep.issue_lost += 1;
+                i += 1;
+            }
+        }
+        issued
+    }
+
+    /// Execute the instruction at `wf.pc`; returns true if the slot was
+    /// removed from the age order (wavefront completed, no redispatch).
+    fn execute(&mut self, slot: usize, instrs: &[Instr], mem: &mut MemSystem, cyc: u64) -> bool {
+        let op = instrs[self.wavefronts[slot].pc as usize].op;
+        let now = self.now_ps;
+
+        self.counters.instr += 1;
+        self.total_instr += 1;
+        self.last_commit_ps = now;
+        self.wavefronts[slot].ep.instr += 1;
+
+        match op {
+            Op::VAlu { cycles } => {
+                let wf = &mut self.wavefronts[slot];
+                wf.busy_until_ps = now + cycles as u64 * cyc;
+                wf.pc += 1;
+            }
+            Op::SAlu => {
+                let wf = &mut self.wavefronts[slot];
+                wf.busy_until_ps = now + cyc;
+                wf.pc += 1;
+            }
+            Op::Load { pattern, fan } => {
+                self.issue_mem(slot, pattern, fan, false, mem, cyc);
+            }
+            Op::Store { pattern, fan } => {
+                self.issue_mem(slot, pattern, fan, true, mem, cyc);
+            }
+            Op::WaitCnt { max } => {
+                let wf = &mut self.wavefronts[slot];
+                wf.pc += 1;
+                wf.busy_until_ps = now + cyc;
+                if wf.outstanding() > max {
+                    wf.waiting = WaitState::WaitCnt { max };
+                    wf.block_start_ps = now;
+                    self.n_mem_waiting += 1;
+                    if wf.store_only_waiting() {
+                        self.n_store_only += 1;
+                    }
+                }
+            }
+            Op::Barrier => {
+                self.wavefronts[slot].pc += 1;
+                self.wavefronts[slot].busy_until_ps = now + cyc;
+                self.arrive_barrier(slot);
+            }
+            Op::LoopBegin {
+                depth,
+                trips,
+                divergence,
+            } => {
+                let wf = &mut self.wavefronts[slot];
+                let d = depth as usize;
+                if !wf.loop_active[d] {
+                    let div = if divergence == 0 {
+                        0
+                    } else {
+                        // deterministic per-wavefront divergence in
+                        // [-divergence, +divergence]
+                        (hash2(wf.global_id, depth as u64) % (2 * divergence as u64 + 1)) as i64
+                            - divergence as i64
+                    };
+                    wf.loop_count[d] = ((trips as i64 + div).max(1)) as u32;
+                    wf.loop_active[d] = true;
+                }
+                wf.busy_until_ps = now + cyc;
+                wf.pc += 1;
+            }
+            Op::LoopEnd { depth, target } => {
+                let wf = &mut self.wavefronts[slot];
+                let d = depth as usize;
+                debug_assert!(wf.loop_active[d], "LoopEnd without LoopBegin");
+                wf.loop_count[d] = wf.loop_count[d].saturating_sub(1);
+                wf.busy_until_ps = now + cyc;
+                if wf.loop_count[d] > 0 {
+                    wf.pc = target;
+                } else {
+                    wf.loop_active[d] = false;
+                    wf.pc += 1;
+                }
+            }
+            Op::EndPgm => {
+                return self.retire_wavefront(slot);
+            }
+        }
+        false
+    }
+
+    fn issue_mem(
+        &mut self,
+        slot: usize,
+        pattern: Pattern,
+        fan: u8,
+        is_store: bool,
+        mem: &mut MemSystem,
+        cyc: u64,
+    ) {
+        let now = self.now_ps;
+        let line_bytes = mem.line_bytes() as u64;
+        let leading = !is_store && self.outstanding_loads_cu == 0;
+
+        // Fan-out: coalesced vector ops touch `fan` distinct lines; the
+        // wavefront sees the *slowest* of them (one response at max lat).
+        let mut max_lat_ps = 0u64;
+        for f in 0..fan {
+            let line = self.gen_line(slot, pattern, f, line_bytes);
+            let lat = if self.l1.access(line) {
+                self.counters.l1_hits += 1;
+                self.l1_hit_cycles as u64 * cyc
+            } else {
+                let (l, _) = mem.access(line, now);
+                l
+            };
+            max_lat_ps = max_lat_ps.max(lat);
+        }
+        if !is_store {
+            self.counters.loads += 1;
+            self.outstanding_loads_cu += 1;
+        }
+        let wf = &mut self.wavefronts[slot];
+        wf.access_counter = wf.access_counter.wrapping_add(fan as u32);
+        if is_store {
+            wf.outstanding_stores += 1;
+        } else {
+            wf.outstanding_loads += 1;
+        }
+        wf.busy_until_ps = now + cyc;
+        wf.pc += 1;
+        self.resp_seq += 1;
+        self.responses.push(Reverse(MemResponse {
+            at_ps: now + max_lat_ps.max(cyc),
+            seq: self.resp_seq,
+            slot: slot as u8,
+            is_store,
+            leading,
+            issued_ps: now,
+        }));
+    }
+
+    /// Deterministic address-stream generation (see `isa::Pattern`).
+    fn gen_line(&self, slot: usize, pattern: Pattern, fan_idx: u8, line_bytes: u64) -> u64 {
+        let wf = &self.wavefronts[slot];
+        match pattern {
+            Pattern::Strided {
+                region,
+                stride,
+                working_set,
+            } => {
+                let ws = working_set.max(line_bytes as u32) as u64;
+                let base = (region as u64) << 44;
+                // Spread wavefronts through the region so they stream
+                // disjoint-ish slices (coalesced workgroup behaviour).
+                let lane_base = (hash2(wf.global_id, region as u64) % ws) & !(line_bytes - 1);
+                let off = (lane_base
+                    + wf.access_counter as u64 * stride as u64
+                    + fan_idx as u64 * line_bytes)
+                    % ws;
+                (base + off) / line_bytes
+            }
+            Pattern::Random {
+                region,
+                working_set,
+            } => {
+                let ws = working_set.max(line_bytes as u32) as u64;
+                let base = (region as u64) << 44;
+                let h = hash3(
+                    wf.global_id,
+                    (wf.access_counter as u64) << 8 | fan_idx as u64,
+                    region as u64,
+                );
+                (base + h % ws) / line_bytes
+            }
+        }
+    }
+
+    fn arrive_barrier(&mut self, slot: usize) {
+        let wg = slot / self.wf_per_wg;
+        let lo = wg * self.wf_per_wg;
+        let hi = (lo + self.wf_per_wg).min(self.wavefronts.len());
+        // Mark this WF as waiting first.
+        {
+            let wf = &mut self.wavefronts[slot];
+            wf.waiting = WaitState::Barrier;
+            wf.block_start_ps = self.now_ps;
+        }
+        // Release when every *active* WF of the workgroup has arrived.
+        let all_arrived = (lo..hi).all(|s| {
+            let wf = &self.wavefronts[s];
+            !wf.active || wf.waiting == WaitState::Barrier
+        });
+        if all_arrived {
+            let now = self.now_ps;
+            for s in lo..hi {
+                let wf = &mut self.wavefronts[s];
+                if wf.active && wf.waiting == WaitState::Barrier {
+                    wf.ep.barrier_ps += now.saturating_sub(wf.block_start_ps);
+                    wf.waiting = WaitState::None;
+                }
+            }
+        }
+    }
+
+    /// Wavefront finished: free or refill the slot.  Returns true if the
+    /// slot left the age order.
+    fn retire_wavefront(&mut self, slot: usize) -> bool {
+        self.done_waves += 1;
+        let pos = self
+            .order
+            .iter()
+            .position(|&s| s as usize == slot)
+            .expect("retiring WF must be in order list");
+        self.order.remove(pos);
+        self.wavefronts[slot].active = false;
+        if self.pending_waves > 0 {
+            self.dispatch_into(slot);
+            // re-dispatched at the tail of the age order; slot index `pos`
+            // no longer points at it, so tell the caller we shifted.
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::isa::ProgramBuilder;
+    use crate::sim::ns_to_ps;
+
+    fn cfg() -> GpuConfig {
+        let mut c = GpuConfig::default();
+        c.n_wf = 8;
+        c.issue_width = 1;
+        c
+    }
+
+    fn compute_program(n: u16) -> Arc<Program> {
+        let mut b = ProgramBuilder::new();
+        b.with_loop(0, n, 0, |b| {
+            b.push(Op::VAlu { cycles: 1 });
+        });
+        Arc::new(b.build(0, "compute"))
+    }
+
+    fn mem_program(trips: u16) -> Arc<Program> {
+        let mut b = ProgramBuilder::new();
+        b.with_loop(0, trips, 0, |b| {
+            b.push(Op::Load {
+                pattern: Pattern::Random {
+                    region: 1,
+                    working_set: 256 * 1024 * 1024,
+                },
+                fan: 1,
+            });
+            b.push(Op::WaitCnt { max: 0 });
+            b.push(Op::VAlu { cycles: 1 });
+        });
+        Arc::new(b.build(1, "membound"))
+    }
+
+    fn run(cu: &mut Cu, mem: &mut MemSystem, t_ns: f64) {
+        cu.begin_epoch();
+        cu.run_until(cu.now_ps + ns_to_ps(t_ns), mem);
+        cu.end_epoch();
+    }
+
+    #[test]
+    fn compute_bound_ipc_tracks_frequency() {
+        let cfg = cfg();
+        let mut mem = MemSystem::new(&cfg);
+        let mut lo = Cu::new(0, &cfg, 1.3);
+        let mut hi = Cu::new(1, &cfg, 2.2);
+        lo.load_kernel(compute_program(10_000), 8);
+        hi.load_kernel(compute_program(10_000), 8);
+        run(&mut lo, &mut mem, 1000.0);
+        run(&mut hi, &mut mem, 1000.0);
+        let ratio = hi.counters.instr as f64 / lo.counters.instr as f64;
+        let expect = 2.2 / 1.3;
+        assert!(
+            (ratio - expect).abs() / expect < 0.05,
+            "instr ratio {ratio} vs frequency ratio {expect}"
+        );
+    }
+
+    #[test]
+    fn memory_bound_instr_insensitive_to_frequency() {
+        let cfg = cfg();
+        let mut mem_a = MemSystem::new(&cfg);
+        let mut mem_b = MemSystem::new(&cfg);
+        let mut lo = Cu::new(0, &cfg, 1.3);
+        let mut hi = Cu::new(0, &cfg, 2.2);
+        lo.load_kernel(mem_program(10_000), 8);
+        hi.load_kernel(mem_program(10_000), 8);
+        run(&mut lo, &mut mem_a, 5_000.0);
+        run(&mut hi, &mut mem_b, 5_000.0);
+        let ratio = hi.counters.instr as f64 / lo.counters.instr as f64;
+        assert!(
+            ratio < 1.25,
+            "memory-bound workload scaled with frequency: ratio {ratio}"
+        );
+        // and it must have stalled substantially
+        assert!(lo.counters.stall_all_ps > ns_to_ps(1_000.0));
+    }
+
+    #[test]
+    fn waitcnt_blocks_until_response() {
+        let cfg = cfg();
+        let mut mem = MemSystem::new(&cfg);
+        let mut cu = Cu::new(0, &cfg, 2.0);
+        cu.load_kernel(mem_program(1), 1);
+        run(&mut cu, &mut mem, 2_000.0);
+        let wf = &cu.wavefronts[0];
+        assert!(wf.ep.stall_ps > 0, "wavefront never stalled at waitcnt");
+        assert!(cu.kernel_done());
+    }
+
+    #[test]
+    fn oldest_first_priority_starves_young_under_width_1() {
+        let cfg = cfg();
+        let mut mem = MemSystem::new(&cfg);
+        let mut cu = Cu::new(0, &cfg, 2.0);
+        cu.load_kernel(compute_program(50_000), 8);
+        run(&mut cu, &mut mem, 1_000.0);
+        // With issue width 1 and pure compute (always-ready WFs), slot 0
+        // (oldest) should win nearly all arbitration.
+        let w0 = cu.wavefronts[0].ep.issue_won;
+        let w7 = cu.wavefronts[7].ep.issue_won;
+        assert!(w0 > 10 * w7.max(1), "oldest {w0} vs youngest {w7}");
+        assert!(cu.wavefronts[7].ep.issue_lost > 0);
+    }
+
+    #[test]
+    fn slot_redispatch_keeps_age_order() {
+        let cfg = cfg();
+        let mut mem = MemSystem::new(&cfg);
+        let mut cu = Cu::new(0, &cfg, 2.0);
+        cu.load_kernel(compute_program(5), 64);
+        run(&mut cu, &mut mem, 10_000.0);
+        assert!(cu.kernel_done(), "waves: done {}", cu.done_waves);
+        assert_eq!(cu.done_waves, 64);
+    }
+
+    #[test]
+    fn barrier_synchronizes_workgroup() {
+        let cfg = cfg();
+        let mut mem = MemSystem::new(&cfg);
+        let mut cu = Cu::new(0, &cfg, 2.0);
+        let mut b = ProgramBuilder::new();
+        // Divergent pre-barrier work, then barrier, then uniform work.
+        b.with_loop(0, 8, 4, |b| {
+            b.push(Op::VAlu { cycles: 2 });
+        });
+        b.push(Op::Barrier);
+        b.push(Op::VAlu { cycles: 1 });
+        let p = Arc::new(b.build(0, "barrier"));
+        cu.load_kernel(p, 4); // one workgroup (wf_per_wg = 4)
+        run(&mut cu, &mut mem, 10_000.0);
+        assert!(cu.kernel_done());
+        // the fastest WF must have spent time at the barrier
+        let max_barrier = cu.wavefronts.iter().map(|w| w.ep.barrier_ps).max().unwrap();
+        assert!(max_barrier > 0, "no barrier wait observed");
+    }
+
+    #[test]
+    fn frequency_transition_stalls_issue() {
+        let cfg = cfg();
+        let mut mem = MemSystem::new(&cfg);
+        let mut a = Cu::new(0, &cfg, 1.7);
+        let mut b = Cu::new(1, &cfg, 1.7);
+        a.load_kernel(compute_program(50_000), 8);
+        b.load_kernel(compute_program(50_000), 8);
+        // a transitions (pays blackout), b stays
+        a.set_frequency(1.8, ns_to_ps(100.0));
+        b.set_frequency(1.7, ns_to_ps(100.0)); // same state: free
+        run(&mut a, &mut mem, 1_000.0);
+        run(&mut b, &mut mem, 1_000.0);
+        let scaled_b = b.counters.instr as f64 * 1.8 / 1.7;
+        assert!(
+            (a.counters.instr as f64) < scaled_b * 0.98,
+            "transition blackout did not cost work: {} vs {}",
+            a.counters.instr,
+            scaled_b
+        );
+    }
+
+    #[test]
+    fn leading_load_latency_accumulates() {
+        let cfg = cfg();
+        let mut mem = MemSystem::new(&cfg);
+        let mut cu = Cu::new(0, &cfg, 2.0);
+        cu.load_kernel(mem_program(100), 1);
+        run(&mut cu, &mut mem, 50_000.0);
+        assert!(cu.counters.lead_load_ps > 0);
+        // single WF serial loads: every load is leading, so lead time
+        // roughly tracks stall time
+        let lead = cu.counters.lead_load_ps as f64;
+        let stall = cu.counters.stall_all_ps as f64;
+        assert!(lead >= 0.5 * stall, "lead {lead} vs stall {stall}");
+    }
+
+    #[test]
+    fn counters_reset_each_epoch() {
+        let cfg = cfg();
+        let mut mem = MemSystem::new(&cfg);
+        let mut cu = Cu::new(0, &cfg, 2.0);
+        cu.load_kernel(compute_program(50_000), 8);
+        run(&mut cu, &mut mem, 1_000.0);
+        let first = cu.counters.instr;
+        run(&mut cu, &mut mem, 1_000.0);
+        assert!(cu.counters.instr > 0);
+        assert!(cu.counters.instr <= first * 2, "epoch counters leaked");
+        assert!(cu.total_instr >= first + cu.counters.instr);
+    }
+
+    #[test]
+    fn clone_snapshot_replays_identically() {
+        let cfg = cfg();
+        let mut mem = MemSystem::new(&cfg);
+        let mut cu = Cu::new(0, &cfg, 1.7);
+        cu.load_kernel(mem_program(1_000), 8);
+        run(&mut cu, &mut mem, 3_000.0);
+        let (cu2, mut mem2) = (cu.clone(), mem.clone());
+        let mut cu2 = cu2;
+        run(&mut cu, &mut mem, 2_000.0);
+        run(&mut cu2, &mut mem2, 2_000.0);
+        assert_eq!(cu.counters.instr, cu2.counters.instr);
+        assert_eq!(cu.now_ps, cu2.now_ps);
+        assert_eq!(cu.total_instr, cu2.total_instr);
+    }
+
+    #[test]
+    fn issue_width_increases_throughput() {
+        let mut c1 = cfg();
+        c1.issue_width = 1;
+        let mut c4 = cfg();
+        c4.issue_width = 4;
+        let mut mem1 = MemSystem::new(&c1);
+        let mut mem4 = MemSystem::new(&c4);
+        let mut a = Cu::new(0, &c1, 2.0);
+        let mut b = Cu::new(0, &c4, 2.0);
+        a.load_kernel(compute_program(50_000), 8);
+        b.load_kernel(compute_program(50_000), 8);
+        run(&mut a, &mut mem1, 1_000.0);
+        run(&mut b, &mut mem4, 1_000.0);
+        // VAlu{1} keeps a WF busy 1 cycle, so width-4 should approach 4x.
+        let ratio = b.counters.instr as f64 / a.counters.instr as f64;
+        assert!(ratio > 2.0, "issue width had no effect: ratio {ratio}");
+    }
+}

@@ -1,0 +1,499 @@
+//! Whole-GPU composition: CUs + shared memory system + V/f domains +
+//! kernel dispatch, advanced epoch by epoch.
+//!
+//! Cross-CU coupling: CUs advance one *coupling quantum* at a time
+//! (`GpuConfig::quantum_ns`, default 200 ns).  Within a quantum each CU
+//! runs independently against the shared [`MemSystem`] whose bank/channel
+//! reservation clocks carry contention across CUs.  This is the documented
+//! accuracy/speed trade-off that replaces gem5's global event queue
+//! (DESIGN.md §5) — analogous in spirit to the paper's own 10-process
+//! sampling approximation.
+
+use std::sync::Arc;
+
+
+use super::cu::{Cu, EpochCounters};
+use super::isa::Program;
+use super::memory::MemSystem;
+use super::ns_to_ps;
+use crate::config::SimConfig;
+use crate::power::params::F_STATIC_GHZ;
+
+/// A kernel launch request: program + waves per CU.
+#[derive(Debug, Clone)]
+pub struct KernelLaunch {
+    pub program: Arc<Program>,
+    pub waves_per_cu: u64,
+}
+
+/// Full simulator state.  `Clone` is the snapshot primitive used by the
+/// oracle's fork-pre-execute methodology.
+#[derive(Debug, Clone)]
+pub struct Gpu {
+    pub cfg: SimConfig,
+    pub cus: Vec<Cu>,
+    pub mem: MemSystem,
+    /// Global time (ps).
+    pub now_ps: u64,
+    /// Kernel queue (cycled `kernel_rounds` times).
+    kernels: Vec<KernelLaunch>,
+    kernel_cursor: usize,
+    rounds_left: u32,
+    /// Index of the kernel currently resident on the CUs.
+    current_kernel: Option<usize>,
+}
+
+/// An opaque snapshot (restore = assignment).
+pub type GpuSnapshot = Gpu;
+
+/// Per-epoch, per-CU observation bundle handed to the DVFS layer.
+#[derive(Debug, Clone)]
+pub struct EpochObservation {
+    /// CU-level counters.
+    pub cu: Vec<EpochCounters>,
+    /// Per-CU, per-slot wavefront stats (instr, stall, ...).
+    pub wf_instr: Vec<Vec<f32>>,
+    pub wf_core_ns: Vec<Vec<f32>>,
+    pub wf_age_factor: Vec<Vec<f32>>,
+    /// Starting PC / kernel of each slot at epoch start (PC-table keys).
+    pub wf_start_pc: Vec<Vec<u32>>,
+    pub wf_start_kernel: Vec<Vec<u32>>,
+    pub wf_active: Vec<Vec<bool>>,
+    /// Current PC / kernel of each slot at epoch *end* (lookup keys for
+    /// the next epoch).
+    pub wf_next_pc: Vec<Vec<u32>>,
+    pub wf_next_kernel: Vec<Vec<u32>>,
+    pub wf_next_active: Vec<Vec<bool>>,
+    /// Epoch duration (ns).
+    pub epoch_ns: f64,
+}
+
+impl Gpu {
+    pub fn new(cfg: SimConfig) -> Self {
+        let cus = (0..cfg.gpu.n_cu)
+            .map(|i| Cu::new(i, &cfg.gpu, F_STATIC_GHZ))
+            .collect();
+        let mem = MemSystem::new(&cfg.gpu);
+        Gpu {
+            cfg,
+            cus,
+            mem,
+            now_ps: 0,
+            kernels: Vec::new(),
+            kernel_cursor: 0,
+            rounds_left: 0,
+            current_kernel: None,
+        }
+    }
+
+    /// Queue a workload: a kernel sequence repeated `rounds` times.
+    pub fn load_workload(&mut self, kernels: Vec<KernelLaunch>, rounds: u32) {
+        assert!(!kernels.is_empty(), "workload must have kernels");
+        assert!(rounds > 0);
+        self.kernels = kernels;
+        self.kernel_cursor = 0;
+        self.rounds_left = rounds;
+        self.current_kernel = None;
+        self.advance_kernel_queue();
+    }
+
+    /// If the resident kernel is finished on all CUs, launch the next one.
+    fn advance_kernel_queue(&mut self) {
+        let all_done = self.cus.iter().all(|c| c.kernel_done());
+        if !all_done {
+            return;
+        }
+        if self.kernel_cursor >= self.kernels.len() {
+            if self.rounds_left > 1 {
+                self.rounds_left -= 1;
+                self.kernel_cursor = 0;
+            } else {
+                self.current_kernel = None;
+                return; // workload complete
+            }
+        }
+        let launch = &self.kernels[self.kernel_cursor];
+        for cu in &mut self.cus {
+            cu.load_kernel(launch.program.clone(), launch.waves_per_cu);
+        }
+        // Kernel boundary: shared cache contents do not survive (distinct
+        // launches in the paper's traces).
+        self.mem.flush();
+        self.current_kernel = Some(self.kernel_cursor);
+        self.kernel_cursor += 1;
+    }
+
+    /// True when every queued kernel round has completed.
+    pub fn workload_done(&self) -> bool {
+        self.current_kernel.is_none() && self.cus.iter().all(|c| c.kernel_done())
+    }
+
+    /// Total committed instructions across CUs.
+    pub fn total_instr(&self) -> u64 {
+        self.cus.iter().map(|c| c.total_instr).sum()
+    }
+
+    /// Number of V/f domains.
+    pub fn n_domains(&self) -> usize {
+        self.cfg.n_domains()
+    }
+
+    /// CU index range of a domain.
+    pub fn domain_cus(&self, dom: usize) -> std::ops::Range<usize> {
+        let k = self.cfg.dvfs.cus_per_domain;
+        let lo = dom * k;
+        let hi = ((dom + 1) * k).min(self.cfg.gpu.n_cu);
+        lo..hi
+    }
+
+    /// Domain of a CU.
+    pub fn cu_domain(&self, cu: usize) -> usize {
+        cu / self.cfg.dvfs.cus_per_domain
+    }
+
+    /// Set a domain's frequency (all constituent CUs switch together and
+    /// pay the transition blackout if the state changed).
+    pub fn set_domain_frequency(&mut self, dom: usize, f_ghz: f64) {
+        let t_ps = ns_to_ps(self.cfg.dvfs.transition_latency_ns());
+        for cu in self.domain_cus(dom) {
+            self.cus[cu].set_frequency(f_ghz, t_ps);
+        }
+    }
+
+    /// Set every domain to one frequency (static baselines).
+    pub fn set_all_frequencies(&mut self, f_ghz: f64) {
+        for d in 0..self.n_domains() {
+            self.set_domain_frequency(d, f_ghz);
+        }
+    }
+
+    pub fn domain_frequency(&self, dom: usize) -> f64 {
+        let lo = self.domain_cus(dom).start;
+        self.cus[lo].freq_ghz
+    }
+
+    /// Run one fixed-time epoch and collect the observation bundle.
+    pub fn run_epoch(&mut self) -> EpochObservation {
+        let epoch_ps = ns_to_ps(self.cfg.dvfs.epoch_ns);
+        let quantum_ps = ns_to_ps(self.cfg.gpu.quantum_ns).clamp(1, epoch_ps);
+        let t_end = self.now_ps + epoch_ps;
+
+        for cu in &mut self.cus {
+            cu.begin_epoch();
+        }
+
+        let mut t = self.now_ps;
+        while t < t_end {
+            let t_next = (t + quantum_ps).min(t_end);
+            for cu in &mut self.cus {
+                cu.run_until(t_next, &mut self.mem);
+            }
+            t = t_next;
+            // Kernel hand-over happens between quanta so all CUs launch
+            // the next kernel at the same timestamp.
+            self.for_each_done_kernel_advance(t);
+        }
+
+        for cu in &mut self.cus {
+            cu.end_epoch();
+        }
+        self.now_ps = t_end;
+        self.collect_observation()
+    }
+
+    fn for_each_done_kernel_advance(&mut self, _now_ps: u64) {
+        if self.current_kernel.is_some() && self.cus.iter().all(|c| c.kernel_done()) {
+            self.advance_kernel_queue();
+        }
+    }
+
+    fn collect_observation(&self) -> EpochObservation {
+        let n = self.cus.len();
+        let mut ob = EpochObservation {
+            cu: Vec::with_capacity(n),
+            wf_instr: Vec::with_capacity(n),
+            wf_core_ns: Vec::with_capacity(n),
+            wf_age_factor: Vec::with_capacity(n),
+            wf_start_pc: Vec::with_capacity(n),
+            wf_start_kernel: Vec::with_capacity(n),
+            wf_active: Vec::with_capacity(n),
+            wf_next_pc: Vec::with_capacity(n),
+            wf_next_kernel: Vec::with_capacity(n),
+            wf_next_active: Vec::with_capacity(n),
+            epoch_ns: self.cfg.dvfs.epoch_ns,
+        };
+        let epoch_ps = ns_to_ps(self.cfg.dvfs.epoch_ns);
+        for cu in &self.cus {
+            ob.cu.push(cu.counters);
+            let kid = cu.kernel_id();
+            let mut instr = Vec::with_capacity(cu.wavefronts.len());
+            let mut core = Vec::with_capacity(cu.wavefronts.len());
+            let mut age = Vec::with_capacity(cu.wavefronts.len());
+            let mut spc = Vec::with_capacity(cu.wavefronts.len());
+            let mut skid = Vec::with_capacity(cu.wavefronts.len());
+            let mut act = Vec::with_capacity(cu.wavefronts.len());
+            let mut npc = Vec::with_capacity(cu.wavefronts.len());
+            let mut nkid = Vec::with_capacity(cu.wavefronts.len());
+            let mut nact = Vec::with_capacity(cu.wavefronts.len());
+            // Relative age factor: raw arbitration win-rates, normalized
+            // by the CU's instruction-weighted mean so the factor
+            // *redistributes* sensitivity across contending wavefronts
+            // without deflating the CU aggregate (paper §4.4: estimates
+            // are "normalized depending on the relative age").
+            let mut wsum = 0f64;
+            let mut isum = 0f64;
+            for wf in &cu.wavefronts {
+                wsum += wf.ep.age_factor() * wf.ep.instr as f64;
+                isum += wf.ep.instr as f64;
+            }
+            let mean_age = if isum > 0.0 { wsum / isum } else { 1.0 };
+            for wf in &cu.wavefronts {
+                instr.push(wf.ep.instr as f32);
+                core.push(super::ps_to_ns(wf.ep.core_ps(epoch_ps)) as f32);
+                age.push((wf.ep.age_factor() / mean_age.max(1e-6)) as f32);
+                spc.push(wf.ep.start_pc);
+                skid.push(wf.ep.start_kernel);
+                act.push(wf.ep.active_at_start);
+                npc.push(wf.pc);
+                nkid.push(kid);
+                nact.push(wf.active);
+            }
+            ob.wf_instr.push(instr);
+            ob.wf_core_ns.push(core);
+            ob.wf_age_factor.push(age);
+            ob.wf_start_pc.push(spc);
+            ob.wf_start_kernel.push(skid);
+            ob.wf_active.push(act);
+            ob.wf_next_pc.push(npc);
+            ob.wf_next_kernel.push(nkid);
+            ob.wf_next_active.push(nact);
+        }
+        ob
+    }
+
+    /// Snapshot the full simulator state (the oracle's "fork").
+    pub fn snapshot(&self) -> GpuSnapshot {
+        self.clone()
+    }
+
+    /// Restore from a snapshot.
+    pub fn restore(&mut self, snap: &GpuSnapshot) {
+        *self = snap.clone();
+    }
+
+    /// Time of the last instruction commit anywhere on the GPU (ns) —
+    /// the un-quantized completion time for fixed-work runs.
+    pub fn last_commit_ns(&self) -> f64 {
+        super::ps_to_ns(self.cus.iter().map(|c| c.last_commit_ps).max().unwrap_or(0))
+    }
+
+    /// Per-domain committed instructions for the *last* epoch.
+    pub fn domain_epoch_instr(&self) -> Vec<f64> {
+        (0..self.n_domains())
+            .map(|d| {
+                self.domain_cus(d)
+                    .map(|c| self.cus[c].counters.instr as f64)
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+impl EpochObservation {
+    /// Aggregate CU values to domain granularity (sensitivities are
+    /// commutative — paper §4.2).
+    pub fn domain_sum(&self, per_cu: &[f64], cus_per_domain: usize) -> Vec<f64> {
+        per_cu
+            .chunks(cus_per_domain)
+            .map(|c| c.iter().sum())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::isa::{Op, Pattern, ProgramBuilder};
+
+    fn small_cfg() -> SimConfig {
+        let mut c = SimConfig::small();
+        c.gpu.n_cu = 4;
+        c.gpu.n_wf = 8;
+        c
+    }
+
+    fn compute_kernel(trips: u16) -> KernelLaunch {
+        let mut b = ProgramBuilder::new();
+        b.with_loop(0, trips, 0, |b| {
+            b.push(Op::VAlu { cycles: 1 });
+        });
+        KernelLaunch {
+            program: Arc::new(b.build(0, "compute")),
+            waves_per_cu: 16,
+        }
+    }
+
+    fn mem_kernel(trips: u16) -> KernelLaunch {
+        let mut b = ProgramBuilder::new();
+        b.with_loop(0, trips, 0, |b| {
+            b.push(Op::Load {
+                pattern: Pattern::Random {
+                    region: 2,
+                    working_set: 128 * 1024 * 1024,
+                },
+                fan: 1,
+            });
+            b.push(Op::WaitCnt { max: 0 });
+        });
+        KernelLaunch {
+            program: Arc::new(b.build(1, "mem")),
+            waves_per_cu: 16,
+        }
+    }
+
+    #[test]
+    fn epoch_advances_global_time() {
+        let mut g = Gpu::new(small_cfg());
+        g.load_workload(vec![compute_kernel(1000)], 1);
+        let ob = g.run_epoch();
+        assert_eq!(g.now_ps, ns_to_ps(1000.0));
+        assert_eq!(ob.cu.len(), 4);
+        assert!(ob.cu.iter().all(|c| c.instr > 0));
+    }
+
+    #[test]
+    fn kernel_queue_cycles_through_rounds() {
+        let mut g = Gpu::new(small_cfg());
+        g.load_workload(vec![compute_kernel(3), mem_kernel(2)], 2);
+        for _ in 0..400 {
+            g.run_epoch();
+            if g.workload_done() {
+                break;
+            }
+        }
+        assert!(g.workload_done(), "workload did not finish");
+        // every CU completed 2 rounds x 2 kernels x 16 waves
+        for cu in &g.cus {
+            assert!(cu.kernel_done());
+        }
+    }
+
+    #[test]
+    fn domain_mapping_partitions_cus() {
+        let mut cfg = small_cfg();
+        cfg.dvfs.cus_per_domain = 2;
+        let g = Gpu::new(cfg);
+        assert_eq!(g.n_domains(), 2);
+        assert_eq!(g.domain_cus(0), 0..2);
+        assert_eq!(g.domain_cus(1), 2..4);
+        assert_eq!(g.cu_domain(3), 1);
+    }
+
+    #[test]
+    fn domain_frequency_applies_to_members_only() {
+        let mut cfg = small_cfg();
+        cfg.dvfs.cus_per_domain = 2;
+        let mut g = Gpu::new(cfg);
+        g.load_workload(vec![compute_kernel(100)], 1);
+        g.set_domain_frequency(1, 2.2);
+        assert_eq!(g.cus[0].freq_ghz, F_STATIC_GHZ);
+        assert_eq!(g.cus[2].freq_ghz, 2.2);
+        assert_eq!(g.cus[3].freq_ghz, 2.2);
+        assert_eq!(g.domain_frequency(1), 2.2);
+    }
+
+    #[test]
+    fn snapshot_restore_is_bit_identical_replay() {
+        let mut g = Gpu::new(small_cfg());
+        g.load_workload(vec![mem_kernel(500), compute_kernel(500)], 2);
+        g.run_epoch();
+        let snap = g.snapshot();
+
+        let ob_a = g.run_epoch();
+        let instr_a: Vec<u64> = g.cus.iter().map(|c| c.total_instr).collect();
+
+        g.restore(&snap);
+        let ob_b = g.run_epoch();
+        let instr_b: Vec<u64> = g.cus.iter().map(|c| c.total_instr).collect();
+
+        assert_eq!(instr_a, instr_b);
+        assert_eq!(ob_a.wf_instr, ob_b.wf_instr);
+        assert_eq!(ob_a.cu, ob_b.cu);
+    }
+
+    #[test]
+    fn different_frequencies_after_restore_diverge() {
+        let mut g = Gpu::new(small_cfg());
+        g.load_workload(vec![compute_kernel(5000)], 4);
+        g.run_epoch();
+        let snap = g.snapshot();
+        let base = g.total_instr();
+
+        g.set_all_frequencies(1.3);
+        g.run_epoch();
+        let lo = g.total_instr() - base;
+
+        g.restore(&snap);
+        g.set_all_frequencies(2.2);
+        g.run_epoch();
+        let hi = g.total_instr() - base;
+
+        assert!(
+            hi as f64 > lo as f64 * 1.3,
+            "frequency had no effect on compute workload: {lo} vs {hi}"
+        );
+    }
+
+    #[test]
+    fn observation_shapes_match_config() {
+        let mut g = Gpu::new(small_cfg());
+        g.load_workload(vec![compute_kernel(100)], 1);
+        let ob = g.run_epoch();
+        assert_eq!(ob.wf_instr.len(), 4);
+        assert_eq!(ob.wf_instr[0].len(), 8);
+        assert_eq!(ob.epoch_ns, 1000.0);
+        // all slots busy with pure compute: every wavefront committed work
+        assert!(ob.wf_instr[0].iter().any(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn domain_sum_aggregates() {
+        let ob = EpochObservation {
+            cu: vec![],
+            wf_instr: vec![],
+            wf_core_ns: vec![],
+            wf_age_factor: vec![],
+            wf_start_pc: vec![],
+            wf_start_kernel: vec![],
+            wf_active: vec![],
+            wf_next_pc: vec![],
+            wf_next_kernel: vec![],
+            wf_next_active: vec![],
+            epoch_ns: 1000.0,
+        };
+        assert_eq!(
+            ob.domain_sum(&[1.0, 2.0, 3.0, 4.0], 2),
+            vec![3.0, 7.0]
+        );
+        assert_eq!(ob.domain_sum(&[1.0, 2.0, 3.0], 2), vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn workload_done_time_shrinks_with_frequency() {
+        let mut run_at = |f: f64| {
+            let mut g = Gpu::new(small_cfg());
+            g.load_workload(vec![compute_kernel(2000)], 1);
+            g.set_all_frequencies(f);
+            let mut epochs = 0;
+            while !g.workload_done() && epochs < 10_000 {
+                g.run_epoch();
+                epochs += 1;
+            }
+            assert!(g.workload_done());
+            epochs
+        };
+        let slow = run_at(1.3);
+        let fast = run_at(2.2);
+        assert!(fast < slow, "fast {fast} !< slow {slow}");
+    }
+}

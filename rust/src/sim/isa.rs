@@ -1,0 +1,295 @@
+//! GCN-flavoured micro-ISA.
+//!
+//! The instruction set is deliberately small: it carries exactly the
+//! semantics the paper's estimation models observe — multi-cycle vector
+//! ALU ops, asynchronous vector memory with outstanding-counter
+//! `WaitCnt` barriers, workgroup barriers, and loops (whose PC-repetitive
+//! structure is what PCSTALL exploits).
+
+
+/// Memory access pattern of a vector load/store.  Addresses are generated
+/// statelessly from `(global wavefront id, pc, per-WF access counter)` so
+/// re-executing the same work at a different frequency touches the same
+/// lines — a prerequisite for the oracle's I-vs-f regression.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    /// Strided streaming within a working set (unit `stride` in bytes).
+    /// Models coalesced regular kernels (dgemm tiles, comd neighbour
+    /// loops).  Small strides revisit lines (L1 hits).
+    Strided {
+        region: u8,
+        stride: u32,
+        working_set: u32,
+    },
+    /// Uniform-random within a working set — models xsbench-style table
+    /// lookups.  `working_set` ≫ L2 makes it DRAM-latency bound.
+    Random { region: u8, working_set: u32 },
+}
+
+/// One machine operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Vector ALU op occupying the wavefront for `cycles` CU cycles.
+    VAlu { cycles: u8 },
+    /// Scalar ALU op (1 cycle).
+    SAlu,
+    /// Asynchronous vector load: issues in 1 cycle, bumps the outstanding
+    /// counter, response arrives later.  `fan` models memory divergence
+    /// (number of distinct lines the 64 lanes touch after coalescing).
+    Load { pattern: Pattern, fan: u8 },
+    /// Asynchronous vector store.
+    Store { pattern: Pattern, fan: u8 },
+    /// `s_waitcnt`: block until outstanding (loads+stores) <= `max`.
+    WaitCnt { max: u8 },
+    /// Workgroup barrier.
+    Barrier,
+    /// Loop prologue: on first encounter at `depth`, arm the per-WF trip
+    /// counter with `trips ± divergence` (per-wavefront hash).
+    LoopBegin {
+        depth: u8,
+        trips: u16,
+        divergence: u16,
+    },
+    /// Loop back-edge: decrement counter at `depth`; jump to `target` while
+    /// it stays positive.
+    LoopEnd { depth: u8, target: u32 },
+    /// Wavefront completes and frees its slot.
+    EndPgm,
+}
+
+/// Maximum loop nesting supported per wavefront.
+pub const MAX_LOOP_DEPTH: usize = 4;
+
+/// Instruction = op (PCs are instruction indices; byte PCs are derived as
+/// `pc * 4` to mirror the paper's 4-byte-encoded ISA when indexing the
+/// PC table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instr {
+    pub op: Op,
+}
+
+impl From<Op> for Instr {
+    fn from(op: Op) -> Self {
+        Instr { op }
+    }
+}
+
+/// A GPU kernel: a straight-line instruction vector with structured loops.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    /// Unique kernel id within a workload (hashes into the PC table so
+    /// distinct kernels don't systematically alias).
+    pub kernel_id: u32,
+    pub instrs: Vec<Instr>,
+    /// Human-readable tag for traces.
+    pub name: String,
+}
+
+impl Program {
+    pub fn new(kernel_id: u32, name: impl Into<String>, instrs: Vec<Instr>) -> Self {
+        let p = Program {
+            kernel_id,
+            instrs,
+            name: name.into(),
+        };
+        p.validate().expect("invalid program");
+        p
+    }
+
+    /// Structural validation: loop targets in range, depths within bounds,
+    /// terminated by EndPgm, no fall-through past the end.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.instrs.is_empty() {
+            return Err("empty program".into());
+        }
+        match self.instrs.last().unwrap().op {
+            Op::EndPgm => {}
+            _ => return Err("program must end with EndPgm".into()),
+        }
+        for (pc, ins) in self.instrs.iter().enumerate() {
+            match ins.op {
+                Op::LoopBegin { depth, .. } => {
+                    if depth as usize >= MAX_LOOP_DEPTH {
+                        return Err(format!("pc {pc}: loop depth {depth} too deep"));
+                    }
+                }
+                Op::LoopEnd { depth, target } => {
+                    if depth as usize >= MAX_LOOP_DEPTH {
+                        return Err(format!("pc {pc}: loop depth {depth} too deep"));
+                    }
+                    if target as usize >= pc {
+                        return Err(format!("pc {pc}: loop target {target} not backwards"));
+                    }
+                }
+                Op::VAlu { cycles } => {
+                    if cycles == 0 {
+                        return Err(format!("pc {pc}: zero-cycle VAlu"));
+                    }
+                }
+                Op::Load { fan, .. } | Op::Store { fan, .. } => {
+                    if fan == 0 {
+                        return Err(format!("pc {pc}: zero-fan memory op"));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Static instruction count (footprint for PC-table sizing, Table I).
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+}
+
+/// Convenience builder used by the workload generators.
+#[derive(Default)]
+pub struct ProgramBuilder {
+    instrs: Vec<Instr>,
+}
+
+impl ProgramBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, op: Op) -> &mut Self {
+        self.instrs.push(op.into());
+        self
+    }
+
+    /// Current pc (index of next instruction).
+    pub fn pc(&self) -> u32 {
+        self.instrs.len() as u32
+    }
+
+    /// `body` emits the loop body; trips may diverge per wavefront.
+    pub fn with_loop(
+        &mut self,
+        depth: u8,
+        trips: u16,
+        divergence: u16,
+        body: impl FnOnce(&mut Self),
+    ) -> &mut Self {
+        self.push(Op::LoopBegin {
+            depth,
+            trips,
+            divergence,
+        });
+        let target = self.pc();
+        body(self);
+        self.push(Op::LoopEnd { depth, target });
+        self
+    }
+
+    pub fn build(mut self, kernel_id: u32, name: impl Into<String>) -> Program {
+        self.instrs.push(Op::EndPgm.into());
+        Program::new(kernel_id, name, self.instrs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn valu() -> Op {
+        Op::VAlu { cycles: 4 }
+    }
+
+    #[test]
+    fn builder_emits_terminated_program() {
+        let mut b = ProgramBuilder::new();
+        b.push(valu());
+        let p = b.build(0, "t");
+        assert_eq!(p.instrs.len(), 2);
+        assert_eq!(p.instrs[1].op, Op::EndPgm);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn builder_loop_targets_are_backwards() {
+        let mut b = ProgramBuilder::new();
+        b.with_loop(0, 10, 2, |b| {
+            b.push(valu());
+            b.push(Op::WaitCnt { max: 0 });
+        });
+        let p = b.build(1, "loop");
+        match p.instrs[3].op {
+            Op::LoopEnd { target, depth } => {
+                assert_eq!(target, 1);
+                assert_eq!(depth, 0);
+            }
+            other => panic!("expected LoopEnd, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn validate_rejects_unterminated() {
+        let p = Program {
+            kernel_id: 0,
+            name: "bad".into(),
+            instrs: vec![valu().into()],
+        };
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_forward_loop_target() {
+        let p = Program {
+            kernel_id: 0,
+            name: "bad".into(),
+            instrs: vec![
+                Instr::from(Op::LoopEnd { depth: 0, target: 5 }),
+                Instr::from(Op::EndPgm),
+            ],
+        };
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_deep_nesting() {
+        let p = Program {
+            kernel_id: 0,
+            name: "bad".into(),
+            instrs: vec![
+                Instr::from(Op::LoopBegin {
+                    depth: 4,
+                    trips: 1,
+                    divergence: 0,
+                }),
+                Instr::from(Op::EndPgm),
+            ],
+        };
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_cycle_valu_and_zero_fan() {
+        let p = Program {
+            kernel_id: 0,
+            name: "bad".into(),
+            instrs: vec![Instr::from(Op::VAlu { cycles: 0 }), Instr::from(Op::EndPgm)],
+        };
+        assert!(p.validate().is_err());
+        let q = Program {
+            kernel_id: 0,
+            name: "bad".into(),
+            instrs: vec![
+                Instr::from(Op::Load {
+                    pattern: Pattern::Random {
+                        region: 0,
+                        working_set: 1024,
+                    },
+                    fan: 0,
+                }),
+                Instr::from(Op::EndPgm),
+            ],
+        };
+        assert!(q.validate().is_err());
+    }
+}

@@ -1,0 +1,68 @@
+//! The substrate: a deterministic, snapshot-able, wavefront-level GPU
+//! timing simulator — the stand-in for the paper's gem5 GCN3 model.
+//!
+//! Key properties:
+//!
+//! * **Wavefront-true execution.**  Each CU hosts up to `n_wf` wavefronts
+//!   with private PCs, executing in-order with asynchronous vector memory
+//!   (`Load`/`Store` increment an outstanding counter; `WaitCnt` blocks —
+//!   the `s_waitcnt` semantics the paper's STALL model measures).
+//! * **Oldest-first scheduling** (GCN policy the paper attributes the
+//!   inter-wavefront contention variation to, Fig. 11a).
+//! * **Per-CU V/f domains.**  Each CU runs on its own clock; memory/L2
+//!   stay in a fixed 1.6 GHz domain.  Integer picosecond timestamps keep
+//!   cross-frequency runs exactly comparable and snapshots deterministic.
+//! * **Snapshot/restore** = `Clone`: the in-process equivalent of the
+//!   paper's fork-pre-execute methodology (§5.1, Fig. 13).
+
+pub mod cu;
+pub mod gpu;
+pub mod isa;
+pub mod memory;
+pub mod wavefront;
+
+pub use cu::{Cu, EpochCounters};
+pub use gpu::{Gpu, GpuSnapshot};
+pub use isa::{Instr, Op, Pattern, Program};
+pub use wavefront::{WaitState, Wavefront};
+
+/// Picoseconds per nanosecond — the simulator's internal clock unit.
+pub const PS_PER_NS: u64 = 1000;
+
+/// Convert ns (config-facing) to ps (internal).
+#[inline]
+pub fn ns_to_ps(ns: f64) -> u64 {
+    (ns * PS_PER_NS as f64).round() as u64
+}
+
+/// Convert ps (internal) to ns (stats-facing).
+#[inline]
+pub fn ps_to_ns(ps: u64) -> f64 {
+    ps as f64 / PS_PER_NS as f64
+}
+
+/// Cycle period in ps for a domain frequency in GHz.
+#[inline]
+pub fn cycle_ps(freq_ghz: f64) -> u64 {
+    (PS_PER_NS as f64 / freq_ghz).round().max(1.0) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_conversions_roundtrip() {
+        assert_eq!(ns_to_ps(1.0), 1000);
+        assert_eq!(ps_to_ns(1500), 1.5);
+        assert_eq!(ns_to_ps(ps_to_ns(123_456)), 123_456);
+    }
+
+    #[test]
+    fn cycle_period_matches_frequency() {
+        assert_eq!(cycle_ps(1.0), 1000);
+        assert_eq!(cycle_ps(2.0), 500);
+        // 1.3 GHz -> 769.23 ps, rounds to 769
+        assert_eq!(cycle_ps(1.3), 769);
+    }
+}

@@ -1,0 +1,238 @@
+//! Per-wavefront architectural + bookkeeping state.
+
+
+use super::isa::MAX_LOOP_DEPTH;
+
+/// Why a wavefront cannot issue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaitState {
+    /// Ready (may still be busy finishing a multi-cycle VALU).
+    None,
+    /// Blocked at `s_waitcnt` until outstanding (loads+stores) <= max.
+    WaitCnt { max: u8 },
+    /// Blocked at a workgroup barrier.
+    Barrier,
+}
+
+/// Per-epoch statistics for one wavefront slot — exactly the inputs the
+/// wavefront-level STALL estimator (and the Pallas kernel) consumes.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WfEpochStats {
+    /// Instructions committed this epoch.
+    pub instr: u64,
+    /// Time blocked at `s_waitcnt` (ps).
+    pub stall_ps: u64,
+    /// Time blocked at barriers (ps).
+    pub barrier_ps: u64,
+    /// Cycles the WF was ready but lost issue arbitration to older WFs.
+    pub issue_lost: u64,
+    /// Cycles the WF won issue arbitration.
+    pub issue_won: u64,
+    /// PC at the *start* of the epoch (the PCSTALL table key).
+    pub start_pc: u32,
+    /// Kernel id at epoch start (hashed into the table index).
+    pub start_kernel: u32,
+    /// Whether the slot held an active wavefront at epoch start.
+    pub active_at_start: bool,
+}
+
+impl WfEpochStats {
+    /// Core (non-stalled) time within an epoch of `epoch_ps`.
+    pub fn core_ps(&self, epoch_ps: u64) -> u64 {
+        epoch_ps.saturating_sub(self.stall_ps + self.barrier_ps)
+    }
+
+    /// Scheduling-contention factor in (0, 1]: fraction of issue attempts
+    /// won.  The paper normalizes the sensitivity estimate by wavefront
+    /// age; with oldest-first arbitration, observed win rate *is* the
+    /// realized scheduling preference.
+    pub fn age_factor(&self) -> f64 {
+        let total = self.issue_won + self.issue_lost;
+        if total == 0 {
+            1.0
+        } else {
+            (self.issue_won as f64 / total as f64).max(0.05)
+        }
+    }
+}
+
+/// One wavefront slot in a CU.
+///
+/// Field order is perf-relevant: the scheduler's per-cycle ready scan
+/// reads `busy_until_ps` / `waiting` / `active` for every slot, so those
+/// live together at the head of the struct (one cache line for the hot
+/// part; epoch stats trail behind).
+#[derive(Debug, Clone)]
+pub struct Wavefront {
+    /// CU-local time (ps) until which the WF is executing a multi-cycle op.
+    pub busy_until_ps: u64,
+    pub waiting: WaitState,
+    /// Is there a live wavefront in this slot?
+    pub active: bool,
+    /// Slot index within the CU.
+    pub slot: u8,
+    pub outstanding_loads: u8,
+    pub outstanding_stores: u8,
+    pub pc: u32,
+    /// Dispatch sequence number — global arbitration age (lower = older).
+    pub age: u64,
+    /// Unique id of the wavefront instance (stable across snapshots; used
+    /// for address-stream generation).
+    pub global_id: u64,
+    /// Timestamp when the current block began (for stall accounting).
+    pub block_start_ps: u64,
+    /// Structured-loop trip counters.
+    pub loop_count: [u32; MAX_LOOP_DEPTH],
+    pub loop_active: [bool; MAX_LOOP_DEPTH],
+    /// Monotone per-WF memory access counter (address generation).
+    pub access_counter: u32,
+    /// Per-epoch stats.
+    pub ep: WfEpochStats,
+}
+
+impl Wavefront {
+    pub fn empty(slot: u8) -> Self {
+        Wavefront {
+            busy_until_ps: 0,
+            waiting: WaitState::None,
+            active: false,
+            slot,
+            outstanding_loads: 0,
+            outstanding_stores: 0,
+            pc: 0,
+            age: u64::MAX,
+            global_id: 0,
+            block_start_ps: 0,
+            loop_count: [0; MAX_LOOP_DEPTH],
+            loop_active: [false; MAX_LOOP_DEPTH],
+            access_counter: 0,
+            ep: WfEpochStats::default(),
+        }
+    }
+
+    /// (Re-)dispatch a wavefront instance into this slot.
+    pub fn dispatch(&mut self, global_id: u64, age: u64, now_ps: u64) {
+        self.age = age;
+        self.global_id = global_id;
+        self.active = true;
+        self.pc = 0;
+        self.busy_until_ps = now_ps;
+        self.outstanding_loads = 0;
+        self.outstanding_stores = 0;
+        self.waiting = WaitState::None;
+        self.block_start_ps = 0;
+        self.loop_count = [0; MAX_LOOP_DEPTH];
+        self.loop_active = [false; MAX_LOOP_DEPTH];
+        self.access_counter = 0;
+        // ep stats intentionally preserved: a slot's epoch record spans
+        // dispatches within the epoch.
+    }
+
+    #[inline]
+    pub fn outstanding(&self) -> u8 {
+        self.outstanding_loads + self.outstanding_stores
+    }
+
+    /// Ready to be *picked* by the scheduler at time `now`.
+    #[inline]
+    pub fn ready(&self, now_ps: u64) -> bool {
+        self.active && self.waiting == WaitState::None && self.busy_until_ps <= now_ps
+    }
+
+    /// Blocked specifically on memory (the STALL condition).
+    #[inline]
+    pub fn mem_waiting(&self) -> bool {
+        matches!(self.waiting, WaitState::WaitCnt { .. })
+    }
+
+    /// Blocked with only stores outstanding (the CRISP store-stall case).
+    #[inline]
+    pub fn store_only_waiting(&self) -> bool {
+        self.mem_waiting() && self.outstanding_loads == 0 && self.outstanding_stores > 0
+    }
+
+    /// Reset epoch stats, capturing the starting PC for the PC predictor.
+    pub fn begin_epoch(&mut self, kernel_id: u32) {
+        self.ep = WfEpochStats {
+            start_pc: self.pc,
+            start_kernel: kernel_id,
+            active_at_start: self.active,
+            ..WfEpochStats::default()
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_slot_is_not_ready() {
+        let wf = Wavefront::empty(3);
+        assert!(!wf.ready(0));
+        assert!(!wf.active);
+    }
+
+    #[test]
+    fn dispatch_resets_architectural_state() {
+        let mut wf = Wavefront::empty(0);
+        wf.pc = 55;
+        wf.outstanding_loads = 3;
+        wf.loop_active[1] = true;
+        wf.dispatch(7, 42, 100);
+        assert!(wf.active);
+        assert_eq!(wf.pc, 0);
+        assert_eq!(wf.outstanding(), 0);
+        assert!(!wf.loop_active[1]);
+        assert_eq!(wf.age, 42);
+        assert!(wf.ready(100));
+        assert!(!wf.ready(99));
+    }
+
+    #[test]
+    fn waitcnt_blocks_and_classifies() {
+        let mut wf = Wavefront::empty(0);
+        wf.dispatch(1, 1, 0);
+        wf.outstanding_stores = 2;
+        wf.waiting = WaitState::WaitCnt { max: 0 };
+        assert!(!wf.ready(10));
+        assert!(wf.mem_waiting());
+        assert!(wf.store_only_waiting());
+        wf.outstanding_loads = 1;
+        assert!(!wf.store_only_waiting());
+    }
+
+    #[test]
+    fn age_factor_bounds() {
+        let mut s = WfEpochStats::default();
+        assert_eq!(s.age_factor(), 1.0);
+        s.issue_won = 1;
+        s.issue_lost = 3;
+        assert!((s.age_factor() - 0.25).abs() < 1e-12);
+        s.issue_won = 0;
+        s.issue_lost = 100;
+        assert!(s.age_factor() >= 0.05);
+    }
+
+    #[test]
+    fn core_time_subtracts_stalls() {
+        let mut s = WfEpochStats::default();
+        s.stall_ps = 300;
+        s.barrier_ps = 200;
+        assert_eq!(s.core_ps(1000), 500);
+        assert_eq!(s.core_ps(400), 0); // saturates
+    }
+
+    #[test]
+    fn begin_epoch_captures_pc() {
+        let mut wf = Wavefront::empty(0);
+        wf.dispatch(1, 1, 0);
+        wf.pc = 17;
+        wf.ep.instr = 99;
+        wf.begin_epoch(3);
+        assert_eq!(wf.ep.instr, 0);
+        assert_eq!(wf.ep.start_pc, 17);
+        assert_eq!(wf.ep.start_kernel, 3);
+        assert!(wf.ep.active_at_start);
+    }
+}

@@ -1,0 +1,131 @@
+//! Self-contained micro-benchmark driver (criterion is unavailable in
+//! this offline environment).  Provides warmup, repeated timed samples,
+//! and median/MAD reporting; used by every target in `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 0.5)
+    }
+
+    pub fn p10_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 0.1)
+    }
+
+    pub fn p90_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 0.9)
+    }
+
+    pub fn report(&self) {
+        println!(
+            "{:<44} median {:>12}  p10 {:>12}  p90 {:>12}  ({} samples)",
+            self.name,
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.p10_ns()),
+            fmt_ns(self.p90_ns()),
+            self.samples_ns.len()
+        );
+    }
+}
+
+fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((v.len() - 1) as f64 * q).round() as usize;
+    v[idx]
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: a warmup pass, then timed samples until both
+/// `min_samples` and `min_total` are reached (or `max_samples`).
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_cfg(name, Duration::from_millis(200), 10, 200, &mut f)
+}
+
+/// Fully parameterized variant for slow end-to-end benches.
+pub fn bench_cfg<F: FnMut()>(
+    name: &str,
+    min_total: Duration,
+    min_samples: usize,
+    max_samples: usize,
+    f: &mut F,
+) -> BenchResult {
+    // warmup
+    f();
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (samples.len() < min_samples || start.elapsed() < min_total)
+        && samples.len() < max_samples
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        samples_ns: samples,
+    };
+    r.report();
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut n = 0u64;
+        let r = bench_cfg(
+            "noop",
+            Duration::from_millis(1),
+            3,
+            16,
+            &mut || n += 1,
+        );
+        assert!(r.samples_ns.len() >= 3);
+        assert!(n as usize >= r.samples_ns.len());
+        assert!(r.median_ns() >= 0.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let r = BenchResult {
+            name: "t".into(),
+            samples_ns: vec![5.0, 1.0, 3.0, 2.0, 4.0],
+        };
+        assert!(r.p10_ns() <= r.median_ns());
+        assert!(r.median_ns() <= r.p90_ns());
+        assert_eq!(r.median_ns(), 3.0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.0e9), "3.00 s");
+    }
+}

@@ -1,0 +1,164 @@
+//! Run statistics: per-epoch records, energy/delay integration, the
+//! ED^nP metrics, and CSV/JSON emitters used by the experiment harness.
+
+pub mod bench;
+pub mod emit;
+
+/// One epoch's aggregate record.
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    /// Epoch index.
+    pub epoch: u64,
+    /// Global time at epoch end (ns).
+    pub t_ns: f64,
+    /// Ladder index per domain at which the epoch ran.
+    pub freq_idx: Vec<u8>,
+    /// Instructions committed (whole GPU).
+    pub instr: f64,
+    /// Energy consumed this epoch (J), incl. transition energy.
+    pub energy_j: f64,
+    /// Mean per-domain prediction accuracy for this epoch (NaN when the
+    /// policy makes no prediction, e.g. static).
+    pub accuracy: f64,
+    /// Per-domain estimated sensitivity used for the selection.
+    pub dom_sens: Vec<f32>,
+}
+
+/// Whole-run summary.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub workload: String,
+    pub policy: String,
+    pub objective: String,
+    pub records: Vec<EpochRecord>,
+    pub total_energy_j: f64,
+    pub total_time_ns: f64,
+    pub total_instr: f64,
+    /// Mean prediction accuracy over predicting epochs (NaN if none).
+    pub mean_accuracy: f64,
+    /// Did the workload run to completion (fixed-work runs)?
+    pub completed: bool,
+}
+
+impl RunResult {
+    /// Energy·Delay^n product for the fixed work this run completed.
+    /// Units: J·s^n.
+    pub fn ednp(&self, n: u32) -> f64 {
+        let d_s = self.total_time_ns * 1e-9;
+        self.total_energy_j * d_s.powi(n as i32)
+    }
+
+    pub fn edp(&self) -> f64 {
+        self.ednp(1)
+    }
+
+    pub fn ed2p(&self) -> f64 {
+        self.ednp(2)
+    }
+
+    /// Fraction of CU·epochs spent at each ladder state (Fig. 16).
+    pub fn freq_time_share(&self) -> [f64; crate::power::params::N_FREQ] {
+        let mut share = [0f64; crate::power::params::N_FREQ];
+        let mut total = 0f64;
+        for r in &self.records {
+            for &idx in &r.freq_idx {
+                share[idx as usize] += 1.0;
+                total += 1.0;
+            }
+        }
+        if total > 0.0 {
+            for s in &mut share {
+                *s /= total;
+            }
+        }
+        share
+    }
+
+    /// Mean relative sensitivity change across consecutive epochs
+    /// (Fig. 7), averaged over domains.
+    pub fn mean_sens_change(&self) -> f64 {
+        let mut sum = 0f64;
+        let mut n = 0u64;
+        for w in self.records.windows(2) {
+            for (a, b) in w[0].dom_sens.iter().zip(&w[1].dom_sens) {
+                // only count epochs where the domain did meaningful work
+                if a.abs() + b.abs() > 1.0 {
+                    sum += crate::dvfs::sensitivity::relative_change(*a as f64, *b as f64);
+                    n += 1;
+                }
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(epoch: u64, idxs: Vec<u8>, sens: Vec<f32>) -> EpochRecord {
+        EpochRecord {
+            epoch,
+            t_ns: epoch as f64 * 1000.0,
+            freq_idx: idxs,
+            instr: 100.0,
+            energy_j: 1e-6,
+            accuracy: 0.9,
+            dom_sens: sens,
+        }
+    }
+
+    fn result(records: Vec<EpochRecord>) -> RunResult {
+        RunResult {
+            workload: "t".into(),
+            policy: "p".into(),
+            objective: "o".into(),
+            records,
+            total_energy_j: 2.0,
+            total_time_ns: 3e9,
+            total_instr: 1000.0,
+            mean_accuracy: 0.9,
+            completed: true,
+        }
+    }
+
+    #[test]
+    fn ednp_products() {
+        let r = result(vec![]);
+        assert!((r.edp() - 2.0 * 3.0).abs() < 1e-9);
+        assert!((r.ed2p() - 2.0 * 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn freq_time_share_sums_to_one() {
+        let r = result(vec![
+            rec(0, vec![0, 9], vec![0.0, 0.0]),
+            rec(1, vec![9, 9], vec![0.0, 0.0]),
+        ]);
+        let share = r.freq_time_share();
+        assert!((share.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((share[9] - 0.75).abs() < 1e-12);
+        assert!((share[0] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sens_change_metric() {
+        let r = result(vec![
+            rec(0, vec![0], vec![100.0]),
+            rec(1, vec![0], vec![150.0]),
+            rec(2, vec![0], vec![150.0]),
+        ]);
+        // changes: 0.4 then 0.0 → mean 0.2
+        assert!((r.mean_sens_change() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sens_change_ignores_idle_domains() {
+        let r = result(vec![rec(0, vec![0], vec![0.0]), rec(1, vec![0], vec![0.0])]);
+        assert_eq!(r.mean_sens_change(), 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic workload generators reproducing the phase character of the
+//! paper's Table II applications.
+//!
+//! We cannot run the ECP proxy apps / DeepBench / DNNMark HIP binaries on
+//! this substrate, so each entry is a seeded generator that reproduces
+//! what the paper *reports* about the application: its instruction mix,
+//! loop structure, working-set size, inter-wavefront divergence, and the
+//! resulting phase behaviour (compute-bound, memory-bound, alternating,
+//! thrashing, …).  DESIGN.md §2.2 documents the substitution per app.
+
+pub mod catalog;
+pub mod spec;
+
+pub use catalog::{build, names, Workload};
+pub use spec::{KernelSpec, PhaseSpec, WorkloadSpec};

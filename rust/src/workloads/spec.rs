@@ -1,0 +1,346 @@
+//! Workload specification DSL: phases → kernels → workload.
+//!
+//! A *phase* is a run of instructions with one character (compute burst,
+//! strided stream, random gather…).  A *kernel* is a loop over phases —
+//! the loop gives PCSTALL its repetitive PC structure, and phase
+//! alternation inside the loop produces the epoch-to-epoch sensitivity
+//! variation the paper measures (Figs. 6/7).
+
+use std::sync::Arc;
+
+use crate::sim::gpu::KernelLaunch;
+use crate::sim::isa::{Op, Pattern, Program, ProgramBuilder};
+
+/// One phase of a kernel's loop body.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseSpec {
+    /// VALU ops emitted in this phase.
+    pub valu: u16,
+    /// Cycles per VALU op (FMA chains are longer).
+    pub valu_cycles: u8,
+    /// Vector loads emitted in this phase.
+    pub loads: u16,
+    /// Vector stores emitted in this phase.
+    pub stores: u16,
+    /// Access pattern for this phase's memory ops.
+    pub pattern: Pattern,
+    /// Memory divergence: distinct lines per vector op.
+    pub fan: u8,
+    /// Emit `s_waitcnt 0` after every `waitcnt_batch` memory ops
+    /// (larger batch = more memory-level parallelism).
+    pub waitcnt_batch: u8,
+}
+
+impl PhaseSpec {
+    /// A pure-compute phase.
+    pub fn compute(valu: u16, valu_cycles: u8) -> Self {
+        PhaseSpec {
+            valu,
+            valu_cycles,
+            loads: 0,
+            stores: 0,
+            pattern: Pattern::Strided {
+                region: 0,
+                stride: 64,
+                working_set: 1 << 20,
+            },
+            fan: 1,
+            waitcnt_batch: 1,
+        }
+    }
+
+    /// A memory phase with an explicit pattern.
+    pub fn memory(loads: u16, stores: u16, pattern: Pattern, fan: u8, batch: u8) -> Self {
+        PhaseSpec {
+            valu: 0,
+            valu_cycles: 1,
+            loads,
+            stores,
+            pattern,
+            fan,
+            waitcnt_batch: batch.max(1),
+        }
+    }
+
+    /// Interleaved compute+memory phase.
+    pub fn mixed(
+        valu: u16,
+        valu_cycles: u8,
+        loads: u16,
+        pattern: Pattern,
+        fan: u8,
+        batch: u8,
+    ) -> Self {
+        PhaseSpec {
+            valu,
+            valu_cycles,
+            loads,
+            stores: 0,
+            pattern,
+            fan,
+            waitcnt_batch: batch.max(1),
+        }
+    }
+
+    /// Static instructions this phase expands to.
+    pub fn instr_count(&self) -> usize {
+        let mem = (self.loads + self.stores) as usize;
+        let waits = mem.div_ceil(self.waitcnt_batch.max(1) as usize);
+        self.valu as usize + mem + waits
+    }
+
+    fn emit(&self, b: &mut ProgramBuilder) {
+        // Interleave: memory ops first in batches (so compute overlaps the
+        // outstanding loads), then the remaining compute.
+        let mem_total = self.loads + self.stores;
+        let mut loads_left = self.loads;
+        let mut stores_left = self.stores;
+        // Spread compute between batches for realistic overlap.
+        let batches = (mem_total as usize).div_ceil(self.waitcnt_batch.max(1) as usize);
+        let valu_per_batch = if batches > 0 {
+            self.valu as usize / (batches + 1)
+        } else {
+            self.valu as usize
+        };
+        let mut valu_left = self.valu as usize;
+
+        for _ in 0..batches {
+            for _ in 0..self.waitcnt_batch {
+                if loads_left > 0 {
+                    b.push(Op::Load {
+                        pattern: self.pattern,
+                        fan: self.fan,
+                    });
+                    loads_left -= 1;
+                } else if stores_left > 0 {
+                    b.push(Op::Store {
+                        pattern: self.pattern,
+                        fan: self.fan,
+                    });
+                    stores_left -= 1;
+                }
+            }
+            // overlap compute while the batch is in flight
+            for _ in 0..valu_per_batch.min(valu_left) {
+                b.push(Op::VAlu {
+                    cycles: self.valu_cycles,
+                });
+            }
+            valu_left -= valu_per_batch.min(valu_left);
+            b.push(Op::WaitCnt { max: 0 });
+        }
+        for _ in 0..valu_left {
+            b.push(Op::VAlu {
+                cycles: self.valu_cycles,
+            });
+        }
+    }
+}
+
+/// A kernel: `trips` iterations over the phase sequence.
+#[derive(Debug, Clone)]
+pub struct KernelSpec {
+    pub name: String,
+    pub phases: Vec<PhaseSpec>,
+    /// Outer-loop trip count (per wavefront).
+    pub trips: u16,
+    /// Per-wavefront trip divergence (quickS-style imbalance).
+    pub divergence: u16,
+    /// Place a workgroup barrier at the end of each iteration (snapc).
+    pub barrier: bool,
+    /// Waves per CU for this kernel launch.
+    pub waves_per_cu: u64,
+    /// Per-wavefront warmup loop (mean trips) that desynchronizes phase
+    /// positions across wavefronts — real kernels drift apart through
+    /// latency jitter within micro-seconds; this models that spread at
+    /// dispatch.  0 disables.
+    pub stagger: u16,
+}
+
+impl KernelSpec {
+    /// Lower the spec to an executable [`Program`].
+    pub fn lower(&self, kernel_id: u32) -> Program {
+        let mut b = ProgramBuilder::new();
+        // small prologue (kernel arg setup)
+        b.push(Op::SAlu);
+        b.push(Op::SAlu);
+        if self.stagger > 0 {
+            // divergent warmup: trips in [1, 2*stagger], ~10 cycles each
+            b.with_loop(3, self.stagger, self.stagger.saturating_sub(1), |b| {
+                b.push(Op::VAlu { cycles: 10 });
+            });
+        }
+        let phases = self.phases.clone();
+        let barrier = self.barrier;
+        b.with_loop(0, self.trips, self.divergence, |b| {
+            for p in &phases {
+                p.emit(b);
+            }
+            if barrier {
+                b.push(Op::Barrier);
+            }
+        });
+        b.build(kernel_id, self.name.clone())
+    }
+
+    pub fn launch(&self, kernel_id: u32) -> KernelLaunch {
+        KernelLaunch {
+            program: Arc::new(self.lower(kernel_id)),
+            waves_per_cu: self.waves_per_cu,
+        }
+    }
+
+    /// Static instruction footprint (PC-table coverage analysis).
+    pub fn static_instrs(&self) -> usize {
+        // prologue [+ stagger loop] + LoopBegin + body + LoopEnd
+        // [+ barrier] + EndPgm
+        let body: usize = self.phases.iter().map(|p| p.instr_count()).sum();
+        let stagger = if self.stagger > 0 { 3 } else { 0 };
+        2 + stagger + 1 + body + 1 + usize::from(self.barrier) + 1
+    }
+
+    /// Dynamic instructions per wavefront (mean trips).
+    pub fn dyn_instrs_per_wave(&self) -> usize {
+        let body: usize = self.phases.iter().map(|p| p.instr_count()).sum();
+        let stagger = if self.stagger > 0 { 1 + 2 * self.stagger as usize } else { 0 };
+        2 + stagger + 1 + self.trips as usize * (body + 1 + usize::from(self.barrier)) + 1
+    }
+}
+
+/// A whole workload: kernels cycled `rounds` times.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub kernels: Vec<KernelSpec>,
+    pub rounds: u32,
+}
+
+impl WorkloadSpec {
+    /// Lower to the launch list the [`crate::Gpu`] consumes.
+    pub fn launches(&self) -> Vec<KernelLaunch> {
+        self.kernels
+            .iter()
+            .enumerate()
+            .map(|(i, k)| k.launch(i as u32))
+            .collect()
+    }
+
+    /// Total dynamic instructions per CU (rough completion budget).
+    pub fn dyn_instrs_per_cu(&self) -> u64 {
+        self.rounds as u64
+            * self
+                .kernels
+                .iter()
+                .map(|k| k.dyn_instrs_per_wave() as u64 * k.waves_per_cu)
+                .sum::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::isa::Op;
+
+    fn stream_pattern() -> Pattern {
+        Pattern::Strided {
+            region: 1,
+            stride: 64,
+            working_set: 1 << 24,
+        }
+    }
+
+    #[test]
+    fn phase_instr_count_matches_emission() {
+        let p = PhaseSpec::mixed(10, 2, 6, stream_pattern(), 1, 3);
+        let k = KernelSpec {
+            name: "t".into(),
+            phases: vec![p],
+            trips: 1,
+            divergence: 0,
+            barrier: false,
+            waves_per_cu: 1,
+            stagger: 0,
+        };
+        let prog = k.lower(0);
+        assert_eq!(prog.instrs.len(), k.static_instrs());
+    }
+
+    #[test]
+    fn compute_phase_has_no_memory_ops() {
+        let k = KernelSpec {
+            name: "c".into(),
+            phases: vec![PhaseSpec::compute(8, 4)],
+            trips: 2,
+            divergence: 0,
+            barrier: false,
+            waves_per_cu: 1,
+            stagger: 0,
+        };
+        let prog = k.lower(0);
+        assert!(prog
+            .instrs
+            .iter()
+            .all(|i| !matches!(i.op, Op::Load { .. } | Op::Store { .. } | Op::WaitCnt { .. })));
+    }
+
+    #[test]
+    fn memory_phase_batches_waitcnts() {
+        let p = PhaseSpec::memory(6, 0, stream_pattern(), 1, 3);
+        // 6 loads / batch 3 = 2 waitcnts
+        assert_eq!(p.instr_count(), 6 + 2);
+    }
+
+    #[test]
+    fn barrier_kernel_emits_barrier_per_iteration() {
+        let k = KernelSpec {
+            name: "b".into(),
+            phases: vec![PhaseSpec::compute(2, 1)],
+            trips: 3,
+            divergence: 0,
+            barrier: true,
+            waves_per_cu: 4,
+            stagger: 0,
+        };
+        let prog = k.lower(0);
+        let barriers = prog
+            .instrs
+            .iter()
+            .filter(|i| matches!(i.op, Op::Barrier))
+            .count();
+        assert_eq!(barriers, 1); // one static barrier inside the loop
+        assert!(prog.validate().is_ok());
+    }
+
+    #[test]
+    fn lowered_programs_validate() {
+        let p = PhaseSpec::mixed(50, 2, 10, stream_pattern(), 2, 5);
+        let k = KernelSpec {
+            name: "v".into(),
+            phases: vec![p, PhaseSpec::compute(20, 1)],
+            trips: 10,
+            divergence: 4,
+            barrier: false,
+            waves_per_cu: 8,
+            stagger: 0,
+        };
+        assert!(k.lower(3).validate().is_ok());
+    }
+
+    #[test]
+    fn dyn_instrs_scale_with_trips() {
+        let mut k = KernelSpec {
+            name: "d".into(),
+            phases: vec![PhaseSpec::compute(10, 1)],
+            trips: 5,
+            divergence: 0,
+            barrier: false,
+            waves_per_cu: 2,
+            stagger: 0,
+        };
+        let d5 = k.dyn_instrs_per_wave();
+        k.trips = 10;
+        let d10 = k.dyn_instrs_per_wave();
+        assert!(d10 > d5);
+        assert_eq!(d10 - d5, 5 * 11); // 5 extra trips x (10 valu + LoopEnd)
+    }
+}

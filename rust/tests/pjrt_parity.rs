@@ -1,0 +1,117 @@
+//! PJRT ⇄ native parity: the AOT artifact (built from the Python
+//! constants) and the native Rust mirror must agree on every output.
+//! This is the test that pins the power-model constants in
+//! `python/compile/params.py` and `rust/src/power/params.rs` together.
+
+use pcstall::dvfs::native::{dvfs_step_native, DvfsStepBackend, StepInputs};
+use pcstall::power::params::N_FREQ;
+use pcstall::power::PowerParams;
+use pcstall::runtime::{find_artifact, PjrtBackend};
+use pcstall::util::SplitMix64;
+
+fn artifact_or_skip() -> Option<PjrtBackend> {
+    let Some(path) = find_artifact(None) else {
+        eprintln!("SKIP: no artifact (run `make artifacts`)");
+        return None;
+    };
+    Some(PjrtBackend::load(&path).expect("artifact must load"))
+}
+
+fn random_inputs(seed: u64, n_cu: usize, n_wf: usize) -> StepInputs {
+    let mut rng = SplitMix64::new(seed);
+    let mut inp = StepInputs::zeros(n_cu, n_wf);
+    for i in 0..n_cu * n_wf {
+        inp.instr[i] = (rng.next_f64() * 2500.0) as f32;
+        inp.t_core_ns[i] = (rng.next_f64() * 1000.0) as f32;
+        inp.age_factor[i] = (0.05 + rng.next_f64() * 0.95) as f32;
+    }
+    for c in 0..n_cu {
+        inp.freq_ghz[c] = (1.3 + rng.next_f64() * 0.9) as f32;
+        inp.pred_sens[c] = (rng.next_f64() * 40_000.0) as f32;
+        inp.pred_i0[c] = (rng.next_f64() * 2_000.0) as f32;
+        inp.mask[c] = 1.0;
+    }
+    inp
+}
+
+fn assert_close(name: &str, a: &[f32], b: &[f32], rtol: f32) {
+    assert_eq!(a.len(), b.len(), "{name}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.is_infinite() || y.is_infinite() {
+            assert_eq!(
+                x.is_infinite(),
+                y.is_infinite(),
+                "{name}[{i}]: inf mismatch {x} vs {y}"
+            );
+            continue;
+        }
+        let denom = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() / denom < rtol,
+            "{name}[{i}]: {x} vs {y} (rtol {rtol})"
+        );
+    }
+}
+
+#[test]
+fn pjrt_matches_native_on_random_inputs() {
+    let Some(mut pjrt) = artifact_or_skip() else {
+        return;
+    };
+    let params = PowerParams::default();
+    for seed in 0..5 {
+        let inp = random_inputs(seed, pjrt.meta.n_cu, pjrt.meta.n_wf);
+        let native = dvfs_step_native(&inp, &params);
+        let remote = pjrt.step(&inp).expect("pjrt step");
+        assert_close("sens_wf", &remote.sens_wf, &native.sens_wf, 1e-4);
+        assert_close("sens_cu", &remote.sens_cu, &native.sens_cu, 1e-4);
+        assert_close("i0_cu", &remote.i0_cu, &native.i0_cu, 1e-3);
+        assert_close("pred_instr", &remote.pred_instr, &native.pred_instr, 1e-4);
+        assert_close("power_w", &remote.power_w, &native.power_w, 1e-4);
+        assert_close("ednp", &remote.ednp, &native.ednp, 1e-3);
+        // argmin may legitimately differ on near-ties; require ednp of the
+        // chosen states to be within tolerance instead of index equality.
+        for d in 0..pjrt.meta.n_cu {
+            let kn = native.best_idx[d] as usize;
+            let kp = remote.best_idx[d] as usize;
+            let en = native.ednp[d * N_FREQ + kn];
+            let ep = native.ednp[d * N_FREQ + kp];
+            assert!(
+                (en - ep).abs() / en.abs().max(1e-12) < 1e-3,
+                "domain {d}: native idx {kn} vs pjrt idx {kp} with ednp {en} vs {ep}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_pads_small_simulations() {
+    let Some(mut pjrt) = artifact_or_skip() else {
+        return;
+    };
+    // a 4-CU / 8-WF sim on the 64x40 artifact
+    let inp = random_inputs(7, 4, 8);
+    let native = dvfs_step_native(&inp, &PowerParams::default());
+    let remote = pjrt.step(&inp).expect("pjrt step");
+    assert_eq!(remote.sens_wf.len(), 4 * 8);
+    assert_eq!(remote.best_idx.len(), 4);
+    assert_close("sens_wf", &remote.sens_wf, &native.sens_wf, 1e-4);
+    assert_close("pred_instr", &remote.pred_instr, &native.pred_instr, 1e-4);
+}
+
+#[test]
+fn pjrt_masked_domains_select_state_zero() {
+    let Some(mut pjrt) = artifact_or_skip() else {
+        return;
+    };
+    let mut inp = random_inputs(11, pjrt.meta.n_cu, pjrt.meta.n_wf);
+    for d in 32..pjrt.meta.n_cu {
+        inp.mask[d] = 0.0;
+        inp.pred_sens[d] = 40_000.0; // would pick top state if unmasked
+        inp.pred_i0[d] = 0.0;
+    }
+    let out = pjrt.step(&inp).expect("pjrt step");
+    for d in 32..pjrt.meta.n_cu {
+        assert_eq!(out.best_idx[d], 0.0, "masked domain {d} moved");
+    }
+}

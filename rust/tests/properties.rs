@@ -1,0 +1,315 @@
+//! Property-based tests (self-contained driver — proptest is unavailable
+//! offline).  Each property runs against many seeded random cases and
+//! reports the failing seed for reproduction.
+
+use pcstall::config::SimConfig;
+use pcstall::dvfs::native::{dvfs_step_native, StepInputs};
+use pcstall::dvfs::objective::Objective;
+use pcstall::dvfs::sensitivity::{prediction_accuracy, relative_change, SensEstimate};
+use pcstall::power::params::{FREQS_GHZ, N_FREQ};
+use pcstall::power::PowerParams;
+use pcstall::predictors::PcTables;
+use pcstall::sim::gpu::{Gpu, KernelLaunch};
+use pcstall::sim::isa::{Op, Pattern, ProgramBuilder};
+use pcstall::util::SplitMix64;
+use std::sync::Arc;
+
+/// Run `f` for `n` seeded cases; panic with the seed on failure.
+fn forall(n: u64, f: impl Fn(&mut SplitMix64)) {
+    for seed in 0..n {
+        let mut rng = SplitMix64::new(seed * 0x9E37 + 1);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random small program that always terminates.
+fn random_program(rng: &mut SplitMix64) -> Arc<pcstall::sim::isa::Program> {
+    let mut b = ProgramBuilder::new();
+    let trips = 1 + rng.next_below(20) as u16;
+    let div = rng.next_below(4) as u16;
+    let n_ops = 1 + rng.next_below(12);
+    let body_seed = rng.next_u64();
+    b.with_loop(0, trips, div, |b| {
+        let mut rng2 = SplitMix64::new(body_seed);
+        let mut outstanding = false;
+        for _ in 0..n_ops {
+            match rng2.next_below(4) {
+                0 => {
+                    b.push(Op::VAlu {
+                        cycles: 1 + rng2.next_below(6) as u8,
+                    });
+                }
+                1 => {
+                    b.push(Op::Load {
+                        pattern: Pattern::Random {
+                            region: 1,
+                            working_set: 1 << 22,
+                        },
+                        fan: 1 + rng2.next_below(3) as u8,
+                    });
+                    outstanding = true;
+                }
+                2 => {
+                    b.push(Op::Store {
+                        pattern: Pattern::Strided {
+                            region: 2,
+                            stride: 64,
+                            working_set: 1 << 22,
+                        },
+                        fan: 1,
+                    });
+                    outstanding = true;
+                }
+                _ => {
+                    if outstanding {
+                        b.push(Op::WaitCnt { max: 0 });
+                        outstanding = false;
+                    } else {
+                        b.push(Op::SAlu);
+                    }
+                }
+            }
+        }
+        if outstanding {
+            b.push(Op::WaitCnt { max: 0 });
+        }
+    });
+    Arc::new(b.build(0, "random"))
+}
+
+fn random_gpu(rng: &mut SplitMix64) -> Gpu {
+    let mut cfg = SimConfig::small();
+    cfg.gpu.n_cu = 1 + rng.next_below(4) as usize;
+    cfg.gpu.n_wf = 2 + rng.next_below(8) as usize;
+    cfg.gpu.issue_width = 1 + rng.next_below(4) as usize;
+    let mut gpu = Gpu::new(cfg);
+    let program = random_program(rng);
+    let waves = 1 + rng.next_below(24);
+    gpu.load_workload(
+        vec![KernelLaunch {
+            program,
+            waves_per_cu: waves,
+        }],
+        1,
+    );
+    gpu
+}
+
+#[test]
+fn prop_snapshot_restore_replays_bit_identically() {
+    forall(25, |rng| {
+        let mut gpu = random_gpu(rng);
+        let warm = rng.next_below(3);
+        for _ in 0..warm {
+            gpu.run_epoch();
+        }
+        let snap = gpu.snapshot();
+        let ob1 = gpu.run_epoch();
+        let i1 = gpu.total_instr();
+        gpu.restore(&snap);
+        let ob2 = gpu.run_epoch();
+        let i2 = gpu.total_instr();
+        assert_eq!(i1, i2);
+        assert_eq!(ob1.wf_instr, ob2.wf_instr);
+        assert_eq!(ob1.cu, ob2.cu);
+    });
+}
+
+#[test]
+fn prop_epoch_instruction_accounting_consistent() {
+    // CU epoch counters must equal the sum of per-WF commits, and the
+    // cumulative counter must equal the sum over epochs.
+    forall(25, |rng| {
+        let mut gpu = random_gpu(rng);
+        let mut cumulative = vec![0u64; gpu.cus.len()];
+        for _ in 0..4 {
+            let ob = gpu.run_epoch();
+            for (c, counters) in ob.cu.iter().enumerate() {
+                let wf_sum: f32 = ob.wf_instr[c].iter().sum();
+                assert_eq!(
+                    counters.instr, wf_sum as u64,
+                    "CU {c} epoch counter != WF sum"
+                );
+                cumulative[c] += counters.instr;
+            }
+        }
+        for (c, cu) in gpu.cus.iter().enumerate() {
+            assert_eq!(cu.total_instr, cumulative[c], "cumulative mismatch CU {c}");
+        }
+    });
+}
+
+#[test]
+fn prop_epoch_time_accounting_within_bounds() {
+    // Per-WF stall + barrier never exceeds the epoch; CU epoch_ps spans
+    // the epoch exactly.
+    forall(25, |rng| {
+        let mut gpu = random_gpu(rng);
+        let epoch_ps = pcstall::sim::ns_to_ps(gpu.cfg.dvfs.epoch_ns);
+        for _ in 0..3 {
+            gpu.run_epoch();
+            for cu in &gpu.cus {
+                assert_eq!(cu.counters.epoch_ps, epoch_ps);
+                assert!(cu.counters.stall_all_ps <= epoch_ps);
+                assert!(cu.counters.crit_ps <= epoch_ps);
+                assert!(cu.counters.overlap_ps <= epoch_ps);
+                for wf in &cu.wavefronts {
+                    assert!(
+                        wf.ep.stall_ps + wf.ep.barrier_ps <= epoch_ps,
+                        "WF blocked longer than the epoch"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_higher_frequency_never_commits_much_fewer_instructions() {
+    // Monotonicity (with small tolerance for contention artifacts): same
+    // state run at a higher frequency commits at least ~95% as many
+    // instructions.
+    forall(15, |rng| {
+        let gpu = random_gpu(rng);
+        let mut lo = gpu.clone();
+        let mut hi = gpu.clone();
+        lo.set_all_frequencies(FREQS_GHZ[0]);
+        hi.set_all_frequencies(FREQS_GHZ[N_FREQ - 1]);
+        lo.run_epoch();
+        hi.run_epoch();
+        let (a, b) = (lo.total_instr() as f64, hi.total_instr() as f64);
+        assert!(
+            b >= 0.95 * a,
+            "higher frequency lost work: lo {a} vs hi {b}"
+        );
+    });
+}
+
+#[test]
+fn prop_native_step_outputs_finite_and_consistent() {
+    let p = PowerParams::default();
+    forall(40, |rng| {
+        let n_cu = 1 + rng.next_below(16) as usize;
+        let n_wf = 1 + rng.next_below(40) as usize;
+        let mut inp = StepInputs::zeros(n_cu, n_wf);
+        for v in inp.instr.iter_mut() {
+            *v = (rng.next_f64() * 5000.0) as f32;
+        }
+        for v in inp.t_core_ns.iter_mut() {
+            *v = (rng.next_f64() * 1000.0) as f32;
+        }
+        for v in inp.age_factor.iter_mut() {
+            *v = (0.05 + rng.next_f64() * 2.0) as f32;
+        }
+        for d in 0..n_cu {
+            inp.pred_sens[d] = (rng.next_f64() * 50_000.0) as f32;
+            inp.pred_i0[d] = (rng.next_f64() * 5_000.0) as f32;
+        }
+        let out = dvfs_step_native(&inp, &p);
+        assert!(out.sens_wf.iter().all(|x| x.is_finite()));
+        assert!(out.power_w.iter().all(|x| x.is_finite() && *x > 0.0));
+        for d in 0..n_cu {
+            // best_idx is a valid argmin of its row
+            let k = out.best_idx[d] as usize;
+            assert!(k < N_FREQ);
+            let row = &out.ednp[d * N_FREQ..(d + 1) * N_FREQ];
+            assert!(row.iter().all(|&e| e >= row[k] || !e.is_finite()));
+            // predicted instructions are linear in f: check midpoint
+            let i0 = out.pred_instr[d * N_FREQ];
+            let i9 = out.pred_instr[d * N_FREQ + N_FREQ - 1];
+            let mid = out.pred_instr[d * N_FREQ + 4];
+            let expect = i0 + (i9 - i0) * (4.0f32 / 9.0);
+            assert!(
+                (mid - expect).abs() <= 0.01 * expect.abs().max(1.0),
+                "grid not linear: {i0} {mid} {i9}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_objective_selection_respects_grid() {
+    let p = PowerParams::default();
+    forall(60, |rng| {
+        let sens = rng.next_f64() * 40_000.0;
+        let i0 = rng.next_f64() * 3_000.0;
+        for obj in [
+            Objective::Edp,
+            Objective::Ed2p,
+            Objective::EnergyBound { max_slowdown: 0.05 },
+        ] {
+            let (gi, gp, ge) =
+                pcstall::dvfs::native::eval_grid_row(sens, i0, obj.n_exp(), 1000.0, &p);
+            let k = obj.select(&gi, &gp, &ge);
+            assert!(k < N_FREQ);
+            if let Objective::EnergyBound { max_slowdown } = obj {
+                assert!(gi[k] + 1e-9 >= gi[N_FREQ - 1] * (1.0 - max_slowdown));
+            } else {
+                assert!(ge.iter().all(|&e| e >= ge[k]));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pc_table_lookup_returns_latest_update() {
+    forall(40, |rng| {
+        let mut cfg = pcstall::config::DvfsConfig::default();
+        cfg.pc_update_alpha = 1.0;
+        let n_cu = 1 + rng.next_below(8) as usize;
+        let mut t = PcTables::new(&cfg, n_cu, 8);
+        // N random updates; remember the last value per (cu, kernel, bucket)
+        let mut expected = std::collections::HashMap::new();
+        for _ in 0..200 {
+            let cu = rng.next_below(n_cu as u64) as usize;
+            let kernel = rng.next_below(4) as u32;
+            // bucket-aligned pcs so reconstruction is exact
+            let pc = (rng.next_below(100) * 4) as u32;
+            let sens = rng.next_f64() * 1000.0;
+            t.update_wf(cu, kernel, pc, SensEstimate::new(sens, 1.0));
+            expected.insert((cu, kernel, pc), sens);
+        }
+        for ((cu, kernel, pc), sens) in &expected {
+            let e = t.lookup_wf(*cu, 0, *kernel, *pc);
+            // aliasing is possible across distinct buckets mapping to the
+            // same table slot; verify only when the value matches some
+            // expected insert for this table index — at minimum the entry
+            // is a value we inserted, never garbage.
+            let valid = expected.values().any(|v| (e.sens - v).abs() < 1e-3);
+            assert!(valid, "lookup returned un-inserted value {}", e.sens);
+            let _ = (cu, kernel, pc, sens);
+        }
+    });
+}
+
+#[test]
+fn prop_metric_functions_bounded() {
+    forall(200, |rng| {
+        let a = (rng.next_f64() - 0.2) * 1e6;
+        let b = (rng.next_f64() - 0.2) * 1e6;
+        let rc = relative_change(a, b);
+        assert!((0.0..=2.0).contains(&rc), "relative_change {rc}");
+        let acc = prediction_accuracy(a.abs(), b.abs());
+        assert!((0.0..=1.0).contains(&acc), "accuracy {acc}");
+    });
+}
+
+#[test]
+fn prop_workload_determinism_across_builds() {
+    // Building the same workload twice yields identical programs.
+    forall(8, |rng| {
+        let names = pcstall::workloads::names();
+        let name = names[rng.next_below(names.len() as u64) as usize];
+        let a = pcstall::workloads::build(name, 0.5);
+        let b = pcstall::workloads::build(name, 0.5);
+        assert_eq!(a.kernels.len(), b.kernels.len());
+        for (ka, kb) in a.launches().iter().zip(b.launches().iter()) {
+            assert_eq!(ka.program.instrs, kb.program.instrs);
+            assert_eq!(ka.waves_per_cu, kb.waves_per_cu);
+        }
+    });
+}
