@@ -235,6 +235,7 @@ impl DvfsManager {
             } else {
                 f64::NAN
             },
+            pc_hit_rate: self.pc.hit_rate(),
             completed,
             records,
         }

@@ -1,0 +1,277 @@
+//! Content-addressed on-disk store of serialized [`RunResult`]s.
+//!
+//! Layout: `<dir>/<hash>.json`, one file per unique [`RunKey`] content
+//! address (`results/cache/` under the experiment output directory by
+//! default).  Every entry embeds the canonical key text; a lookup whose
+//! stored key disagrees with the requested one (hash collision, schema
+//! drift, truncated write) is **invalidated**: the file is deleted, the
+//! event counted, and the run recomputed.
+//!
+//! Writes go through a temp file + rename so a concurrently-running
+//! second `pcstall` process never observes a half-written entry.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::exec::key::{RunKey, SCHEMA_VERSION};
+use crate::stats::emit::Json;
+use crate::stats::RunResult;
+
+/// Serialized-entry size cap: larger results are recomputed rather than
+/// cached (parsing them back would cost more than the simulation).
+pub const MAX_ENTRY_BYTES: usize = 64 * 1024 * 1024;
+
+/// Hit/miss/invalidation accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub stores: u64,
+    pub invalidations: u64,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from disk (0 when nothing was looked
+    /// up, e.g. a disabled cache).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// The store.  A `ResultCache` with no directory (`disabled`) satisfies
+/// the same API but never touches disk — `--no-cache`.
+#[derive(Debug)]
+pub struct ResultCache {
+    dir: Option<PathBuf>,
+    stats: Mutex<CacheStats>,
+}
+
+impl ResultCache {
+    /// A cache rooted at `dir` (created lazily on first store).
+    pub fn at(dir: PathBuf) -> Self {
+        ResultCache {
+            dir: Some(dir),
+            stats: Mutex::new(CacheStats::default()),
+        }
+    }
+
+    /// A cache that never hits and never stores.
+    pub fn disabled() -> Self {
+        ResultCache {
+            dir: None,
+            stats: Mutex::new(CacheStats::default()),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.dir.is_some()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        *self.stats.lock().unwrap()
+    }
+
+    fn path_of(&self, key: &RunKey) -> Option<PathBuf> {
+        self.dir
+            .as_ref()
+            .map(|d| d.join(format!("{}.json", key.hash_hex())))
+    }
+
+    /// Fetch the result stored for `key`, if any.
+    pub fn lookup(&self, key: &RunKey) -> Option<RunResult> {
+        let path = self.path_of(key)?;
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(_) => {
+                self.stats.lock().unwrap().misses += 1;
+                return None;
+            }
+        };
+        match decode_entry(&text, key) {
+            Ok(result) => {
+                self.stats.lock().unwrap().hits += 1;
+                Some(result)
+            }
+            Err(why) => {
+                eprintln!(
+                    "[exec] invalidating stale cache entry {}: {why}",
+                    path.display()
+                );
+                let _ = std::fs::remove_file(&path);
+                let mut st = self.stats.lock().unwrap();
+                st.invalidations += 1;
+                st.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Persist `result` under `key`'s content address.
+    ///
+    /// Entries above [`MAX_ENTRY_BYTES`] are skipped (with a warning):
+    /// a `Scale::Full` completion run can carry hundreds of thousands of
+    /// per-epoch records, and a cache hit that has to parse a
+    /// multi-hundred-MB document is slower than recomputing the cell.
+    pub fn store(&self, key: &RunKey, result: &RunResult) {
+        let Some(path) = self.path_of(key) else {
+            return;
+        };
+        let entry = Json::obj(vec![
+            ("schema", Json::Num(SCHEMA_VERSION as f64)),
+            ("key", Json::Str(key.canonical())),
+            ("result", result.to_json()),
+        ]);
+        let text = entry.render();
+        if text.len() > MAX_ENTRY_BYTES {
+            eprintln!(
+                "[exec] not caching {} ({} MB > {} MB cap): rerun will recompute this cell",
+                key.canonical(),
+                text.len() >> 20,
+                MAX_ENTRY_BYTES >> 20,
+            );
+            return;
+        }
+        if let Some(dir) = path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+        match std::fs::write(&tmp, &text).and_then(|_| std::fs::rename(&tmp, &path)) {
+            Ok(()) => self.stats.lock().unwrap().stores += 1,
+            Err(e) => {
+                eprintln!("[exec] failed to write cache entry {}: {e}", path.display());
+                let _ = std::fs::remove_file(&tmp);
+            }
+        }
+    }
+}
+
+fn decode_entry(text: &str, key: &RunKey) -> Result<RunResult, String> {
+    let j = Json::parse(text)?;
+    let stored = j
+        .get("key")
+        .and_then(|k| k.as_str())
+        .ok_or_else(|| "entry has no canonical key".to_string())?;
+    if stored != key.canonical() {
+        return Err(format!(
+            "canonical key mismatch (stored '{stored}', requested '{}')",
+            key.canonical()
+        ));
+    }
+    let result = j
+        .get("result")
+        .ok_or_else(|| "entry has no result".to_string())?;
+    RunResult::from_json(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::dvfs::manager::{Policy, RunMode};
+    use crate::dvfs::objective::Objective;
+    use crate::stats::EpochRecord;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("pcstall_cache_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn a_key(workload: &str) -> RunKey {
+        RunKey::new(
+            &SimConfig::small(),
+            "quick",
+            "native",
+            workload,
+            Policy::PcStall,
+            Objective::Ed2p,
+            RunMode::Epochs(4),
+            0.05,
+        )
+    }
+
+    fn a_result(workload: &str) -> RunResult {
+        RunResult {
+            workload: workload.into(),
+            policy: "PCSTALL".into(),
+            objective: "ED2P".into(),
+            records: vec![EpochRecord {
+                epoch: 0,
+                t_ns: 1000.0,
+                freq_idx: vec![4, 9],
+                instr: 123.0,
+                energy_j: 1e-6,
+                accuracy: 0.5,
+                dom_sens: vec![1.5, 2.5],
+            }],
+            total_energy_j: 1e-6,
+            total_time_ns: 1000.0,
+            total_instr: 123.0,
+            mean_accuracy: 0.5,
+            pc_hit_rate: 0.9,
+            completed: false,
+        }
+    }
+
+    #[test]
+    fn store_then_lookup_roundtrips() {
+        let dir = tmp_dir("roundtrip");
+        let cache = ResultCache::at(dir.clone());
+        let key = a_key("comd");
+        assert!(cache.lookup(&key).is_none());
+        cache.store(&key, &a_result("comd"));
+        let got = cache.lookup(&key).expect("entry should hit");
+        assert_eq!(got.workload, "comd");
+        assert_eq!(got.records.len(), 1);
+        assert_eq!(got.records[0].freq_idx, vec![4, 9]);
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.stores, st.invalidations), (1, 1, 1, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_entries_are_invalidated() {
+        let dir = tmp_dir("corrupt");
+        let cache = ResultCache::at(dir.clone());
+        let key = a_key("hacc");
+        cache.store(&key, &a_result("hacc"));
+        let path = dir.join(format!("{}.json", key.hash_hex()));
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(cache.lookup(&key).is_none());
+        assert!(!path.exists(), "stale entry should be deleted");
+        assert_eq!(cache.stats().invalidations, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn key_mismatch_is_invalidated() {
+        // Simulate a hash collision / schema drift: an entry whose file
+        // name matches but whose canonical key does not.
+        let dir = tmp_dir("mismatch");
+        let cache = ResultCache::at(dir.clone());
+        let key = a_key("comd");
+        let other = a_key("dgemm");
+        cache.store(&other, &a_result("dgemm"));
+        let from = dir.join(format!("{}.json", other.hash_hex()));
+        let to = dir.join(format!("{}.json", key.hash_hex()));
+        std::fs::rename(&from, &to).unwrap();
+        assert!(cache.lookup(&key).is_none());
+        assert_eq!(cache.stats().invalidations, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disabled_cache_never_touches_disk() {
+        let cache = ResultCache::disabled();
+        let key = a_key("comd");
+        cache.store(&key, &a_result("comd"));
+        assert!(cache.lookup(&key).is_none());
+        assert_eq!(cache.stats(), CacheStats::default());
+        assert!(!cache.is_enabled());
+    }
+}

@@ -1,0 +1,245 @@
+//! Canonical, hash-stable fingerprints of run requests.
+//!
+//! Two run requests that would execute the same simulation — same
+//! workload, policy, objective, termination mode, waves multiplier,
+//! backend, and full simulator configuration (which covers scale, seed
+//! and epoch length) — produce the same [`RunKey`], and therefore the
+//! same content address in the result cache.  Identical cells are thus
+//! identified *across* figures: the static-1.7 GHz baseline computed by
+//! fig14 is the same cache entry fig15–17 read.
+//!
+//! The canonical string embeds [`SCHEMA_VERSION`] as a salt: bumping it
+//! orphans (rather than corrupts) every previously cached result.
+
+use crate::config::SimConfig;
+use crate::dvfs::manager::{Policy, RunMode};
+use crate::dvfs::objective::Objective;
+
+/// Bump whenever the `RunResult` serialization or the simulator's
+/// observable semantics change: old cache entries become unreachable.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// A fully-resolved run request fingerprint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunKey {
+    pub workload: String,
+    /// Canonical policy id (not the display name): `static:<idx>`,
+    /// `reactive:<model>`, `pcstall`, ...
+    pub policy: String,
+    pub objective: String,
+    /// `epochs:<n>` or `completion:<cap>`.
+    pub mode: String,
+    /// `native` or `pjrt`.
+    pub backend: String,
+    /// Scale preset name (`quick`/`default`/`full`) — redundant with the
+    /// config fingerprint but kept for readable cache entries.
+    pub scale: String,
+    pub epoch_ns: f64,
+    /// Effective workload-length multiplier passed to the generator.
+    pub waves: f64,
+    pub seed: u64,
+    /// FNV-1a fingerprint of the full `SimConfig` TOML serialization —
+    /// covers every ablation override (table sizes, domain granularity,
+    /// power constants, ...).
+    pub cfg_fp: u64,
+}
+
+/// Canonical policy encoding (distinct from `Policy::name`, which is a
+/// display string).
+pub fn policy_id(p: Policy) -> String {
+    match p {
+        Policy::Static(idx) => format!("static:{idx}"),
+        Policy::Reactive(m) => format!("reactive:{}", m.name()),
+        Policy::AccReac => "accreac".into(),
+        Policy::PcStall => "pcstall".into(),
+        Policy::AccPc => "accpc".into(),
+        Policy::Oracle => "oracle".into(),
+    }
+}
+
+/// Canonical objective encoding.
+pub fn objective_id(o: Objective) -> String {
+    match o {
+        Objective::Edp => "edp".into(),
+        Objective::Ed2p => "ed2p".into(),
+        Objective::EnergyBound { max_slowdown } => format!("energy@{max_slowdown:?}"),
+    }
+}
+
+/// Canonical termination-mode encoding.
+pub fn mode_id(m: RunMode) -> String {
+    match m {
+        RunMode::Epochs(n) => format!("epochs:{n}"),
+        RunMode::Completion { max_epochs } => format!("completion:{max_epochs}"),
+    }
+}
+
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+const FNV_OFFSET_A: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_OFFSET_B: u64 = 0x6c62_272e_07bb_0142;
+
+/// FNV-1a over `bytes` from an explicit offset basis (two bases give two
+/// independent 64-bit streams for a 128-bit content address).
+pub fn fnv1a(bytes: &[u8], offset: u64) -> u64 {
+    let mut h = offset;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+impl RunKey {
+    /// Build the key for one cell.  `cfg` must be the exact config the
+    /// run will use (epoch length and overrides already applied).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        cfg: &SimConfig,
+        scale: &str,
+        backend: &str,
+        workload: &str,
+        policy: Policy,
+        objective: Objective,
+        mode: RunMode,
+        waves: f64,
+    ) -> RunKey {
+        RunKey {
+            workload: workload.to_string(),
+            policy: policy_id(policy),
+            objective: objective_id(objective),
+            mode: mode_id(mode),
+            backend: backend.to_string(),
+            scale: scale.to_string(),
+            epoch_ns: cfg.dvfs.epoch_ns,
+            waves,
+            seed: cfg.seed,
+            cfg_fp: fnv1a(cfg.to_toml().as_bytes(), FNV_OFFSET_A),
+        }
+    }
+
+    /// The canonical text form: stable across processes and platforms
+    /// (floats use Rust's shortest round-trip `{:?}` formatting).
+    pub fn canonical(&self) -> String {
+        format!(
+            "v{}|wl={}|policy={}|obj={}|mode={}|backend={}|scale={}|epoch_ns={:?}|waves={:?}|seed={}|cfg={:016x}",
+            SCHEMA_VERSION,
+            self.workload,
+            self.policy,
+            self.objective,
+            self.mode,
+            self.backend,
+            self.scale,
+            self.epoch_ns,
+            self.waves,
+            self.seed,
+            self.cfg_fp,
+        )
+    }
+
+    /// 128-bit content address as 32 hex chars (the cache file stem).
+    pub fn hash_hex(&self) -> String {
+        let c = self.canonical();
+        format!(
+            "{:016x}{:016x}",
+            fnv1a(c.as_bytes(), FNV_OFFSET_A),
+            fnv1a(c.as_bytes(), FNV_OFFSET_B)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::EstModel;
+
+    fn key(policy: Policy, epoch_ns: f64) -> RunKey {
+        let mut cfg = SimConfig::small();
+        cfg.dvfs.epoch_ns = epoch_ns;
+        RunKey::new(
+            &cfg,
+            "quick",
+            "native",
+            "comd",
+            policy,
+            Objective::Ed2p,
+            RunMode::Epochs(40),
+            0.05,
+        )
+    }
+
+    #[test]
+    fn identical_requests_share_a_key() {
+        let a = key(Policy::PcStall, 1000.0);
+        let b = key(Policy::PcStall, 1000.0);
+        assert_eq!(a, b);
+        assert_eq!(a.canonical(), b.canonical());
+        assert_eq!(a.hash_hex(), b.hash_hex());
+    }
+
+    #[test]
+    fn any_field_change_changes_the_address() {
+        let base = key(Policy::PcStall, 1000.0);
+        let variants = [
+            key(Policy::Oracle, 1000.0),
+            key(Policy::Static(4), 1000.0),
+            key(Policy::Reactive(EstModel::Crisp), 1000.0),
+            key(Policy::PcStall, 50_000.0),
+        ];
+        for v in &variants {
+            assert_ne!(base.hash_hex(), v.hash_hex(), "{}", v.canonical());
+        }
+    }
+
+    #[test]
+    fn config_overrides_change_the_fingerprint() {
+        let a = key(Policy::PcStall, 1000.0);
+        let mut cfg = SimConfig::small();
+        cfg.dvfs.epoch_ns = 1000.0;
+        cfg.dvfs.pc_table_entries = 8; // ablation override
+        let b = RunKey::new(
+            &cfg,
+            "quick",
+            "native",
+            "comd",
+            Policy::PcStall,
+            Objective::Ed2p,
+            RunMode::Epochs(40),
+            0.05,
+        );
+        assert_ne!(a.cfg_fp, b.cfg_fp);
+        assert_ne!(a.hash_hex(), b.hash_hex());
+    }
+
+    #[test]
+    fn canonical_embeds_schema_salt() {
+        assert!(key(Policy::PcStall, 1000.0)
+            .canonical()
+            .starts_with(&format!("v{SCHEMA_VERSION}|")));
+    }
+
+    #[test]
+    fn policy_ids_are_distinct() {
+        let mut ids: Vec<String> = Policy::all_dvfs().into_iter().map(policy_id).collect();
+        ids.push(policy_id(Policy::Static(0)));
+        ids.push(policy_id(Policy::Static(4)));
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+    }
+
+    #[test]
+    fn objective_ids_distinguish_bounds() {
+        assert_ne!(
+            objective_id(Objective::EnergyBound { max_slowdown: 0.05 }),
+            objective_id(Objective::EnergyBound { max_slowdown: 0.10 })
+        );
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // Golden value: pins the hash function across refactors so old
+        // cache entries stay addressable.
+        assert_eq!(fnv1a(b"pcstall", FNV_OFFSET_A), 0xb798_d403_4dde_f226);
+    }
+}

@@ -1,0 +1,280 @@
+//! Sweep-execution engine: job-based parallel execution of simulation
+//! grids with a content-addressed result cache.
+//!
+//! The paper's evaluation is a grid of *independent* (workload × policy
+//! × objective × epoch-length) simulations.  This subsystem turns that
+//! grid from a serial inline loop into submitted **jobs**:
+//!
+//! * [`key`] — canonical, hash-stable fingerprint of a run request, so
+//!   identical cells are identified across figures and invocations;
+//! * [`cache`] — content-addressed on-disk store of serialized
+//!   `RunResult`s (`results/cache/<hash>.json`) with hit/miss/
+//!   invalidation accounting;
+//! * [`pool`] — std-only worker pool (threads + channels) that executes
+//!   jobs out of order but returns results in deterministic submission
+//!   order, so emitted CSVs are byte-identical to serial runs.
+//!
+//! [`Engine`] ties the three together: a batch of `(RunKey, job)` pairs
+//! is deduplicated (shared baselines submitted by several series run
+//! once), probed against the cache, and only the misses are executed.
+
+pub mod cache;
+pub mod key;
+pub mod pool;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::stats::RunResult;
+use cache::{CacheStats, ResultCache};
+use key::RunKey;
+
+/// The sweep engine: one per harness invocation, shared by every
+/// experiment so cross-figure cache reuse and accounting aggregate.
+#[derive(Debug)]
+pub struct Engine {
+    cache: ResultCache,
+    /// Simulations actually executed (batch slots minus dedup + hits).
+    executed: AtomicU64,
+    /// Batch slots answered by another slot of the same batch.
+    deduped: AtomicU64,
+}
+
+impl Engine {
+    pub fn new(cache: ResultCache) -> Engine {
+        Engine {
+            cache,
+            executed: AtomicU64::new(0),
+            deduped: AtomicU64::new(0),
+        }
+    }
+
+    /// Engine with the on-disk cache rooted at `dir`.
+    pub fn with_cache_dir(dir: PathBuf) -> Engine {
+        Engine::new(ResultCache::at(dir))
+    }
+
+    /// Engine that recomputes everything (`--no-cache`).  In-batch
+    /// deduplication still applies — it changes nothing observable.
+    pub fn no_cache() -> Engine {
+        Engine::new(ResultCache::disabled())
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    pub fn cache_enabled(&self) -> bool {
+        self.cache.is_enabled()
+    }
+
+    /// Simulations executed (not served by cache or dedup) so far.
+    pub fn executed(&self) -> u64 {
+        self.executed.load(Ordering::Relaxed)
+    }
+
+    /// Batch slots deduplicated against an identical slot so far.
+    pub fn deduped(&self) -> u64 {
+        self.deduped.load(Ordering::Relaxed)
+    }
+
+    /// Execute a batch of keyed jobs on up to `workers` threads and
+    /// return the results in submission order.
+    ///
+    /// Slots with identical keys run once; keys present in the cache do
+    /// not run at all.  Fresh results are persisted before returning.
+    pub fn run_batch<F>(&self, workers: usize, batch: Vec<(RunKey, F)>) -> Vec<RunResult>
+    where
+        F: FnOnce() -> RunResult + Send,
+    {
+        let n = batch.len();
+
+        // 1. Deduplicate within the batch: slot -> unique index.
+        let mut slot_of: Vec<usize> = Vec::with_capacity(n);
+        let mut uniques: Vec<(RunKey, Option<F>)> = Vec::new();
+        let mut index: HashMap<String, usize> = HashMap::new();
+        for (key, job) in batch {
+            let canon = key.canonical();
+            match index.get(&canon) {
+                Some(&u) => {
+                    slot_of.push(u);
+                    self.deduped.fetch_add(1, Ordering::Relaxed);
+                }
+                None => {
+                    let u = uniques.len();
+                    index.insert(canon, u);
+                    uniques.push((key, Some(job)));
+                    slot_of.push(u);
+                }
+            }
+        }
+
+        // 2. Probe the cache once per unique key.
+        enum Src {
+            Ready(RunResult),
+            Ran(usize), // index into the executed-results vector
+        }
+        let mut srcs: Vec<Src> = Vec::with_capacity(uniques.len());
+        let mut run_uniques: Vec<usize> = Vec::new();
+        let mut run_jobs: Vec<F> = Vec::new();
+        for (u, (key, job)) in uniques.iter_mut().enumerate() {
+            match self.cache.lookup(key) {
+                Some(r) => srcs.push(Src::Ready(r)),
+                None => {
+                    srcs.push(Src::Ran(run_jobs.len()));
+                    run_uniques.push(u);
+                    run_jobs.push(job.take().expect("job consumed twice"));
+                }
+            }
+        }
+
+        // 3. Execute the misses (out of order, collected in order).
+        let ran = pool::run_ordered(run_jobs, workers);
+        self.executed.fetch_add(ran.len() as u64, Ordering::Relaxed);
+        for (k, result) in ran.iter().enumerate() {
+            let (key, _) = &uniques[run_uniques[k]];
+            self.cache.store(key, result);
+        }
+
+        // 4. Resolve every slot in submission order, moving each unique
+        // result into its last-use slot (clones only for true duplicates
+        // — results can be large at full scale).
+        let mut ran: Vec<Option<RunResult>> = ran.into_iter().map(Some).collect();
+        let mut by_unique: Vec<Option<RunResult>> = srcs
+            .into_iter()
+            .map(|s| match s {
+                Src::Ready(r) => Some(r),
+                Src::Ran(k) => ran[k].take(),
+            })
+            .collect();
+        let mut uses_left = vec![0usize; by_unique.len()];
+        for &u in &slot_of {
+            uses_left[u] += 1;
+        }
+        slot_of
+            .into_iter()
+            .map(|u| {
+                uses_left[u] -= 1;
+                if uses_left[u] == 0 {
+                    by_unique[u].take().expect("unique result consumed twice")
+                } else {
+                    by_unique[u].as_ref().expect("unique result missing").clone()
+                }
+            })
+            .collect()
+    }
+
+    /// One-line accounting summary (printed by the CLI after a run).
+    pub fn summary(&self, workers: usize) -> String {
+        let c = self.cache_stats();
+        format!(
+            "[exec] jobs={} simulations={} deduped={} | cache{}: {} hits / {} misses / {} stored / {} invalidated ({:.1}% hit)",
+            workers,
+            self.executed(),
+            self.deduped(),
+            if self.cache.is_enabled() { "" } else { " (disabled)" },
+            c.hits,
+            c.misses,
+            c.stores,
+            c.invalidations,
+            c.hit_rate() * 100.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::dvfs::manager::{Policy, RunMode};
+    use crate::dvfs::objective::Objective;
+    use std::sync::atomic::AtomicU64 as Counter;
+
+    fn a_key(workload: &str, epochs: u64) -> RunKey {
+        RunKey::new(
+            &SimConfig::small(),
+            "quick",
+            "native",
+            workload,
+            Policy::Static(4),
+            Objective::Ed2p,
+            RunMode::Epochs(epochs),
+            0.05,
+        )
+    }
+
+    fn a_result(tag: f64) -> RunResult {
+        RunResult {
+            workload: "t".into(),
+            policy: "p".into(),
+            objective: "o".into(),
+            records: Vec::new(),
+            total_energy_j: tag,
+            total_time_ns: 1.0,
+            total_instr: 1.0,
+            mean_accuracy: f64::NAN,
+            pc_hit_rate: 0.0,
+            completed: true,
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_run_once() {
+        let engine = Engine::no_cache();
+        let runs = Counter::new(0);
+        let batch: Vec<_> = (0..6)
+            .map(|i| {
+                let runs = &runs;
+                // three slots share the "comd" key, three the "hacc" key
+                let wl = if i % 2 == 0 { "comd" } else { "hacc" };
+                (a_key(wl, 4), move || {
+                    runs.fetch_add(1, Ordering::Relaxed);
+                    a_result(i as f64)
+                })
+            })
+            .collect();
+        let out = engine.run_batch(2, batch);
+        assert_eq!(out.len(), 6);
+        assert_eq!(runs.load(Ordering::Relaxed), 2);
+        assert_eq!(engine.executed(), 2);
+        assert_eq!(engine.deduped(), 4);
+        // every slot with the same key sees the first occurrence's result
+        assert_eq!(out[0].total_energy_j, out[2].total_energy_j);
+        assert_eq!(out[1].total_energy_j, out[3].total_energy_j);
+    }
+
+    #[test]
+    fn warm_cache_executes_nothing() {
+        let dir = std::env::temp_dir().join(format!("pcstall_engine_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let cold = Engine::with_cache_dir(dir.clone());
+        let batch: Vec<_> = (0..3)
+            .map(|i| (a_key("comd", i), move || a_result(i as f64)))
+            .collect();
+        let first = cold.run_batch(2, batch);
+        assert_eq!(cold.executed(), 3);
+
+        let warm = Engine::with_cache_dir(dir.clone());
+        let batch: Vec<_> = (0..3)
+            .map(|i| (a_key("comd", i), move || a_result(-1.0)))
+            .collect();
+        let second = warm.run_batch(2, batch);
+        assert_eq!(warm.executed(), 0, "warm cache must not execute");
+        let st = warm.cache_stats();
+        assert_eq!(st.misses, 0);
+        assert_eq!(st.hits, 3);
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.total_energy_j, b.total_energy_j);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn summary_mentions_cache_state() {
+        let engine = Engine::no_cache();
+        assert!(engine.summary(4).contains("cache (disabled)"));
+        assert!(engine.summary(4).contains("jobs=4"));
+    }
+}

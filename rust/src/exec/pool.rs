@@ -1,0 +1,137 @@
+//! Std-only worker pool for sweep execution.
+//!
+//! Jobs are claimed out of order by a fixed set of worker threads
+//! (threads + channels, no external crates), but results are returned in
+//! deterministic **submission order** — so anything emitted from the
+//! collected results (CSV tables, terminal output) is byte-identical to
+//! a serial run regardless of `--jobs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// Default worker count: the machine's available parallelism.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run every job, using up to `workers` threads, and return the results
+/// in submission order.  `workers <= 1` degenerates to a plain serial
+/// loop on the calling thread.
+pub fn run_ordered<T, F>(jobs: Vec<F>, workers: usize) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
+    let workers = workers.clamp(1, n.max(1));
+    if workers <= 1 || n <= 1 {
+        return jobs.into_iter().map(|f| f()).collect();
+    }
+
+    // Each slot holds one pending job; workers claim the next index from
+    // a shared counter, run it, and send (index, result) back.
+    let slots: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|f| Mutex::new(Some(f))).collect();
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let slots = &slots;
+            let next = &next;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= slots.len() {
+                    break;
+                }
+                let job = slots[i].lock().unwrap().take().expect("job claimed twice");
+                let out = job();
+                if tx.send((i, out)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            out[i] = Some(v);
+        }
+        out.into_iter()
+            .map(|o| o.expect("worker exited before emitting a result"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
+
+    #[test]
+    fn preserves_submission_order() {
+        // Earlier jobs sleep longer, so completion order is reversed —
+        // the returned vector must still be in submission order.
+        let jobs: Vec<_> = (0..8u64)
+            .map(|i| {
+                move || {
+                    std::thread::sleep(Duration::from_millis(8 - i));
+                    i * 10
+                }
+            })
+            .collect();
+        let out = run_ordered(jobs, 4);
+        assert_eq!(out, (0..8u64).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let mk = || (0..32u64).map(|i| move || i * i).collect::<Vec<_>>();
+        assert_eq!(run_ordered(mk(), 1), run_ordered(mk(), 7));
+    }
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        let count = AtomicU64::new(0);
+        let jobs: Vec<_> = (0..100)
+            .map(|_| {
+                let count = &count;
+                move || count.fetch_add(1, Ordering::Relaxed)
+            })
+            .collect();
+        let out = run_ordered(jobs, 16);
+        assert_eq!(out.len(), 100);
+        assert_eq!(count.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn more_workers_than_jobs() {
+        let jobs: Vec<fn() -> i32> = vec![|| 1, || 2];
+        let out = run_ordered(jobs, 64);
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let out: Vec<u32> = run_ordered(Vec::<fn() -> u32>::new(), 4);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn default_jobs_is_positive() {
+        assert!(default_jobs() >= 1);
+    }
+
+    #[test]
+    fn jobs_may_borrow_environment() {
+        // `run_ordered` must work with non-'static borrows (the harness
+        // captures `&ExpOptions` in trace jobs).
+        let data = vec![1u64, 2, 3, 4];
+        let jobs: Vec<_> = data.iter().map(|x| move || x + 1).collect();
+        assert_eq!(run_ordered(jobs, 2), vec![2, 3, 4, 5]);
+    }
+}

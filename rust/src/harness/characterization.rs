@@ -8,6 +8,7 @@
 use std::collections::HashMap;
 
 use crate::dvfs::sensitivity::relative_change;
+use crate::exec::pool;
 use crate::power::params::{FREQS_GHZ, N_FREQ};
 use crate::predictors::OracleSampler;
 use crate::sim::gpu::Gpu;
@@ -16,6 +17,17 @@ use crate::util::geomean;
 use crate::workloads;
 
 use super::ExpOptions;
+
+/// Collect one trace per workload in parallel (`--jobs`), preserving
+/// workload order.  Traces are not cached (they are not `RunResult`s),
+/// but they parallelize perfectly — each is an independent simulation.
+fn traces_for(opts: &ExpOptions, wls: &[&'static str], epochs: u64, epoch_ns: f64) -> Vec<Trace> {
+    let jobs: Vec<_> = wls
+        .iter()
+        .map(|&wl| move || trace(opts, wl, epochs, epoch_ns))
+        .collect();
+    pool::run_ordered(jobs, opts.jobs.max(1))
+}
 
 /// Ground-truth trace of one workload at fixed frequency.
 pub struct Trace {
@@ -173,9 +185,10 @@ pub fn fig5(opts: &ExpOptions) -> anyhow::Result<()> {
 
 /// Fig. 6 — sensitivity-over-time profiles for four contrast workloads.
 pub fn fig6(opts: &ExpOptions) -> anyhow::Result<()> {
+    let wls = ["dgemm", "hacc", "BwdBN", "xsbench"];
+    let traces = traces_for(opts, &wls, opts.trace_epochs(), 1000.0);
     let mut table = CsvTable::new(&["workload", "epoch", "gpu_sens"]);
-    for wl in ["dgemm", "hacc", "BwdBN", "xsbench"] {
-        let t = trace(opts, wl, opts.trace_epochs(), 1000.0);
+    for (&wl, t) in wls.iter().zip(&traces) {
         for (e, doms) in t.dom_sens.iter().enumerate() {
             table.push(vec![
                 wl.into(),
@@ -191,10 +204,11 @@ pub fn fig6(opts: &ExpOptions) -> anyhow::Result<()> {
 /// Fig. 7 — variability of sensitivity across consecutive epochs.
 pub fn fig7(opts: &ExpOptions) -> anyhow::Result<()> {
     // (a) per workload at 1 µs
+    let wls = opts.workloads();
+    let traces = traces_for(opts, &wls, opts.trace_epochs(), 1000.0);
     let mut ta = CsvTable::new(&["workload", "mean_rel_change_1us"]);
     let mut per_wl = Vec::new();
-    for wl in opts.workloads() {
-        let t = trace(opts, wl, opts.trace_epochs(), 1000.0);
+    for (&wl, t) in wls.iter().zip(&traces) {
         let ch = t.mean_consecutive_change();
         per_wl.push(ch);
         ta.push(vec![wl.into(), format!("{:.3}", ch)]);
@@ -208,11 +222,10 @@ pub fn fig7(opts: &ExpOptions) -> anyhow::Result<()> {
     for &epoch_ns in &[1_000.0, 10_000.0, 50_000.0, 100_000.0] {
         let budget_ns = opts.trace_epochs() as f64 * 1_000.0;
         let epochs = ((budget_ns / epoch_ns) as u64).clamp(8, opts.trace_epochs());
-        let mut vals = Vec::new();
-        for wl in opts.sweep_workloads() {
-            let t = trace(opts, wl, epochs, epoch_ns);
-            vals.push(t.mean_consecutive_change());
-        }
+        let vals: Vec<f64> = traces_for(opts, &opts.sweep_workloads(), epochs, epoch_ns)
+            .iter()
+            .map(|t| t.mean_consecutive_change())
+            .collect();
         let mean = vals.iter().sum::<f64>() / vals.len().max(1) as f64;
         tb.push(vec![
             format!("{}", epoch_ns / 1000.0),
@@ -240,10 +253,11 @@ pub fn fig8(opts: &ExpOptions) -> anyhow::Result<()> {
 /// Fig. 10 — same-starting-PC iteration stability at WF/CU/GPU scopes.
 pub fn fig10(opts: &ExpOptions) -> anyhow::Result<()> {
     let n_wf = opts.base_cfg().gpu.n_wf as u64;
+    let wls = opts.workloads();
+    let traces = traces_for(opts, &wls, opts.trace_epochs(), 1000.0);
     let mut table = CsvTable::new(&["workload", "scope", "mean_rel_change"]);
     let mut agg: HashMap<&str, Vec<f64>> = HashMap::new();
-    for wl in opts.workloads() {
-        let t = trace(opts, wl, opts.trace_epochs(), 1000.0);
+    for (&wl, t) in wls.iter().zip(&traces) {
         for (scope, f) in [
             ("WF", Box::new(move |c: usize, w: usize| c as u64 * n_wf + w as u64)
                 as Box<dyn Fn(usize, usize) -> u64>),
@@ -298,12 +312,8 @@ pub fn fig11a(opts: &ExpOptions) -> anyhow::Result<()> {
 /// Fig. 11b — PC-table index offset sweep (CU-level sharing).
 pub fn fig11b(opts: &ExpOptions) -> anyhow::Result<()> {
     let mut table = CsvTable::new(&["offset_bits", "mean_rel_change"]);
-    // reuse one trace set across offsets
-    let traces: Vec<Trace> = opts
-        .sweep_workloads()
-        .iter()
-        .map(|wl| trace(opts, wl, opts.trace_epochs(), 1000.0))
-        .collect();
+    // reuse one trace set across offsets (collected in parallel)
+    let traces = traces_for(opts, &opts.sweep_workloads(), opts.trace_epochs(), 1000.0);
     for offset in 0..=8u32 {
         let mut vals = Vec::new();
         for t in &traces {
@@ -326,27 +336,35 @@ pub fn fig11b(opts: &ExpOptions) -> anyhow::Result<()> {
 /// §5.1 — validate the 10-process shuffled sampling methodology.
 pub fn oracle_validation(opts: &ExpOptions) -> anyhow::Result<()> {
     let mut table = CsvTable::new(&["workload", "validation_accuracy"]);
-    let sampler = OracleSampler::default();
+    let wls = opts.sweep_workloads();
+    let jobs: Vec<_> = wls
+        .iter()
+        .map(|&wl| {
+            move || {
+                let sampler = OracleSampler::default();
+                let mut cfg = opts.base_cfg();
+                cfg.dvfs.epoch_ns = 1000.0;
+                let spec = workloads::build(wl, opts.waves_scale().max(0.2));
+                let mut gpu = Gpu::new(cfg);
+                gpu.load_workload(spec.launches(), spec.rounds);
+                // settle, then validate a handful of epochs
+                for _ in 0..4 {
+                    gpu.run_epoch();
+                }
+                let mut wl_accs = Vec::new();
+                for i in 0..5 {
+                    let freqs: Vec<f64> = (0..gpu.n_domains())
+                        .map(|d| FREQS_GHZ[(d + i) % N_FREQ])
+                        .collect();
+                    wl_accs.push(sampler.validate(&gpu, &freqs));
+                    gpu.run_epoch();
+                }
+                wl_accs.iter().sum::<f64>() / wl_accs.len() as f64
+            }
+        })
+        .collect();
     let mut accs = Vec::new();
-    for wl in opts.sweep_workloads() {
-        let mut cfg = opts.base_cfg();
-        cfg.dvfs.epoch_ns = 1000.0;
-        let spec = workloads::build(wl, opts.waves_scale().max(0.2));
-        let mut gpu = Gpu::new(cfg);
-        gpu.load_workload(spec.launches(), spec.rounds);
-        // settle, then validate a handful of epochs
-        for _ in 0..4 {
-            gpu.run_epoch();
-        }
-        let mut wl_accs = Vec::new();
-        for i in 0..5 {
-            let freqs: Vec<f64> = (0..gpu.n_domains())
-                .map(|d| FREQS_GHZ[(d + i) % N_FREQ])
-                .collect();
-            wl_accs.push(sampler.validate(&gpu, &freqs));
-            gpu.run_epoch();
-        }
-        let acc = wl_accs.iter().sum::<f64>() / wl_accs.len() as f64;
+    for (&wl, &acc) in wls.iter().zip(&pool::run_ordered(jobs, opts.jobs.max(1))) {
         accs.push(acc);
         table.push(vec![wl.into(), format!("{:.4}", acc)]);
     }

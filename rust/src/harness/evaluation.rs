@@ -1,7 +1,19 @@
 //! Evaluation experiments (paper §6): Figs. 1, 14–18 and Table I.
+//!
+//! Every figure is a grid of independent simulations.  Instead of
+//! running each cell inline, the figures build a flat job list (one
+//! [`Cell`] per grid point, in deterministic iteration order), submit it
+//! to the sweep engine ([`crate::exec::Engine`]), and consume the
+//! results in the same order.  The engine deduplicates repeated cells
+//! (e.g. the static-1.7 GHz baseline requested once per design series),
+//! serves previously-computed cells from the content-addressed result
+//! cache, and fans the rest out across `--jobs` workers — while keeping
+//! the emitted CSVs byte-identical to a serial run.
 
+use crate::config::SimConfig;
 use crate::dvfs::manager::{DvfsManager, Policy, RunMode};
 use crate::dvfs::objective::Objective;
+use crate::exec::key::RunKey;
 use crate::models::EstModel;
 use crate::power::params::{FREQS_GHZ, F_STATIC_IDX, N_FREQ};
 use crate::stats::emit::CsvTable;
@@ -14,7 +26,112 @@ use super::ExpOptions;
 /// Completion-run safety cap.
 const MAX_EPOCHS: u64 = 200_000;
 
-/// Run one (workload, policy, objective) configuration.
+/// One grid cell of a sweep: a fully-resolved run request.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub workload: String,
+    pub policy: Policy,
+    pub objective: Objective,
+    pub mode: RunMode,
+    /// Final workload-length multiplier passed to the generator.
+    pub waves: f64,
+    /// Exact simulator config for the run (epoch length and any
+    /// ablation overrides already applied).
+    pub cfg: SimConfig,
+}
+
+impl Cell {
+    /// Standard cell: scale-derived config with `epoch_ns` applied and
+    /// the scale's waves multiplier times `extra_waves`.
+    pub fn at(
+        opts: &ExpOptions,
+        workload: &str,
+        policy: Policy,
+        objective: Objective,
+        epoch_ns: f64,
+        mode: RunMode,
+        extra_waves: f64,
+    ) -> Cell {
+        let mut cfg = opts.base_cfg();
+        cfg.dvfs.epoch_ns = epoch_ns;
+        Cell {
+            workload: workload.to_string(),
+            policy,
+            objective,
+            mode,
+            waves: opts.waves_scale() * extra_waves,
+            cfg,
+        }
+    }
+
+    /// Cell with an explicitly prepared config (ablation overrides,
+    /// domain-granularity sweeps).
+    pub fn with_cfg(
+        cfg: SimConfig,
+        workload: &str,
+        policy: Policy,
+        objective: Objective,
+        mode: RunMode,
+        waves: f64,
+    ) -> Cell {
+        Cell {
+            workload: workload.to_string(),
+            policy,
+            objective,
+            mode,
+            waves,
+            cfg,
+        }
+    }
+
+    /// Content-address fingerprint of this cell.
+    pub fn key(&self, opts: &ExpOptions) -> RunKey {
+        RunKey::new(
+            &self.cfg,
+            opts.scale.name(),
+            opts.backend_name(),
+            &self.workload,
+            self.policy,
+            self.objective,
+            self.mode,
+            self.waves,
+        )
+    }
+
+    /// Execute the simulation this cell describes.
+    fn execute(self, use_pjrt: bool) -> RunResult {
+        let wl = workloads::build(&self.workload, self.waves);
+        let mut mgr = if use_pjrt {
+            DvfsManager::with_backend(
+                self.cfg,
+                &wl,
+                self.policy,
+                self.objective,
+                crate::runtime::best_backend(None),
+            )
+        } else {
+            DvfsManager::new(self.cfg, &wl, self.policy, self.objective)
+        };
+        mgr.run(self.mode, &self.workload)
+    }
+}
+
+/// Submit a batch of cells to the engine and collect the results in
+/// submission order.
+pub fn run_cells(opts: &ExpOptions, cells: Vec<Cell>) -> Vec<RunResult> {
+    let use_pjrt = opts.use_pjrt;
+    let batch: Vec<_> = cells
+        .into_iter()
+        .map(|cell| {
+            let key = cell.key(opts);
+            (key, move || cell.execute(use_pjrt))
+        })
+        .collect();
+    opts.engine.run_batch(opts.jobs.max(1), batch)
+}
+
+/// Run one (workload, policy, objective) configuration through the
+/// engine (cache-aware single-cell batch).
 pub fn run_design(
     opts: &ExpOptions,
     workload: &str,
@@ -38,15 +155,10 @@ pub fn run_design_scaled(
     mode: RunMode,
     extra_waves: f64,
 ) -> RunResult {
-    let mut cfg = opts.base_cfg();
-    cfg.dvfs.epoch_ns = epoch_ns;
-    let wl = workloads::build(workload, opts.waves_scale() * extra_waves);
-    let mut mgr = if opts.use_pjrt {
-        DvfsManager::with_backend(cfg, &wl, policy, objective, crate::runtime::best_backend(None))
-    } else {
-        DvfsManager::new(cfg, &wl, policy, objective)
-    };
-    mgr.run(mode, workload)
+    let cell = Cell::at(opts, workload, policy, objective, epoch_ns, mode, extra_waves);
+    run_cells(opts, vec![cell])
+        .pop()
+        .expect("single-cell batch returns one result")
 }
 
 fn completion(epoch_ns: f64) -> RunMode {
@@ -68,20 +180,42 @@ pub fn fig1a(opts: &ExpOptions) -> anyhow::Result<()> {
         Policy::PcStall,
         Policy::Oracle,
     ];
-    let mut table = CsvTable::new(&["epoch_us", "design", "ed2p_improvement_pct"]);
-    for &epoch_ns in &[1_000.0, 10_000.0, 50_000.0, 100_000.0] {
+    let epoch_lens = [1_000.0, 10_000.0, 50_000.0, 100_000.0];
+
+    let mut cells = Vec::new();
+    for &epoch_ns in &epoch_lens {
         for &d in &designs {
-            let mut imps = Vec::new();
             for wl in opts.sweep_workloads() {
-                let base = run_design(
+                cells.push(Cell::at(
                     opts,
                     wl,
                     Policy::Static(F_STATIC_IDX),
                     Objective::Ed2p,
                     epoch_ns,
                     completion(epoch_ns),
-                );
-                let r = run_design(opts, wl, d, Objective::Ed2p, epoch_ns, completion(epoch_ns));
+                    1.0,
+                ));
+                cells.push(Cell::at(
+                    opts,
+                    wl,
+                    d,
+                    Objective::Ed2p,
+                    epoch_ns,
+                    completion(epoch_ns),
+                    1.0,
+                ));
+            }
+        }
+    }
+    let mut results = run_cells(opts, cells).into_iter();
+
+    let mut table = CsvTable::new(&["epoch_us", "design", "ed2p_improvement_pct"]);
+    for &epoch_ns in &epoch_lens {
+        for &d in &designs {
+            let mut imps = Vec::new();
+            for _wl in opts.sweep_workloads() {
+                let base = results.next().unwrap();
+                let r = results.next().unwrap();
                 imps.push(improvement(&r, &base, 2));
             }
             let mean = imps.iter().sum::<f64>() / imps.len().max(1) as f64;
@@ -107,24 +241,41 @@ pub fn fig1b(opts: &ExpOptions) -> anyhow::Result<()> {
         Policy::AccReac,
         Policy::PcStall,
     ];
-    let mut table = CsvTable::new(&["epoch_us", "design", "accuracy"]);
-    for &epoch_ns in &[1_000.0, 10_000.0, 50_000.0, 100_000.0] {
+    let epoch_lens = [1_000.0, 10_000.0, 50_000.0, 100_000.0];
+
+    let plan = |epoch_ns: f64| {
         let budget = (opts.trace_epochs() as f64 * 1_000.0 / epoch_ns) as u64;
         let epochs = budget.clamp(10, opts.trace_epochs());
         // enough work that the run never drains inside the window
         let extra = 2.0 * (epochs as f64 * epoch_ns) / (350.0 * 1_000.0);
+        (epochs, extra.max(1.0))
+    };
+
+    let mut cells = Vec::new();
+    for &epoch_ns in &epoch_lens {
+        let (epochs, extra) = plan(epoch_ns);
         for &d in &designs {
-            let mut accs = Vec::new();
             for wl in opts.sweep_workloads() {
-                let r = run_design_scaled(
+                cells.push(Cell::at(
                     opts,
                     wl,
                     d,
                     Objective::Ed2p,
                     epoch_ns,
                     RunMode::Epochs(epochs),
-                    extra.max(1.0),
-                );
+                    extra,
+                ));
+            }
+        }
+    }
+    let mut results = run_cells(opts, cells).into_iter();
+
+    let mut table = CsvTable::new(&["epoch_us", "design", "accuracy"]);
+    for &epoch_ns in &epoch_lens {
+        for &d in &designs {
+            let mut accs = Vec::new();
+            for _wl in opts.sweep_workloads() {
+                let r = results.next().unwrap();
                 if r.mean_accuracy.is_finite() {
                     accs.push(r.mean_accuracy);
                 }
@@ -166,19 +317,30 @@ pub fn table1(opts: &ExpOptions) -> anyhow::Result<()> {
 
 /// Fig. 14 — prediction accuracy of every design at 1 µs.
 pub fn fig14(opts: &ExpOptions) -> anyhow::Result<()> {
-    let mut table = CsvTable::new(&["workload", "design", "accuracy"]);
-    let mut per_design: Vec<(String, Vec<f64>)> = Vec::new();
-    for d in Policy::all_dvfs() {
-        let mut accs = Vec::new();
+    let designs = Policy::all_dvfs();
+
+    let mut cells = Vec::new();
+    for &d in &designs {
         for wl in opts.workloads() {
-            let r = run_design(
+            cells.push(Cell::at(
                 opts,
                 wl,
                 d,
                 Objective::Ed2p,
                 1000.0,
                 RunMode::Epochs(opts.trace_epochs()),
-            );
+                1.0,
+            ));
+        }
+    }
+    let mut results = run_cells(opts, cells).into_iter();
+
+    let mut table = CsvTable::new(&["workload", "design", "accuracy"]);
+    let mut per_design: Vec<(String, Vec<f64>)> = Vec::new();
+    for &d in &designs {
+        let mut accs = Vec::new();
+        for wl in opts.workloads() {
+            let r = results.next().unwrap();
             table.push(vec![wl.into(), d.name(), format!("{:.3}", r.mean_accuracy)]);
             if r.mean_accuracy.is_finite() {
                 accs.push(r.mean_accuracy);
@@ -211,20 +373,40 @@ fn fig15_designs() -> Vec<Policy> {
 
 /// Fig. 15 — ED²P normalized to static 1.7 GHz at 1 µs epochs.
 pub fn fig15(opts: &ExpOptions) -> anyhow::Result<()> {
-    let mut table = CsvTable::new(&["workload", "design", "norm_ed2p"]);
-    let mut per_design: Vec<(String, Vec<f64>)> = Vec::new();
-    for d in fig15_designs() {
-        let mut norms = Vec::new();
+    let designs = fig15_designs();
+
+    let mut cells = Vec::new();
+    for &d in &designs {
         for wl in opts.workloads() {
-            let base = run_design(
+            cells.push(Cell::at(
                 opts,
                 wl,
                 Policy::Static(F_STATIC_IDX),
                 Objective::Ed2p,
                 1000.0,
                 completion(1000.0),
-            );
-            let r = run_design(opts, wl, d, Objective::Ed2p, 1000.0, completion(1000.0));
+                1.0,
+            ));
+            cells.push(Cell::at(
+                opts,
+                wl,
+                d,
+                Objective::Ed2p,
+                1000.0,
+                completion(1000.0),
+                1.0,
+            ));
+        }
+    }
+    let mut results = run_cells(opts, cells).into_iter();
+
+    let mut table = CsvTable::new(&["workload", "design", "norm_ed2p"]);
+    let mut per_design: Vec<(String, Vec<f64>)> = Vec::new();
+    for &d in &designs {
+        let mut norms = Vec::new();
+        for wl in opts.workloads() {
+            let base = results.next().unwrap();
+            let r = results.next().unwrap();
             let norm = r.ed2p() / base.ed2p();
             norms.push(norm);
             table.push(vec![wl.into(), d.name(), format!("{:.3}", norm)]);
@@ -242,21 +424,30 @@ pub fn fig15(opts: &ExpOptions) -> anyhow::Result<()> {
 
 /// Fig. 16 — frequency-state time share under PCSTALL / ED²P.
 pub fn fig16(opts: &ExpOptions) -> anyhow::Result<()> {
+    let cells: Vec<Cell> = opts
+        .workloads()
+        .iter()
+        .map(|&wl| {
+            Cell::at(
+                opts,
+                wl,
+                Policy::PcStall,
+                Objective::Ed2p,
+                1000.0,
+                completion(1000.0),
+                1.0,
+            )
+        })
+        .collect();
+    let results = run_cells(opts, cells);
+
     let mut header: Vec<String> = vec!["workload".into()];
     header.extend(FREQS_GHZ.iter().map(|f| format!("{f:.1}GHz")));
     let mut table = CsvTable {
         header,
         rows: Vec::new(),
     };
-    for wl in opts.workloads() {
-        let r = run_design(
-            opts,
-            wl,
-            Policy::PcStall,
-            Objective::Ed2p,
-            1000.0,
-            completion(1000.0),
-        );
+    for (wl, r) in opts.workloads().iter().zip(&results) {
         let share = r.freq_time_share();
         let mut row = vec![wl.to_string()];
         row.extend(share.iter().map(|s| format!("{:.3}", s)));
@@ -278,20 +469,42 @@ pub fn fig17(opts: &ExpOptions) -> anyhow::Result<()> {
         Policy::PcStall,
         Policy::Oracle,
     ];
-    let mut table = CsvTable::new(&["epoch_us", "design", "geomean_norm_edp"]);
-    for &epoch_ns in &[1_000.0, 10_000.0, 50_000.0, 100_000.0] {
+    let epoch_lens = [1_000.0, 10_000.0, 50_000.0, 100_000.0];
+
+    let mut cells = Vec::new();
+    for &epoch_ns in &epoch_lens {
         for &d in &designs {
-            let mut norms = Vec::new();
             for wl in opts.sweep_workloads() {
-                let base = run_design(
+                cells.push(Cell::at(
                     opts,
                     wl,
                     Policy::Static(F_STATIC_IDX),
                     Objective::Edp,
                     epoch_ns,
                     completion(epoch_ns),
-                );
-                let r = run_design(opts, wl, d, Objective::Edp, epoch_ns, completion(epoch_ns));
+                    1.0,
+                ));
+                cells.push(Cell::at(
+                    opts,
+                    wl,
+                    d,
+                    Objective::Edp,
+                    epoch_ns,
+                    completion(epoch_ns),
+                    1.0,
+                ));
+            }
+        }
+    }
+    let mut results = run_cells(opts, cells).into_iter();
+
+    let mut table = CsvTable::new(&["epoch_us", "design", "geomean_norm_edp"]);
+    for &epoch_ns in &epoch_lens {
+        for &d in &designs {
+            let mut norms = Vec::new();
+            for _wl in opts.sweep_workloads() {
+                let base = results.next().unwrap();
+                let r = results.next().unwrap();
                 norms.push(r.edp() / base.edp());
             }
             table.push(vec![
@@ -308,34 +521,50 @@ pub fn fig17(opts: &ExpOptions) -> anyhow::Result<()> {
 
 /// Fig. 18a — energy savings under performance-degradation bounds.
 pub fn fig18a(opts: &ExpOptions) -> anyhow::Result<()> {
-    let mut table = CsvTable::new(&[
-        "bound_pct",
-        "design",
-        "energy_savings_pct",
-        "perf_degradation_pct",
-    ]);
-    for &bound in &[0.05, 0.10] {
-        for d in [Policy::Reactive(EstModel::Crisp), Policy::PcStall] {
-            let mut savings = Vec::new();
-            let mut degr = Vec::new();
+    let bounds = [0.05, 0.10];
+    let designs = [Policy::Reactive(EstModel::Crisp), Policy::PcStall];
+
+    let mut cells = Vec::new();
+    for &bound in &bounds {
+        for &d in &designs {
             for wl in opts.workloads() {
                 // reference: max performance = static top state
-                let top = run_design(
+                cells.push(Cell::at(
                     opts,
                     wl,
                     Policy::Static(N_FREQ - 1),
                     Objective::Ed2p,
                     1000.0,
                     completion(1000.0),
-                );
-                let r = run_design(
+                    1.0,
+                ));
+                cells.push(Cell::at(
                     opts,
                     wl,
                     d,
                     Objective::EnergyBound { max_slowdown: bound },
                     1000.0,
                     completion(1000.0),
-                );
+                    1.0,
+                ));
+            }
+        }
+    }
+    let mut results = run_cells(opts, cells).into_iter();
+
+    let mut table = CsvTable::new(&[
+        "bound_pct",
+        "design",
+        "energy_savings_pct",
+        "perf_degradation_pct",
+    ]);
+    for &bound in &bounds {
+        for &d in &designs {
+            let mut savings = Vec::new();
+            let mut degr = Vec::new();
+            for _wl in opts.workloads() {
+                let top = results.next().unwrap();
+                let r = results.next().unwrap();
                 savings.push((1.0 - r.total_energy_j / top.total_energy_j) * 100.0);
                 degr.push((r.total_time_ns / top.total_time_ns - 1.0) * 100.0);
             }
@@ -359,17 +588,32 @@ pub fn fig18a(opts: &ExpOptions) -> anyhow::Result<()> {
 /// Ablation (§4.4 sizing): PC-table entries vs hit rate and accuracy —
 /// the paper's "128 entries reach a 95%+ hit ratio" argument.
 pub fn ablation_table_size(opts: &ExpOptions) -> anyhow::Result<()> {
-    let mut table = CsvTable::new(&["entries", "hit_rate", "accuracy"]);
-    for &entries in &[8usize, 16, 32, 64, 128, 256, 512] {
-        let mut hits = Vec::new();
-        let mut accs = Vec::new();
+    let sizes = [8usize, 16, 32, 64, 128, 256, 512];
+
+    let mut cells = Vec::new();
+    for &entries in &sizes {
         for wl in opts.sweep_workloads() {
             let mut cfg = opts.base_cfg();
             cfg.dvfs.pc_table_entries = entries;
-            let spec = workloads::build(wl, opts.waves_scale().max(0.2));
-            let mut mgr = DvfsManager::new(cfg, &spec, Policy::PcStall, Objective::Ed2p);
-            let r = mgr.run(RunMode::Epochs(opts.trace_epochs()), wl);
-            hits.push(mgr.pc_hit_rate());
+            cells.push(Cell::with_cfg(
+                cfg,
+                wl,
+                Policy::PcStall,
+                Objective::Ed2p,
+                RunMode::Epochs(opts.trace_epochs()),
+                opts.waves_scale().max(0.2),
+            ));
+        }
+    }
+    let mut results = run_cells(opts, cells).into_iter();
+
+    let mut table = CsvTable::new(&["entries", "hit_rate", "accuracy"]);
+    for &entries in &sizes {
+        let mut hits = Vec::new();
+        let mut accs = Vec::new();
+        for _wl in opts.sweep_workloads() {
+            let r = results.next().unwrap();
+            hits.push(r.pc_hit_rate);
             if r.mean_accuracy.is_finite() {
                 accs.push(r.mean_accuracy);
             }
@@ -390,15 +634,30 @@ pub fn ablation_table_size(opts: &ExpOptions) -> anyhow::Result<()> {
 
 /// Ablation: PC-table EWMA update weight (1.0 = paper's overwrite).
 pub fn ablation_alpha(opts: &ExpOptions) -> anyhow::Result<()> {
-    let mut table = CsvTable::new(&["alpha", "accuracy"]);
-    for &alpha in &[0.25f64, 0.5, 0.75, 1.0] {
-        let mut accs = Vec::new();
+    let alphas = [0.25f64, 0.5, 0.75, 1.0];
+
+    let mut cells = Vec::new();
+    for &alpha in &alphas {
         for wl in opts.sweep_workloads() {
             let mut cfg = opts.base_cfg();
             cfg.dvfs.pc_update_alpha = alpha;
-            let spec = workloads::build(wl, opts.waves_scale().max(0.2));
-            let mut mgr = DvfsManager::new(cfg, &spec, Policy::PcStall, Objective::Ed2p);
-            let r = mgr.run(RunMode::Epochs(opts.trace_epochs()), wl);
+            cells.push(Cell::with_cfg(
+                cfg,
+                wl,
+                Policy::PcStall,
+                Objective::Ed2p,
+                RunMode::Epochs(opts.trace_epochs()),
+                opts.waves_scale().max(0.2),
+            ));
+        }
+    }
+    let mut results = run_cells(opts, cells).into_iter();
+
+    let mut table = CsvTable::new(&["alpha", "accuracy"]);
+    for &alpha in &alphas {
+        let mut accs = Vec::new();
+        for _wl in opts.sweep_workloads() {
+            let r = results.next().unwrap();
             if r.mean_accuracy.is_finite() {
                 accs.push(r.mean_accuracy);
             }
@@ -420,16 +679,35 @@ pub fn ablation_alpha(opts: &ExpOptions) -> anyhow::Result<()> {
 /// flexibility — Fig. 10 implies sharing costs little accuracy).
 pub fn ablation_table_share(opts: &ExpOptions) -> anyhow::Result<()> {
     let n_cu = opts.base_cfg().gpu.n_cu;
-    let mut table = CsvTable::new(&["cus_per_table", "accuracy"]);
+    let mut shares = Vec::new();
     let mut share = 1usize;
     while share <= n_cu {
-        let mut accs = Vec::new();
+        shares.push(share);
+        share *= 4;
+    }
+
+    let mut cells = Vec::new();
+    for &share in &shares {
         for wl in opts.sweep_workloads() {
             let mut cfg = opts.base_cfg();
             cfg.dvfs.pc_table_share = share;
-            let spec = workloads::build(wl, opts.waves_scale().max(0.2));
-            let mut mgr = DvfsManager::new(cfg, &spec, Policy::PcStall, Objective::Ed2p);
-            let r = mgr.run(RunMode::Epochs(opts.trace_epochs()), wl);
+            cells.push(Cell::with_cfg(
+                cfg,
+                wl,
+                Policy::PcStall,
+                Objective::Ed2p,
+                RunMode::Epochs(opts.trace_epochs()),
+                opts.waves_scale().max(0.2),
+            ));
+        }
+    }
+    let mut results = run_cells(opts, cells).into_iter();
+
+    let mut table = CsvTable::new(&["cus_per_table", "accuracy"]);
+    for &share in &shares {
+        let mut accs = Vec::new();
+        for _wl in opts.sweep_workloads() {
+            let r = results.next().unwrap();
             if r.mean_accuracy.is_finite() {
                 accs.push(r.mean_accuracy);
             }
@@ -438,7 +716,6 @@ pub fn ablation_table_share(opts: &ExpOptions) -> anyhow::Result<()> {
             share.to_string(),
             format!("{:.3}", accs.iter().sum::<f64>() / accs.len().max(1) as f64),
         ]);
-        share *= 4;
     }
     opts.emit(
         "ablation_table_share",
@@ -461,23 +738,39 @@ pub fn fig18b(opts: &ExpOptions) -> anyhow::Result<()> {
         Policy::PcStall,
         Policy::Oracle,
     ];
+
+    let cell_g = |g: usize, wl: &str, policy: Policy| {
+        let mut cfg = opts.base_cfg();
+        cfg.dvfs.cus_per_domain = g;
+        cfg.dvfs.epoch_ns = 1000.0;
+        Cell::with_cfg(
+            cfg,
+            wl,
+            policy,
+            Objective::Ed2p,
+            completion(1000.0),
+            opts.waves_scale(),
+        )
+    };
+
+    let mut cells = Vec::new();
+    for &g in &grans {
+        for &d in &designs {
+            for wl in opts.sweep_workloads() {
+                cells.push(cell_g(g, wl, Policy::Static(F_STATIC_IDX)));
+                cells.push(cell_g(g, wl, d));
+            }
+        }
+    }
+    let mut results = run_cells(opts, cells).into_iter();
+
     let mut table = CsvTable::new(&["cus_per_domain", "design", "ed2p_improvement_pct"]);
     for &g in &grans {
         for &d in &designs {
             let mut imps = Vec::new();
-            for wl in opts.sweep_workloads() {
-                let mut sub = opts.clone();
-                sub.scale = opts.scale;
-                let run_g = |policy: Policy| {
-                    let mut cfg = opts.base_cfg();
-                    cfg.dvfs.cus_per_domain = g;
-                    cfg.dvfs.epoch_ns = 1000.0;
-                    let wlspec = workloads::build(wl, opts.waves_scale());
-                    let mut mgr = DvfsManager::new(cfg, &wlspec, policy, Objective::Ed2p);
-                    mgr.run(completion(1000.0), wl)
-                };
-                let base = run_g(Policy::Static(F_STATIC_IDX));
-                let r = run_g(d);
+            for _wl in opts.sweep_workloads() {
+                let base = results.next().unwrap();
+                let r = results.next().unwrap();
                 imps.push(improvement(&r, &base, 2));
             }
             table.push(vec![

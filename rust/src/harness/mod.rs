@@ -11,8 +11,10 @@ pub mod characterization;
 pub mod evaluation;
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::config::SimConfig;
+use crate::exec::Engine;
 use crate::stats::emit::CsvTable;
 
 /// Experiment scale preset.
@@ -26,6 +28,17 @@ pub enum Scale {
     Full,
 }
 
+impl Scale {
+    /// Stable name used in run-key fingerprints.
+    pub fn name(self) -> &'static str {
+        match self {
+            Scale::Quick => "quick",
+            Scale::Default => "default",
+            Scale::Full => "full",
+        }
+    }
+}
+
 /// Options shared by all experiments.
 #[derive(Debug, Clone)]
 pub struct ExpOptions {
@@ -34,6 +47,11 @@ pub struct ExpOptions {
     /// Use the PJRT artifact backend in manager runs when available.
     pub use_pjrt: bool,
     pub seed: u64,
+    /// Worker threads for sweep execution (`--jobs`; 1 = serial).
+    pub jobs: usize,
+    /// Sweep engine shared by every experiment of this invocation
+    /// (result cache + execution accounting).
+    pub engine: Arc<Engine>,
 }
 
 impl Default for ExpOptions {
@@ -43,6 +61,8 @@ impl Default for ExpOptions {
             out_dir: PathBuf::from("results"),
             use_pjrt: false,
             seed: 0,
+            jobs: 1,
+            engine: Arc::new(Engine::no_cache()),
         }
     }
 }
@@ -92,6 +112,22 @@ impl ExpOptions {
             Scale::Quick => 0.05,
             Scale::Default => 0.1,
             Scale::Full => 1.0,
+        }
+    }
+
+    /// Backend name used in run-key fingerprints.  This must reflect the
+    /// backend that will actually execute, not the one requested:
+    /// `best_backend` silently falls back to native when the build lacks
+    /// the `pjrt` feature or no artifact is present, and caching those
+    /// results under a `pjrt` key would poison later real-PJRT runs.
+    pub fn backend_name(&self) -> &'static str {
+        if self.use_pjrt
+            && cfg!(feature = "pjrt")
+            && crate::runtime::find_artifact(None).is_some()
+        {
+            "pjrt"
+        } else {
+            "native"
         }
     }
 

@@ -23,10 +23,18 @@
 //!   DVFS manager, and the native mirror of the AOT compute graph.
 //! * [`runtime`] — PJRT bridge: loads `artifacts/dvfs_step.hlo.txt` and
 //!   executes it on the epoch hot path (Python never runs at sim time).
+//! * [`exec`] — the sweep-execution engine: job keys, the
+//!   content-addressed result cache, and the ordered worker pool that
+//!   make experiment grids parallel and incremental.
 //! * [`harness`] — one experiment per paper figure/table (see DESIGN.md).
+
+// Style allowances for the simulator's index-heavy kernels (CI runs
+// clippy with `-D warnings`).
+#![allow(clippy::needless_range_loop)]
 
 pub mod config;
 pub mod dvfs;
+pub mod exec;
 pub mod harness;
 pub mod models;
 pub mod power;

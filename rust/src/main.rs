@@ -7,19 +7,23 @@
 //!                   [--epochs N | --completion] [--epoch-ns X]
 //!                   [--config file.toml] [--set k=v ...]
 //!                   [--backend native|pjrt] [--json out.json]
-//! pcstall experiment <id|all> [--quick|--full] [--out results/] [--pjrt]
+//! pcstall run <id|all> [--quick|--full] [--out results/] [--pjrt]
+//!                      [--jobs N] [--no-cache]
+//! pcstall experiment ...   (alias of `run`)
 //! pcstall list
 //! pcstall config dump [--set k=v ...]
 //! pcstall table1
 //! ```
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use pcstall::config::SimConfig;
 use pcstall::dvfs::manager::{DvfsManager, Policy, RunMode};
 use pcstall::dvfs::objective::Objective;
+use pcstall::exec::{pool, Engine};
 use pcstall::harness::{all_experiments, run_experiment, ExpOptions, Scale};
 use pcstall::stats::emit::Json;
 use pcstall::workloads;
@@ -36,7 +40,7 @@ fn run() -> Result<()> {
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "simulate" => simulate(&args[1..]),
-        "experiment" => experiment(&args[1..]),
+        "run" | "experiment" => experiment(&args[1..]),
         "list" => list(),
         "config" => config_cmd(&args[1..]),
         "table1" => run_experiment("table1", &ExpOptions::default()),
@@ -52,10 +56,21 @@ const HELP: &str = r#"pcstall — PC-based fine-grain DVFS for GPUs (paper repro
 
 USAGE:
   pcstall simulate --workload <name> --policy <p> [options]
-  pcstall experiment <id|all> [--quick|--full] [--out dir] [--pjrt]
+  pcstall run <id|all> [--quick|--full] [--out dir] [--pjrt]
+                       [--jobs N] [--no-cache] [--seed s]
+  pcstall experiment ...   (alias of `run`)
   pcstall list
   pcstall config dump [--set k=v ...]
   pcstall table1
+
+RUN OPTIONS:
+  --quick | --full      scale preset (default: 8 CUs, all workloads)
+  --out <dir>           output directory               (default results/)
+  --jobs <n>            sweep worker threads   (default: all CPU cores)
+  --no-cache            recompute everything; do not read or write the
+                        content-addressed result cache (<out>/cache/)
+  --pjrt                use the PJRT artifact backend when available
+  --seed <s>            master workload seed
 
 SIMULATE OPTIONS:
   --workload <name>     one of `pcstall list` (required)
@@ -255,11 +270,22 @@ fn experiment(args: &[String]) -> Result<()> {
     if let Some(seed) = o.take("--seed") {
         opts.seed = seed.parse()?;
     }
+    opts.jobs = match o.take("--jobs") {
+        Some(n) => n.parse::<usize>()?.max(1),
+        None => pool::default_jobs(),
+    };
+    let no_cache = o.take_flag("--no-cache");
+    opts.engine = Arc::new(if no_cache {
+        Engine::no_cache()
+    } else {
+        Engine::with_cache_dir(opts.out_dir.join("cache"))
+    });
     let rest = o.finish()?;
     let id = rest.first().map(|s| s.as_str()).unwrap_or("all");
     let t0 = std::time::Instant::now();
     run_experiment(id, &opts)?;
-    println!("\n[experiment {id} done in {:.1?}]", t0.elapsed());
+    println!("\n{}", opts.engine.summary(opts.jobs));
+    println!("[experiment {id} done in {:.1?}]", t0.elapsed());
     Ok(())
 }
 

@@ -8,6 +8,11 @@
 //! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The real PJRT client needs the `xla` crate, which is not available in
+//! the offline build.  It is gated behind the `pjrt` cargo feature; the
+//! default build ships a stub [`PjrtBackend`] whose `load` fails with a
+//! clear message so [`best_backend`] falls back to the native mirror.
 
 pub mod meta;
 
@@ -16,6 +21,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::dvfs::native::{DvfsStepBackend, StepInputs, StepOutputs};
+#[cfg(feature = "pjrt")]
 use crate::power::params::N_FREQ;
 use meta::ArtifactMeta;
 
@@ -41,11 +47,13 @@ pub fn find_artifact(explicit: Option<&Path>) -> Option<PathBuf> {
 }
 
 /// The PJRT-backed `dvfs_step` executor.
+#[cfg(feature = "pjrt")]
 pub struct PjrtBackend {
     exe: xla::PjRtLoadedExecutable,
     pub meta: ArtifactMeta,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtBackend {
     /// Load + compile the artifact at `path` (metadata sidecar expected
     /// next to it).
@@ -80,6 +88,7 @@ impl PjrtBackend {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl DvfsStepBackend for PjrtBackend {
     fn step(&mut self, inp: &StepInputs) -> Result<StepOutputs> {
         let (n_cu, n_wf) = (self.meta.n_cu, self.meta.n_wf);
@@ -152,6 +161,47 @@ impl DvfsStepBackend for PjrtBackend {
 
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+}
+
+/// Stub standing in for the PJRT executor when the `pjrt` feature is
+/// off.  Keeps the public API (and everything compiled against it)
+/// identical; `load` validates the artifact pair so stale sidecars still
+/// fail loudly, then reports the missing runtime.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtBackend {
+    pub meta: ArtifactMeta,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtBackend {
+    pub fn load(path: &Path) -> Result<Self> {
+        let meta_path = meta::sidecar_path(path);
+        let meta = ArtifactMeta::load(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        meta.validate_against_hlo(path)?;
+        anyhow::bail!(
+            "pcstall was built without the `pjrt` feature; cannot execute {} — \
+             rebuild with `--features pjrt` (requires a vendored `xla` crate)",
+            path.display()
+        );
+    }
+
+    pub fn load_default() -> Result<Self> {
+        let path = find_artifact(None)
+            .context("artifacts/dvfs_step.hlo.txt not found — run `make artifacts`")?;
+        Self::load(&path)
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl DvfsStepBackend for PjrtBackend {
+    fn step(&mut self, _inp: &StepInputs) -> Result<StepOutputs> {
+        anyhow::bail!("pjrt backend stub cannot step (built without the `pjrt` feature)");
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
     }
 }
 

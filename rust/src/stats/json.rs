@@ -1,0 +1,508 @@
+//! JSON (de)serialization for run results — the payload format of the
+//! exec result cache (`results/cache/<hash>.json`).
+//!
+//! The emitter half lives on [`Json`] in [`emit`](crate::stats::emit);
+//! this module adds the missing half: a small recursive-descent parser
+//! (`Json::parse`) plus `RunResult`/`EpochRecord` conversions.
+//!
+//! Non-finite floats have no JSON representation; the emitter writes
+//! them as `null` and [`Json::num_or_nan`] reads `null` back as NaN, so
+//! a `RunResult` with `mean_accuracy = NaN` (static policies) round-trips
+//! without ever placing `NaN`/`inf` tokens in a cache file.
+
+use crate::stats::emit::Json;
+use crate::stats::{EpochRecord, RunResult};
+
+// ---------------------------------------------------------------------------
+// Parser + accessors
+// ---------------------------------------------------------------------------
+
+impl Json {
+    /// Parse a JSON document.  Supports the full value grammar emitted
+    /// by [`Json::render`] (objects keep their key order).
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser {
+            bytes: text.as_bytes(),
+            pos: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(format!("trailing data at byte {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        if let Json::Obj(pairs) = self {
+            pairs.iter().find(|(k, _)| k.as_str() == key).map(|(_, v)| v)
+        } else {
+            None
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        if let Json::Num(x) = self {
+            Some(*x)
+        } else {
+            None
+        }
+    }
+
+    /// Number, with `null` (the encoding of NaN/inf) read back as NaN.
+    pub fn num_or_nan(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            Json::Null => Some(f64::NAN),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        if let Json::Str(s) = self {
+            Some(s.as_str())
+        } else {
+            None
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        if let Json::Bool(b) = self {
+            Some(*b)
+        } else {
+            None
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        if let Json::Arr(items) = self {
+            Some(items.as_slice())
+        } else {
+            None
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn eat(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(s.as_bytes()) {
+            self.pos += s.len();
+            Ok(v)
+        } else {
+            Err(format!("expected '{s}' at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(format!("unexpected input at byte {}", self.pos)),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        ) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| format!("bad number at byte {start}"))?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number '{text}' at byte {start}"))
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.pos + 4 > self.bytes.len() {
+            return Err("truncated \\u escape".into());
+        }
+        let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| "bad \\u escape".to_string())?;
+        let v = u32::from_str_radix(s, 16).map_err(|_| format!("bad \\u escape '{s}'"))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek().ok_or("unterminated string")? {
+                b'"' => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.pos += 1;
+                    let e = self.peek().ok_or("truncated escape")?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let cp = self.hex4()?;
+                            if (0xD800..0xDC00).contains(&cp) {
+                                // surrogate pair
+                                self.eat(b'\\')?;
+                                self.eat(b'u')?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err("invalid low surrogate".into());
+                                }
+                                let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                out.push(char::from_u32(c).ok_or("invalid surrogate pair")?);
+                            } else {
+                                out.push(char::from_u32(cp).ok_or("invalid codepoint")?);
+                            }
+                        }
+                        _ => return Err(format!("bad escape \\{}", e as char)),
+                    }
+                }
+                _ => {
+                    // plain character (possibly multi-byte UTF-8)
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| "invalid utf-8 in string".to_string())?;
+                    let c = rest.chars().next().ok_or("unterminated string")?;
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        self.skip_ws();
+        let mut items = Vec::new();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                    self.skip_ws();
+                }
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        self.skip_ws();
+        let mut pairs = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            self.skip_ws();
+            let value = self.value()?;
+            pairs.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                    self.skip_ws();
+                }
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RunResult <-> Json
+// ---------------------------------------------------------------------------
+
+fn record_to_json(r: &EpochRecord) -> Json {
+    Json::obj(vec![
+        ("epoch", Json::Num(r.epoch as f64)),
+        ("t_ns", Json::Num(r.t_ns)),
+        (
+            "freq_idx",
+            Json::Arr(r.freq_idx.iter().map(|&k| Json::Num(k as f64)).collect()),
+        ),
+        ("instr", Json::Num(r.instr)),
+        ("energy_j", Json::Num(r.energy_j)),
+        ("accuracy", Json::Num(r.accuracy)),
+        (
+            "dom_sens",
+            Json::Arr(r.dom_sens.iter().map(|&s| Json::Num(s as f64)).collect()),
+        ),
+    ])
+}
+
+fn num_field(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key)
+        .and_then(|v| v.num_or_nan())
+        .ok_or_else(|| format!("missing number field '{key}'"))
+}
+
+fn record_from_json(j: &Json) -> Result<EpochRecord, String> {
+    let freq_idx = j
+        .get("freq_idx")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| "missing 'freq_idx'".to_string())?
+        .iter()
+        .map(|v| v.as_f64().map(|x| x as u8))
+        .collect::<Option<Vec<u8>>>()
+        .ok_or_else(|| "non-numeric 'freq_idx' entry".to_string())?;
+    let dom_sens = j
+        .get("dom_sens")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| "missing 'dom_sens'".to_string())?
+        .iter()
+        .map(|v| v.num_or_nan().map(|x| x as f32))
+        .collect::<Option<Vec<f32>>>()
+        .ok_or_else(|| "non-numeric 'dom_sens' entry".to_string())?;
+    Ok(EpochRecord {
+        epoch: num_field(j, "epoch")? as u64,
+        t_ns: num_field(j, "t_ns")?,
+        freq_idx,
+        instr: num_field(j, "instr")?,
+        energy_j: num_field(j, "energy_j")?,
+        accuracy: num_field(j, "accuracy")?,
+        dom_sens,
+    })
+}
+
+impl RunResult {
+    /// Serialize for the result cache.  Non-finite floats are emitted as
+    /// `null` by the renderer, keeping the document valid JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", Json::Str(self.workload.clone())),
+            ("policy", Json::Str(self.policy.clone())),
+            ("objective", Json::Str(self.objective.clone())),
+            ("total_energy_j", Json::Num(self.total_energy_j)),
+            ("total_time_ns", Json::Num(self.total_time_ns)),
+            ("total_instr", Json::Num(self.total_instr)),
+            ("mean_accuracy", Json::Num(self.mean_accuracy)),
+            ("pc_hit_rate", Json::Num(self.pc_hit_rate)),
+            ("completed", Json::Bool(self.completed)),
+            (
+                "records",
+                Json::Arr(self.records.iter().map(record_to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Inverse of [`RunResult::to_json`].
+    pub fn from_json(j: &Json) -> Result<RunResult, String> {
+        let str_field = |key: &str| -> Result<String, String> {
+            j.get(key)
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string())
+                .ok_or_else(|| format!("missing string field '{key}'"))
+        };
+        let records = j
+            .get("records")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| "missing 'records'".to_string())?
+            .iter()
+            .map(record_from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(RunResult {
+            workload: str_field("workload")?,
+            policy: str_field("policy")?,
+            objective: str_field("objective")?,
+            records,
+            total_energy_j: num_field(j, "total_energy_j")?,
+            total_time_ns: num_field(j, "total_time_ns")?,
+            total_instr: num_field(j, "total_instr")?,
+            mean_accuracy: num_field(j, "mean_accuracy")?,
+            pc_hit_rate: num_field(j, "pc_hit_rate")?,
+            completed: j
+                .get("completed")
+                .and_then(|v| v.as_bool())
+                .ok_or_else(|| "missing 'completed'".to_string())?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunResult {
+        RunResult {
+            workload: "comd".into(),
+            policy: "STATIC-1.7".into(),
+            objective: "ED2P".into(),
+            records: vec![
+                EpochRecord {
+                    epoch: 0,
+                    t_ns: 1000.0,
+                    freq_idx: vec![4, 4, 9, 0],
+                    instr: 12345.5,
+                    energy_j: 1.25e-6,
+                    accuracy: f64::NAN, // static policy: no prediction
+                    dom_sens: vec![0.0, 1.5, 2.25, 0.125],
+                },
+                EpochRecord {
+                    epoch: 1,
+                    t_ns: 2000.0,
+                    freq_idx: vec![4, 4, 4, 4],
+                    instr: 9999.0,
+                    energy_j: 1.5e-6,
+                    accuracy: 0.875,
+                    dom_sens: vec![3.5, 0.0, 0.0, 7.75],
+                },
+            ],
+            total_energy_j: 2.75e-6,
+            total_time_ns: 2000.0,
+            total_instr: 22344.5,
+            mean_accuracy: f64::NAN,
+            pc_hit_rate: 0.0,
+            completed: false,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_field() {
+        let r = sample();
+        let text = r.to_json().render();
+        let back = RunResult::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.workload, r.workload);
+        assert_eq!(back.policy, r.policy);
+        assert_eq!(back.objective, r.objective);
+        assert_eq!(back.total_energy_j, r.total_energy_j);
+        assert_eq!(back.total_time_ns, r.total_time_ns);
+        assert_eq!(back.total_instr, r.total_instr);
+        assert!(back.mean_accuracy.is_nan());
+        assert_eq!(back.pc_hit_rate, r.pc_hit_rate);
+        assert_eq!(back.completed, r.completed);
+        assert_eq!(back.records.len(), r.records.len());
+        for (a, b) in back.records.iter().zip(&r.records) {
+            assert_eq!(a.epoch, b.epoch);
+            assert_eq!(a.t_ns, b.t_ns);
+            assert_eq!(a.freq_idx, b.freq_idx);
+            assert_eq!(a.instr, b.instr);
+            assert_eq!(a.energy_j, b.energy_j);
+            assert_eq!(a.accuracy.is_nan(), b.accuracy.is_nan());
+            if !b.accuracy.is_nan() {
+                assert_eq!(a.accuracy, b.accuracy);
+            }
+            assert_eq!(a.dom_sens, b.dom_sens);
+        }
+    }
+
+    #[test]
+    fn serialized_form_is_nan_and_inf_free() {
+        // JSON has no NaN/Infinity tokens: the emitter must map every
+        // non-finite float to null, and the parser must accept nothing
+        // resembling them.
+        let mut r = sample();
+        r.total_instr = f64::INFINITY;
+        let text = r.to_json().render();
+        assert!(!text.contains("NaN") && !text.contains("nan"));
+        assert!(!text.contains("inf") && !text.contains("Inf"));
+        let back = RunResult::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(back.total_instr.is_nan()); // null reads back as NaN
+    }
+
+    #[test]
+    fn float_values_roundtrip_exactly() {
+        for &x in &[
+            0.1,
+            1.0 / 3.0,
+            1.7976931348623157e308,
+            5e-324,
+            -2.5,
+            123456789.123456789,
+        ] {
+            let text = Json::Num(x).render();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(back, x, "{x} rendered as {text}");
+        }
+    }
+
+    #[test]
+    fn parser_handles_nesting_and_escapes() {
+        let j = Json::parse(r#"{ "a" : [1, -2.5e3, null, "x\n\"yA"], "b": {} }"#).unwrap();
+        let arr = j.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].as_f64(), Some(1.0));
+        assert_eq!(arr[1].as_f64(), Some(-2500.0));
+        assert!(arr[2].num_or_nan().unwrap().is_nan());
+        assert_eq!(arr[3].as_str(), Some("x\n\"yA"));
+        assert!(matches!(j.get("b"), Some(Json::Obj(p)) if p.is_empty()));
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        for bad in ["", "{", "[1,", "tru", "1.2.3", "{\"a\":}", "\"unterminated", "[] []"] {
+            assert!(Json::parse(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn parser_accepts_emitter_output() {
+        // cross-check against the existing renderer's quirks
+        let j = Json::obj(vec![
+            ("s", Json::Str("pc\"stall\n\u{1}".into())),
+            ("xs", Json::nums(&[1.0, 2.5, f64::NAN])),
+        ]);
+        let text = j.render();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("s").unwrap().as_str(), Some("pc\"stall\n\u{1}"));
+        let xs = back.get("xs").unwrap().as_arr().unwrap();
+        assert!(xs[2].num_or_nan().unwrap().is_nan());
+    }
+}

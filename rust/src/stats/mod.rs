@@ -3,6 +3,7 @@
 
 pub mod bench;
 pub mod emit;
+pub mod json;
 
 /// One epoch's aggregate record.
 #[derive(Debug, Clone)]
@@ -36,6 +37,8 @@ pub struct RunResult {
     pub total_instr: f64,
     /// Mean prediction accuracy over predicting epochs (NaN if none).
     pub mean_accuracy: f64,
+    /// PC-table hit rate over the run (0 for designs without a table).
+    pub pc_hit_rate: f64,
     /// Did the workload run to completion (fixed-work runs)?
     pub completed: bool,
 }
@@ -122,6 +125,7 @@ mod tests {
             total_time_ns: 3e9,
             total_instr: 1000.0,
             mean_accuracy: 0.9,
+            pc_hit_rate: 0.0,
             completed: true,
         }
     }

@@ -1,0 +1,83 @@
+//! Sweep-engine integration: a parallel (`--jobs 4`) experiment run must
+//! produce byte-identical CSV output to a serial (`--jobs 1`) run, and a
+//! repeated invocation against a warm cache must execute zero new
+//! simulations (100% cache hits).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pcstall::exec::Engine;
+use pcstall::harness::{run_experiment, ExpOptions, Scale};
+
+fn opts(dir: &PathBuf, jobs: usize, engine: Arc<Engine>) -> ExpOptions {
+    ExpOptions {
+        scale: Scale::Quick,
+        out_dir: dir.clone(),
+        use_pjrt: false,
+        seed: 0,
+        jobs,
+        engine,
+    }
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pcstall_exec_engine_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn parallel_fig14_is_byte_identical_and_second_run_fully_cached() {
+    // 1. serial reference, no cache involved at all
+    let serial_dir = fresh_dir("serial");
+    run_experiment("fig14", &opts(&serial_dir, 1, Arc::new(Engine::no_cache()))).unwrap();
+    let serial_csv = std::fs::read(serial_dir.join("fig14.csv")).unwrap();
+
+    // 2. parallel run against a cold cache
+    let par_dir = fresh_dir("parallel");
+    let cold = Arc::new(Engine::with_cache_dir(par_dir.join("cache")));
+    run_experiment("fig14", &opts(&par_dir, 4, cold.clone())).unwrap();
+    let parallel_csv = std::fs::read(par_dir.join("fig14.csv")).unwrap();
+    assert_eq!(
+        serial_csv, parallel_csv,
+        "--jobs 4 must emit byte-identical CSV to --jobs 1"
+    );
+    assert!(cold.executed() > 0, "cold run must execute simulations");
+    assert_eq!(cold.cache_stats().hits, 0, "cold cache cannot hit");
+    assert_eq!(
+        cold.cache_stats().stores,
+        cold.executed(),
+        "every executed simulation must be persisted"
+    );
+
+    // 3. repeat against the warm cache: zero new simulations, 100% hits
+    let warm = Arc::new(Engine::with_cache_dir(par_dir.join("cache")));
+    run_experiment("fig14", &opts(&par_dir, 4, warm.clone())).unwrap();
+    assert_eq!(warm.executed(), 0, "warm cache must not execute anything");
+    let stats = warm.cache_stats();
+    assert_eq!(stats.misses, 0, "warm cache must not miss: {stats:?}");
+    assert_eq!(stats.invalidations, 0, "{stats:?}");
+    assert!(stats.hits > 0, "{stats:?}");
+    let cached_csv = std::fs::read(par_dir.join("fig14.csv")).unwrap();
+    assert_eq!(serial_csv, cached_csv, "cached rerun changed the CSV");
+
+    let _ = std::fs::remove_dir_all(&serial_dir);
+    let _ = std::fs::remove_dir_all(&par_dir);
+}
+
+#[test]
+fn no_cache_engine_still_deduplicates_but_writes_nothing() {
+    // fig15 requests the static-1.7 baseline once per design series; the
+    // engine must collapse the duplicates even with the cache disabled.
+    let dir = fresh_dir("nocache");
+    let engine = Arc::new(Engine::no_cache());
+    run_experiment("fig15", &opts(&dir, 2, engine.clone())).unwrap();
+    assert!(engine.deduped() > 0, "shared baselines were not deduplicated");
+    assert_eq!(engine.cache_stats().stores, 0);
+    assert!(
+        !dir.join("cache").exists(),
+        "--no-cache must not create a cache directory"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -158,8 +158,7 @@ fn harness_smoke_table1_and_fig5() {
     let opts = pcstall::harness::ExpOptions {
         scale: pcstall::harness::Scale::Quick,
         out_dir: std::env::temp_dir().join("pcstall_harness_smoke"),
-        use_pjrt: false,
-        seed: 0,
+        ..Default::default()
     };
     pcstall::harness::run_experiment("table1", &opts).unwrap();
     pcstall::harness::run_experiment("fig5", &opts).unwrap();

@@ -1,0 +1,245 @@
+//! Minimal offline shim of the `anyhow` API surface used by `pcstall`.
+//!
+//! The build environment has no registry access, so this crate provides
+//! the subset of `anyhow` 1.x the workspace relies on:
+//!
+//! * [`Error`] — an opaque error value holding a context chain,
+//! * [`Result`] — `Result<T, Error>` with a defaulted error type,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`,
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros.
+//!
+//! Semantics match `anyhow` where it matters here: `{}` displays the
+//! outermost message, `{:#}` displays the whole chain separated by
+//! `": "`, and `?` converts any `std::error::Error + Send + Sync`.
+
+use std::fmt;
+
+/// An opaque error: an outermost message plus its cause chain.
+pub struct Error {
+    /// Outermost context first.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        let mut chain = Vec::with_capacity(self.chain.len() + 1);
+        chain.push(context.to_string());
+        chain.extend(self.chain);
+        Error { chain }
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod ext {
+    use super::Error;
+    use std::fmt::Display;
+
+    /// Anything that can absorb an outer context into an [`Error`].
+    pub trait StdError {
+        fn ext_context<C: Display>(self, context: C) -> Error;
+    }
+
+    impl<E> StdError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context<C: Display>(self, context: C) -> Error {
+            Error::from(self).context(context)
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context<C: Display>(self, context: C) -> Error {
+            self.context(context)
+        }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on fallible values.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::StdError + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| ext::StdError::ext_context(e, context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| ext::StdError::ext_context(e, f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate_display() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert_eq!(format!("{e}"), "gone");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading file").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading file: gone");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+    }
+
+    #[test]
+    fn context_chains_on_anyhow_results() {
+        fn f() -> Result<()> {
+            bail!("boom {}", 1);
+        }
+        let e = f().context("while exploding").unwrap_err();
+        assert_eq!(format!("{e:#}"), "while exploding: boom 1");
+    }
+
+    #[test]
+    fn ensure_formats_messages() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+    }
+
+    #[test]
+    fn bare_ensure_stringifies_condition() {
+        fn f(x: u32) -> Result<()> {
+            ensure!(x == 0);
+            Ok(())
+        }
+        let e = f(1).unwrap_err();
+        assert!(format!("{e}").contains("x == 0"));
+    }
+}
