@@ -28,7 +28,7 @@ use crate::dvfs::sensitivity::{prediction_accuracy, SensEstimate};
 use crate::models::{estimate_cu, EstModel};
 use crate::power::params::{freq_index, FREQS_GHZ, N_FREQ};
 use crate::predictors::{OracleSampler, PcTables, ReactiveState};
-use crate::sim::gpu::{EpochObservation, Gpu};
+use crate::sim::gpu::{EpochObservation, Gpu, KernelLaunch};
 use crate::stats::{EpochRecord, RunResult};
 use crate::workloads::WorkloadSpec;
 
@@ -143,10 +143,7 @@ pub struct DvfsManager {
 impl DvfsManager {
     /// Build a manager with the native backend.
     pub fn new(cfg: SimConfig, workload: &WorkloadSpec, policy: Policy, objective: Objective) -> Self {
-        let backend = Box::new(NativeBackend {
-            params: cfg.power,
-        });
-        Self::with_backend(cfg, workload, policy, objective, backend)
+        Self::from_launches(cfg, workload.launches(), workload.rounds, policy, objective)
     }
 
     /// Build a manager with an explicit backend (PJRT on the hot path).
@@ -157,8 +154,40 @@ impl DvfsManager {
         objective: Objective,
         backend: Box<dyn DvfsStepBackend>,
     ) -> Self {
+        Self::from_launches_with_backend(
+            cfg,
+            workload.launches(),
+            workload.rounds,
+            policy,
+            objective,
+            backend,
+        )
+    }
+
+    /// Build a manager from a pre-lowered launch list (trace replay and
+    /// any other non-catalog workload source) with the native backend.
+    pub fn from_launches(
+        cfg: SimConfig,
+        launches: Vec<KernelLaunch>,
+        rounds: u32,
+        policy: Policy,
+        objective: Objective,
+    ) -> Self {
+        let backend = Box::new(NativeBackend { params: cfg.power });
+        Self::from_launches_with_backend(cfg, launches, rounds, policy, objective, backend)
+    }
+
+    /// [`DvfsManager::from_launches`] with an explicit backend.
+    pub fn from_launches_with_backend(
+        cfg: SimConfig,
+        launches: Vec<KernelLaunch>,
+        rounds: u32,
+        policy: Policy,
+        objective: Objective,
+        backend: Box<dyn DvfsStepBackend>,
+    ) -> Self {
         let mut gpu = Gpu::new(cfg.clone());
-        gpu.load_workload(workload.launches(), workload.rounds);
+        gpu.load_workload(launches, rounds);
         // Static policies start at their pinned state; DVFS policies start
         // at the paper's 1.7 GHz reference.
         if let Policy::Static(idx) = policy {

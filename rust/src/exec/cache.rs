@@ -150,6 +150,117 @@ impl ResultCache {
     }
 }
 
+/// Metadata of one on-disk entry (`pcstall cache stats|clear`).
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub path: PathBuf,
+    pub bytes: u64,
+    /// Seconds since last modification (0 when the mtime is unreadable).
+    pub age_secs: u64,
+    /// Whether the file parses as a cache entry document.
+    pub valid: bool,
+}
+
+/// Aggregate on-disk accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DiskStats {
+    pub entries: u64,
+    pub valid: u64,
+    pub corrupt: u64,
+    pub bytes: u64,
+    pub oldest_secs: u64,
+    pub newest_secs: u64,
+}
+
+impl ResultCache {
+    /// List on-disk entries, oldest first.  A missing or unreadable
+    /// directory yields an empty list (nothing cached yet).
+    pub fn scan(&self) -> Vec<EntryMeta> {
+        let Some(dir) = &self.dir else {
+            return Vec::new();
+        };
+        let Ok(rd) = std::fs::read_dir(dir) else {
+            return Vec::new();
+        };
+        let now = std::time::SystemTime::now();
+        let mut out = Vec::new();
+        for e in rd.flatten() {
+            let path = e.path();
+            if path.extension().and_then(|s| s.to_str()) != Some("json") {
+                continue; // skip in-flight .tmp<pid> writes
+            }
+            let Ok(md) = e.metadata() else { continue };
+            if !md.is_file() {
+                continue;
+            }
+            let age_secs = md
+                .modified()
+                .ok()
+                .and_then(|m| now.duration_since(m).ok())
+                .map(|d| d.as_secs())
+                .unwrap_or(0);
+            let valid = std::fs::read_to_string(&path)
+                .ok()
+                .and_then(|t| Json::parse(&t).ok())
+                .map(|j| j.get("key").is_some() && j.get("result").is_some())
+                .unwrap_or(false);
+            out.push(EntryMeta {
+                path,
+                bytes: md.len(),
+                age_secs,
+                valid,
+            });
+        }
+        out.sort_by(|a, b| b.age_secs.cmp(&a.age_secs));
+        out
+    }
+
+    /// Aggregate entry-count / byte / age accounting for `cache stats`.
+    pub fn disk_stats(&self) -> DiskStats {
+        let entries = self.scan();
+        let mut s = DiskStats {
+            newest_secs: u64::MAX,
+            ..DiskStats::default()
+        };
+        for e in &entries {
+            s.entries += 1;
+            s.bytes += e.bytes;
+            if e.valid {
+                s.valid += 1;
+            } else {
+                s.corrupt += 1;
+            }
+            s.oldest_secs = s.oldest_secs.max(e.age_secs);
+            s.newest_secs = s.newest_secs.min(e.age_secs);
+        }
+        if s.entries == 0 {
+            s.newest_secs = 0;
+        }
+        s
+    }
+
+    /// Garbage-collect: remove entries at least `max_age_secs` old, then
+    /// — oldest first — until the directory is within `max_bytes`.
+    /// Corrupt entries are always removed (a lookup would invalidate
+    /// them anyway).  Returns `(entries_removed, bytes_freed)`.
+    pub fn gc(&self, max_age_secs: Option<u64>, max_bytes: Option<u64>) -> (u64, u64) {
+        let entries = self.scan(); // oldest first
+        let mut total: u64 = entries.iter().map(|e| e.bytes).sum();
+        let mut removed = 0u64;
+        let mut freed = 0u64;
+        for e in &entries {
+            let too_old = max_age_secs.is_some_and(|a| e.age_secs >= a);
+            let over_budget = max_bytes.is_some_and(|b| total > b);
+            if (too_old || over_budget || !e.valid) && std::fs::remove_file(&e.path).is_ok() {
+                removed += 1;
+                freed += e.bytes;
+                total -= e.bytes;
+            }
+        }
+        (removed, freed)
+    }
+}
+
 fn decode_entry(text: &str, key: &RunKey) -> Result<RunResult, String> {
     let j = Json::parse(text)?;
     let stored = j
@@ -262,6 +373,66 @@ mod tests {
         std::fs::rename(&from, &to).unwrap();
         assert!(cache.lookup(&key).is_none());
         assert_eq!(cache.stats().invalidations, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disk_stats_count_entries_and_corruption() {
+        let dir = tmp_dir("diskstats");
+        let cache = ResultCache::at(dir.clone());
+        assert_eq!(cache.disk_stats(), DiskStats::default()); // no dir yet
+        cache.store(&a_key("comd"), &a_result("comd"));
+        cache.store(&a_key("hacc"), &a_result("hacc"));
+        std::fs::write(dir.join("deadbeef.json"), "{not json").unwrap();
+        std::fs::write(dir.join("ignored.tmp123"), "partial").unwrap();
+        let s = cache.disk_stats();
+        assert_eq!(s.entries, 3, "{s:?}");
+        assert_eq!(s.valid, 2);
+        assert_eq!(s.corrupt, 1);
+        assert!(s.bytes > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_by_age_zero_clears_everything() {
+        let dir = tmp_dir("gcage");
+        let cache = ResultCache::at(dir.clone());
+        cache.store(&a_key("comd"), &a_result("comd"));
+        cache.store(&a_key("hacc"), &a_result("hacc"));
+        let (removed, freed) = cache.gc(Some(0), None);
+        assert_eq!(removed, 2);
+        assert!(freed > 0);
+        assert_eq!(cache.disk_stats().entries, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_by_bytes_removes_down_to_budget() {
+        let dir = tmp_dir("gcbytes");
+        let cache = ResultCache::at(dir.clone());
+        for wl in ["comd", "hacc", "dgemm", "xsbench"] {
+            cache.store(&a_key(wl), &a_result(wl));
+        }
+        let s = cache.disk_stats();
+        assert_eq!(s.entries, 4);
+        // budget for roughly half the data: some must go, some must stay
+        let (removed, _) = cache.gc(None, Some(s.bytes / 2));
+        assert!(removed >= 1 && removed < 4, "removed {removed}");
+        assert!(cache.disk_stats().bytes <= s.bytes / 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_always_sweeps_corrupt_entries() {
+        let dir = tmp_dir("gccorrupt");
+        let cache = ResultCache::at(dir.clone());
+        cache.store(&a_key("comd"), &a_result("comd"));
+        std::fs::write(dir.join("deadbeef.json"), "{not json").unwrap();
+        // generous bounds: only the corrupt entry qualifies
+        let (removed, _) = cache.gc(Some(u64::MAX), Some(u64::MAX));
+        assert_eq!(removed, 1);
+        let s = cache.disk_stats();
+        assert_eq!((s.entries, s.corrupt), (1, 0));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -89,9 +89,26 @@ pub fn fnv1a(bytes: &[u8], offset: u64) -> u64 {
     h
 }
 
+/// 128-bit FNV-1a of `bytes` as 32 hex characters — the shared content-
+/// addressing primitive (cache file stems, trace content hashes).
+pub fn fnv1a128_hex(bytes: &[u8]) -> String {
+    format!(
+        "{:016x}{:016x}",
+        fnv1a(bytes, FNV_OFFSET_A),
+        fnv1a(bytes, FNV_OFFSET_B)
+    )
+}
+
 impl RunKey {
     /// Build the key for one cell.  `cfg` must be the exact config the
     /// run will use (epoch length and overrides already applied).
+    ///
+    /// `workload` must be the *canonical workload id*, not a user-facing
+    /// spec: catalog workloads use their catalog name, trace-driven
+    /// workloads use `trace:<content-hash>` (see
+    /// [`crate::workloads::WorkloadSource`]).  Fingerprinting the trace
+    /// *content* (never its path) means an edited trace file can never be
+    /// answered from a stale cache entry.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         cfg: &SimConfig,
@@ -138,12 +155,7 @@ impl RunKey {
 
     /// 128-bit content address as 32 hex chars (the cache file stem).
     pub fn hash_hex(&self) -> String {
-        let c = self.canonical();
-        format!(
-            "{:016x}{:016x}",
-            fnv1a(c.as_bytes(), FNV_OFFSET_A),
-            fnv1a(c.as_bytes(), FNV_OFFSET_B)
-        )
+        fnv1a128_hex(self.canonical().as_bytes())
     }
 }
 
@@ -234,6 +246,31 @@ mod tests {
             objective_id(Objective::EnergyBound { max_slowdown: 0.05 }),
             objective_id(Objective::EnergyBound { max_slowdown: 0.10 })
         );
+    }
+
+    #[test]
+    fn trace_workload_ids_address_by_content() {
+        // Two traces at the same path but with different content get
+        // distinct ids (the id embeds the content hash, never the path),
+        // and therefore distinct cache addresses.
+        let cfg = SimConfig::small();
+        let key_of = |wl_id: &str| {
+            RunKey::new(
+                &cfg,
+                "quick",
+                "native",
+                wl_id,
+                Policy::PcStall,
+                Objective::Ed2p,
+                RunMode::Epochs(4),
+                1.0,
+            )
+        };
+        let a = key_of(&format!("trace:{}", fnv1a128_hex(b"stream-a")));
+        let b = key_of(&format!("trace:{}", fnv1a128_hex(b"stream-b")));
+        let c = key_of("comd");
+        assert_ne!(a.hash_hex(), b.hash_hex());
+        assert_ne!(a.hash_hex(), c.hash_hex());
     }
 
     #[test]

@@ -14,23 +14,31 @@ use crate::predictors::OracleSampler;
 use crate::sim::gpu::Gpu;
 use crate::stats::emit::CsvTable;
 use crate::util::geomean;
-use crate::workloads;
+use crate::workloads::WorkloadSource;
 
 use super::ExpOptions;
 
-/// Collect one trace per workload in parallel (`--jobs`), preserving
-/// workload order.  Traces are not cached (they are not `RunResult`s),
-/// but they parallelize perfectly — each is an independent simulation.
-fn traces_for(opts: &ExpOptions, wls: &[&'static str], epochs: u64, epoch_ns: f64) -> Vec<Trace> {
+/// Collect one ground-truth profile per workload in parallel (`--jobs`),
+/// preserving workload order.  Profiles are not cached (they are not
+/// `RunResult`s), but they parallelize perfectly — each is an
+/// independent simulation.
+fn ground_truths_for(
+    opts: &ExpOptions,
+    wls: &[&'static str],
+    epochs: u64,
+    epoch_ns: f64,
+) -> anyhow::Result<Vec<GroundTruth>> {
     let jobs: Vec<_> = wls
         .iter()
-        .map(|&wl| move || trace(opts, wl, epochs, epoch_ns))
+        .map(|&wl| move || ground_truth(opts, wl, epochs, epoch_ns))
         .collect();
-    pool::run_ordered(jobs, opts.jobs.max(1))
+    pool::run_ordered(jobs, opts.jobs.max(1)).into_iter().collect()
 }
 
-/// Ground-truth trace of one workload at fixed frequency.
-pub struct Trace {
+/// Ground-truth fine-grain profile of one workload at fixed frequency
+/// (the figures' measurement substrate; distinct from
+/// [`crate::trace::Trace`], the instruction-trace workload format).
+pub struct GroundTruth {
     /// `[epoch][domain]` oracle-regressed sensitivity.
     pub dom_sens: Vec<Vec<f64>>,
     /// `[epoch][domain][state]` measured instructions at each ladder state.
@@ -49,16 +57,24 @@ pub struct Trace {
     pub wf_active: Vec<Vec<Vec<bool>>>,
 }
 
-/// Collect `epochs` ground-truth epochs of `workload`.
-pub fn trace(opts: &ExpOptions, workload: &str, epochs: u64, epoch_ns: f64) -> Trace {
+/// Collect `epochs` ground-truth epochs of `workload` (any
+/// [`WorkloadSource`] spec: catalog name, `trace:<path>`, `synth:<seed>`).
+pub fn ground_truth(
+    opts: &ExpOptions,
+    workload: &str,
+    epochs: u64,
+    epoch_ns: f64,
+) -> anyhow::Result<GroundTruth> {
     let mut cfg = opts.base_cfg();
     cfg.dvfs.epoch_ns = epoch_ns;
-    let wl = workloads::build(workload, 1.0); // full-length kernels: traces should not be dominated by kernel boundaries
+    // full-length kernels: profiles should not be dominated by kernel
+    // boundaries
+    let (launches, rounds) = WorkloadSource::parse(workload)?.resolve()?.lower(1.0);
     let mut gpu = Gpu::new(cfg);
-    gpu.load_workload(wl.launches(), wl.rounds);
+    gpu.load_workload(launches, rounds);
     let sampler = OracleSampler::default();
 
-    let mut t = Trace {
+    let mut t = GroundTruth {
         dom_sens: Vec::new(),
         dom_instr_at: Vec::new(),
         dom_r2: Vec::new(),
@@ -93,10 +109,10 @@ pub fn trace(opts: &ExpOptions, workload: &str, epochs: u64, epoch_ns: f64) -> T
                 .collect(),
         );
     }
-    t
+    Ok(t)
 }
 
-impl Trace {
+impl GroundTruth {
     /// Mean relative change in domain sensitivity across consecutive
     /// epochs (the paper's Fig. 7 metric).
     pub fn mean_consecutive_change(&self) -> f64 {
@@ -160,7 +176,7 @@ impl Trace {
 
 /// Fig. 5 — instructions vs frequency linearity for sampled epochs.
 pub fn fig5(opts: &ExpOptions) -> anyhow::Result<()> {
-    let t = trace(opts, "comd", opts.trace_epochs().min(24), 1000.0);
+    let t = ground_truth(opts, "comd", opts.trace_epochs().min(24), 1000.0)?;
     let mut table = CsvTable::new(&["epoch", "freq_ghz", "instructions"]);
     let mut r2s = Vec::new();
     let step = (t.dom_instr_at.len() / 8).max(1);
@@ -186,7 +202,7 @@ pub fn fig5(opts: &ExpOptions) -> anyhow::Result<()> {
 /// Fig. 6 — sensitivity-over-time profiles for four contrast workloads.
 pub fn fig6(opts: &ExpOptions) -> anyhow::Result<()> {
     let wls = ["dgemm", "hacc", "BwdBN", "xsbench"];
-    let traces = traces_for(opts, &wls, opts.trace_epochs(), 1000.0);
+    let traces = ground_truths_for(opts, &wls, opts.trace_epochs(), 1000.0)?;
     let mut table = CsvTable::new(&["workload", "epoch", "gpu_sens"]);
     for (&wl, t) in wls.iter().zip(&traces) {
         for (e, doms) in t.dom_sens.iter().enumerate() {
@@ -205,7 +221,7 @@ pub fn fig6(opts: &ExpOptions) -> anyhow::Result<()> {
 pub fn fig7(opts: &ExpOptions) -> anyhow::Result<()> {
     // (a) per workload at 1 µs
     let wls = opts.workloads();
-    let traces = traces_for(opts, &wls, opts.trace_epochs(), 1000.0);
+    let traces = ground_truths_for(opts, &wls, opts.trace_epochs(), 1000.0)?;
     let mut ta = CsvTable::new(&["workload", "mean_rel_change_1us"]);
     let mut per_wl = Vec::new();
     for (&wl, t) in wls.iter().zip(&traces) {
@@ -222,7 +238,7 @@ pub fn fig7(opts: &ExpOptions) -> anyhow::Result<()> {
     for &epoch_ns in &[1_000.0, 10_000.0, 50_000.0, 100_000.0] {
         let budget_ns = opts.trace_epochs() as f64 * 1_000.0;
         let epochs = ((budget_ns / epoch_ns) as u64).clamp(8, opts.trace_epochs());
-        let vals: Vec<f64> = traces_for(opts, &opts.sweep_workloads(), epochs, epoch_ns)
+        let vals: Vec<f64> = ground_truths_for(opts, &opts.sweep_workloads(), epochs, epoch_ns)?
             .iter()
             .map(|t| t.mean_consecutive_change())
             .collect();
@@ -239,7 +255,7 @@ pub fn fig7(opts: &ExpOptions) -> anyhow::Result<()> {
 
 /// Fig. 8 — per-wavefront contribution profile (BwdBN, one CU).
 pub fn fig8(opts: &ExpOptions) -> anyhow::Result<()> {
-    let t = trace(opts, "BwdBN", opts.trace_epochs().min(60), 1000.0);
+    let t = ground_truth(opts, "BwdBN", opts.trace_epochs().min(60), 1000.0)?;
     let mut table = CsvTable::new(&["epoch", "slot", "wf_sens"]);
     for (e, cus) in t.wf_est_sens.iter().enumerate() {
         for (w, s) in cus[0].iter().enumerate() {
@@ -254,7 +270,7 @@ pub fn fig8(opts: &ExpOptions) -> anyhow::Result<()> {
 pub fn fig10(opts: &ExpOptions) -> anyhow::Result<()> {
     let n_wf = opts.base_cfg().gpu.n_wf as u64;
     let wls = opts.workloads();
-    let traces = traces_for(opts, &wls, opts.trace_epochs(), 1000.0);
+    let traces = ground_truths_for(opts, &wls, opts.trace_epochs(), 1000.0)?;
     let mut table = CsvTable::new(&["workload", "scope", "mean_rel_change"]);
     let mut agg: HashMap<&str, Vec<f64>> = HashMap::new();
     for (&wl, t) in wls.iter().zip(&traces) {
@@ -283,7 +299,7 @@ pub fn fig10(opts: &ExpOptions) -> anyhow::Result<()> {
 
 /// Fig. 11a — per-slot sensitivity change for quickS (contention).
 pub fn fig11a(opts: &ExpOptions) -> anyhow::Result<()> {
-    let t = trace(opts, "quickS", opts.trace_epochs(), 1000.0);
+    let t = ground_truth(opts, "quickS", opts.trace_epochs(), 1000.0)?;
     let n_wf = opts.base_cfg().gpu.n_wf;
     let mut table = CsvTable::new(&["slot", "mean_rel_change"]);
     for w in 0..n_wf {
@@ -312,8 +328,8 @@ pub fn fig11a(opts: &ExpOptions) -> anyhow::Result<()> {
 /// Fig. 11b — PC-table index offset sweep (CU-level sharing).
 pub fn fig11b(opts: &ExpOptions) -> anyhow::Result<()> {
     let mut table = CsvTable::new(&["offset_bits", "mean_rel_change"]);
-    // reuse one trace set across offsets (collected in parallel)
-    let traces = traces_for(opts, &opts.sweep_workloads(), opts.trace_epochs(), 1000.0);
+    // reuse one profile set across offsets (collected in parallel)
+    let traces = ground_truths_for(opts, &opts.sweep_workloads(), opts.trace_epochs(), 1000.0)?;
     for offset in 0..=8u32 {
         let mut vals = Vec::new();
         for t in &traces {
@@ -340,13 +356,21 @@ pub fn oracle_validation(opts: &ExpOptions) -> anyhow::Result<()> {
     let jobs: Vec<_> = wls
         .iter()
         .map(|&wl| {
-            move || {
+            move || -> anyhow::Result<f64> {
                 let sampler = OracleSampler::default();
                 let mut cfg = opts.base_cfg();
                 cfg.dvfs.epoch_ns = 1000.0;
-                let spec = workloads::build(wl, opts.waves_scale().max(0.2));
+                let resolved = WorkloadSource::parse(wl)?.resolve()?;
+                // traces always run at recorded length (the catalog
+                // multiplier is tuned to catalog base sizes)
+                let waves = if resolved.trace().is_some() {
+                    1.0
+                } else {
+                    opts.waves_scale().max(0.2)
+                };
+                let (launches, rounds) = resolved.lower(waves);
                 let mut gpu = Gpu::new(cfg);
-                gpu.load_workload(spec.launches(), spec.rounds);
+                gpu.load_workload(launches, rounds);
                 // settle, then validate a handful of epochs
                 for _ in 0..4 {
                     gpu.run_epoch();
@@ -359,12 +383,15 @@ pub fn oracle_validation(opts: &ExpOptions) -> anyhow::Result<()> {
                     wl_accs.push(sampler.validate(&gpu, &freqs));
                     gpu.run_epoch();
                 }
-                wl_accs.iter().sum::<f64>() / wl_accs.len() as f64
+                Ok(wl_accs.iter().sum::<f64>() / wl_accs.len() as f64)
             }
         })
         .collect();
+    let per_wl = pool::run_ordered(jobs, opts.jobs.max(1))
+        .into_iter()
+        .collect::<anyhow::Result<Vec<f64>>>()?;
     let mut accs = Vec::new();
-    for (&wl, &acc) in wls.iter().zip(&pool::run_ordered(jobs, opts.jobs.max(1))) {
+    for (&wl, &acc) in wls.iter().zip(&per_wl) {
         accs.push(acc);
         table.push(vec![wl.into(), format!("{:.4}", acc)]);
     }

@@ -19,7 +19,7 @@ use crate::power::params::{FREQS_GHZ, F_STATIC_IDX, N_FREQ};
 use crate::stats::emit::CsvTable;
 use crate::stats::RunResult;
 use crate::util::geomean;
-use crate::workloads;
+use crate::workloads::{ResolvedWorkload, WorkloadSource};
 
 use super::ExpOptions;
 
@@ -84,13 +84,15 @@ impl Cell {
         }
     }
 
-    /// Content-address fingerprint of this cell.
-    pub fn key(&self, opts: &ExpOptions) -> RunKey {
+    /// Content-address fingerprint of this cell.  `workload_id` is the
+    /// *resolved* canonical id (catalog name or `trace:<content-hash>`),
+    /// not the user-facing spec — see [`WorkloadSource::resolve`].
+    fn key_for(&self, opts: &ExpOptions, workload_id: &str) -> RunKey {
         RunKey::new(
             &self.cfg,
             opts.scale.name(),
             opts.backend_name(),
-            &self.workload,
+            workload_id,
             self.policy,
             self.objective,
             self.mode,
@@ -99,35 +101,59 @@ impl Cell {
     }
 
     /// Execute the simulation this cell describes.
-    fn execute(self, use_pjrt: bool) -> RunResult {
-        let wl = workloads::build(&self.workload, self.waves);
+    fn execute(self, use_pjrt: bool, resolved: &ResolvedWorkload) -> RunResult {
+        let (launches, rounds) = resolved.lower(self.waves);
         let mut mgr = if use_pjrt {
-            DvfsManager::with_backend(
+            DvfsManager::from_launches_with_backend(
                 self.cfg,
-                &wl,
+                launches,
+                rounds,
                 self.policy,
                 self.objective,
                 crate::runtime::best_backend(None),
             )
         } else {
-            DvfsManager::new(self.cfg, &wl, self.policy, self.objective)
+            DvfsManager::from_launches(self.cfg, launches, rounds, self.policy, self.objective)
         };
         mgr.run(self.mode, &self.workload)
     }
 }
 
 /// Submit a batch of cells to the engine and collect the results in
-/// submission order.
-pub fn run_cells(opts: &ExpOptions, cells: Vec<Cell>) -> Vec<RunResult> {
+/// submission order.  Workload specs are resolved up front and
+/// memoized per spec (a trace file is read, parsed, and content-hashed
+/// once per batch, and all its cells share one in-memory copy); an
+/// unreadable or invalid spec fails the whole batch with a clear error
+/// before anything runs.
+///
+/// Trace-driven cells ignore the scale's waves multiplier: a trace
+/// records its absolute launch geometry, and the catalog multipliers
+/// are tuned to catalog base sizes.  Normalizing `waves` to 1.0 before
+/// the key is computed keeps the cell's [`RunKey`] identical across
+/// scale presets (and identical to a direct `trace replay`).
+pub fn run_cells(opts: &ExpOptions, cells: Vec<Cell>) -> anyhow::Result<Vec<RunResult>> {
+    use std::collections::HashMap;
+    use std::sync::Arc;
+
     let use_pjrt = opts.use_pjrt;
-    let batch: Vec<_> = cells
-        .into_iter()
-        .map(|cell| {
-            let key = cell.key(opts);
-            (key, move || cell.execute(use_pjrt))
-        })
-        .collect();
-    opts.engine.run_batch(opts.jobs.max(1), batch)
+    let mut resolved_by_spec: HashMap<String, Arc<ResolvedWorkload>> = HashMap::new();
+    let mut batch = Vec::with_capacity(cells.len());
+    for mut cell in cells {
+        let resolved = match resolved_by_spec.get(&cell.workload) {
+            Some(r) => r.clone(),
+            None => {
+                let r = Arc::new(WorkloadSource::parse(&cell.workload)?.resolve()?);
+                resolved_by_spec.insert(cell.workload.clone(), r.clone());
+                r
+            }
+        };
+        if resolved.trace().is_some() {
+            cell.waves = 1.0;
+        }
+        let key = cell.key_for(opts, &resolved.id);
+        batch.push((key, move || cell.execute(use_pjrt, &resolved)));
+    }
+    Ok(opts.engine.run_batch(opts.jobs.max(1), batch))
 }
 
 /// Run one (workload, policy, objective) configuration through the
@@ -139,7 +165,7 @@ pub fn run_design(
     objective: Objective,
     epoch_ns: f64,
     mode: RunMode,
-) -> RunResult {
+) -> anyhow::Result<RunResult> {
     run_design_scaled(opts, workload, policy, objective, epoch_ns, mode, 1.0)
 }
 
@@ -154,11 +180,11 @@ pub fn run_design_scaled(
     epoch_ns: f64,
     mode: RunMode,
     extra_waves: f64,
-) -> RunResult {
+) -> anyhow::Result<RunResult> {
     let cell = Cell::at(opts, workload, policy, objective, epoch_ns, mode, extra_waves);
-    run_cells(opts, vec![cell])
+    Ok(run_cells(opts, vec![cell])?
         .pop()
-        .expect("single-cell batch returns one result")
+        .expect("single-cell batch returns one result"))
 }
 
 fn completion(epoch_ns: f64) -> RunMode {
@@ -207,7 +233,7 @@ pub fn fig1a(opts: &ExpOptions) -> anyhow::Result<()> {
             }
         }
     }
-    let mut results = run_cells(opts, cells).into_iter();
+    let mut results = run_cells(opts, cells)?.into_iter();
 
     let mut table = CsvTable::new(&["epoch_us", "design", "ed2p_improvement_pct"]);
     for &epoch_ns in &epoch_lens {
@@ -268,7 +294,7 @@ pub fn fig1b(opts: &ExpOptions) -> anyhow::Result<()> {
             }
         }
     }
-    let mut results = run_cells(opts, cells).into_iter();
+    let mut results = run_cells(opts, cells)?.into_iter();
 
     let mut table = CsvTable::new(&["epoch_us", "design", "accuracy"]);
     for &epoch_ns in &epoch_lens {
@@ -333,7 +359,7 @@ pub fn fig14(opts: &ExpOptions) -> anyhow::Result<()> {
             ));
         }
     }
-    let mut results = run_cells(opts, cells).into_iter();
+    let mut results = run_cells(opts, cells)?.into_iter();
 
     let mut table = CsvTable::new(&["workload", "design", "accuracy"]);
     let mut per_design: Vec<(String, Vec<f64>)> = Vec::new();
@@ -398,7 +424,7 @@ pub fn fig15(opts: &ExpOptions) -> anyhow::Result<()> {
             ));
         }
     }
-    let mut results = run_cells(opts, cells).into_iter();
+    let mut results = run_cells(opts, cells)?.into_iter();
 
     let mut table = CsvTable::new(&["workload", "design", "norm_ed2p"]);
     let mut per_design: Vec<(String, Vec<f64>)> = Vec::new();
@@ -439,7 +465,7 @@ pub fn fig16(opts: &ExpOptions) -> anyhow::Result<()> {
             )
         })
         .collect();
-    let results = run_cells(opts, cells);
+    let results = run_cells(opts, cells)?;
 
     let mut header: Vec<String> = vec!["workload".into()];
     header.extend(FREQS_GHZ.iter().map(|f| format!("{f:.1}GHz")));
@@ -496,7 +522,7 @@ pub fn fig17(opts: &ExpOptions) -> anyhow::Result<()> {
             }
         }
     }
-    let mut results = run_cells(opts, cells).into_iter();
+    let mut results = run_cells(opts, cells)?.into_iter();
 
     let mut table = CsvTable::new(&["epoch_us", "design", "geomean_norm_edp"]);
     for &epoch_ns in &epoch_lens {
@@ -550,7 +576,7 @@ pub fn fig18a(opts: &ExpOptions) -> anyhow::Result<()> {
             }
         }
     }
-    let mut results = run_cells(opts, cells).into_iter();
+    let mut results = run_cells(opts, cells)?.into_iter();
 
     let mut table = CsvTable::new(&[
         "bound_pct",
@@ -605,7 +631,7 @@ pub fn ablation_table_size(opts: &ExpOptions) -> anyhow::Result<()> {
             ));
         }
     }
-    let mut results = run_cells(opts, cells).into_iter();
+    let mut results = run_cells(opts, cells)?.into_iter();
 
     let mut table = CsvTable::new(&["entries", "hit_rate", "accuracy"]);
     for &entries in &sizes {
@@ -651,7 +677,7 @@ pub fn ablation_alpha(opts: &ExpOptions) -> anyhow::Result<()> {
             ));
         }
     }
-    let mut results = run_cells(opts, cells).into_iter();
+    let mut results = run_cells(opts, cells)?.into_iter();
 
     let mut table = CsvTable::new(&["alpha", "accuracy"]);
     for &alpha in &alphas {
@@ -701,7 +727,7 @@ pub fn ablation_table_share(opts: &ExpOptions) -> anyhow::Result<()> {
             ));
         }
     }
-    let mut results = run_cells(opts, cells).into_iter();
+    let mut results = run_cells(opts, cells)?.into_iter();
 
     let mut table = CsvTable::new(&["cus_per_table", "accuracy"]);
     for &share in &shares {
@@ -762,7 +788,7 @@ pub fn fig18b(opts: &ExpOptions) -> anyhow::Result<()> {
             }
         }
     }
-    let mut results = run_cells(opts, cells).into_iter();
+    let mut results = run_cells(opts, cells)?.into_iter();
 
     let mut table = CsvTable::new(&["cus_per_domain", "design", "ed2p_improvement_pct"]);
     for &g in &grans {

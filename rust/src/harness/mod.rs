@@ -52,6 +52,12 @@ pub struct ExpOptions {
     /// Sweep engine shared by every experiment of this invocation
     /// (result cache + execution accounting).
     pub engine: Arc<Engine>,
+    /// Explicit workload set (`--workload`, repeatable): replaces the
+    /// scale's catalog subset in every experiment.  Accepts any
+    /// [`crate::workloads::WorkloadSource`] spec — catalog names,
+    /// `trace:<path>`, `synth:<seed>`.  (`&'static` because the CLI
+    /// leaks its handful of argv strings once per process.)
+    pub workloads_override: Vec<&'static str>,
 }
 
 impl Default for ExpOptions {
@@ -63,6 +69,7 @@ impl Default for ExpOptions {
             seed: 0,
             jobs: 1,
             engine: Arc::new(Engine::no_cache()),
+            workloads_override: Vec::new(),
         }
     }
 }
@@ -88,8 +95,12 @@ impl ExpOptions {
         c
     }
 
-    /// Workload subset for heavyweight sweeps.
+    /// Workload subset for heavyweight sweeps (or the `--workload`
+    /// override, verbatim, when one was given).
     pub fn workloads(&self) -> Vec<&'static str> {
+        if !self.workloads_override.is_empty() {
+            return self.workloads_override.clone();
+        }
         match self.scale {
             Scale::Quick => vec!["comd", "hpgmg", "xsbench", "hacc", "dgemm", "BwdBN"],
             _ => crate::workloads::names(),
@@ -98,6 +109,9 @@ impl ExpOptions {
 
     /// Smaller subset for epoch-length sweeps (each point is a full run).
     pub fn sweep_workloads(&self) -> Vec<&'static str> {
+        if !self.workloads_override.is_empty() {
+            return self.workloads_override.clone();
+        }
         match self.scale {
             Scale::Quick => vec!["comd", "xsbench", "hacc", "dgemm"],
             _ => vec![
@@ -233,5 +247,15 @@ mod tests {
     #[test]
     fn unknown_experiment_errors() {
         assert!(run_experiment("nope", &ExpOptions::default()).is_err());
+    }
+
+    #[test]
+    fn workload_override_replaces_both_subsets() {
+        let o = ExpOptions {
+            workloads_override: vec!["dgemm", "trace:/tmp/x.trace"],
+            ..Default::default()
+        };
+        assert_eq!(o.workloads(), vec!["dgemm", "trace:/tmp/x.trace"]);
+        assert_eq!(o.sweep_workloads(), o.workloads());
     }
 }

@@ -26,6 +26,9 @@
 //! * [`exec`] — the sweep-execution engine: job keys, the
 //!   content-addressed result cache, and the ordered worker pool that
 //!   make experiment grids parallel and incremental.
+//! * [`trace`] — wavefront instruction traces as first-class workloads:
+//!   a versioned text/binary format, simulator capture, accel-sim-style
+//!   ingest, and a seeded trace synthesizer.
 //! * [`harness`] — one experiment per paper figure/table (see DESIGN.md).
 
 // Style allowances for the simulator's index-heavy kernels (CI runs
@@ -42,6 +45,7 @@ pub mod predictors;
 pub mod runtime;
 pub mod sim;
 pub mod stats;
+pub mod trace;
 pub mod util;
 pub mod workloads;
 

@@ -3,19 +3,24 @@
 //! Subcommands (hand-rolled parser; offline environment has no clap):
 //!
 //! ```text
-//! pcstall simulate  --workload comd --policy pcstall [--objective ed2p]
+//! pcstall simulate  --workload <spec> --policy pcstall [--objective ed2p]
 //!                   [--epochs N | --completion] [--epoch-ns X]
 //!                   [--config file.toml] [--set k=v ...]
 //!                   [--backend native|pjrt] [--json out.json]
 //! pcstall run <id|all> [--quick|--full] [--out results/] [--pjrt]
-//!                      [--jobs N] [--no-cache]
+//!                      [--jobs N] [--no-cache] [--workload <spec> ...]
 //! pcstall experiment ...   (alias of `run`)
+//! pcstall trace record|replay|gen|info|ingest ...
+//! pcstall cache stats|clear [--dir d] [--max-age days] [--max-bytes MB]
 //! pcstall list
 //! pcstall config dump [--set k=v ...]
 //! pcstall table1
 //! ```
+//!
+//! A workload `<spec>` is a catalog name (`comd`), a trace file
+//! (`trace:path/to/file.trace`), or a synthesized trace (`synth:<seed>`).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -23,10 +28,12 @@ use anyhow::Result;
 use pcstall::config::SimConfig;
 use pcstall::dvfs::manager::{DvfsManager, Policy, RunMode};
 use pcstall::dvfs::objective::Objective;
+use pcstall::exec::cache::ResultCache;
 use pcstall::exec::{pool, Engine};
 use pcstall::harness::{all_experiments, run_experiment, ExpOptions, Scale};
 use pcstall::stats::emit::Json;
-use pcstall::workloads;
+use pcstall::trace::{capture_named, parse_accelsim, synthesize, Trace};
+use pcstall::workloads::{self, WorkloadSource};
 
 fn main() {
     if let Err(e) = run() {
@@ -41,6 +48,8 @@ fn run() -> Result<()> {
     match cmd {
         "simulate" => simulate(&args[1..]),
         "run" | "experiment" => experiment(&args[1..]),
+        "trace" => trace_cmd(&args[1..]),
+        "cache" => cache_cmd(&args[1..]),
         "list" => list(),
         "config" => config_cmd(&args[1..]),
         "table1" => run_experiment("table1", &ExpOptions::default()),
@@ -55,13 +64,26 @@ fn run() -> Result<()> {
 const HELP: &str = r#"pcstall — PC-based fine-grain DVFS for GPUs (paper reproduction)
 
 USAGE:
-  pcstall simulate --workload <name> --policy <p> [options]
+  pcstall simulate --workload <spec> --policy <p> [options]
   pcstall run <id|all> [--quick|--full] [--out dir] [--pjrt]
                        [--jobs N] [--no-cache] [--seed s]
+                       [--workload <spec> ...]
   pcstall experiment ...   (alias of `run`)
+  pcstall trace record <spec> [--out file] [--waves-scale x] [--binary]
+  pcstall trace replay <file> [simulate options]
+  pcstall trace gen [--seed s] [--out file] [--binary]
+  pcstall trace info <file>
+  pcstall trace ingest <accel-sim-file> [--out file] [--binary]
+  pcstall cache stats [--dir results/cache]
+  pcstall cache clear [--dir results/cache] [--max-age days] [--max-bytes MB]
   pcstall list
   pcstall config dump [--set k=v ...]
   pcstall table1
+
+WORKLOAD SPECS (accepted wherever a workload name is):
+  <name>                catalog workload from `pcstall list`
+  trace:<path>          instruction-trace file (text or binary encoding)
+  synth:<seed>          seeded synthesized trace workload
 
 RUN OPTIONS:
   --quick | --full      scale preset (default: 8 CUs, all workloads)
@@ -71,18 +93,30 @@ RUN OPTIONS:
                         content-addressed result cache (<out>/cache/)
   --pjrt                use the PJRT artifact backend when available
   --seed <s>            master workload seed
+  --workload <spec>     replace the experiment's workload set (repeatable)
 
-SIMULATE OPTIONS:
-  --workload <name>     one of `pcstall list` (required)
+SIMULATE / REPLAY OPTIONS:
+  --workload <spec>     workload spec (required for simulate)
   --policy <p>          stall|lead|crit|crisp|accreac|pcstall|accpc|oracle|static:<ghz>
   --objective <o>       edp|ed2p|energy@<pct>     (default ed2p)
   --epochs <n>          run exactly n epochs      (default: run to completion)
   --epoch-ns <x>        epoch duration override
-  --waves-scale <x>     workload length multiplier (default 0.1)
+  --waves-scale <x>     workload length multiplier
+                        (default 0.1 for catalog, 1.0 for traces)
   --config <file>       TOML config
   --set k=v             config override (repeatable)
   --backend native|pjrt compute backend            (default native)
   --json <file>         dump the run result as JSON
+
+TRACE COMMANDS:
+  record <spec>         capture a workload's executed stream to a file
+                        (default traces/<name>.trace; --binary for the
+                        length-prefixed binary encoding; --waves-scale
+                        is baked into the written geometry)
+  replay <file>         simulate a trace file (same options as simulate)
+  gen                   synthesize a randomized trace (--seed, default 1)
+  info <file>           print header, per-kernel stats, content hash
+  ingest <file>         lower an accel-sim-style kernel trace
 "#;
 
 /// Pull `--key value` / `--flag` options out of an arg list.
@@ -157,11 +191,17 @@ fn simulate(args: &[String]) -> Result<()> {
     let workload = o
         .take("--workload")
         .ok_or_else(|| anyhow::anyhow!("--workload is required"))?;
+    run_one(&workload, o)
+}
+
+/// Shared engine of `simulate` and `trace replay`: run one workload spec
+/// (catalog / trace file / synth seed) and print the result.
+fn run_one(spec: &str, mut o: Opts) -> Result<()> {
     let policy = Policy::parse(&o.take("--policy").unwrap_or_else(|| "pcstall".into()))?;
     let objective = parse_objective(&o.take("--objective").unwrap_or_else(|| "ed2p".into()))?;
     let epochs = o.take("--epochs").map(|s| s.parse::<u64>()).transpose()?;
     let epoch_ns = o.take("--epoch-ns").map(|s| s.parse::<f64>()).transpose()?;
-    let waves: f64 = o.take("--waves-scale").unwrap_or_else(|| "0.1".into()).parse()?;
+    let waves_flag = o.take("--waves-scale").map(|s| s.parse::<f64>()).transpose()?;
     let cfg_path = o.take("--config");
     let sets = o.take_all("--set");
     let backend = o.take("--backend").unwrap_or_else(|| "native".into());
@@ -169,7 +209,7 @@ fn simulate(args: &[String]) -> Result<()> {
     o.finish()?;
 
     let mut cfg = match cfg_path {
-        Some(p) => SimConfig::from_path(std::path::Path::new(&p))?,
+        Some(p) => SimConfig::from_path(Path::new(&p))?,
         None => {
             let mut c = SimConfig::default();
             c.gpu.n_cu = 8;
@@ -184,17 +224,21 @@ fn simulate(args: &[String]) -> Result<()> {
         cfg.dvfs.epoch_ns = e;
     }
 
-    anyhow::ensure!(
-        workloads::names().contains(&workload.as_str()),
-        "unknown workload '{workload}' (see `pcstall list`)"
-    );
-    let wl = workloads::build(&workload, waves);
+    let source = WorkloadSource::parse(spec)?;
+    // traces carry their recorded length; catalog runs default short
+    let waves = waves_flag.unwrap_or(match &source {
+        WorkloadSource::Catalog(_) => 0.1,
+        _ => 1.0,
+    });
+    let resolved = source.resolve()?;
+    let (launches, rounds) = resolved.lower(waves);
 
     let mut mgr = match backend.as_str() {
-        "native" => DvfsManager::new(cfg, &wl, policy, objective),
-        "pjrt" => DvfsManager::with_backend(
+        "native" => DvfsManager::from_launches(cfg, launches, rounds, policy, objective),
+        "pjrt" => DvfsManager::from_launches_with_backend(
             cfg,
-            &wl,
+            launches,
+            rounds,
             policy,
             objective,
             pcstall::runtime::best_backend(None),
@@ -208,7 +252,7 @@ fn simulate(args: &[String]) -> Result<()> {
         },
     };
     let t0 = std::time::Instant::now();
-    let r = mgr.run(mode, &workload);
+    let r = mgr.run(mode, &resolved.display);
     let dt = t0.elapsed();
 
     println!("workload   : {}", r.workload);
@@ -274,6 +318,13 @@ fn experiment(args: &[String]) -> Result<()> {
         Some(n) => n.parse::<usize>()?.max(1),
         None => pool::default_jobs(),
     };
+    // validate specs now for early errors; leak the handful of argv
+    // strings (once per process) to satisfy the harness's &'static set
+    for spec in o.take_all("--workload") {
+        WorkloadSource::parse(&spec)?;
+        opts.workloads_override
+            .push(&*Box::leak(spec.into_boxed_str()));
+    }
     let no_cache = o.take_flag("--no-cache");
     opts.engine = Arc::new(if no_cache {
         Engine::no_cache()
@@ -287,6 +338,199 @@ fn experiment(args: &[String]) -> Result<()> {
     println!("\n{}", opts.engine.summary(opts.jobs));
     println!("[experiment {id} done in {:.1?}]", t0.elapsed());
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// `pcstall trace ...`
+// ---------------------------------------------------------------------------
+
+fn trace_cmd(args: &[String]) -> Result<()> {
+    let verb = args.first().map(|s| s.as_str()).unwrap_or("");
+    match verb {
+        "record" => trace_record(&args[1..]),
+        "replay" => {
+            let file = args
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: pcstall trace replay <file> [options]"))?;
+            run_one(&format!("trace:{file}"), Opts::new(&args[2..]))
+        }
+        "gen" => trace_gen(&args[1..]),
+        "info" => {
+            let file = args
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: pcstall trace info <file>"))?;
+            trace_info(Path::new(file))
+        }
+        "ingest" => trace_ingest(&args[1..]),
+        _ => anyhow::bail!("usage: pcstall trace record|replay|gen|info|ingest ..."),
+    }
+}
+
+/// Default on-disk location for a captured/generated trace.
+fn default_trace_path(name: &str) -> PathBuf {
+    PathBuf::from("traces").join(format!("{name}.trace"))
+}
+
+fn save_and_report(trace: &Trace, out: Option<String>, binary: bool) -> Result<()> {
+    let path = out
+        .map(PathBuf::from)
+        .unwrap_or_else(|| default_trace_path(&trace.name));
+    trace.save(&path, binary)?;
+    let records: usize = trace.kernels.iter().map(|k| k.records.len()).sum();
+    println!(
+        "wrote {} ({} encoding, {} kernel(s), {} records, rounds {})",
+        path.display(),
+        if binary { "binary" } else { "text" },
+        trace.kernels.len(),
+        records,
+        trace.rounds,
+    );
+    println!("content hash: {}", trace.content_hash());
+    println!("replay with : pcstall trace replay {}", path.display());
+    Ok(())
+}
+
+fn trace_record(args: &[String]) -> Result<()> {
+    let spec = args
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: pcstall trace record <spec> [options]"))?;
+    let mut o = Opts::new(&args[1..]);
+    let out = o.take("--out");
+    let binary = o.take_flag("--binary");
+    let waves_flag = o.take("--waves-scale").map(|s| s.parse::<f64>()).transpose()?;
+    o.finish()?;
+
+    let trace = match WorkloadSource::parse(spec)? {
+        // same default length as `pcstall simulate`, so record → replay
+        // reproduces the default direct run
+        WorkloadSource::Catalog(name) => capture_named(&name, waves_flag.unwrap_or(0.1))?,
+        // for already-recorded geometry, --waves-scale is baked into the
+        // written file (e.g. down-scale a big trace for CI)
+        WorkloadSource::Synth(seed) => scale_trace(synthesize(seed), waves_flag),
+        // re-encode an existing file (text <-> binary conversion)
+        WorkloadSource::TraceFile(path) => scale_trace(Trace::load(&path)?, waves_flag),
+    };
+    save_and_report(&trace, out, binary)
+}
+
+/// Bake a waves multiplier into a trace's recorded launch geometry.
+fn scale_trace(mut t: Trace, waves: Option<f64>) -> Trace {
+    if let Some(w) = waves {
+        for k in &mut t.kernels {
+            k.waves_per_cu = ((k.waves_per_cu as f64 * w).round() as u64).max(1);
+        }
+    }
+    t
+}
+
+fn trace_gen(args: &[String]) -> Result<()> {
+    let mut o = Opts::new(args);
+    let seed: u64 = o.take("--seed").unwrap_or_else(|| "1".into()).parse()?;
+    let out = o.take("--out");
+    let binary = o.take_flag("--binary");
+    o.finish()?;
+    save_and_report(&synthesize(seed), out, binary)
+}
+
+fn trace_info(path: &Path) -> Result<()> {
+    let trace = Trace::load(path)?;
+    println!("trace      : {}", path.display());
+    println!("name       : {}", trace.name);
+    println!("source     : {}", trace.source);
+    println!("rounds     : {}", trace.rounds);
+    println!("content    : {}", trace.content_hash());
+    println!("kernels    : {}", trace.kernels.len());
+    for k in &trace.kernels {
+        let s = k.stats();
+        println!(
+            "  [{}] {:<20} waves/cu {:<5} static {:<6} dyn/wave {:<9} \
+             valu {} salu {} ld {} st {} wait {} bar {} loop {}",
+            k.kernel_id,
+            k.name,
+            k.waves_per_cu,
+            s.static_records,
+            s.dyn_per_wave,
+            s.valu,
+            s.salu,
+            s.loads,
+            s.stores,
+            s.waitcnts,
+            s.barriers,
+            s.loops,
+        );
+    }
+    println!("dyn instr/CU (all rounds): {:.3e}", trace.dyn_instrs_per_cu() as f64);
+    Ok(())
+}
+
+fn trace_ingest(args: &[String]) -> Result<()> {
+    let file = args
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: pcstall trace ingest <accel-sim-file> [options]"))?;
+    let mut o = Opts::new(&args[1..]);
+    let out = o.take("--out");
+    let binary = o.take_flag("--binary");
+    o.finish()?;
+    let text = std::fs::read_to_string(file)
+        .map_err(|e| anyhow::anyhow!("reading {file}: {e}"))?;
+    let ingested = parse_accelsim(&text, file)
+        .map_err(|e| anyhow::anyhow!("ingesting {file}: {e}"))?;
+    for w in &ingested.warnings {
+        eprintln!("warning: {w}");
+    }
+    save_and_report(&ingested.trace, out, binary)
+}
+
+// ---------------------------------------------------------------------------
+// `pcstall cache ...`
+// ---------------------------------------------------------------------------
+
+fn cache_cmd(args: &[String]) -> Result<()> {
+    let verb = args.first().map(|s| s.as_str()).unwrap_or("");
+    let mut o = Opts::new(args.get(1..).unwrap_or(&[]));
+    let dir = PathBuf::from(o.take("--dir").unwrap_or_else(|| "results/cache".into()));
+    match verb {
+        "stats" => {
+            o.finish()?;
+            let cache = ResultCache::at(dir.clone());
+            let s = cache.disk_stats();
+            println!("cache dir  : {}", dir.display());
+            println!("entries    : {} ({} valid, {} corrupt)", s.entries, s.valid, s.corrupt);
+            println!("bytes      : {:.2} MB", s.bytes as f64 / (1 << 20) as f64);
+            if s.entries > 0 {
+                println!(
+                    "entry age  : {:.1} h oldest, {:.1} h newest",
+                    s.oldest_secs as f64 / 3600.0,
+                    s.newest_secs as f64 / 3600.0
+                );
+            }
+            println!("(hit/miss accounting is per-invocation: see the [exec] summary line)");
+            Ok(())
+        }
+        "clear" => {
+            let max_age_days = o.take("--max-age").map(|s| s.parse::<f64>()).transpose()?;
+            let max_mb = o.take("--max-bytes").map(|s| s.parse::<f64>()).transpose()?;
+            o.finish()?;
+            let cache = ResultCache::at(dir.clone());
+            let (age, bytes) = match (max_age_days, max_mb) {
+                // no bound given: clear everything
+                (None, None) => (Some(0), None),
+                (a, b) => (
+                    a.map(|d| (d * 86_400.0).max(0.0) as u64),
+                    b.map(|m| (m * (1 << 20) as f64).max(0.0) as u64),
+                ),
+            };
+            let (removed, freed) = cache.gc(age, bytes);
+            println!(
+                "removed {removed} entr{} ({:.2} MB) from {}",
+                if removed == 1 { "y" } else { "ies" },
+                freed as f64 / (1 << 20) as f64,
+                dir.display()
+            );
+            Ok(())
+        }
+        _ => anyhow::bail!("usage: pcstall cache stats|clear [--dir d] [--max-age days] [--max-bytes MB]"),
+    }
 }
 
 fn list() -> Result<()> {
@@ -303,6 +547,7 @@ fn list() -> Result<()> {
     for e in all_experiments() {
         println!("  {e}");
     }
+    println!("\nworkload specs: any name above, trace:<path>, synth:<seed>");
     Ok(())
 }
 

@@ -123,6 +123,18 @@ impl Gpu {
         self.kernel_cursor += 1;
     }
 
+    /// The loaded kernel queue (the trace-capture hook reads this).
+    pub fn loaded_kernels(&self) -> &[KernelLaunch] {
+        &self.kernels
+    }
+
+    /// Rounds remaining of the kernel queue.  Equals the loaded round
+    /// count until the queue first wraps, so trace capture should read
+    /// it before stepping epochs.
+    pub fn loaded_rounds(&self) -> u32 {
+        self.rounds_left
+    }
+
     /// True when every queued kernel round has completed.
     pub fn workload_done(&self) -> bool {
         self.current_kernel.is_none() && self.cus.iter().all(|c| c.kernel_done())

@@ -1,0 +1,138 @@
+//! Record a workload's executed instruction stream to a [`Trace`].
+//!
+//! The simulator's dynamic behaviour is a pure function of the program
+//! stream plus launch geometry: memory addresses and loop-trip
+//! divergence are generated *statelessly* from `(wavefront id, pc,
+//! access counter)` hashes (see [`crate::util::mix`]), so the per-kernel
+//! records with their loop/barrier markers — together with waves-per-CU
+//! and the round count — are a complete record of everything the GPU
+//! will execute.  Replaying a capture therefore reproduces the original
+//! run bit-for-bit (epoch instruction counts, energy, ED²P), which
+//! `tests/trace_roundtrip.rs` asserts.
+//!
+//! Two capture points are provided: [`capture_workload`] records a
+//! workload spec as dispatched, and [`capture_gpu`] hooks a live
+//! simulator and records whatever kernel queue is currently loaded.
+
+use crate::sim::gpu::Gpu;
+use crate::trace::format::{sanitize_name, Trace, TraceKernel};
+use crate::workloads::WorkloadSpec;
+
+/// Record a workload spec's full dispatch stream.
+pub fn capture_workload(spec: &WorkloadSpec) -> Trace {
+    let kernels = spec
+        .kernels
+        .iter()
+        .enumerate()
+        .map(|(i, k)| {
+            let prog = k.lower(i as u32);
+            TraceKernel {
+                kernel_id: i as u32,
+                name: sanitize_name(&k.name),
+                waves_per_cu: k.waves_per_cu,
+                records: prog.instrs.iter().map(|ins| ins.op).collect(),
+            }
+        })
+        .collect();
+    Trace {
+        name: sanitize_name(&spec.name),
+        source: format!("capture:{}", spec.name),
+        rounds: spec.rounds,
+        kernels,
+    }
+}
+
+/// Record the kernel queue loaded into a live simulator.  Call before
+/// stepping epochs: the round counter reflects rounds *remaining*.
+pub fn capture_gpu(gpu: &Gpu, name: &str) -> Trace {
+    let kernels = gpu
+        .loaded_kernels()
+        .iter()
+        .map(|launch| TraceKernel {
+            kernel_id: launch.program.kernel_id,
+            name: sanitize_name(&launch.program.name),
+            waves_per_cu: launch.waves_per_cu,
+            records: launch.program.instrs.iter().map(|ins| ins.op).collect(),
+        })
+        .collect();
+    let name = sanitize_name(name);
+    Trace {
+        source: format!("capture:{name}"),
+        name,
+        rounds: gpu.loaded_rounds().max(1),
+        kernels,
+    }
+}
+
+/// Record a catalog workload by name at a given length multiplier.
+pub fn capture_named(name: &str, waves: f64) -> anyhow::Result<Trace> {
+    anyhow::ensure!(
+        crate::workloads::names().iter().any(|n| *n == name),
+        "unknown workload '{name}' (see `pcstall list`)"
+    );
+    let mut t = capture_workload(&crate::workloads::build(name, waves));
+    t.source = format!("capture:{name}@waves={waves}");
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::workloads;
+
+    #[test]
+    fn every_catalog_workload_captures_to_a_valid_trace() {
+        for name in workloads::names() {
+            let t = capture_workload(&workloads::build(name, 0.1));
+            t.validate()
+                .unwrap_or_else(|e| panic!("capture of {name} invalid: {e}"));
+            assert_eq!(t.name, name);
+        }
+    }
+
+    #[test]
+    fn capture_preserves_programs_exactly() {
+        let spec = workloads::build("dgemm", 0.1);
+        let t = capture_workload(&spec);
+        let direct = spec.launches();
+        let replay = t.launches_scaled(1.0);
+        assert_eq!(t.rounds, spec.rounds);
+        assert_eq!(direct.len(), replay.len());
+        for (d, r) in direct.iter().zip(&replay) {
+            assert_eq!(d.waves_per_cu, r.waves_per_cu);
+            assert_eq!(*d.program, *r.program);
+        }
+    }
+
+    #[test]
+    fn capture_gpu_matches_capture_workload() {
+        let spec = workloads::build("comd", 0.1);
+        let mut gpu = Gpu::new(SimConfig::small());
+        gpu.load_workload(spec.launches(), spec.rounds);
+        let live = capture_gpu(&gpu, "comd");
+        let offline = capture_workload(&spec);
+        assert_eq!(live.kernels, offline.kernels);
+        assert_eq!(live.rounds, offline.rounds);
+    }
+
+    #[test]
+    fn capture_dyn_count_matches_spec_accounting() {
+        let spec = workloads::build("hacc", 1.0);
+        let t = capture_workload(&spec);
+        for (k, tk) in spec.kernels.iter().zip(&t.kernels) {
+            assert_eq!(
+                crate::trace::format::dyn_instrs_per_wave(&tk.records) as usize,
+                k.dyn_instrs_per_wave(),
+                "kernel {}",
+                tk.name
+            );
+        }
+    }
+
+    #[test]
+    fn capture_named_rejects_unknown() {
+        assert!(capture_named("nope", 1.0).is_err());
+        assert!(capture_named("comd", 0.1).is_ok());
+    }
+}

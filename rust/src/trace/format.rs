@@ -1,0 +1,1328 @@
+//! Versioned wavefront instruction-trace format.
+//!
+//! A trace is a complete, self-contained description of a workload's
+//! executed instruction streams: per-kernel records (PC, op kind,
+//! latency/pattern/fan, loop and barrier markers) plus the launch
+//! geometry (waves per CU, kernel rounds).  Because the simulator's
+//! dynamic behaviour is a pure function of this information — addresses
+//! and loop-trip divergence are generated statelessly from
+//! `(wavefront id, pc, counter)` hashes — replaying a trace reproduces
+//! the recorded run bit-for-bit.
+//!
+//! Two on-disk encodings share one in-memory model:
+//!
+//! * a **text form** (`#pcstall-trace v1` header) for hand-authoring and
+//!   diffing — one record per line, `#` comments, optional explicit PCs;
+//! * a **binary form** (`PCSTRCv1` magic) with length-prefixed strings
+//!   and record vectors, for scale.
+//!
+//! [`Trace::decode`] sniffs the magic and accepts either.  All decode
+//! paths validate structurally (loop nesting, backward targets,
+//! terminating `endpgm`, bounded outstanding-memory runs) and fail with
+//! a positioned error — never a panic — on corrupt or truncated input.
+
+use std::fmt::Write as _;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Context as _;
+
+use crate::exec::key::fnv1a128_hex;
+use crate::sim::gpu::KernelLaunch;
+use crate::sim::isa::{Instr, Op, Pattern, Program, MAX_LOOP_DEPTH};
+
+/// Bump when the record encoding or its simulator semantics change.
+pub const TRACE_FORMAT_VERSION: u32 = 1;
+
+/// First line of the text encoding.
+pub const TEXT_HEADER: &str = "#pcstall-trace v1";
+
+/// Magic prefix of the binary encoding.
+pub const BIN_MAGIC: &[u8; 8] = b"PCSTRCv1";
+
+/// Sanity caps: decode fails (rather than allocating absurdly) past these.
+pub const MAX_KERNELS: usize = 4096;
+pub const MAX_RECORDS_PER_KERNEL: usize = 1 << 20;
+const MAX_NAME_LEN: usize = 256;
+
+/// Maximum memory ops allowed without an intervening `s_waitcnt`: the
+/// per-wavefront outstanding counters are `u8`, so an unbounded run of
+/// loads could overflow them mid-simulation.
+pub const MAX_MEM_RUN: usize = 64;
+
+/// One kernel's recorded stream.  A record's PC is its index; the stream
+/// must terminate with [`Op::EndPgm`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceKernel {
+    pub kernel_id: u32,
+    pub name: String,
+    pub waves_per_cu: u64,
+    pub records: Vec<Op>,
+}
+
+/// A trace: named kernel streams cycled `rounds` times.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub name: String,
+    /// Provenance tag: `capture:<workload>`, `synth:seed=<s>`,
+    /// `ingest:<file>`, or `hand`.
+    pub source: String,
+    pub rounds: u32,
+    pub kernels: Vec<TraceKernel>,
+}
+
+/// Aggregate shape of one kernel stream (`pcstall trace info`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KernelStats {
+    pub static_records: usize,
+    /// Dynamic instructions per wavefront at mean loop trip counts.
+    pub dyn_per_wave: u64,
+    pub valu: usize,
+    pub salu: usize,
+    pub loads: usize,
+    pub stores: usize,
+    pub waitcnts: usize,
+    pub barriers: usize,
+    pub loops: usize,
+}
+
+impl TraceKernel {
+    /// Reconstruct the executable [`Program`] this stream describes.
+    pub fn to_program(&self) -> Program {
+        Program {
+            kernel_id: self.kernel_id,
+            name: self.name.clone(),
+            instrs: self.records.iter().map(|&op| Instr::from(op)).collect(),
+        }
+    }
+
+    /// Structural validation: program-level checks plus the trace-specific
+    /// outstanding-memory bound.
+    pub fn validate(&self) -> Result<(), String> {
+        check_name(&self.name).map_err(|e| format!("kernel {}: {e}", self.kernel_id))?;
+        if self.waves_per_cu == 0 {
+            return Err(format!("kernel {}: waves_per_cu must be >= 1", self.name));
+        }
+        if self.records.len() > MAX_RECORDS_PER_KERNEL {
+            return Err(format!(
+                "kernel {}: {} records exceeds the {} cap",
+                self.name,
+                self.records.len(),
+                MAX_RECORDS_PER_KERNEL
+            ));
+        }
+        self.to_program()
+            .validate()
+            .map_err(|e| format!("kernel {}: {e}", self.name))?;
+        check_loops(&self.records).map_err(|e| format!("kernel {}: {e}", self.name))?;
+        check_mem_runs(&self.records).map_err(|e| format!("kernel {}: {e}", self.name))
+    }
+
+    pub fn stats(&self) -> KernelStats {
+        let mut s = KernelStats {
+            static_records: self.records.len(),
+            dyn_per_wave: dyn_instrs_per_wave(&self.records),
+            ..KernelStats::default()
+        };
+        for op in &self.records {
+            match op {
+                Op::VAlu { .. } => s.valu += 1,
+                Op::SAlu => s.salu += 1,
+                Op::Load { .. } => s.loads += 1,
+                Op::Store { .. } => s.stores += 1,
+                Op::WaitCnt { .. } => s.waitcnts += 1,
+                Op::Barrier => s.barriers += 1,
+                Op::LoopBegin { .. } => s.loops += 1,
+                Op::LoopEnd { .. } | Op::EndPgm => {}
+            }
+        }
+        s
+    }
+}
+
+impl Trace {
+    /// Whole-trace validation (applied by every decode path).
+    pub fn validate(&self) -> Result<(), String> {
+        check_name(&self.name).map_err(|e| format!("trace name: {e}"))?;
+        check_source(&self.source)?;
+        if self.rounds == 0 {
+            return Err("rounds must be >= 1".into());
+        }
+        if self.kernels.is_empty() {
+            return Err("trace has no kernels".into());
+        }
+        if self.kernels.len() > MAX_KERNELS {
+            return Err(format!(
+                "{} kernels exceeds the {} cap",
+                self.kernels.len(),
+                MAX_KERNELS
+            ));
+        }
+        for k in &self.kernels {
+            k.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Lower to the launch list the simulator consumes, scaling each
+    /// kernel's waves-per-CU by `waves` (the workload-length knob the
+    /// catalog generators expose).  The trace must already be validated.
+    pub fn launches_scaled(&self, waves: f64) -> Vec<KernelLaunch> {
+        self.kernels
+            .iter()
+            .map(|k| KernelLaunch {
+                program: Arc::new(k.to_program()),
+                waves_per_cu: ((k.waves_per_cu as f64 * waves).round() as u64).max(1),
+            })
+            .collect()
+    }
+
+    /// Content hash (32 hex chars) over the canonical text rendering
+    /// *minus the provenance tag* — stable across text/binary
+    /// re-encodings and across where a stream was recorded or ingested
+    /// from, changed by any semantic edit (records, geometry, rounds,
+    /// name).  This is what [`crate::exec::key::RunKey`] fingerprints,
+    /// so semantically identical traces share one cache identity.
+    pub fn content_hash(&self) -> String {
+        fnv1a128_hex(self.render_text(false).as_bytes())
+    }
+
+    /// Total dynamic instructions per CU at mean trips (info output).
+    pub fn dyn_instrs_per_cu(&self) -> u64 {
+        let per_round: u64 = self
+            .kernels
+            .iter()
+            .map(|k| dyn_instrs_per_wave(&k.records).saturating_mul(k.waves_per_cu))
+            .fold(0u64, u64::saturating_add);
+        per_round.saturating_mul(self.rounds as u64)
+    }
+
+    // ---------------- text encoding ----------------
+
+    /// Canonical text rendering.
+    pub fn to_text(&self) -> String {
+        self.render_text(true)
+    }
+
+    /// `to_text` with the provenance line optional: the content-hash
+    /// preimage omits it so provenance never splits cache identity.
+    fn render_text(&self, include_source: bool) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{TEXT_HEADER}");
+        let _ = writeln!(out, "name {}", self.name);
+        if include_source {
+            let _ = writeln!(out, "source {}", self.source);
+        }
+        let _ = writeln!(out, "rounds {}", self.rounds);
+        for k in &self.kernels {
+            let _ = writeln!(out, "kernel {} {} {}", k.kernel_id, k.name, k.waves_per_cu);
+            for (pc, op) in k.records.iter().enumerate() {
+                let _ = writeln!(out, "  {pc} {}", render_op(op));
+            }
+            let _ = writeln!(out, "end");
+        }
+        out
+    }
+
+    /// Parse the text encoding.  Errors carry 1-based line numbers.
+    pub fn parse_text(text: &str) -> Result<Trace, String> {
+        let mut lines = text.lines().enumerate();
+        // header: first non-blank raw line, before comment stripping
+        let header = loop {
+            match lines.next() {
+                Some((_, l)) if l.trim().is_empty() => continue,
+                Some((_, l)) => break l.trim().to_string(),
+                None => return Err("empty trace file".into()),
+            }
+        };
+        if header != TEXT_HEADER {
+            return Err(format!(
+                "bad header '{header}' (expected '{TEXT_HEADER}')"
+            ));
+        }
+
+        let mut name: Option<String> = None;
+        let mut source: Option<String> = None;
+        let mut rounds: Option<u32> = None;
+        let mut kernels: Vec<TraceKernel> = Vec::new();
+        // (kernel under construction)
+        let mut cur: Option<TraceKernel> = None;
+
+        for (i, raw) in lines {
+            let n = i + 1; // 1-based for messages
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            if cur.is_none() {
+                match toks[0] {
+                    "name" => {
+                        let v = toks
+                            .get(1)
+                            .ok_or_else(|| format!("line {n}: 'name' needs a value"))?;
+                        if name.replace(v.to_string()).is_some() {
+                            return Err(format!("line {n}: duplicate 'name'"));
+                        }
+                    }
+                    "source" => {
+                        let v = line["source".len()..].trim().to_string();
+                        if source.replace(v).is_some() {
+                            return Err(format!("line {n}: duplicate 'source'"));
+                        }
+                    }
+                    "rounds" => {
+                        let v = parse_int::<u32>(toks.get(1).copied(), "rounds", n)?;
+                        if rounds.replace(v).is_some() {
+                            return Err(format!("line {n}: duplicate 'rounds'"));
+                        }
+                    }
+                    "kernel" => {
+                        if toks.len() != 4 {
+                            return Err(format!(
+                                "line {n}: expected 'kernel <id> <name> <waves_per_cu>'"
+                            ));
+                        }
+                        cur = Some(TraceKernel {
+                            kernel_id: parse_int::<u32>(Some(toks[1]), "kernel id", n)?,
+                            name: toks[2].to_string(),
+                            waves_per_cu: parse_int::<u64>(Some(toks[3]), "waves_per_cu", n)?,
+                            records: Vec::new(),
+                        });
+                    }
+                    other => {
+                        return Err(format!(
+                            "line {n}: unexpected '{other}' outside a kernel block"
+                        ));
+                    }
+                }
+            } else if toks[0] == "end" {
+                kernels.push(cur.take().expect("kernel block open"));
+            } else {
+                let k = cur.as_mut().expect("kernel block open");
+                // record line: optional leading explicit PC
+                let mut toks = toks.as_slice();
+                if let Ok(pc) = toks[0].parse::<u32>() {
+                    if pc as usize != k.records.len() {
+                        return Err(format!(
+                            "line {n}: pc {pc} out of order (expected {})",
+                            k.records.len()
+                        ));
+                    }
+                    toks = &toks[1..];
+                    if toks.is_empty() {
+                        return Err(format!("line {n}: pc with no instruction"));
+                    }
+                }
+                if k.records.len() >= MAX_RECORDS_PER_KERNEL {
+                    return Err(format!(
+                        "line {n}: kernel exceeds {MAX_RECORDS_PER_KERNEL} records"
+                    ));
+                }
+                k.records.push(parse_op(toks, n)?);
+            }
+        }
+        if cur.is_some() {
+            return Err("unterminated kernel block (missing 'end')".into());
+        }
+        let t = Trace {
+            name: name.ok_or("missing 'name' line")?,
+            source: source.unwrap_or_else(|| "hand".into()),
+            rounds: rounds.ok_or("missing 'rounds' line")?,
+            kernels,
+        };
+        t.validate()?;
+        Ok(t)
+    }
+
+    // ---------------- binary encoding ----------------
+
+    /// Length-prefixed binary rendering (`PCSTRCv1` magic, little-endian).
+    pub fn to_binary(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(64 + self.kernels.len() * 64);
+        b.extend_from_slice(BIN_MAGIC);
+        put_u32(&mut b, TRACE_FORMAT_VERSION);
+        put_str(&mut b, &self.name);
+        put_str(&mut b, &self.source);
+        put_u32(&mut b, self.rounds);
+        put_u32(&mut b, self.kernels.len() as u32);
+        for k in &self.kernels {
+            put_u32(&mut b, k.kernel_id);
+            put_str(&mut b, &k.name);
+            put_u64(&mut b, k.waves_per_cu);
+            put_u32(&mut b, k.records.len() as u32);
+            for op in &k.records {
+                put_op(&mut b, op);
+            }
+        }
+        b
+    }
+
+    /// Parse the binary encoding.  Errors carry byte offsets.
+    pub fn parse_binary(bytes: &[u8]) -> Result<Trace, String> {
+        let mut c = Cursor::new(bytes);
+        let magic = c.take(BIN_MAGIC.len())?;
+        if magic != BIN_MAGIC {
+            return Err("bad magic (not a pcstall binary trace)".into());
+        }
+        let version = c.u32()?;
+        if version != TRACE_FORMAT_VERSION {
+            return Err(format!(
+                "unsupported trace format version {version} (this build reads v{TRACE_FORMAT_VERSION})"
+            ));
+        }
+        let name = c.str()?;
+        let source = c.str()?;
+        let rounds = c.u32()?;
+        let n_kernels = c.u32()? as usize;
+        if n_kernels > MAX_KERNELS {
+            return Err(format!("{n_kernels} kernels exceeds the {MAX_KERNELS} cap"));
+        }
+        let mut kernels = Vec::with_capacity(n_kernels);
+        for _ in 0..n_kernels {
+            let kernel_id = c.u32()?;
+            let kname = c.str()?;
+            let waves_per_cu = c.u64()?;
+            let n_records = c.u32()? as usize;
+            if n_records > MAX_RECORDS_PER_KERNEL {
+                return Err(format!(
+                    "kernel {kname}: {n_records} records exceeds the {MAX_RECORDS_PER_KERNEL} cap"
+                ));
+            }
+            let mut records = Vec::with_capacity(n_records);
+            for _ in 0..n_records {
+                records.push(take_op(&mut c)?);
+            }
+            kernels.push(TraceKernel {
+                kernel_id,
+                name: kname,
+                waves_per_cu,
+                records,
+            });
+        }
+        if c.remaining() != 0 {
+            return Err(format!("{} trailing bytes after trace body", c.remaining()));
+        }
+        let t = Trace {
+            name,
+            source,
+            rounds,
+            kernels,
+        };
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// Decode either encoding (sniffs the binary magic).
+    pub fn decode(bytes: &[u8]) -> Result<Trace, String> {
+        if bytes.starts_with(BIN_MAGIC) {
+            Self::parse_binary(bytes)
+        } else {
+            let text = std::str::from_utf8(bytes)
+                .map_err(|_| "not a pcstall trace: no binary magic and not UTF-8 text".to_string())?;
+            Self::parse_text(text)
+        }
+    }
+
+    /// Load from disk with path-qualified errors.
+    pub fn load(path: &Path) -> anyhow::Result<Trace> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        Self::decode(&bytes)
+            .map_err(|e| anyhow::anyhow!("invalid trace {}: {e}", path.display()))
+    }
+
+    /// Save in the chosen encoding (directories created as needed).
+    pub fn save(&self, path: &Path, binary: bool) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let bytes = if binary {
+            self.to_binary()
+        } else {
+            self.to_text().into_bytes()
+        };
+        std::fs::write(path, bytes)
+            .with_context(|| format!("writing trace {}", path.display()))
+    }
+}
+
+/// Names travel through the whitespace-tokenized text form, so they must
+/// be single printable-ASCII tokens.
+fn check_name(name: &str) -> Result<(), String> {
+    if name.is_empty() || name.len() > MAX_NAME_LEN {
+        return Err(format!("name must be 1..={MAX_NAME_LEN} chars"));
+    }
+    if !name.bytes().all(|b| b.is_ascii_graphic() && b != b'#') {
+        return Err(format!(
+            "name '{name}' has characters outside printable ASCII (or '#')"
+        ));
+    }
+    Ok(())
+}
+
+/// Replace characters a trace name cannot carry (ingest of mangled
+/// symbol names, etc.).
+pub fn sanitize_name(name: &str) -> String {
+    let mut s: String = name
+        .chars()
+        .map(|c| {
+            if c.is_ascii_graphic() && c != '#' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect();
+    if s.is_empty() {
+        s.push('k');
+    }
+    s.truncate(MAX_NAME_LEN);
+    s
+}
+
+/// Cap for the provenance tag — comfortably under the binary string
+/// cap so both encodings round-trip it unmodified.
+const MAX_SOURCE_LEN: usize = 1024;
+
+/// The `source` tag rides the text form as the rest of its line, so it
+/// may contain spaces — but '#' (comment), newlines / control chars
+/// (line structure), and over-cap lengths would change the canonical
+/// text the content hash is computed over, or break round-tripping.
+fn check_source(source: &str) -> Result<(), String> {
+    if source.len() > MAX_SOURCE_LEN {
+        return Err(format!(
+            "source tag exceeds {MAX_SOURCE_LEN} bytes"
+        ));
+    }
+    if !source.bytes().all(|b| (b.is_ascii_graphic() || b == b' ') && b != b'#') {
+        return Err(
+            "source tag has characters outside printable ASCII (or contains '#')".into(),
+        );
+    }
+    if source.trim() != source {
+        // the text parser trims the rest-of-line value, so padding
+        // would not survive a round trip (and would shift the hash)
+        return Err("source tag has leading/trailing whitespace".into());
+    }
+    Ok(())
+}
+
+/// Make an arbitrary label (e.g. an ingest file path) a legal `source`
+/// tag: bad characters become '_', over-cap input is truncated.
+pub fn sanitize_source(source: &str) -> String {
+    let mut s: String = source
+        .chars()
+        .map(|c| {
+            if (c.is_ascii_graphic() || c == ' ') && c != '#' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect();
+    s.truncate(MAX_SOURCE_LEN);
+    s.trim().to_string()
+}
+
+/// Dynamic instructions one wavefront executes at mean trip counts.
+pub fn dyn_instrs_per_wave(records: &[Op]) -> u64 {
+    let mut mult: u128 = 1;
+    let mut stack: Vec<u128> = Vec::new();
+    let mut total: u128 = 0;
+    for op in records {
+        match *op {
+            Op::LoopBegin { trips, .. } => {
+                total += mult;
+                stack.push(mult);
+                mult = mult.saturating_mul(trips.max(1) as u128);
+            }
+            Op::LoopEnd { .. } => {
+                total += mult;
+                mult = stack.pop().unwrap_or(1);
+            }
+            _ => total += mult,
+        }
+    }
+    total.min(u64::MAX as u128) as u64
+}
+
+/// Reject malformed loop structure the simulator only catches with a
+/// debug assertion: every `LoopEnd` at depth `d` must be preceded by a
+/// still-armed `LoopBegin` at `d`, and its backedge must jump past that
+/// `LoopBegin` (the builder convention: target = begin-pc + 1).
+/// Execution is linear apart from these backedges, so a linear
+/// arm/consume scan mirrors the runtime state exactly.
+fn check_loops(records: &[Op]) -> Result<(), String> {
+    let mut armed_at: [Option<usize>; MAX_LOOP_DEPTH] = [None; MAX_LOOP_DEPTH];
+    for (pc, op) in records.iter().enumerate() {
+        match *op {
+            Op::LoopBegin { depth, .. } => {
+                let d = depth as usize; // bound already checked by Program::validate
+                if armed_at[d].is_some() {
+                    return Err(format!(
+                        "pc {pc}: LoopBegin at depth {depth} while that depth is already active"
+                    ));
+                }
+                armed_at[d] = Some(pc);
+            }
+            Op::LoopEnd { depth, target } => {
+                let d = depth as usize;
+                let Some(begin) = armed_at[d].take() else {
+                    return Err(format!(
+                        "pc {pc}: LoopEnd at depth {depth} without a matching LoopBegin"
+                    ));
+                };
+                if (target as usize) <= begin {
+                    return Err(format!(
+                        "pc {pc}: loop target {target} jumps before its LoopBegin at pc {begin}"
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+/// Reject streams that could overflow the u8 outstanding-memory counters:
+/// long runs without a *draining* wait, and loop bodies that issue
+/// memory but never drain (outstanding ops accumulate across trips).
+///
+/// A `WaitCnt { max }` only guarantees outstanding <= `max` afterwards,
+/// so the scan clamps the running bound to `max` rather than resetting
+/// it — `waitcnt 255` never blocks and therefore drains nothing.  With
+/// both rules the worst in-flight count is ~2·[`MAX_MEM_RUN`], well
+/// under the u8 cap of 255.
+fn check_mem_runs(records: &[Op]) -> Result<(), String> {
+    let mut run = 0usize;
+    for (pc, op) in records.iter().enumerate() {
+        match *op {
+            Op::Load { .. } | Op::Store { .. } => {
+                run += 1;
+                if run > MAX_MEM_RUN {
+                    return Err(format!(
+                        "pc {pc}: more than {MAX_MEM_RUN} memory ops without a draining \
+                         s_waitcnt (outstanding counters would overflow)"
+                    ));
+                }
+            }
+            Op::WaitCnt { max } => run = run.min(max as usize),
+            Op::LoopEnd { target, .. } => {
+                let body = &records[target as usize..pc];
+                let mem = body
+                    .iter()
+                    .any(|o| matches!(o, Op::Load { .. } | Op::Store { .. }));
+                let drains = body
+                    .iter()
+                    .any(|o| matches!(o, Op::WaitCnt { max } if (*max as usize) <= MAX_MEM_RUN));
+                if mem && !drains {
+                    return Err(format!(
+                        "pc {pc}: loop body issues memory but contains no s_waitcnt \
+                         with max <= {MAX_MEM_RUN}"
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Text op codec
+// ---------------------------------------------------------------------------
+
+fn render_pattern(p: &Pattern) -> String {
+    match p {
+        Pattern::Strided {
+            region,
+            stride,
+            working_set,
+        } => format!("strided {region} {stride} {working_set}"),
+        Pattern::Random {
+            region,
+            working_set,
+        } => format!("random {region} {working_set}"),
+    }
+}
+
+fn render_op(op: &Op) -> String {
+    match *op {
+        Op::VAlu { cycles } => format!("valu {cycles}"),
+        Op::SAlu => "salu".into(),
+        Op::Load { pattern, fan } => format!("load {} {fan}", render_pattern(&pattern)),
+        Op::Store { pattern, fan } => format!("store {} {fan}", render_pattern(&pattern)),
+        Op::WaitCnt { max } => format!("waitcnt {max}"),
+        Op::Barrier => "barrier".into(),
+        Op::LoopBegin {
+            depth,
+            trips,
+            divergence,
+        } => format!("loop {depth} {trips} {divergence}"),
+        Op::LoopEnd { depth, target } => format!("endloop {depth} {target}"),
+        Op::EndPgm => "endpgm".into(),
+    }
+}
+
+fn parse_int<T: std::str::FromStr>(tok: Option<&str>, what: &str, line: usize) -> Result<T, String> {
+    let tok = tok.ok_or_else(|| format!("line {line}: missing {what}"))?;
+    tok.parse::<T>()
+        .map_err(|_| format!("line {line}: bad {what} '{tok}'"))
+}
+
+/// Parse a pattern starting at `toks[0]`; returns (pattern, tokens used).
+fn parse_pattern(toks: &[&str], line: usize) -> Result<(Pattern, usize), String> {
+    match toks.first().copied() {
+        Some("strided") => Ok((
+            Pattern::Strided {
+                region: parse_int(toks.get(1).copied(), "region", line)?,
+                stride: parse_int(toks.get(2).copied(), "stride", line)?,
+                working_set: parse_int(toks.get(3).copied(), "working_set", line)?,
+            },
+            4,
+        )),
+        Some("random") => Ok((
+            Pattern::Random {
+                region: parse_int(toks.get(1).copied(), "region", line)?,
+                working_set: parse_int(toks.get(2).copied(), "working_set", line)?,
+            },
+            3,
+        )),
+        other => Err(format!(
+            "line {line}: expected pattern 'strided'/'random', got {other:?}"
+        )),
+    }
+}
+
+fn parse_op(toks: &[&str], line: usize) -> Result<Op, String> {
+    let exact = |want: usize| -> Result<(), String> {
+        if toks.len() == want {
+            Ok(())
+        } else {
+            Err(format!(
+                "line {line}: '{}' takes {} operand(s), got {}",
+                toks[0],
+                want - 1,
+                toks.len() - 1
+            ))
+        }
+    };
+    match toks[0] {
+        "valu" => {
+            exact(2)?;
+            Ok(Op::VAlu {
+                cycles: parse_int(toks.get(1).copied(), "cycles", line)?,
+            })
+        }
+        "salu" => {
+            exact(1)?;
+            Ok(Op::SAlu)
+        }
+        "load" | "store" => {
+            let (pattern, used) = parse_pattern(&toks[1..], line)?;
+            exact(1 + used + 1)?;
+            let fan = parse_int(toks.get(1 + used).copied(), "fan", line)?;
+            Ok(if toks[0] == "load" {
+                Op::Load { pattern, fan }
+            } else {
+                Op::Store { pattern, fan }
+            })
+        }
+        "waitcnt" => {
+            exact(2)?;
+            Ok(Op::WaitCnt {
+                max: parse_int(toks.get(1).copied(), "max", line)?,
+            })
+        }
+        "barrier" => {
+            exact(1)?;
+            Ok(Op::Barrier)
+        }
+        "loop" => {
+            exact(4)?;
+            Ok(Op::LoopBegin {
+                depth: parse_int(toks.get(1).copied(), "depth", line)?,
+                trips: parse_int(toks.get(2).copied(), "trips", line)?,
+                divergence: parse_int(toks.get(3).copied(), "divergence", line)?,
+            })
+        }
+        "endloop" => {
+            exact(3)?;
+            Ok(Op::LoopEnd {
+                depth: parse_int(toks.get(1).copied(), "depth", line)?,
+                target: parse_int(toks.get(2).copied(), "target", line)?,
+            })
+        }
+        "endpgm" => {
+            exact(1)?;
+            Ok(Op::EndPgm)
+        }
+        other => Err(format!("line {line}: unknown instruction '{other}'")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Binary op codec
+// ---------------------------------------------------------------------------
+
+const TAG_VALU: u8 = 0;
+const TAG_SALU: u8 = 1;
+const TAG_LOAD: u8 = 2;
+const TAG_STORE: u8 = 3;
+const TAG_WAITCNT: u8 = 4;
+const TAG_BARRIER: u8 = 5;
+const TAG_LOOP: u8 = 6;
+const TAG_ENDLOOP: u8 = 7;
+const TAG_ENDPGM: u8 = 8;
+
+const PAT_STRIDED: u8 = 0;
+const PAT_RANDOM: u8 = 1;
+
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+/// Cap for length-prefixed strings (names are further capped by
+/// [`check_name`]; `source` labels may be longer, e.g. ingest paths).
+const MAX_STR_LEN: usize = 4096;
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    // truncate on a char boundary so the reader always sees valid UTF-8
+    let mut end = s.len().min(MAX_STR_LEN);
+    while end > 0 && !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    put_u16(b, end as u16);
+    b.extend_from_slice(&s.as_bytes()[..end]);
+}
+
+fn put_pattern(b: &mut Vec<u8>, p: &Pattern) {
+    match *p {
+        Pattern::Strided {
+            region,
+            stride,
+            working_set,
+        } => {
+            b.push(PAT_STRIDED);
+            b.push(region);
+            put_u32(b, stride);
+            put_u32(b, working_set);
+        }
+        Pattern::Random {
+            region,
+            working_set,
+        } => {
+            b.push(PAT_RANDOM);
+            b.push(region);
+            put_u32(b, working_set);
+        }
+    }
+}
+
+fn put_op(b: &mut Vec<u8>, op: &Op) {
+    match *op {
+        Op::VAlu { cycles } => {
+            b.push(TAG_VALU);
+            b.push(cycles);
+        }
+        Op::SAlu => b.push(TAG_SALU),
+        Op::Load { pattern, fan } => {
+            b.push(TAG_LOAD);
+            put_pattern(b, &pattern);
+            b.push(fan);
+        }
+        Op::Store { pattern, fan } => {
+            b.push(TAG_STORE);
+            put_pattern(b, &pattern);
+            b.push(fan);
+        }
+        Op::WaitCnt { max } => {
+            b.push(TAG_WAITCNT);
+            b.push(max);
+        }
+        Op::Barrier => b.push(TAG_BARRIER),
+        Op::LoopBegin {
+            depth,
+            trips,
+            divergence,
+        } => {
+            b.push(TAG_LOOP);
+            b.push(depth);
+            put_u16(b, trips);
+            put_u16(b, divergence);
+        }
+        Op::LoopEnd { depth, target } => {
+            b.push(TAG_ENDLOOP);
+            b.push(depth);
+            put_u32(b, target);
+        }
+        Op::EndPgm => b.push(TAG_ENDPGM),
+    }
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Cursor { bytes, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated trace: wanted {n} bytes at offset {}, {} left",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let out = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String, String> {
+        let len = self.u16()? as usize;
+        if len > MAX_STR_LEN {
+            return Err(format!(
+                "string length {len} at offset {} exceeds the {MAX_STR_LEN} cap",
+                self.pos
+            ));
+        }
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| format!("invalid UTF-8 string at offset {}", self.pos))
+    }
+}
+
+fn take_pattern(c: &mut Cursor) -> Result<Pattern, String> {
+    match c.u8()? {
+        PAT_STRIDED => Ok(Pattern::Strided {
+            region: c.u8()?,
+            stride: c.u32()?,
+            working_set: c.u32()?,
+        }),
+        PAT_RANDOM => Ok(Pattern::Random {
+            region: c.u8()?,
+            working_set: c.u32()?,
+        }),
+        other => Err(format!("unknown pattern tag {other}")),
+    }
+}
+
+fn take_op(c: &mut Cursor) -> Result<Op, String> {
+    match c.u8()? {
+        TAG_VALU => Ok(Op::VAlu { cycles: c.u8()? }),
+        TAG_SALU => Ok(Op::SAlu),
+        TAG_LOAD => Ok(Op::Load {
+            pattern: take_pattern(c)?,
+            fan: c.u8()?,
+        }),
+        TAG_STORE => Ok(Op::Store {
+            pattern: take_pattern(c)?,
+            fan: c.u8()?,
+        }),
+        TAG_WAITCNT => Ok(Op::WaitCnt { max: c.u8()? }),
+        TAG_BARRIER => Ok(Op::Barrier),
+        TAG_LOOP => Ok(Op::LoopBegin {
+            depth: c.u8()?,
+            trips: c.u16()?,
+            divergence: c.u16()?,
+        }),
+        TAG_ENDLOOP => Ok(Op::LoopEnd {
+            depth: c.u8()?,
+            target: c.u32()?,
+        }),
+        TAG_ENDPGM => Ok(Op::EndPgm),
+        other => Err(format!("unknown op tag {other}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream() -> Vec<Op> {
+        vec![
+            Op::SAlu,
+            Op::SAlu,
+            Op::LoopBegin {
+                depth: 0,
+                trips: 6,
+                divergence: 2,
+            },
+            Op::Load {
+                pattern: Pattern::Strided {
+                    region: 1,
+                    stride: 64,
+                    working_set: 1 << 20,
+                },
+                fan: 2,
+            },
+            Op::WaitCnt { max: 0 },
+            Op::VAlu { cycles: 4 },
+            Op::Store {
+                pattern: Pattern::Random {
+                    region: 9,
+                    working_set: 1 << 24,
+                },
+                fan: 1,
+            },
+            Op::WaitCnt { max: 0 },
+            Op::Barrier,
+            Op::LoopEnd {
+                depth: 0,
+                target: 3,
+            },
+            Op::EndPgm,
+        ]
+    }
+
+    fn a_trace() -> Trace {
+        Trace {
+            name: "t0".into(),
+            source: "hand".into(),
+            rounds: 2,
+            kernels: vec![TraceKernel {
+                kernel_id: 0,
+                name: "k".into(),
+                waves_per_cu: 8,
+                records: stream(),
+            }],
+        }
+    }
+
+    #[test]
+    fn text_roundtrip_is_identity() {
+        let t = a_trace();
+        let back = Trace::parse_text(&t.to_text()).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(t.content_hash(), back.content_hash());
+    }
+
+    #[test]
+    fn binary_roundtrip_is_identity() {
+        let t = a_trace();
+        let back = Trace::parse_binary(&t.to_binary()).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(t.content_hash(), back.content_hash());
+    }
+
+    #[test]
+    fn decode_sniffs_both_encodings() {
+        let t = a_trace();
+        assert_eq!(Trace::decode(&t.to_binary()).unwrap(), t);
+        assert_eq!(Trace::decode(t.to_text().as_bytes()).unwrap(), t);
+    }
+
+    #[test]
+    fn text_accepts_implicit_pcs_and_comments() {
+        let text = "\n#pcstall-trace v1\nname x # inline\nrounds 1\n\
+                    kernel 3 demo 4\n  salu\n  valu 2  # fma\n  endpgm\nend\n";
+        let t = Trace::parse_text(text).unwrap();
+        assert_eq!(t.kernels[0].kernel_id, 3);
+        assert_eq!(t.kernels[0].records.len(), 3);
+        assert_eq!(t.source, "hand");
+    }
+
+    #[test]
+    fn truncated_binary_errors_cleanly_at_every_length() {
+        let full = a_trace().to_binary();
+        for cut in 0..full.len() {
+            let r = Trace::parse_binary(&full[..cut]);
+            assert!(r.is_err(), "cut at {cut} did not error");
+        }
+    }
+
+    #[test]
+    fn corrupt_inputs_error_not_panic() {
+        let cases: [&[u8]; 7] = [
+            b"garbage",
+            b"#pcstall-trace v1\nname x\nrounds 0\nkernel 0 k 1\n endpgm\nend\n",
+            b"#pcstall-trace v1\nname x\nrounds 1\n", // no kernels
+            b"#pcstall-trace v1\nname x\nrounds 1\nkernel 0 k 1\n  bogus\nend\n",
+            b"#pcstall-trace v1\nname x\nrounds 1\nkernel 0 k 1\n  valu 2\nend\n", // no endpgm
+            b"#pcstall-trace v2\nname x\nrounds 1\n",                              // bad header
+            b"PCSTRCv1\xff\xff\xff\xff",                                           // bad version
+        ];
+        for bad in cases {
+            assert!(Trace::decode(bad).is_err());
+        }
+    }
+
+    #[test]
+    fn forward_loop_target_rejected() {
+        let text = "#pcstall-trace v1\nname x\nrounds 1\nkernel 0 k 1\n\
+                    endloop 0 5\nendpgm\nend\n";
+        assert!(Trace::parse_text(text).is_err());
+    }
+
+    #[test]
+    fn explicit_pc_must_match_index() {
+        let text = "#pcstall-trace v1\nname x\nrounds 1\nkernel 0 k 1\n\
+                    0 salu\n2 endpgm\nend\n";
+        let e = Trace::parse_text(text).unwrap_err();
+        assert!(e.contains("out of order"), "{e}");
+    }
+
+    #[test]
+    fn unbounded_mem_runs_rejected() {
+        // linear run over the cap
+        let mut records = Vec::new();
+        for _ in 0..(MAX_MEM_RUN + 1) {
+            records.push(Op::Load {
+                pattern: Pattern::Strided {
+                    region: 0,
+                    stride: 64,
+                    working_set: 1 << 20,
+                },
+                fan: 1,
+            });
+        }
+        records.push(Op::EndPgm);
+        let mut t = a_trace();
+        t.kernels[0].records = records;
+        assert!(t.validate().is_err());
+
+        // loop body with memory but no waitcnt
+        let mut t = a_trace();
+        t.kernels[0].records = vec![
+            Op::LoopBegin {
+                depth: 0,
+                trips: 100,
+                divergence: 0,
+            },
+            Op::Load {
+                pattern: Pattern::Strided {
+                    region: 0,
+                    stride: 64,
+                    working_set: 1 << 20,
+                },
+                fan: 1,
+            },
+            Op::LoopEnd {
+                depth: 0,
+                target: 1,
+            },
+            Op::EndPgm,
+        ];
+        let e = t.validate().unwrap_err();
+        assert!(e.contains("no s_waitcnt"), "{e}");
+    }
+
+    #[test]
+    fn non_draining_waitcnts_do_not_satisfy_the_mem_bound() {
+        let load = Op::Load {
+            pattern: Pattern::Strided {
+                region: 0,
+                stride: 64,
+                working_set: 1 << 20,
+            },
+            fan: 1,
+        };
+        // `waitcnt 255` never blocks: alternating 40-load runs with it
+        // must still trip the linear bound (40 + 40 > 64)
+        let mut records = Vec::new();
+        for _ in 0..40 {
+            records.push(load);
+        }
+        records.push(Op::WaitCnt { max: 255 });
+        for _ in 0..40 {
+            records.push(load);
+        }
+        records.push(Op::WaitCnt { max: 0 });
+        records.push(Op::EndPgm);
+        let mut t = a_trace();
+        t.kernels[0].records = records;
+        assert!(t.validate().is_err());
+
+        // a loop body whose only waitcnt has max > MAX_MEM_RUN drains
+        // nothing across trips
+        let mut t = a_trace();
+        t.kernels[0].records = vec![
+            Op::LoopBegin {
+                depth: 0,
+                trips: 100,
+                divergence: 0,
+            },
+            load,
+            Op::WaitCnt { max: 255 },
+            Op::LoopEnd {
+                depth: 0,
+                target: 1,
+            },
+            Op::EndPgm,
+        ];
+        let e = t.validate().unwrap_err();
+        assert!(e.contains("max <= "), "{e}");
+
+        // a clamping (but non-zero) waitcnt is a legal drain point
+        let mut records = Vec::new();
+        for _ in 0..40 {
+            records.push(load);
+        }
+        records.push(Op::WaitCnt { max: 16 });
+        for _ in 0..40 {
+            records.push(load);
+        }
+        records.push(Op::WaitCnt { max: 0 });
+        records.push(Op::EndPgm);
+        let mut t = a_trace();
+        t.kernels[0].records = records;
+        assert!(t.validate().is_ok(), "{:?}", t.validate());
+    }
+
+    #[test]
+    fn unmatched_or_misdirected_loops_rejected() {
+        // endloop with no armed loop (valid per Program::validate, but
+        // would trip the simulator's debug assertion)
+        let text = "#pcstall-trace v1\nname x\nrounds 1\nkernel 0 k 1\n\
+                    salu\nendloop 0 0\nendpgm\nend\n";
+        let e = Trace::parse_text(text).unwrap_err();
+        assert!(e.contains("without a matching LoopBegin"), "{e}");
+
+        // consumed twice: sequential endloops for one begin
+        let text = "#pcstall-trace v1\nname x\nrounds 1\nkernel 0 k 1\n\
+                    loop 0 3 0\nvalu 1\nendloop 0 1\nendloop 0 1\nendpgm\nend\n";
+        assert!(Trace::parse_text(text).is_err());
+
+        // backedge jumping to (or before) its own LoopBegin
+        let text = "#pcstall-trace v1\nname x\nrounds 1\nkernel 0 k 1\n\
+                    loop 0 3 0\nvalu 1\nendloop 0 0\nendpgm\nend\n";
+        let e = Trace::parse_text(text).unwrap_err();
+        assert!(e.contains("jumps before"), "{e}");
+
+        // re-arming an already-active depth
+        let text = "#pcstall-trace v1\nname x\nrounds 1\nkernel 0 k 1\n\
+                    loop 0 3 0\nloop 0 2 0\nvalu 1\nendloop 0 2\nendloop 0 1\nendpgm\nend\n";
+        assert!(Trace::parse_text(text).is_err());
+    }
+
+    #[test]
+    fn source_tags_are_validated_and_sanitizable() {
+        let mut t = a_trace();
+        t.source = "bad#tag".into();
+        assert!(t.validate().is_err());
+        t.source = "has\nnewline".into();
+        assert!(t.validate().is_err());
+        t.source = " padded ".into();
+        assert!(t.validate().is_err());
+        t.source = "x".repeat(5000);
+        assert!(t.validate().is_err());
+        t.source = sanitize_source("ingest:runs#3/\nlong path.traceg ");
+        assert!(t.validate().is_ok(), "{}", t.source);
+        // sanitized sources survive both encodings unchanged
+        let a = Trace::parse_binary(&t.to_binary()).unwrap();
+        let b = Trace::parse_text(&t.to_text()).unwrap();
+        assert_eq!(a.source, t.source);
+        assert_eq!(b.source, t.source);
+        assert_eq!(a.content_hash(), b.content_hash());
+    }
+
+    #[test]
+    fn content_hash_tracks_semantic_edits() {
+        let a = a_trace();
+        let mut b = a.clone();
+        b.kernels[0].waves_per_cu = 9;
+        let mut c = a.clone();
+        if let Op::VAlu { cycles } = &mut c.kernels[0].records[5] {
+            *cycles = 5;
+        }
+        assert_ne!(a.content_hash(), b.content_hash());
+        assert_ne!(a.content_hash(), c.content_hash());
+        assert_eq!(a.content_hash(), a.clone().content_hash());
+    }
+
+    #[test]
+    fn content_hash_ignores_provenance() {
+        // identical streams ingested/recorded from different places
+        // must share one cache identity
+        let a = a_trace();
+        let mut b = a.clone();
+        b.source = "ingest:somewhere/else.traceg".into();
+        assert_ne!(a.to_text(), b.to_text());
+        assert_eq!(a.content_hash(), b.content_hash());
+    }
+
+    #[test]
+    fn dyn_instrs_expand_loops_at_mean_trips() {
+        // salu salu loop(6) [load wait valu store wait barrier] endloop endpgm
+        // = 2 + 1 + 6*(6 + 1) + 1 = 46
+        assert_eq!(dyn_instrs_per_wave(&stream()), 46);
+    }
+
+    #[test]
+    fn launches_scale_waves_with_floor_one() {
+        let t = a_trace();
+        let l = t.launches_scaled(0.01);
+        assert_eq!(l[0].waves_per_cu, 1);
+        let l = t.launches_scaled(2.0);
+        assert_eq!(l[0].waves_per_cu, 16);
+        assert!(l[0].program.validate().is_ok());
+        assert_eq!(l[0].program.kernel_id, 0);
+    }
+
+    #[test]
+    fn stats_count_op_kinds() {
+        let t = a_trace();
+        let s = t.kernels[0].stats();
+        assert_eq!(s.static_records, 11);
+        assert_eq!(
+            (s.valu, s.salu, s.loads, s.stores, s.waitcnts, s.barriers, s.loops),
+            (1, 2, 1, 1, 2, 1, 1)
+        );
+        assert_eq!(s.dyn_per_wave, 46);
+    }
+
+    #[test]
+    fn sanitize_name_makes_tokens() {
+        assert_eq!(sanitize_name("a b#c"), "a_b_c");
+        assert_eq!(sanitize_name(""), "k");
+        assert_eq!(sanitize_name("_Z6vecAddPdS_S_"), "_Z6vecAddPdS_S_");
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join(format!("pcstall_trace_fmt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let t = a_trace();
+        for (file, binary) in [("t.trace", false), ("t.tracebin", true)] {
+            let path = dir.join(file);
+            t.save(&path, binary).unwrap();
+            let back = Trace::load(&path).unwrap();
+            assert_eq!(back, t);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,33 @@
+//! Trace subsystem: capture, ingest, synthesize, and replay wavefront
+//! instruction traces as first-class workloads.
+//!
+//! The catalog generators ([`crate::workloads`]) cover the paper's 16
+//! Table-II applications; this subsystem opens the workload space to
+//! arbitrary instruction streams, the way accel-sim-style simulators
+//! scale to real applications:
+//!
+//! * [`format`] — the versioned trace model with a hand-authorable text
+//!   encoding and a length-prefixed binary encoding, structural
+//!   validation, and content hashing;
+//! * [`capture`] — record any workload's executed stream (from a spec or
+//!   from a live simulator) to a trace;
+//! * [`ingest`] — lower external accel-sim-style kernel traces onto the
+//!   [`crate::sim::isa`] micro-ISA;
+//! * [`synth`] — seeded generator fuzzing randomized trace workloads for
+//!   scenario diversity.
+//!
+//! Traces plug into everything that accepts a workload name via
+//! [`crate::workloads::WorkloadSource`] (`trace:<path>` /
+//! `synth:<seed>` specs), and the sweep engine fingerprints the trace
+//! *content hash* in its [`crate::exec::key::RunKey`]s, so cached
+//! results can never be served for an edited trace file.
+
+pub mod capture;
+pub mod format;
+pub mod ingest;
+pub mod synth;
+
+pub use capture::{capture_gpu, capture_named, capture_workload};
+pub use format::{Trace, TraceKernel};
+pub use ingest::parse_accelsim;
+pub use synth::synthesize;

@@ -9,7 +9,9 @@
 //! thrashing, …).  DESIGN.md §2.2 documents the substitution per app.
 
 pub mod catalog;
+pub mod source;
 pub mod spec;
 
 pub use catalog::{build, names, Workload};
+pub use source::{ResolvedWorkload, WorkloadSource};
 pub use spec::{KernelSpec, PhaseSpec, WorkloadSpec};

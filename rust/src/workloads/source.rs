@@ -1,0 +1,207 @@
+//! Workload sources: one spec grammar for everything that runs.
+//!
+//! Everywhere the CLI/harness accepts a workload, it accepts a *spec*:
+//!
+//! * a catalog name (`comd`, `dgemm`, …) — the Table-II generators;
+//! * `trace:<path>` — a recorded/hand-authored/ingested trace file;
+//! * `synth:<seed>` — a synthesized trace (see [`crate::trace::synth`]).
+//!
+//! [`WorkloadSource::parse`] validates the spec, [`WorkloadSource::resolve`]
+//! loads it (reading and validating trace files), and
+//! [`ResolvedWorkload::lower`] produces the launch list the simulator
+//! consumes.  The resolved `id` is what cache fingerprints use: catalog
+//! names stay themselves (existing cache entries remain addressable),
+//! while trace-driven workloads become `trace:<content-hash>` — the
+//! *content*, never the path, so editing a trace file always misses.
+
+use std::path::{Path, PathBuf};
+
+use crate::sim::gpu::KernelLaunch;
+use crate::trace::format::Trace;
+
+/// A parsed workload spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkloadSource {
+    /// Catalog generator by name.
+    Catalog(String),
+    /// Trace file on disk (text or binary encoding).
+    TraceFile(PathBuf),
+    /// Seeded synthesized trace.
+    Synth(u64),
+}
+
+impl WorkloadSource {
+    /// Parse and validate a workload spec string.
+    pub fn parse(spec: &str) -> anyhow::Result<WorkloadSource> {
+        if let Some(path) = spec.strip_prefix("trace:") {
+            anyhow::ensure!(!path.is_empty(), "'trace:' spec needs a file path");
+            Ok(WorkloadSource::TraceFile(PathBuf::from(path)))
+        } else if let Some(seed) = spec.strip_prefix("synth:") {
+            let seed: u64 = seed
+                .parse()
+                .map_err(|_| anyhow::anyhow!("'synth:' spec needs an integer seed, got '{seed}'"))?;
+            Ok(WorkloadSource::Synth(seed))
+        } else {
+            anyhow::ensure!(
+                crate::workloads::names().iter().any(|n| *n == spec),
+                "unknown workload '{spec}' (catalog name, 'trace:<path>', or 'synth:<seed>'; \
+                 see `pcstall list`)"
+            );
+            Ok(WorkloadSource::Catalog(spec.to_string()))
+        }
+    }
+
+    /// Load the source: read + validate trace files, synthesize seeds.
+    pub fn resolve(&self) -> anyhow::Result<ResolvedWorkload> {
+        match self {
+            WorkloadSource::Catalog(name) => Ok(ResolvedWorkload {
+                id: name.clone(),
+                display: name.clone(),
+                kind: Kind::Catalog(name.clone()),
+            }),
+            WorkloadSource::TraceFile(path) => {
+                let trace = Trace::load(Path::new(path))?;
+                Ok(ResolvedWorkload::from_trace(trace))
+            }
+            WorkloadSource::Synth(seed) => {
+                let trace = crate::trace::synth::synthesize(*seed);
+                Ok(ResolvedWorkload::from_trace(trace))
+            }
+        }
+    }
+}
+
+/// A source loaded into executable form.
+#[derive(Debug, Clone)]
+pub struct ResolvedWorkload {
+    /// Canonical cache id: the catalog name, or `trace:<content-hash>`.
+    pub id: String,
+    /// Human-facing label (catalog or trace name).
+    pub display: String,
+    kind: Kind,
+}
+
+#[derive(Debug, Clone)]
+enum Kind {
+    Catalog(String),
+    Trace(Trace),
+}
+
+impl ResolvedWorkload {
+    fn from_trace(trace: Trace) -> ResolvedWorkload {
+        ResolvedWorkload {
+            id: format!("trace:{}", trace.content_hash()),
+            display: trace.name.clone(),
+            kind: Kind::Trace(trace),
+        }
+    }
+
+    /// Lower to `(launches, rounds)` at workload-length multiplier
+    /// `waves` (same knob the catalog generators expose).
+    pub fn lower(&self, waves: f64) -> (Vec<KernelLaunch>, u32) {
+        match &self.kind {
+            Kind::Catalog(name) => {
+                let spec = crate::workloads::build(name, waves);
+                (spec.launches(), spec.rounds)
+            }
+            Kind::Trace(trace) => (trace.launches_scaled(waves), trace.rounds),
+        }
+    }
+
+    /// The underlying trace, when this workload is trace-driven.
+    pub fn trace(&self) -> Option<&Trace> {
+        match &self.kind {
+            Kind::Trace(t) => Some(t),
+            Kind::Catalog(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::capture::capture_workload;
+
+    #[test]
+    fn catalog_specs_resolve_to_their_name() {
+        let r = WorkloadSource::parse("comd").unwrap().resolve().unwrap();
+        assert_eq!(r.id, "comd");
+        assert_eq!(r.display, "comd");
+        let (launches, rounds) = r.lower(0.1);
+        assert!(!launches.is_empty());
+        assert!(rounds > 0);
+    }
+
+    #[test]
+    fn unknown_catalog_name_is_an_error_not_a_panic() {
+        assert!(WorkloadSource::parse("bogus").is_err());
+        assert!(WorkloadSource::parse("trace:").is_err());
+        assert!(WorkloadSource::parse("synth:notanumber").is_err());
+    }
+
+    #[test]
+    fn synth_specs_resolve_to_content_hash_ids() {
+        let a = WorkloadSource::parse("synth:7").unwrap().resolve().unwrap();
+        let b = WorkloadSource::parse("synth:7").unwrap().resolve().unwrap();
+        let c = WorkloadSource::parse("synth:8").unwrap().resolve().unwrap();
+        assert_eq!(a.id, b.id, "same seed must give a stable cache id");
+        assert_ne!(a.id, c.id);
+        assert!(a.id.starts_with("trace:"));
+    }
+
+    #[test]
+    fn trace_file_specs_fingerprint_content_not_path() {
+        let dir = std::env::temp_dir().join(format!("pcstall_source_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let t = capture_workload(&crate::workloads::build("dgemm", 0.05));
+        let p1 = dir.join("a.trace");
+        let p2 = dir.join("b.trace");
+        t.save(&p1, false).unwrap();
+        t.save(&p2, true).unwrap(); // same content, binary encoding
+
+        let r1 = WorkloadSource::parse(&format!("trace:{}", p1.display()))
+            .unwrap()
+            .resolve()
+            .unwrap();
+        let r2 = WorkloadSource::parse(&format!("trace:{}", p2.display()))
+            .unwrap()
+            .resolve()
+            .unwrap();
+        assert_eq!(r1.id, r2.id, "content hash must not depend on path/encoding");
+
+        // edit the file -> different id
+        let mut edited = t.clone();
+        edited.kernels[0].waves_per_cu += 1;
+        edited.save(&p1, false).unwrap();
+        let r3 = WorkloadSource::parse(&format!("trace:{}", p1.display()))
+            .unwrap()
+            .resolve()
+            .unwrap();
+        assert_ne!(r1.id, r3.id, "edited trace must change the cache id");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_trace_file_errors_cleanly() {
+        let r = WorkloadSource::parse("trace:/nonexistent/x.trace")
+            .unwrap()
+            .resolve();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn trace_lowering_matches_direct_build() {
+        let spec = crate::workloads::build("hacc", 0.1);
+        let t = capture_workload(&spec);
+        let r = ResolvedWorkload::from_trace(t);
+        let (launches, rounds) = r.lower(1.0);
+        assert_eq!(rounds, spec.rounds);
+        let direct = spec.launches();
+        assert_eq!(launches.len(), direct.len());
+        for (a, b) in launches.iter().zip(&direct) {
+            assert_eq!(a.waves_per_cu, b.waves_per_cu);
+            assert_eq!(*a.program, *b.program);
+        }
+        assert!(r.trace().is_some());
+    }
+}

@@ -13,10 +13,9 @@ fn opts(dir: &PathBuf, jobs: usize, engine: Arc<Engine>) -> ExpOptions {
     ExpOptions {
         scale: Scale::Quick,
         out_dir: dir.clone(),
-        use_pjrt: false,
-        seed: 0,
         jobs,
         engine,
+        ..Default::default()
     }
 }
 

@@ -1,0 +1,278 @@
+//! Trace subsystem integration: record → replay determinism against the
+//! direct simulation, cache-key stability of trace workloads, and
+//! corrupt-file behaviour (clear errors, never panics).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pcstall::config::SimConfig;
+use pcstall::dvfs::manager::{DvfsManager, Policy, RunMode};
+use pcstall::dvfs::objective::Objective;
+use pcstall::exec::Engine;
+use pcstall::harness::evaluation::{run_cells, Cell};
+use pcstall::harness::{ExpOptions, Scale};
+use pcstall::stats::RunResult;
+use pcstall::trace::{capture_workload, synthesize, Trace};
+use pcstall::workloads;
+
+fn small_cfg() -> SimConfig {
+    let mut c = SimConfig::small();
+    c.gpu.n_cu = 4;
+    c.gpu.n_wf = 8;
+    c
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pcstall_trace_rt_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn assert_identical_runs(direct: &RunResult, replayed: &RunResult, what: &str) {
+    assert_eq!(
+        direct.records.len(),
+        replayed.records.len(),
+        "{what}: epoch count diverged"
+    );
+    for (a, b) in direct.records.iter().zip(&replayed.records) {
+        assert_eq!(a.instr, b.instr, "{what}: epoch {} instr diverged", a.epoch);
+        assert_eq!(a.freq_idx, b.freq_idx, "{what}: epoch {} freqs diverged", a.epoch);
+    }
+    assert_eq!(direct.total_instr, replayed.total_instr, "{what}");
+    assert_eq!(direct.total_energy_j, replayed.total_energy_j, "{what}");
+    assert_eq!(direct.total_time_ns, replayed.total_time_ns, "{what}");
+    assert_eq!(direct.ed2p(), replayed.ed2p(), "{what}: ED²P diverged");
+}
+
+/// The acceptance bar: `trace record dgemm` then `trace replay` must
+/// reproduce the direct run's per-epoch instruction counts and ED²P
+/// exactly — through an on-disk round trip of both encodings.
+#[test]
+fn record_replay_reproduces_direct_run_exactly() {
+    let dir = fresh_dir("replay");
+    let spec = workloads::build("dgemm", 0.05);
+
+    let direct = {
+        let mut m = DvfsManager::new(small_cfg(), &spec, Policy::PcStall, Objective::Ed2p);
+        m.run(RunMode::Epochs(12), "dgemm")
+    };
+
+    let trace = capture_workload(&spec);
+    for (file, binary) in [("dgemm.trace", false), ("dgemm.tracebin", true)] {
+        let path = dir.join(file);
+        trace.save(&path, binary).unwrap();
+        let loaded = Trace::load(&path).unwrap();
+        let mut m = DvfsManager::from_launches(
+            small_cfg(),
+            loaded.launches_scaled(1.0),
+            loaded.rounds,
+            Policy::PcStall,
+            Objective::Ed2p,
+        );
+        let replayed = m.run(RunMode::Epochs(12), "dgemm");
+        assert_identical_runs(&direct, &replayed, file);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Completion-mode ED²P must also replay exactly (fixed-work metric).
+#[test]
+fn completion_run_ed2p_replays_exactly() {
+    let spec = workloads::build("comd", 0.02);
+    let mode = RunMode::Completion { max_epochs: 5_000 };
+    let direct = {
+        let mut m = DvfsManager::new(small_cfg(), &spec, Policy::Static(4), Objective::Ed2p);
+        m.run(mode, "comd")
+    };
+    let trace = capture_workload(&spec);
+    let reloaded = Trace::decode(trace.to_text().as_bytes()).unwrap();
+    let mut m = DvfsManager::from_launches(
+        small_cfg(),
+        reloaded.launches_scaled(1.0),
+        reloaded.rounds,
+        Policy::Static(4),
+        Objective::Ed2p,
+    );
+    let replayed = m.run(mode, "comd");
+    assert!(direct.completed && replayed.completed);
+    assert_identical_runs(&direct, &replayed, "completion");
+}
+
+/// Trace workloads run through the sweep engine: a trace cell gets a
+/// RunKey distinct from its catalog twin, and a warm rerun executes
+/// zero simulations (cache-stable content-hash key).
+#[test]
+fn trace_cells_have_distinct_cache_stable_keys() {
+    let dir = fresh_dir("cells");
+    let trace = capture_workload(&workloads::build("dgemm", 0.05));
+    let trace_path = dir.join("dgemm.trace");
+    trace.save(&trace_path, false).unwrap();
+    let trace_spec = format!("trace:{}", trace_path.display());
+
+    let opts_with = |engine: Arc<Engine>| ExpOptions {
+        scale: Scale::Quick,
+        out_dir: dir.clone(),
+        engine,
+        ..Default::default()
+    };
+    let cells = |opts: &ExpOptions| {
+        vec![
+            Cell::at(
+                opts,
+                "dgemm",
+                Policy::Static(4),
+                Objective::Ed2p,
+                1000.0,
+                RunMode::Epochs(3),
+                1.0,
+            ),
+            Cell::at(
+                opts,
+                &trace_spec,
+                Policy::Static(4),
+                Objective::Ed2p,
+                1000.0,
+                RunMode::Epochs(3),
+                1.0,
+            ),
+        ]
+    };
+
+    // cold: catalog and trace cells are distinct cells — both execute
+    let cold = Arc::new(Engine::with_cache_dir(dir.join("cache")));
+    let opts = opts_with(cold.clone());
+    let results = run_cells(&opts, cells(&opts)).unwrap();
+    assert_eq!(results.len(), 2);
+    assert_eq!(cold.executed(), 2, "trace key must not collide with catalog key");
+    assert_eq!(cold.deduped(), 0);
+
+    // warm rerun: same trace file -> same content hash -> zero executions
+    let warm = Arc::new(Engine::with_cache_dir(dir.join("cache")));
+    let opts = opts_with(warm.clone());
+    let rerun = run_cells(&opts, cells(&opts)).unwrap();
+    assert_eq!(warm.executed(), 0, "warm trace rerun must be fully cached");
+    assert_eq!(warm.cache_stats().hits, 2);
+    for (a, b) in results.iter().zip(&rerun) {
+        assert_eq!(a.total_instr, b.total_instr);
+        assert_eq!(a.ed2p(), b.ed2p());
+    }
+
+    // edit the trace -> new content hash -> the trace cell recomputes
+    let mut edited = trace.clone();
+    edited.kernels[0].waves_per_cu += 1;
+    edited.save(&trace_path, false).unwrap();
+    let after = Arc::new(Engine::with_cache_dir(dir.join("cache")));
+    let opts = opts_with(after.clone());
+    run_cells(&opts, cells(&opts)).unwrap();
+    assert_eq!(
+        after.executed(),
+        1,
+        "edited trace must miss; unchanged catalog cell must hit"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Corrupt and truncated files must fail with an error, never a panic,
+/// both at the format layer and through the harness path.
+#[test]
+fn corrupt_trace_files_error_cleanly() {
+    let dir = fresh_dir("corrupt");
+    let good = capture_workload(&workloads::build("comd", 0.05));
+
+    // truncations of the binary form at a few spread offsets
+    let bin = good.to_binary();
+    for frac in [0usize, 1, 3, 7, 9] {
+        let cut = bin.len() * frac / 10;
+        let path = dir.join(format!("cut{frac}.trace"));
+        std::fs::write(&path, &bin[..cut]).unwrap();
+        let err = Trace::load(&path).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("invalid trace"),
+            "cut {frac}: {err:#}"
+        );
+    }
+
+    // mangled text form
+    let mut text = good.to_text();
+    text = text.replace("valu", "vlau");
+    let path = dir.join("mangled.trace");
+    std::fs::write(&path, &text).unwrap();
+    assert!(Trace::load(&path).is_err());
+
+    // harness path: a bad trace spec fails the batch with an error
+    let opts = ExpOptions {
+        scale: Scale::Quick,
+        out_dir: dir.clone(),
+        ..Default::default()
+    };
+    let cell = Cell::at(
+        &opts,
+        &format!("trace:{}", path.display()),
+        Policy::Static(4),
+        Objective::Ed2p,
+        1000.0,
+        RunMode::Epochs(2),
+        1.0,
+    );
+    let err = run_cells(&opts, vec![cell]).unwrap_err();
+    assert!(format!("{err:#}").contains("invalid trace"), "{err:#}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `synth:<seed>` specs and their saved trace files share one cache id.
+#[test]
+fn synth_spec_and_saved_file_agree() {
+    use pcstall::workloads::WorkloadSource;
+    let dir = fresh_dir("synth");
+    let t = synthesize(5);
+    let path = dir.join("synth5.trace");
+    t.save(&path, true).unwrap();
+
+    let from_seed = WorkloadSource::parse("synth:5").unwrap().resolve().unwrap();
+    let from_file = WorkloadSource::parse(&format!("trace:{}", path.display()))
+        .unwrap()
+        .resolve()
+        .unwrap();
+    assert_eq!(from_seed.id, from_file.id);
+
+    // and both lower to identical simulations
+    let run = |r: &pcstall::workloads::ResolvedWorkload| {
+        let (launches, rounds) = r.lower(0.5);
+        let mut m = DvfsManager::from_launches(
+            small_cfg(),
+            launches,
+            rounds,
+            Policy::PcStall,
+            Objective::Ed2p,
+        );
+        m.run(RunMode::Epochs(6), &r.display)
+    };
+    let a = run(&from_seed);
+    let b = run(&from_file);
+    assert_identical_runs(&a, &b, "synth vs file");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The checked-in example trace parses, validates, and simulates.
+#[test]
+fn example_trace_parses_and_runs() {
+    let path = PathBuf::from(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/handwritten.trace"
+    ));
+    let t = Trace::load(&path).unwrap();
+    assert_eq!(t.name, "hand-demo");
+    t.validate().unwrap();
+    let mut m = DvfsManager::from_launches(
+        small_cfg(),
+        t.launches_scaled(1.0),
+        t.rounds,
+        Policy::PcStall,
+        Objective::Ed2p,
+    );
+    let r = m.run(RunMode::Epochs(4), "hand-demo");
+    assert!(r.total_instr > 0.0);
+}
