@@ -1,17 +1,20 @@
 //! A tiny TOML-subset parser (offline environment — no external crates).
 //!
 //! Supported: `[section]` headers, `key = value` pairs with integer,
-//! float, boolean and double-quoted string values, `#` comments, blank
-//! lines.  Nested tables beyond one level, arrays and dates are not
-//! needed by [`crate::SimConfig`] and are rejected loudly.
+//! float, boolean, double-quoted string and single-line array values,
+//! `#` comments, blank lines.  Nested tables beyond one level, nested
+//! arrays and dates are not needed by [`crate::SimConfig`] or the sweep
+//! plan grammar ([`crate::harness::sweep`]) and are rejected loudly.
 
-/// A parsed scalar value.
+/// A parsed value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
     Int(i64),
     Float(f64),
     Bool(bool),
     Str(String),
+    /// Single-line `[a, b, c]` array of scalars (sweep-plan axes).
+    Arr(Vec<Value>),
 }
 
 impl Value {
@@ -54,6 +57,13 @@ impl Value {
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(items) => Some(items.as_slice()),
             _ => None,
         }
     }
@@ -126,8 +136,20 @@ fn parse_value(s: &str) -> Result<Value, String> {
     if s == "false" {
         return Ok(Value::Bool(false));
     }
-    if s.starts_with('[') {
-        return Err("arrays are not supported by minitoml".into());
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_array_items(body)? {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err("empty array element".into());
+            }
+            if part.starts_with('[') {
+                return Err("nested arrays are not supported by minitoml".into());
+            }
+            items.push(parse_value(part)?);
+        }
+        return Ok(Value::Arr(items));
     }
     let cleaned = s.replace('_', "");
     if let Ok(i) = cleaned.parse::<i64>() {
@@ -137,6 +159,32 @@ fn parse_value(s: &str) -> Result<Value, String> {
         return Ok(Value::Float(f));
     }
     Err(format!("cannot parse value: {s}"))
+}
+
+/// Split an array body on top-level commas (commas inside quoted strings
+/// do not separate).  A TOML-style trailing comma is allowed.
+fn split_array_items(body: &str) -> Result<Vec<&str>, String> {
+    let mut items = Vec::new();
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in body.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                items.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    // text after the last separator; an empty tail is a trailing comma
+    if !body[start..].trim().is_empty() {
+        items.push(&body[start..]);
+    }
+    Ok(items)
 }
 
 #[cfg(test)]
@@ -171,9 +219,28 @@ enabled = true
     fn rejects_malformed_lines() {
         assert!(parse("[unterminated\n").is_err());
         assert!(parse("novalue\n").is_err());
-        assert!(parse("k = [1, 2]\n").is_err());
         assert!(parse("k = \"unterminated\n").is_err());
         assert!(parse("= 3\n").is_err());
+        assert!(parse("k = [1, [2]]\n").is_err());
+        assert!(parse("k = [1,, 2]\n").is_err());
+        assert!(parse("k = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let kv = parse("xs = [1, 2.5, \"a,b\", true]\nempty = []\ntrail = [7,]\n").unwrap();
+        assert_eq!(
+            kv[0].1,
+            Value::Arr(vec![
+                Value::Int(1),
+                Value::Float(2.5),
+                Value::Str("a,b".into()),
+                Value::Bool(true),
+            ])
+        );
+        assert_eq!(kv[1].1, Value::Arr(vec![]));
+        assert_eq!(kv[2].1, Value::Arr(vec![Value::Int(7)]));
+        assert_eq!(kv[2].1.as_arr().map(|a| a.len()), Some(1));
     }
 
     #[test]

@@ -193,7 +193,9 @@ impl SimConfig {
             .map_err(|e| anyhow::anyhow!("override {spec}: {e}"))
     }
 
-    fn set_key(&mut self, key: &str, value: &minitoml::Value) -> Result<(), String> {
+    /// Apply one parsed `section.key` value (TOML loading, CLI overrides,
+    /// and sweep-plan `[set]` tables).
+    pub(crate) fn set_key(&mut self, key: &str, value: &minitoml::Value) -> Result<(), String> {
         macro_rules! apply {
             ($name:literal, usize, $field:expr) => {
                 if key == $name {

@@ -30,6 +30,36 @@ impl Objective {
         }
     }
 
+    /// Parse the CLI/plan objective grammar: `edp`, `ed2p`, or
+    /// `energy@<pct>` (e.g. `energy@5` = minimize energy within a 5%
+    /// predicted slowdown).
+    pub fn parse(s: &str) -> anyhow::Result<Objective> {
+        let lower = s.to_ascii_lowercase();
+        Ok(match lower.as_str() {
+            "edp" => Objective::Edp,
+            "ed2p" => Objective::Ed2p,
+            _ => {
+                if let Some(pct) = lower.strip_prefix("energy@") {
+                    let p: f64 = pct.trim_end_matches('%').parse().map_err(|_| {
+                        anyhow::anyhow!("bad percentage in objective '{s}' (try energy@5)")
+                    })?;
+                    // A degenerate bound (negative, NaN, >=100%) would
+                    // silently select via the unreachable-floor fallback
+                    // or disable the bound entirely — reject it here.
+                    anyhow::ensure!(
+                        p.is_finite() && (0.0..100.0).contains(&p),
+                        "objective '{s}': slowdown bound must be in [0, 100)%"
+                    );
+                    Objective::EnergyBound {
+                        max_slowdown: p / 100.0,
+                    }
+                } else {
+                    anyhow::bail!("unknown objective '{s}' (edp|ed2p|energy@<pct>)");
+                }
+            }
+        })
+    }
+
     /// Exponent on rate for the ED^nP grid (n_exp in the AOT artifact):
     /// EDP → 2, ED²P → 3.  EnergyBound selects natively from the grids.
     pub fn n_exp(&self) -> f64 {
@@ -50,17 +80,39 @@ impl Objective {
             Objective::Edp | Objective::Ed2p => argmin(ednp),
             Objective::EnergyBound { max_slowdown } => {
                 let perf_floor = pred_instr[N_FREQ - 1] * (1.0 - max_slowdown);
-                // lowest-energy state meeting the performance floor; the
+                // Lowest-energy state meeting the performance floor; the
                 // ednp row already holds P/r = energy-per-instruction.
-                let mut best = N_FREQ - 1;
-                let mut best_v = f64::INFINITY;
+                let mut best: Option<usize> = None;
                 for k in 0..N_FREQ {
-                    if pred_instr[k] + 1e-9 >= perf_floor && ednp[k] < best_v {
-                        best_v = ednp[k];
-                        best = k;
+                    let feasible = pred_instr[k] + 1e-9 >= perf_floor;
+                    // NaN energies are never selectable (matching the
+                    // historical `< INFINITY` seed): a feasible state
+                    // with undefined energy must not shadow — or be
+                    // chosen over — one with a real energy value.
+                    if feasible
+                        && !ednp[k].is_nan()
+                        && best.is_none_or(|b| ednp[k] < ednp[b])
+                    {
+                        best = Some(k);
                     }
                 }
-                best
+                // No state meets the floor (possible when the prediction
+                // is non-monotonic in f, or the grid row is degenerate —
+                // e.g. all-NaN energies make every comparison false): the
+                // bound takes priority over energy, so fall back to the
+                // highest-predicted-performance state, ties broken toward
+                // the higher frequency.  With a monotonic prediction this
+                // is the top state — the same index the previous implicit
+                // fallback produced.
+                best.unwrap_or_else(|| {
+                    let mut k_max = N_FREQ - 1;
+                    for k in 0..N_FREQ {
+                        if pred_instr[k] >= pred_instr[k_max] {
+                            k_max = k;
+                        }
+                    }
+                    k_max
+                })
             }
         }
     }
@@ -136,12 +188,70 @@ mod tests {
     }
 
     #[test]
+    fn energy_bound_fallback_is_explicit_when_floor_unreachable() {
+        let obj = Objective::EnergyBound { max_slowdown: 0.05 };
+        // Non-monotonic prediction: the top state is NOT the fastest, and
+        // no state reaches floor = pred[top] * 0.95 ... construct so that
+        // nothing is feasible: floor derives from pred[N-1], which any
+        // state (including N-1 itself) always meets when finite — so the
+        // only unreachable-floor case is a degenerate row.  All-NaN
+        // predictions: every feasibility and argmax comparison is false.
+        let nan_row = [f64::NAN; N_FREQ];
+        let p = [1.0; N_FREQ];
+        assert_eq!(
+            obj.select(&nan_row, &p, &nan_row),
+            N_FREQ - 1,
+            "degenerate rows must fall back to the top state, deterministically"
+        );
+        // Non-monotonic but finite: state 3 predicts the most work, so if
+        // energies are NaN (no feasible argmin by energy is still fine —
+        // feasibility holds for k=3) the bound picks by energy among the
+        // feasible set.
+        let mut pred = [0.0; N_FREQ];
+        pred[3] = 100.0;
+        pred[N_FREQ - 1] = 50.0;
+        let mut ednp = [f64::NAN; N_FREQ];
+        ednp[3] = 2.0;
+        assert_eq!(obj.select(&pred, &p, &ednp), 3);
+        // A feasible state with NaN energy must not shadow a later
+        // feasible state with real energy (it is never selectable).
+        let mut pred = [0.0; N_FREQ];
+        pred[2] = 100.0;
+        pred[7] = 90.0;
+        pred[N_FREQ - 1] = 50.0;
+        let mut ednp = [f64::NAN; N_FREQ];
+        ednp[7] = 2.0;
+        assert_eq!(obj.select(&pred, &p, &ednp), 7);
+    }
+
+    #[test]
     fn energy_bound_relaxed_lowers_frequency() {
         let tight = Objective::EnergyBound { max_slowdown: 0.05 };
         let loose = Objective::EnergyBound { max_slowdown: 0.10 };
         let (i, p, e) = grids(40_000.0, 0.0, tight);
         let (i2, p2, e2) = grids(40_000.0, 0.0, loose);
         assert!(loose.select(&i2, &p2, &e2) <= tight.select(&i, &p, &e));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(Objective::parse("edp").unwrap(), Objective::Edp);
+        assert_eq!(Objective::parse("ED2P").unwrap(), Objective::Ed2p);
+        assert_eq!(
+            Objective::parse("energy@5").unwrap(),
+            Objective::EnergyBound { max_slowdown: 0.05 }
+        );
+        assert_eq!(
+            Objective::parse("energy@10%").unwrap(),
+            Objective::EnergyBound { max_slowdown: 0.10 }
+        );
+        assert!(Objective::parse("bogus").is_err());
+        assert!(Objective::parse("energy@x").is_err());
+        // degenerate bounds are rejected, not silently defanged
+        for bad in ["energy@-5", "energy@100", "energy@150", "energy@nan", "energy@inf"] {
+            assert!(Objective::parse(bad).is_err(), "accepted '{bad}'");
+        }
+        assert!(Objective::parse("energy@0").is_ok());
     }
 
     #[test]

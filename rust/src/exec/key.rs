@@ -157,6 +157,17 @@ impl RunKey {
     pub fn hash_hex(&self) -> String {
         fnv1a128_hex(self.canonical().as_bytes())
     }
+
+    /// Deterministic shard assignment: which of `n_shards` partitions
+    /// owns this key.  Uses the second FNV stream over the canonical
+    /// text, so the partition is stable across processes/machines (the
+    /// property `pcstall sweep --shard i/N` relies on: every shard
+    /// derives the same global partition independently) and independent
+    /// of the cache file stem's primary stream.
+    pub fn shard_of(&self, n_shards: usize) -> usize {
+        debug_assert!(n_shards > 0);
+        (fnv1a(self.canonical().as_bytes(), FNV_OFFSET_B) % n_shards.max(1) as u64) as usize
+    }
 }
 
 #[cfg(test)]
@@ -271,6 +282,39 @@ mod tests {
         let c = key_of("comd");
         assert_ne!(a.hash_hex(), b.hash_hex());
         assert_ne!(a.hash_hex(), c.hash_hex());
+    }
+
+    #[test]
+    fn shard_assignment_is_a_partition() {
+        // every key belongs to exactly one shard, stably
+        let keys: Vec<RunKey> = ["comd", "hacc", "dgemm", "xsbench", "BwdBN"]
+            .iter()
+            .flat_map(|wl| {
+                [1_000.0, 10_000.0, 50_000.0].map(|e| {
+                    let mut cfg = SimConfig::small();
+                    cfg.dvfs.epoch_ns = e;
+                    RunKey::new(
+                        &cfg,
+                        "quick",
+                        "native",
+                        wl,
+                        Policy::PcStall,
+                        Objective::Ed2p,
+                        RunMode::Epochs(40),
+                        0.05,
+                    )
+                })
+            })
+            .collect();
+        for n in [1usize, 2, 3, 7] {
+            for k in &keys {
+                let s = k.shard_of(n);
+                assert!(s < n);
+                assert_eq!(s, k.shard_of(n), "assignment must be stable");
+            }
+        }
+        // with one shard everything lands in shard 0
+        assert!(keys.iter().all(|k| k.shard_of(1) == 0));
     }
 
     #[test]

@@ -21,6 +21,7 @@
 pub mod cache;
 pub mod key;
 pub mod pool;
+pub mod shard;
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -29,6 +30,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::stats::RunResult;
 use cache::{CacheStats, ResultCache};
 use key::RunKey;
+
+pub use shard::ShardSpec;
 
 /// The sweep engine: one per harness invocation, shared by every
 /// experiment so cross-figure cache reuse and accounting aggregate.

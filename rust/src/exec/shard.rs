@@ -1,0 +1,124 @@
+//! Shard specifications: deterministic partitioning of a keyed job grid
+//! across independent `pcstall` invocations (possibly on different
+//! machines).
+//!
+//! A [`ShardSpec`] `i/N` owns every [`RunKey`] whose fingerprint maps to
+//! partition `i` of `N` (see [`RunKey::shard_of`]).  Because the
+//! partition is a pure function of the key's canonical text, every
+//! shard derives the same global assignment without coordination:
+//! shards are **disjoint** (no row computed twice), **complete** (their
+//! union is the full grid), and **cache-compatible** (a shard's cells
+//! carry exactly the keys an unsharded run would, so shard results and
+//! unsharded results share one content-addressed cache).
+
+use crate::exec::key::RunKey;
+
+/// One shard of an `N`-way partition (`--shard i/N`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Zero-based shard index, `< count`.
+    pub index: usize,
+    /// Total number of shards, `>= 1`.
+    pub count: usize,
+}
+
+impl ShardSpec {
+    /// The trivial 1-way partition that owns everything.
+    pub fn whole() -> ShardSpec {
+        ShardSpec { index: 0, count: 1 }
+    }
+
+    /// Parse the CLI form `i/N` (e.g. `0/4`), zero-based.
+    pub fn parse(s: &str) -> anyhow::Result<ShardSpec> {
+        let (i, n) = s
+            .split_once('/')
+            .ok_or_else(|| anyhow::anyhow!("shard spec must be i/N (e.g. 0/4), got '{s}'"))?;
+        let index: usize = i
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad shard index '{i}' in '{s}'"))?;
+        let count: usize = n
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad shard count '{n}' in '{s}'"))?;
+        anyhow::ensure!(count >= 1, "shard count must be >= 1 (got {count})");
+        anyhow::ensure!(
+            index < count,
+            "shard index {index} out of range for {count} shard(s) (indices are zero-based)"
+        );
+        Ok(ShardSpec { index, count })
+    }
+
+    /// Does this shard own `key`?
+    pub fn owns(&self, key: &RunKey) -> bool {
+        key.shard_of(self.count) == self.index
+    }
+}
+
+impl std::fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::dvfs::manager::{Policy, RunMode};
+    use crate::dvfs::objective::Objective;
+
+    fn a_key(workload: &str, epoch_ns: f64) -> RunKey {
+        let mut cfg = SimConfig::small();
+        cfg.dvfs.epoch_ns = epoch_ns;
+        RunKey::new(
+            &cfg,
+            "quick",
+            "native",
+            workload,
+            Policy::PcStall,
+            Objective::Ed2p,
+            RunMode::Epochs(40),
+            0.05,
+        )
+    }
+
+    #[test]
+    fn parse_accepts_valid_and_rejects_invalid() {
+        assert_eq!(ShardSpec::parse("0/1").unwrap(), ShardSpec::whole());
+        assert_eq!(
+            ShardSpec::parse("2/3").unwrap(),
+            ShardSpec { index: 2, count: 3 }
+        );
+        for bad in ["", "3", "3/3", "4/3", "-1/3", "a/3", "1/b", "1/0"] {
+            assert!(ShardSpec::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn shards_partition_exactly() {
+        let keys: Vec<RunKey> = ["comd", "hacc", "dgemm", "xsbench"]
+            .iter()
+            .flat_map(|wl| [1_000.0, 10_000.0, 50_000.0, 100_000.0].map(|e| a_key(wl, e)))
+            .collect();
+        for count in [1usize, 2, 3, 5] {
+            for key in &keys {
+                let owners: Vec<usize> = (0..count)
+                    .filter(|&index| ShardSpec { index, count }.owns(key))
+                    .collect();
+                assert_eq!(owners.len(), 1, "key owned by {owners:?} of {count}");
+            }
+        }
+    }
+
+    #[test]
+    fn whole_owns_everything() {
+        assert!(ShardSpec::whole().owns(&a_key("comd", 1000.0)));
+    }
+
+    #[test]
+    fn display_roundtrips() {
+        let s = ShardSpec { index: 1, count: 4 };
+        assert_eq!(ShardSpec::parse(&s.to_string()).unwrap(), s);
+    }
+}

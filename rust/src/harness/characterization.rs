@@ -235,7 +235,7 @@ pub fn fig7(opts: &ExpOptions) -> anyhow::Result<()> {
 
     // (b) average across workloads at coarser epochs
     let mut tb = CsvTable::new(&["epoch_us", "mean_rel_change"]);
-    for &epoch_ns in &[1_000.0, 10_000.0, 50_000.0, 100_000.0] {
+    for &epoch_ns in &super::sweep::EPOCH_LENS_NS {
         let budget_ns = opts.trace_epochs() as f64 * 1_000.0;
         let epochs = ((budget_ns / epoch_ns) as u64).clamp(8, opts.trace_epochs());
         let vals: Vec<f64> = ground_truths_for(opts, &opts.sweep_workloads(), epochs, epoch_ns)?

@@ -10,6 +10,8 @@
 //! cache, and fans the rest out across `--jobs` workers — while keeping
 //! the emitted CSVs byte-identical to a serial run.
 
+use std::sync::Arc;
+
 use crate::config::SimConfig;
 use crate::dvfs::manager::{DvfsManager, Policy, RunMode};
 use crate::dvfs::objective::Objective;
@@ -21,6 +23,7 @@ use crate::stats::RunResult;
 use crate::util::geomean;
 use crate::workloads::{ResolvedWorkload, WorkloadSource};
 
+use super::sweep::{doubling_axis, EPOCH_LENS_NS};
 use super::ExpOptions;
 
 /// Completion-run safety cap.
@@ -87,6 +90,8 @@ impl Cell {
     /// Content-address fingerprint of this cell.  `workload_id` is the
     /// *resolved* canonical id (catalog name or `trace:<content-hash>`),
     /// not the user-facing spec — see [`WorkloadSource::resolve`].
+    /// Callers outside the submit path should go through [`cell_key`],
+    /// which also applies the trace waves normalization.
     fn key_for(&self, opts: &ExpOptions, workload_id: &str) -> RunKey {
         RunKey::new(
             &self.cfg,
@@ -133,12 +138,10 @@ impl Cell {
 /// scale presets (and identical to a direct `trace replay`).
 pub fn run_cells(opts: &ExpOptions, cells: Vec<Cell>) -> anyhow::Result<Vec<RunResult>> {
     use std::collections::HashMap;
-    use std::sync::Arc;
 
-    let use_pjrt = opts.use_pjrt;
     let mut resolved_by_spec: HashMap<String, Arc<ResolvedWorkload>> = HashMap::new();
     let mut batch = Vec::with_capacity(cells.len());
-    for mut cell in cells {
+    for cell in cells {
         let resolved = match resolved_by_spec.get(&cell.workload) {
             Some(r) => r.clone(),
             None => {
@@ -147,13 +150,40 @@ pub fn run_cells(opts: &ExpOptions, cells: Vec<Cell>) -> anyhow::Result<Vec<RunR
                 r
             }
         };
-        if resolved.trace().is_some() {
-            cell.waves = 1.0;
-        }
-        let key = cell.key_for(opts, &resolved.id);
-        batch.push((key, move || cell.execute(use_pjrt, &resolved)));
+        batch.push((cell, resolved));
     }
-    Ok(opts.engine.run_batch(opts.jobs.max(1), batch))
+    Ok(run_cells_resolved(opts, batch))
+}
+
+/// [`run_cells`] for pre-resolved cells (the sweep-plan path, which
+/// resolves every spec once at compile time so the shard partition and
+/// the execution see the same workload content).
+pub(crate) fn run_cells_resolved(
+    opts: &ExpOptions,
+    cells: Vec<(Cell, Arc<ResolvedWorkload>)>,
+) -> Vec<RunResult> {
+    let use_pjrt = opts.use_pjrt;
+    let batch: Vec<_> = cells
+        .into_iter()
+        .map(|(mut cell, resolved)| {
+            let key = cell_key(opts, &mut cell, &resolved);
+            (key, move || cell.execute(use_pjrt, &resolved))
+        })
+        .collect();
+    opts.engine.run_batch(opts.jobs.max(1), batch)
+}
+
+/// The fingerprint a cell will execute under, after normalization: the
+/// single source of truth shared by the submit path above and the
+/// sweep-plan shard partition ([`crate::harness::sweep`]).  Mutates the
+/// cell exactly the way submission would (trace-driven cells pin
+/// `waves` to 1.0 — see [`run_cells`]), so a key computed here is
+/// byte-identical to the one the engine sees.
+pub(crate) fn cell_key(opts: &ExpOptions, cell: &mut Cell, resolved: &ResolvedWorkload) -> RunKey {
+    if resolved.trace().is_some() {
+        cell.waves = 1.0;
+    }
+    cell.key_for(opts, &resolved.id)
 }
 
 /// Run one (workload, policy, objective) configuration through the
@@ -187,7 +217,9 @@ pub fn run_design_scaled(
         .expect("single-cell batch returns one result"))
 }
 
-fn completion(epoch_ns: f64) -> RunMode {
+/// Completion mode with the standard epoch-scaled safety cap (shared by
+/// the fixed-work figures and the sweep plans).
+pub(crate) fn completion(epoch_ns: f64) -> RunMode {
     // cap scales with epoch length so the cap is a time budget
     RunMode::Completion {
         max_epochs: (MAX_EPOCHS as f64 / (epoch_ns / 1000.0)).max(64.0) as u64,
@@ -199,6 +231,53 @@ fn improvement(r: &RunResult, base: &RunResult, n: u32) -> f64 {
     (1.0 - r.ednp(n) / base.ednp(n)) * 100.0
 }
 
+/// `[axis][design] -> per-workload (baseline, design) result pairs`.
+type PairedGrid = Vec<Vec<Vec<(RunResult, RunResult)>>>;
+
+/// Shared grid helper for the paired (baseline, design) axis figures
+/// (Figs. 1a, 17, 18b): build the interleaved baseline/design cell
+/// batch for `axis × designs × sweep_workloads`, run it through the
+/// engine, and hand back the result pairs grouped `[axis][design] ->
+/// Vec<(baseline, design)>` in workload order.  `cell_of` maps one
+/// `(axis value, workload, policy)` coordinate to its cell — epoch
+/// sweeps set `epoch_ns`, granularity sweeps set `cus_per_domain`.
+fn paired_axis_grid<A: Copy>(
+    opts: &ExpOptions,
+    axis: &[A],
+    designs: &[Policy],
+    baseline: Policy,
+    cell_of: impl Fn(A, &str, Policy) -> Cell,
+) -> anyhow::Result<PairedGrid> {
+    let wls = opts.sweep_workloads();
+    let mut cells = Vec::with_capacity(axis.len() * designs.len() * wls.len() * 2);
+    for &a in axis {
+        for &d in designs {
+            for &wl in &wls {
+                cells.push(cell_of(a, wl, baseline));
+                cells.push(cell_of(a, wl, d));
+            }
+        }
+    }
+    let mut results = run_cells(opts, cells)?.into_iter();
+    let mut grid = Vec::with_capacity(axis.len());
+    for _ in axis {
+        let mut per_design = Vec::with_capacity(designs.len());
+        for _ in designs {
+            let pairs: Vec<(RunResult, RunResult)> = wls
+                .iter()
+                .map(|_| {
+                    let base = results.next().expect("batch size mismatch");
+                    let r = results.next().expect("batch size mismatch");
+                    (base, r)
+                })
+                .collect();
+            per_design.push(pairs);
+        }
+        grid.push(per_design);
+    }
+    Ok(grid)
+}
+
 /// Fig. 1a — ED²P opportunity vs DVFS epoch duration.
 pub fn fig1a(opts: &ExpOptions) -> anyhow::Result<()> {
     let designs = [
@@ -206,44 +285,20 @@ pub fn fig1a(opts: &ExpOptions) -> anyhow::Result<()> {
         Policy::PcStall,
         Policy::Oracle,
     ];
-    let epoch_lens = [1_000.0, 10_000.0, 50_000.0, 100_000.0];
-
-    let mut cells = Vec::new();
-    for &epoch_ns in &epoch_lens {
-        for &d in &designs {
-            for wl in opts.sweep_workloads() {
-                cells.push(Cell::at(
-                    opts,
-                    wl,
-                    Policy::Static(F_STATIC_IDX),
-                    Objective::Ed2p,
-                    epoch_ns,
-                    completion(epoch_ns),
-                    1.0,
-                ));
-                cells.push(Cell::at(
-                    opts,
-                    wl,
-                    d,
-                    Objective::Ed2p,
-                    epoch_ns,
-                    completion(epoch_ns),
-                    1.0,
-                ));
-            }
-        }
-    }
-    let mut results = run_cells(opts, cells)?.into_iter();
+    let grid = paired_axis_grid(
+        opts,
+        &EPOCH_LENS_NS,
+        &designs,
+        Policy::Static(F_STATIC_IDX),
+        |epoch_ns, wl, p| {
+            Cell::at(opts, wl, p, Objective::Ed2p, epoch_ns, completion(epoch_ns), 1.0)
+        },
+    )?;
 
     let mut table = CsvTable::new(&["epoch_us", "design", "ed2p_improvement_pct"]);
-    for &epoch_ns in &epoch_lens {
-        for &d in &designs {
-            let mut imps = Vec::new();
-            for _wl in opts.sweep_workloads() {
-                let base = results.next().unwrap();
-                let r = results.next().unwrap();
-                imps.push(improvement(&r, &base, 2));
-            }
+    for (&epoch_ns, per_design) in EPOCH_LENS_NS.iter().zip(&grid) {
+        for (&d, pairs) in designs.iter().zip(per_design) {
+            let imps: Vec<f64> = pairs.iter().map(|(base, r)| improvement(r, base, 2)).collect();
             let mean = imps.iter().sum::<f64>() / imps.len().max(1) as f64;
             table.push(vec![
                 format!("{}", epoch_ns / 1000.0),
@@ -267,7 +322,7 @@ pub fn fig1b(opts: &ExpOptions) -> anyhow::Result<()> {
         Policy::AccReac,
         Policy::PcStall,
     ];
-    let epoch_lens = [1_000.0, 10_000.0, 50_000.0, 100_000.0];
+    let epoch_lens = EPOCH_LENS_NS;
 
     let plan = |epoch_ns: f64| {
         let budget = (opts.trace_epochs() as f64 * 1_000.0 / epoch_ns) as u64;
@@ -495,44 +550,20 @@ pub fn fig17(opts: &ExpOptions) -> anyhow::Result<()> {
         Policy::PcStall,
         Policy::Oracle,
     ];
-    let epoch_lens = [1_000.0, 10_000.0, 50_000.0, 100_000.0];
-
-    let mut cells = Vec::new();
-    for &epoch_ns in &epoch_lens {
-        for &d in &designs {
-            for wl in opts.sweep_workloads() {
-                cells.push(Cell::at(
-                    opts,
-                    wl,
-                    Policy::Static(F_STATIC_IDX),
-                    Objective::Edp,
-                    epoch_ns,
-                    completion(epoch_ns),
-                    1.0,
-                ));
-                cells.push(Cell::at(
-                    opts,
-                    wl,
-                    d,
-                    Objective::Edp,
-                    epoch_ns,
-                    completion(epoch_ns),
-                    1.0,
-                ));
-            }
-        }
-    }
-    let mut results = run_cells(opts, cells)?.into_iter();
+    let grid = paired_axis_grid(
+        opts,
+        &EPOCH_LENS_NS,
+        &designs,
+        Policy::Static(F_STATIC_IDX),
+        |epoch_ns, wl, p| {
+            Cell::at(opts, wl, p, Objective::Edp, epoch_ns, completion(epoch_ns), 1.0)
+        },
+    )?;
 
     let mut table = CsvTable::new(&["epoch_us", "design", "geomean_norm_edp"]);
-    for &epoch_ns in &epoch_lens {
-        for &d in &designs {
-            let mut norms = Vec::new();
-            for _wl in opts.sweep_workloads() {
-                let base = results.next().unwrap();
-                let r = results.next().unwrap();
-                norms.push(r.edp() / base.edp());
-            }
+    for (&epoch_ns, per_design) in EPOCH_LENS_NS.iter().zip(&grid) {
+        for (&d, pairs) in designs.iter().zip(per_design) {
+            let norms: Vec<f64> = pairs.iter().map(|(base, r)| r.edp() / base.edp()).collect();
             table.push(vec![
                 format!("{}", epoch_ns / 1000.0),
                 d.name(),
@@ -611,18 +642,21 @@ pub fn fig18a(opts: &ExpOptions) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Ablation (§4.4 sizing): PC-table entries vs hit rate and accuracy —
-/// the paper's "128 entries reach a 95%+ hit ratio" argument.
-pub fn ablation_table_size(opts: &ExpOptions) -> anyhow::Result<()> {
-    let sizes = [8usize, 16, 32, 64, 128, 256, 512];
-
-    let mut cells = Vec::new();
-    for &entries in &sizes {
-        for wl in opts.sweep_workloads() {
-            let mut cfg = opts.base_cfg();
-            cfg.dvfs.pc_table_entries = entries;
+/// Shared axis helper for the PCSTALL config ablations: run PCSTALL /
+/// ED²P at `trace_epochs` over the sweep workloads for every value of a
+/// config axis (`cfg_at(i)` prepares the i-th config) and return the
+/// per-value `(mean PC-table hit rate, mean accuracy)`.
+fn pcstall_cfg_axis(
+    opts: &ExpOptions,
+    n_values: usize,
+    cfg_at: impl Fn(usize) -> SimConfig,
+) -> anyhow::Result<Vec<(f64, f64)>> {
+    let wls = opts.sweep_workloads();
+    let mut cells = Vec::with_capacity(n_values * wls.len());
+    for i in 0..n_values {
+        for wl in &wls {
             cells.push(Cell::with_cfg(
-                cfg,
+                cfg_at(i),
                 wl,
                 Policy::PcStall,
                 Objective::Ed2p,
@@ -632,22 +666,41 @@ pub fn ablation_table_size(opts: &ExpOptions) -> anyhow::Result<()> {
         }
     }
     let mut results = run_cells(opts, cells)?.into_iter();
-
-    let mut table = CsvTable::new(&["entries", "hit_rate", "accuracy"]);
-    for &entries in &sizes {
+    let mut out = Vec::with_capacity(n_values);
+    for _ in 0..n_values {
         let mut hits = Vec::new();
         let mut accs = Vec::new();
-        for _wl in opts.sweep_workloads() {
-            let r = results.next().unwrap();
+        for _ in &wls {
+            let r = results.next().expect("batch size mismatch");
             hits.push(r.pc_hit_rate);
             if r.mean_accuracy.is_finite() {
                 accs.push(r.mean_accuracy);
             }
         }
+        out.push((
+            hits.iter().sum::<f64>() / hits.len().max(1) as f64,
+            accs.iter().sum::<f64>() / accs.len().max(1) as f64,
+        ));
+    }
+    Ok(out)
+}
+
+/// Ablation (§4.4 sizing): PC-table entries vs hit rate and accuracy —
+/// the paper's "128 entries reach a 95%+ hit ratio" argument.
+pub fn ablation_table_size(opts: &ExpOptions) -> anyhow::Result<()> {
+    let sizes = [8usize, 16, 32, 64, 128, 256, 512];
+    let stats = pcstall_cfg_axis(opts, sizes.len(), |i| {
+        let mut cfg = opts.base_cfg();
+        cfg.dvfs.pc_table_entries = sizes[i];
+        cfg
+    })?;
+
+    let mut table = CsvTable::new(&["entries", "hit_rate", "accuracy"]);
+    for (&entries, &(hit, acc)) in sizes.iter().zip(&stats) {
         table.push(vec![
             entries.to_string(),
-            format!("{:.3}", hits.iter().sum::<f64>() / hits.len().max(1) as f64),
-            format!("{:.3}", accs.iter().sum::<f64>() / accs.len().max(1) as f64),
+            format!("{:.3}", hit),
+            format!("{:.3}", acc),
         ]);
     }
     opts.emit(
@@ -661,37 +714,15 @@ pub fn ablation_table_size(opts: &ExpOptions) -> anyhow::Result<()> {
 /// Ablation: PC-table EWMA update weight (1.0 = paper's overwrite).
 pub fn ablation_alpha(opts: &ExpOptions) -> anyhow::Result<()> {
     let alphas = [0.25f64, 0.5, 0.75, 1.0];
-
-    let mut cells = Vec::new();
-    for &alpha in &alphas {
-        for wl in opts.sweep_workloads() {
-            let mut cfg = opts.base_cfg();
-            cfg.dvfs.pc_update_alpha = alpha;
-            cells.push(Cell::with_cfg(
-                cfg,
-                wl,
-                Policy::PcStall,
-                Objective::Ed2p,
-                RunMode::Epochs(opts.trace_epochs()),
-                opts.waves_scale().max(0.2),
-            ));
-        }
-    }
-    let mut results = run_cells(opts, cells)?.into_iter();
+    let stats = pcstall_cfg_axis(opts, alphas.len(), |i| {
+        let mut cfg = opts.base_cfg();
+        cfg.dvfs.pc_update_alpha = alphas[i];
+        cfg
+    })?;
 
     let mut table = CsvTable::new(&["alpha", "accuracy"]);
-    for &alpha in &alphas {
-        let mut accs = Vec::new();
-        for _wl in opts.sweep_workloads() {
-            let r = results.next().unwrap();
-            if r.mean_accuracy.is_finite() {
-                accs.push(r.mean_accuracy);
-            }
-        }
-        table.push(vec![
-            format!("{alpha}"),
-            format!("{:.3}", accs.iter().sum::<f64>() / accs.len().max(1) as f64),
-        ]);
+    for (&alpha, &(_, acc)) in alphas.iter().zip(&stats) {
+        table.push(vec![format!("{alpha}"), format!("{:.3}", acc)]);
     }
     opts.emit(
         "ablation_alpha",
@@ -711,37 +742,15 @@ pub fn ablation_table_share(opts: &ExpOptions) -> anyhow::Result<()> {
         shares.push(share);
         share *= 4;
     }
-
-    let mut cells = Vec::new();
-    for &share in &shares {
-        for wl in opts.sweep_workloads() {
-            let mut cfg = opts.base_cfg();
-            cfg.dvfs.pc_table_share = share;
-            cells.push(Cell::with_cfg(
-                cfg,
-                wl,
-                Policy::PcStall,
-                Objective::Ed2p,
-                RunMode::Epochs(opts.trace_epochs()),
-                opts.waves_scale().max(0.2),
-            ));
-        }
-    }
-    let mut results = run_cells(opts, cells)?.into_iter();
+    let stats = pcstall_cfg_axis(opts, shares.len(), |i| {
+        let mut cfg = opts.base_cfg();
+        cfg.dvfs.pc_table_share = shares[i];
+        cfg
+    })?;
 
     let mut table = CsvTable::new(&["cus_per_table", "accuracy"]);
-    for &share in &shares {
-        let mut accs = Vec::new();
-        for _wl in opts.sweep_workloads() {
-            let r = results.next().unwrap();
-            if r.mean_accuracy.is_finite() {
-                accs.push(r.mean_accuracy);
-            }
-        }
-        table.push(vec![
-            share.to_string(),
-            format!("{:.3}", accs.iter().sum::<f64>() / accs.len().max(1) as f64),
-        ]);
+    for (&share, &(_, acc)) in shares.iter().zip(&stats) {
+        table.push(vec![share.to_string(), format!("{:.3}", acc)]);
     }
     opts.emit(
         "ablation_table_share",
@@ -753,52 +762,36 @@ pub fn ablation_table_share(opts: &ExpOptions) -> anyhow::Result<()> {
 
 /// Fig. 18b — ED²P vs V/f-domain granularity.
 pub fn fig18b(opts: &ExpOptions) -> anyhow::Result<()> {
-    let n_cu = opts.base_cfg().gpu.n_cu;
-    let mut grans = vec![1usize];
-    while *grans.last().unwrap() * 2 <= n_cu / 2 {
-        let g = grans.last().unwrap() * 2;
-        grans.push(g);
-    }
+    let grans = doubling_axis(opts.base_cfg().gpu.n_cu / 2);
     let designs = [
         Policy::Reactive(EstModel::Crisp),
         Policy::PcStall,
         Policy::Oracle,
     ];
-
-    let cell_g = |g: usize, wl: &str, policy: Policy| {
-        let mut cfg = opts.base_cfg();
-        cfg.dvfs.cus_per_domain = g;
-        cfg.dvfs.epoch_ns = 1000.0;
-        Cell::with_cfg(
-            cfg,
-            wl,
-            policy,
-            Objective::Ed2p,
-            completion(1000.0),
-            opts.waves_scale(),
-        )
-    };
-
-    let mut cells = Vec::new();
-    for &g in &grans {
-        for &d in &designs {
-            for wl in opts.sweep_workloads() {
-                cells.push(cell_g(g, wl, Policy::Static(F_STATIC_IDX)));
-                cells.push(cell_g(g, wl, d));
-            }
-        }
-    }
-    let mut results = run_cells(opts, cells)?.into_iter();
+    let grid = paired_axis_grid(
+        opts,
+        &grans,
+        &designs,
+        Policy::Static(F_STATIC_IDX),
+        |g, wl, policy| {
+            let mut cfg = opts.base_cfg();
+            cfg.dvfs.cus_per_domain = g;
+            cfg.dvfs.epoch_ns = 1000.0;
+            Cell::with_cfg(
+                cfg,
+                wl,
+                policy,
+                Objective::Ed2p,
+                completion(1000.0),
+                opts.waves_scale(),
+            )
+        },
+    )?;
 
     let mut table = CsvTable::new(&["cus_per_domain", "design", "ed2p_improvement_pct"]);
-    for &g in &grans {
-        for &d in &designs {
-            let mut imps = Vec::new();
-            for _wl in opts.sweep_workloads() {
-                let base = results.next().unwrap();
-                let r = results.next().unwrap();
-                imps.push(improvement(&r, &base, 2));
-            }
+    for (&g, per_design) in grans.iter().zip(&grid) {
+        for (&d, pairs) in designs.iter().zip(per_design) {
+            let imps: Vec<f64> = pairs.iter().map(|(base, r)| improvement(r, base, 2)).collect();
             table.push(vec![
                 g.to_string(),
                 d.name(),

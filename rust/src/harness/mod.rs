@@ -9,6 +9,7 @@
 
 pub mod characterization;
 pub mod evaluation;
+pub mod sweep;
 
 use std::path::PathBuf;
 use std::sync::Arc;

@@ -1,0 +1,877 @@
+//! Declarative sweep plans: N-dimensional experiment grids compiled onto
+//! the sweep-execution engine, with deterministic cross-machine sharding.
+//!
+//! The paper's headline results are *sweeps* — ED²P improvement vs DVFS
+//! epoch length (Fig. 1a/14) and vs V/f-domain granularity (Fig. 18b).
+//! Instead of hard-coding one figure per grid, a [`SweepPlan`] declares
+//! the axes —
+//!
+//! * **epoch length** (`epoch_ns`),
+//! * **V/f-domain granularity** (`cus_per_domain`),
+//! * **workload source** (any [`WorkloadSource`] spec: catalog name,
+//!   `trace:<path>`, `synth:<seed>`),
+//! * **objective** (`edp` / `ed2p` / `energy@<pct>`),
+//! * **predictor design** (any [`Policy`]),
+//!
+//! — and compiles their cross product into the existing [`Cell`] /
+//! [`RunKey`] batch machinery: one baseline + one design cell per grid
+//! point, deduplicated and served by the content-addressed result cache
+//! exactly like the hard-coded figures.
+//!
+//! ## Sharding
+//!
+//! `pcstall sweep <plan> --shard i/N` partitions the grid by each
+//! point's *baseline* [`RunKey`] fingerprint ([`RunKey::shard_of`]):
+//! every shard derives the same global assignment independently, so
+//! shards are disjoint, cache-compatible with unsharded runs, and
+//! mergeable — and because all rows sharing a baseline colocate, no
+//! baseline simulation is ever duplicated across machines.  A
+//! shard writes `sweep_<name>.part<i>of<N>.csv` — the final rows plus a
+//! leading global `row` index — and [`merge_dir`] recombines a complete
+//! part set into `sweep_<name>.csv`, byte-identical to an unsharded run.
+//!
+//! ## Plan grammar (TOML subset, see [`crate::config::minitoml`])
+//!
+//! ```toml
+//! name = "my_sweep"                      # default: file stem
+//! epoch_ns = [1000, 10000, 50000]        # default: EPOCH_LENS_NS
+//! cus_per_domain = [1, 2, 4]             # default: doubling_axis(n_cu)
+//! workloads = ["comd", "synth:7"]        # default: the scale's sweep set
+//! workloads_add = ["synth:7"]            # or: scale set + extras
+//! designs = ["crisp", "pcstall"]         # default: crisp, pcstall, oracle
+//! objectives = ["ed2p", "energy@5"]      # default: ed2p
+//! baseline = "static:1.7"                # improvement reference
+//! epochs = 40                            # fixed-epoch mode; default: completion
+//! [set]                                  # config overrides for every cell
+//! gpu.n_wf = 16                          # (grid axes override [set] keys)
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::config::minitoml::{self, Value};
+use crate::dvfs::manager::{Policy, RunMode};
+use crate::dvfs::objective::Objective;
+use crate::exec::key::RunKey;
+use crate::exec::ShardSpec;
+use crate::power::params::F_STATIC_IDX;
+use crate::stats::emit::CsvTable;
+use crate::stats::RunResult;
+use crate::workloads::{ResolvedWorkload, WorkloadSource};
+
+use super::evaluation::{cell_key, completion, run_cells_resolved, Cell};
+use super::ExpOptions;
+
+/// The paper's canonical epoch-duration axis (Figs. 1a/1b/17): 1 µs to
+/// 100 µs.  Single source of truth — the figure grids and the sweep
+/// presets consume this constant, so their axes cannot drift apart.
+pub const EPOCH_LENS_NS: [f64; 4] = [1_000.0, 10_000.0, 50_000.0, 100_000.0];
+
+/// Power-of-two axis `1, 2, 4, … <= max` (domain-granularity sweeps).
+pub fn doubling_axis(max: usize) -> Vec<usize> {
+    let mut axis = vec![1usize];
+    while axis.last().unwrap() * 2 <= max {
+        let next = axis.last().unwrap() * 2;
+        axis.push(next);
+    }
+    axis
+}
+
+/// The workload-source axis of a plan.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadAxis {
+    /// The scale's sweep workload set ([`ExpOptions::sweep_workloads`]).
+    Scale,
+    /// The scale set plus extra specs (synth/trace sources riding along
+    /// with the catalog subset of whatever `--quick`/`--full` selects).
+    ScalePlus(Vec<String>),
+    /// An explicit spec list, independent of scale.
+    Explicit(Vec<String>),
+}
+
+/// A declarative sweep grid.  Empty axis vectors mean "use the default
+/// axis for the active scale" (resolved in [`SweepPlan::compile`]).
+#[derive(Debug, Clone)]
+pub struct SweepPlan {
+    pub name: String,
+    /// Epoch-length axis in ns; empty → [`EPOCH_LENS_NS`].
+    pub epoch_ns: Vec<f64>,
+    /// Domain-granularity axis; empty → `doubling_axis(n_cu)`.
+    pub cus_per_domain: Vec<usize>,
+    pub workloads: WorkloadAxis,
+    pub designs: Vec<Policy>,
+    pub objectives: Vec<Objective>,
+    /// Reference policy for the improvement columns.
+    pub baseline: Policy,
+    /// `Some(n)`: run exactly `n` epochs; `None`: run to completion
+    /// (with the standard epoch-scaled safety cap).
+    pub epochs: Option<u64>,
+    /// `[set]` config overrides applied to every cell before the grid
+    /// axes (axes win on conflict).
+    pub overrides: Vec<(String, Value)>,
+}
+
+impl Default for SweepPlan {
+    fn default() -> Self {
+        SweepPlan {
+            name: "sweep".into(),
+            epoch_ns: Vec::new(),
+            cus_per_domain: Vec::new(),
+            workloads: WorkloadAxis::Scale,
+            designs: vec![
+                Policy::Reactive(crate::models::EstModel::Crisp),
+                Policy::PcStall,
+                Policy::Oracle,
+            ],
+            objectives: vec![Objective::Ed2p],
+            baseline: Policy::Static(F_STATIC_IDX),
+            epochs: None,
+            overrides: Vec::new(),
+        }
+    }
+}
+
+/// Names of the built-in plans (`pcstall sweep <preset>`).
+pub fn preset_names() -> Vec<&'static str> {
+    vec!["epoch_x_granularity", "epoch_sweep", "granularity_sweep"]
+}
+
+impl SweepPlan {
+    /// A built-in plan by name.
+    pub fn preset(name: &str) -> Option<SweepPlan> {
+        match name {
+            // The fig1a × fig18b cross figure, over both catalog and
+            // synthesized workload sources: every epoch length at every
+            // domain granularity.  The two synth seeds are arbitrary but
+            // fixed — they are part of the figure's identity.
+            "epoch_x_granularity" => Some(SweepPlan {
+                name: name.into(),
+                workloads: WorkloadAxis::ScalePlus(vec!["synth:11".into(), "synth:23".into()]),
+                ..SweepPlan::default()
+            }),
+            // fig1a's grid as an open plan (granularity pinned at 1).
+            "epoch_sweep" => Some(SweepPlan {
+                name: name.into(),
+                cus_per_domain: vec![1],
+                ..SweepPlan::default()
+            }),
+            // fig18b's axis family as an open plan (epoch pinned at
+            // 1 µs).  Note the default axis runs to a whole-GPU single
+            // domain (n_cu), one point past fig18b's n_cu/2 cap; the
+            // shared points reuse fig18b's cache entries.
+            "granularity_sweep" => Some(SweepPlan {
+                name: name.into(),
+                epoch_ns: vec![1_000.0],
+                ..SweepPlan::default()
+            }),
+            _ => None,
+        }
+    }
+
+    /// Load a plan: preset name, or path to a plan TOML file.
+    pub fn load(spec: &str) -> anyhow::Result<SweepPlan> {
+        if let Some(p) = SweepPlan::preset(spec) {
+            return Ok(p);
+        }
+        let path = Path::new(spec);
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            anyhow::anyhow!(
+                "'{spec}' is not a preset ({}) and not a readable plan file: {e}",
+                preset_names().join(", ")
+            )
+        })?;
+        let stem = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("sweep")
+            .to_string();
+        let mut plan = SweepPlan::from_toml(&text)
+            .map_err(|e| anyhow::anyhow!("plan {}: {e}", path.display()))?;
+        if plan.name == "sweep" {
+            plan.name = sanitize_name(&stem);
+        }
+        Ok(plan)
+    }
+
+    /// Parse the plan grammar (see the module docs).
+    pub fn from_toml(text: &str) -> anyhow::Result<SweepPlan> {
+        let mut plan = SweepPlan::default();
+        let mut explicit: Option<Vec<String>> = None;
+        let mut add: Option<Vec<String>> = None;
+        for (key, value) in minitoml::parse(text)? {
+            match key.as_str() {
+                "name" => {
+                    let s = value
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("name must be a string"))?;
+                    anyhow::ensure!(!s.is_empty(), "name must not be empty");
+                    plan.name = sanitize_name(s);
+                }
+                "epoch_ns" => {
+                    plan.epoch_ns = float_axis(&value, "epoch_ns")?;
+                    anyhow::ensure!(
+                        plan.epoch_ns.iter().all(|e| *e > 0.0),
+                        "epoch_ns values must be positive"
+                    );
+                }
+                "cus_per_domain" => {
+                    plan.cus_per_domain = float_axis(&value, "cus_per_domain")?
+                        .into_iter()
+                        .map(|g| {
+                            anyhow::ensure!(
+                                g >= 1.0 && g.fract() == 0.0,
+                                "cus_per_domain values must be positive integers"
+                            );
+                            Ok(g as usize)
+                        })
+                        .collect::<anyhow::Result<_>>()?;
+                }
+                "workloads" => explicit = Some(string_axis(&value, "workloads")?),
+                "workloads_add" => add = Some(string_axis(&value, "workloads_add")?),
+                "designs" => {
+                    plan.designs = string_axis(&value, "designs")?
+                        .iter()
+                        .map(|s| Policy::parse(s))
+                        .collect::<anyhow::Result<_>>()?;
+                }
+                "objectives" => {
+                    plan.objectives = string_axis(&value, "objectives")?
+                        .iter()
+                        .map(|s| Objective::parse(s))
+                        .collect::<anyhow::Result<_>>()?;
+                }
+                "baseline" => {
+                    plan.baseline = Policy::parse(
+                        value
+                            .as_str()
+                            .ok_or_else(|| anyhow::anyhow!("baseline must be a policy string"))?,
+                    )?;
+                }
+                "epochs" => {
+                    let n = value
+                        .as_int()
+                        .ok_or_else(|| anyhow::anyhow!("epochs must be an integer"))?;
+                    anyhow::ensure!(n > 0, "epochs must be positive");
+                    plan.epochs = Some(n as u64);
+                }
+                _ => {
+                    if let Some(cfg_key) = key.strip_prefix("set.") {
+                        plan.overrides.push((cfg_key.to_string(), value));
+                    } else {
+                        anyhow::bail!(
+                            "unknown plan key '{key}' (axes: epoch_ns, cus_per_domain, \
+                             workloads, workloads_add, designs, objectives; scalars: name, \
+                             baseline, epochs; config overrides go under [set])"
+                        );
+                    }
+                }
+            }
+        }
+        match (explicit, add) {
+            (Some(_), Some(_)) => {
+                anyhow::bail!("'workloads' and 'workloads_add' are mutually exclusive")
+            }
+            (Some(w), None) => {
+                anyhow::ensure!(!w.is_empty(), "workloads must not be empty");
+                plan.workloads = WorkloadAxis::Explicit(w);
+            }
+            (None, Some(w)) => plan.workloads = WorkloadAxis::ScalePlus(w),
+            (None, None) => {}
+        }
+        anyhow::ensure!(!plan.designs.is_empty(), "designs must not be empty");
+        anyhow::ensure!(!plan.objectives.is_empty(), "objectives must not be empty");
+        Ok(plan)
+    }
+
+    /// The workload spec list this plan runs under `opts` (the CLI
+    /// `--workload` override, when present, replaces the axis entirely —
+    /// same contract as the hard-coded figures).
+    fn workload_specs(&self, opts: &ExpOptions) -> Vec<String> {
+        if !opts.workloads_override.is_empty() {
+            return opts
+                .workloads_override
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        }
+        match &self.workloads {
+            WorkloadAxis::Scale => opts
+                .sweep_workloads()
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            WorkloadAxis::ScalePlus(extra) => {
+                let mut v: Vec<String> = opts
+                    .sweep_workloads()
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect();
+                v.extend(extra.iter().cloned());
+                v
+            }
+            WorkloadAxis::Explicit(w) => w.clone(),
+        }
+    }
+
+    /// Compile the plan into a flat, deterministically-ordered grid.
+    /// Workload specs are resolved (and trace files read + content-
+    /// hashed) exactly once here and carried on the grid points, so the
+    /// shard partition and the eventual execution are defined over the
+    /// same workload content — a trace file changing on disk between
+    /// compile and run cannot desynchronize them.
+    pub fn compile(&self, opts: &ExpOptions) -> anyhow::Result<SweepGrid> {
+        let epoch_axis: Vec<f64> = if self.epoch_ns.is_empty() {
+            EPOCH_LENS_NS.to_vec()
+        } else {
+            self.epoch_ns.clone()
+        };
+        // Base config with the plan's `[set]` overrides applied — also
+        // the config the *default* granularity axis must be derived
+        // from (a plan overriding gpu.n_cu gets the axis of the GPU it
+        // actually simulates).
+        let mut proto_cfg = opts.base_cfg();
+        for (key, value) in &self.overrides {
+            proto_cfg
+                .set_key(key, value)
+                .map_err(|e| anyhow::anyhow!("plan [set] override {key}: {e}"))?;
+        }
+        let gran_axis: Vec<usize> = if self.cus_per_domain.is_empty() {
+            doubling_axis(proto_cfg.gpu.n_cu)
+        } else {
+            self.cus_per_domain.clone()
+        };
+        let workloads = self.workload_specs(opts);
+        anyhow::ensure!(!workloads.is_empty(), "plan has no workloads to run");
+
+        let mut resolved_memo: HashMap<String, Arc<ResolvedWorkload>> = HashMap::new();
+        let mut points = Vec::new();
+        for &epoch_ns in &epoch_axis {
+            for &gran in &gran_axis {
+                for &objective in &self.objectives {
+                    for &design in &self.designs {
+                        for wl in &workloads {
+                            let resolved = match resolved_memo.get(wl) {
+                                Some(r) => r.clone(),
+                                None => {
+                                    let r = Arc::new(WorkloadSource::parse(wl)?.resolve()?);
+                                    resolved_memo.insert(wl.clone(), r.clone());
+                                    r
+                                }
+                            };
+                            let mut cfg = proto_cfg.clone();
+                            cfg.dvfs.epoch_ns = epoch_ns;
+                            cfg.dvfs.cus_per_domain = gran;
+                            let mode = match self.epochs {
+                                Some(n) => RunMode::Epochs(n),
+                                None => completion(epoch_ns),
+                            };
+                            let waves = opts.waves_scale();
+                            let mut baseline_cell = Cell::with_cfg(
+                                cfg.clone(),
+                                wl,
+                                self.baseline,
+                                objective,
+                                mode,
+                                waves,
+                            );
+                            let design_cell =
+                                Cell::with_cfg(cfg, wl, design, objective, mode, waves);
+                            let shard_key = cell_key(opts, &mut baseline_cell, &resolved);
+                            points.push(SweepPoint {
+                                row: points.len(),
+                                epoch_ns,
+                                cus_per_domain: gran,
+                                workload: wl.clone(),
+                                design,
+                                objective,
+                                shard_key,
+                                baseline_cell,
+                                design_cell,
+                                resolved,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        Ok(SweepGrid {
+            name: self.name.clone(),
+            points,
+        })
+    }
+}
+
+/// One fully-resolved grid point: a (baseline, design) cell pair plus
+/// the row coordinates it renders to.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// Global row index in the full (unsharded) grid.
+    pub row: usize,
+    pub epoch_ns: f64,
+    pub cus_per_domain: usize,
+    pub workload: String,
+    pub design: Policy,
+    pub objective: Objective,
+    /// The *baseline* cell's fingerprint — the shard-partition domain.
+    /// Partitioning on the shared baseline colocates every row of one
+    /// (epoch, granularity, workload, objective) point on one shard, so
+    /// a baseline simulation is never duplicated across machines.
+    pub shard_key: RunKey,
+    baseline_cell: Cell,
+    design_cell: Cell,
+    /// The workload resolved at compile time (trace content already
+    /// read + hashed), shared by both cells at execution.
+    resolved: Arc<ResolvedWorkload>,
+}
+
+/// A compiled plan: the flat grid in row order.
+#[derive(Debug)]
+pub struct SweepGrid {
+    pub name: String,
+    pub points: Vec<SweepPoint>,
+}
+
+/// Column schema of every sweep CSV (part files prepend a `row` column).
+pub const SWEEP_HEADER: [&str; 10] = [
+    "epoch_us",
+    "cus_per_domain",
+    "workload",
+    "design",
+    "objective",
+    "improvement_pct",
+    "norm",
+    "energy_j",
+    "time_ms",
+    "accuracy",
+];
+
+/// The objective's scalar figure of merit (lower is better): ED^nP for
+/// EDP/ED²P points, plain energy for energy-bound points.
+fn merit(objective: Objective, r: &RunResult) -> f64 {
+    match objective {
+        Objective::Edp => r.edp(),
+        Objective::Ed2p => r.ed2p(),
+        Objective::EnergyBound { .. } => r.total_energy_j,
+    }
+}
+
+fn render_row(p: &SweepPoint, base: &RunResult, r: &RunResult) -> Vec<String> {
+    let norm = merit(p.objective, r) / merit(p.objective, base);
+    vec![
+        format!("{}", p.epoch_ns / 1000.0),
+        p.cus_per_domain.to_string(),
+        p.workload.clone(),
+        p.design.name(),
+        p.objective.name(),
+        format!("{:.2}", (1.0 - norm) * 100.0),
+        format!("{:.4}", norm),
+        format!("{:.4e}", r.total_energy_j),
+        format!("{:.4}", r.total_time_ns / 1e6),
+        format!("{:.3}", r.mean_accuracy),
+    ]
+}
+
+impl SweepGrid {
+    /// The subset of the grid a shard owns, in row order.
+    pub fn shard_points(&self, shard: ShardSpec) -> Vec<&SweepPoint> {
+        self.points
+            .iter()
+            .filter(|p| shard.owns(&p.shard_key))
+            .collect()
+    }
+
+    /// Execute `points` (a subset of this grid) through the engine and
+    /// render one `(global_row, cells)` per point.  Uses the workloads
+    /// resolved at compile time — no spec is re-read here.
+    pub fn execute(
+        &self,
+        opts: &ExpOptions,
+        points: &[&SweepPoint],
+    ) -> anyhow::Result<Vec<(usize, Vec<String>)>> {
+        let mut cells = Vec::with_capacity(points.len() * 2);
+        for p in points {
+            cells.push((p.baseline_cell.clone(), p.resolved.clone()));
+            cells.push((p.design_cell.clone(), p.resolved.clone()));
+        }
+        let results = run_cells_resolved(opts, cells);
+        let mut out = Vec::with_capacity(points.len());
+        for (p, pair) in points.iter().zip(results.chunks(2)) {
+            out.push((p.row, render_row(p, &pair[0], &pair[1])));
+        }
+        Ok(out)
+    }
+}
+
+/// Run a plan (one shard of it, or all of it for `ShardSpec::whole()`)
+/// and write the CSV.  Returns the written path.
+///
+/// Unsharded runs write the final `sweep_<name>.csv`.  Sharded runs
+/// write `sweep_<name>.part<i>of<N>.csv` carrying a leading global
+/// `row` column; [`merge_dir`] turns a complete part set into the final
+/// CSV, byte-identical to the unsharded run.
+pub fn run_sweep(
+    opts: &ExpOptions,
+    plan: &SweepPlan,
+    shard: ShardSpec,
+) -> anyhow::Result<PathBuf> {
+    let grid = plan.compile(opts)?;
+    let points = grid.shard_points(shard);
+    println!(
+        "[sweep {}] {} grid point(s){}",
+        grid.name,
+        grid.points.len(),
+        if shard.count > 1 {
+            format!(", shard {shard} owns {}", points.len())
+        } else {
+            String::new()
+        }
+    );
+    let rows = grid.execute(opts, &points)?;
+
+    let (id, table) = if shard.count > 1 {
+        let mut header: Vec<&str> = vec!["row"];
+        header.extend(SWEEP_HEADER);
+        let mut table = CsvTable::new(&header);
+        for (row, cells) in rows {
+            let mut line = vec![row.to_string()];
+            line.extend(cells);
+            table.push(line);
+        }
+        (
+            format!("sweep_{}.part{}of{}", grid.name, shard.index, shard.count),
+            table,
+        )
+    } else {
+        let mut table = CsvTable::new(&SWEEP_HEADER);
+        for (_, cells) in rows {
+            table.push(cells);
+        }
+        (format!("sweep_{}", grid.name), table)
+    };
+    let title = format!(
+        "sweep {}: {} (shard {shard})",
+        grid.name,
+        if shard.count > 1 { "partial grid" } else { "full grid" },
+    );
+    opts.emit(&id, &title, &table);
+    Ok(opts.out_dir.join(format!("{id}.csv")))
+}
+
+fn sanitize_name(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+/// A non-empty numeric axis from a plan value.
+fn float_axis(value: &Value, key: &str) -> anyhow::Result<Vec<f64>> {
+    let items = value
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{key} must be an array (e.g. {key} = [1, 2])"))?;
+    anyhow::ensure!(!items.is_empty(), "{key} must not be empty");
+    items
+        .iter()
+        .map(|v| {
+            v.as_float()
+                .ok_or_else(|| anyhow::anyhow!("{key}: expected a number, got {v:?}"))
+        })
+        .collect()
+}
+
+/// A non-empty string axis from a plan value.
+fn string_axis(value: &Value, key: &str) -> anyhow::Result<Vec<String>> {
+    let items = value
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{key} must be an array of strings"))?;
+    anyhow::ensure!(!items.is_empty(), "{key} must not be empty");
+    items
+        .iter()
+        .map(|v| {
+            v.as_str()
+                .map(|s| s.to_string())
+                .ok_or_else(|| anyhow::anyhow!("{key}: expected a string, got {v:?}"))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Shard merging
+// ---------------------------------------------------------------------------
+
+/// Parse `<base>.part<i>of<N>.csv` into `(base, i, N)`.
+fn parse_part_name(name: &str) -> Option<(String, usize, usize)> {
+    let stem = name.strip_suffix(".csv")?;
+    let (base, part) = stem.rsplit_once(".part")?;
+    let (i, n) = part.split_once("of")?;
+    let i: usize = i.parse().ok()?;
+    let n: usize = n.parse().ok()?;
+    if base.is_empty() || n == 0 || i >= n {
+        return None;
+    }
+    Some((base.to_string(), i, n))
+}
+
+/// Merge every complete shard set found in `dir`: for each
+/// `<base>.part<i>of<N>.csv` family with all `N` parts present, validate
+/// disjointness + completeness of the global row indices and write
+/// `<base>.csv`.  Returns the written paths.
+pub fn merge_dir(dir: &Path) -> anyhow::Result<Vec<PathBuf>> {
+    // One plan's part-file family: shard count + (index -> path).
+    type PartGroup = (usize, HashMap<usize, PathBuf>);
+    let rd = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", dir.display()))?;
+    let mut groups: HashMap<String, PartGroup> = HashMap::new();
+    for entry in rd.flatten() {
+        let path = entry.path();
+        let Some(name) = path.file_name().and_then(|s| s.to_str()) else {
+            continue;
+        };
+        let Some((base, i, n)) = parse_part_name(name) else {
+            continue;
+        };
+        let group = groups.entry(base.clone()).or_insert_with(|| (n, HashMap::new()));
+        anyhow::ensure!(
+            group.0 == n,
+            "conflicting shard counts for '{base}': found both /{} and /{n} part files \
+             (remove the stale set before merging)",
+            group.0
+        );
+        anyhow::ensure!(
+            group.1.insert(i, path).is_none(),
+            "duplicate part {i}/{n} for '{base}'"
+        );
+    }
+    anyhow::ensure!(
+        !groups.is_empty(),
+        "no shard part files (*.part<i>of<N>.csv) in {}",
+        dir.display()
+    );
+
+    let mut bases: Vec<String> = groups.keys().cloned().collect();
+    bases.sort();
+    let mut written = Vec::new();
+    for base in bases {
+        let (count, parts) = &groups[&base];
+        let missing: Vec<String> = (0..*count)
+            .filter(|i| !parts.contains_key(i))
+            .map(|i| format!("{i}/{count}"))
+            .collect();
+        anyhow::ensure!(
+            missing.is_empty(),
+            "'{base}' is missing shard part(s): {}",
+            missing.join(", ")
+        );
+        let mut header: Option<Vec<String>> = None;
+        let mut rows: Vec<(usize, Vec<String>)> = Vec::new();
+        for i in 0..*count {
+            let table = CsvTable::read(&parts[&i]).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(
+                table.header.first().map(|s| s.as_str()) == Some("row"),
+                "{}: not a sweep part file (no leading 'row' column)",
+                parts[&i].display()
+            );
+            match &header {
+                None => header = Some(table.header[1..].to_vec()),
+                Some(h) => anyhow::ensure!(
+                    *h == table.header[1..],
+                    "{}: header disagrees with the other parts",
+                    parts[&i].display()
+                ),
+            }
+            for row in table.rows {
+                let idx: usize = row[0]
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("{}: bad row index '{}'", parts[&i].display(), row[0]))?;
+                rows.push((idx, row[1..].to_vec()));
+            }
+        }
+        rows.sort_by_key(|(idx, _)| *idx);
+        for (pos, (idx, _)) in rows.iter().enumerate() {
+            anyhow::ensure!(
+                pos == *idx,
+                "'{base}': expected global row {pos}, found {idx} — a row is {} \
+                 (parts must come from one plan at one shard count)",
+                if *idx < pos { "duplicated across shards" } else { "missing" }
+            );
+        }
+        let table = CsvTable {
+            header: header.expect("complete part set implies at least one part"),
+            rows: rows.into_iter().map(|(_, cells)| cells).collect(),
+        };
+        let out = dir.join(format!("{base}.csv"));
+        table
+            .write(&out)
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", out.display()))?;
+        println!(
+            "[sweep merge] {} <- {count} part(s), {} row(s)",
+            out.display(),
+            table.rows.len()
+        );
+        written.push(out);
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::Scale;
+
+    #[test]
+    fn doubling_axis_shapes() {
+        assert_eq!(doubling_axis(1), vec![1]);
+        assert_eq!(doubling_axis(4), vec![1, 2, 4]);
+        assert_eq!(doubling_axis(6), vec![1, 2, 4]);
+        assert_eq!(doubling_axis(64), vec![1, 2, 4, 8, 16, 32, 64]);
+    }
+
+    #[test]
+    fn plan_toml_roundtrip_of_every_key() {
+        let plan = SweepPlan::from_toml(
+            r#"
+name = "my plan"
+epoch_ns = [1000, 50_000.0]
+cus_per_domain = [1, 4]
+workloads = ["comd", "synth:7"]
+designs = ["pcstall", "oracle"]
+objectives = ["ed2p", "energy@5"]
+baseline = "static:1.3"
+epochs = 24
+[set]
+gpu.n_wf = 16
+"#,
+        )
+        .unwrap();
+        assert_eq!(plan.name, "my_plan");
+        assert_eq!(plan.epoch_ns, vec![1000.0, 50_000.0]);
+        assert_eq!(plan.cus_per_domain, vec![1, 4]);
+        assert_eq!(
+            plan.workloads,
+            WorkloadAxis::Explicit(vec!["comd".into(), "synth:7".into()])
+        );
+        assert_eq!(plan.designs, vec![Policy::PcStall, Policy::Oracle]);
+        assert_eq!(
+            plan.objectives,
+            vec![Objective::Ed2p, Objective::EnergyBound { max_slowdown: 0.05 }]
+        );
+        assert_eq!(plan.baseline, Policy::Static(0));
+        assert_eq!(plan.epochs, Some(24));
+        assert_eq!(plan.overrides.len(), 1);
+        assert_eq!(plan.overrides[0].0, "gpu.n_wf");
+    }
+
+    #[test]
+    fn plan_toml_rejects_bad_input() {
+        for (bad, why) in [
+            ("bogus_key = 1\n", "unknown key"),
+            ("epoch_ns = [0]\n", "non-positive epoch"),
+            ("epoch_ns = 1000\n", "scalar where axis expected"),
+            ("cus_per_domain = [1.5]\n", "fractional granularity"),
+            ("designs = [\"nope\"]\n", "unknown policy"),
+            ("objectives = [\"nope\"]\n", "unknown objective"),
+            ("designs = []\n", "empty designs"),
+            ("epochs = 0\n", "zero epochs"),
+            (
+                "workloads = [\"comd\"]\nworkloads_add = [\"synth:1\"]\n",
+                "exclusive workload keys",
+            ),
+        ] {
+            assert!(SweepPlan::from_toml(bad).is_err(), "accepted ({why}): {bad}");
+        }
+    }
+
+    #[test]
+    fn preset_epoch_x_granularity_covers_the_cross_figure() {
+        // Acceptance shape at --quick: >= 4 epoch lengths, >= 3 domain
+        // granularities, >= 2 workload sources (catalog + synth).
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        };
+        let plan = SweepPlan::preset("epoch_x_granularity").unwrap();
+        let grid = plan.compile(&opts).unwrap();
+        let epochs: std::collections::BTreeSet<u64> =
+            grid.points.iter().map(|p| p.epoch_ns as u64).collect();
+        let grans: std::collections::BTreeSet<usize> =
+            grid.points.iter().map(|p| p.cus_per_domain).collect();
+        assert!(epochs.len() >= 4, "epochs: {epochs:?}");
+        assert!(grans.len() >= 3, "grans: {grans:?}");
+        let has_catalog = grid.points.iter().any(|p| !p.workload.contains(':'));
+        let has_synth = grid.points.iter().any(|p| p.workload.starts_with("synth:"));
+        assert!(has_catalog && has_synth, "need catalog + synth sources");
+        // rows are dense and in order
+        for (i, p) in grid.points.iter().enumerate() {
+            assert_eq!(p.row, i);
+        }
+    }
+
+    #[test]
+    fn unknown_preset_or_file_errors() {
+        assert!(SweepPlan::load("no_such_preset_or_file").is_err());
+        assert!(SweepPlan::preset("nope").is_none());
+        for p in preset_names() {
+            assert!(SweepPlan::preset(p).is_some(), "{p}");
+        }
+    }
+
+    #[test]
+    fn shards_partition_grid_rows_exactly() {
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        };
+        let plan = SweepPlan::from_toml(
+            "epoch_ns = [1000, 10000]\ncus_per_domain = [1, 2]\nworkloads = [\"comd\", \"synth:3\"]\ndesigns = [\"pcstall\"]\nepochs = 4\n",
+        )
+        .unwrap();
+        let grid = plan.compile(&opts).unwrap();
+        assert_eq!(grid.points.len(), 8);
+        for count in [1usize, 2, 3] {
+            let mut seen = vec![0usize; grid.points.len()];
+            for index in 0..count {
+                for p in grid.shard_points(ShardSpec { index, count }) {
+                    seen[p.row] += 1;
+                }
+            }
+            assert!(
+                seen.iter().all(|&c| c == 1),
+                "rows not partitioned exactly once across {count} shard(s): {seen:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn part_name_parsing() {
+        assert_eq!(
+            parse_part_name("sweep_x.part0of3.csv"),
+            Some(("sweep_x".into(), 0, 3))
+        );
+        assert_eq!(
+            parse_part_name("sweep_a.b.part11of12.csv"),
+            Some(("sweep_a.b".into(), 11, 12))
+        );
+        for bad in [
+            "sweep_x.csv",
+            "sweep_x.part3of3.csv",
+            "sweep_x.partof3.csv",
+            "sweep_x.part1of0.csv",
+            ".part0of1.csv",
+            "sweep_x.part0of1.txt",
+        ] {
+            assert_eq!(parse_part_name(bad), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn workload_override_replaces_the_axis() {
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            workloads_override: vec!["dgemm"],
+            ..Default::default()
+        };
+        let plan = SweepPlan::preset("epoch_x_granularity").unwrap();
+        let grid = plan.compile(&opts).unwrap();
+        assert!(grid.points.iter().all(|p| p.workload == "dgemm"));
+    }
+}

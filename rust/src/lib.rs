@@ -29,7 +29,10 @@
 //! * [`trace`] — wavefront instruction traces as first-class workloads:
 //!   a versioned text/binary format, simulator capture, accel-sim-style
 //!   ingest, and a seeded trace synthesizer.
-//! * [`harness`] — one experiment per paper figure/table (see DESIGN.md).
+//! * [`harness`] — one experiment per paper figure/table (see DESIGN.md),
+//!   plus declarative sweep plans ([`harness::sweep`]): N-dimensional
+//!   epoch × granularity × workload-source × objective × design grids,
+//!   shardable across machines by run-key fingerprint.
 
 // Style allowances for the simulator's index-heavy kernels (CI runs
 // clippy with `-D warnings`).

@@ -10,6 +10,9 @@
 //! pcstall run <id|all> [--quick|--full] [--out results/] [--pjrt]
 //!                      [--jobs N] [--no-cache] [--workload <spec> ...]
 //! pcstall experiment ...   (alias of `run`)
+//! pcstall sweep <plan.toml|preset> [run options] [--shard i/N]
+//! pcstall sweep merge <dir>
+//! pcstall sweep list
 //! pcstall trace record|replay|gen|info|ingest ...
 //! pcstall cache stats|clear [--dir d] [--max-age days] [--max-bytes MB]
 //! pcstall list
@@ -29,7 +32,8 @@ use pcstall::config::SimConfig;
 use pcstall::dvfs::manager::{DvfsManager, Policy, RunMode};
 use pcstall::dvfs::objective::Objective;
 use pcstall::exec::cache::ResultCache;
-use pcstall::exec::{pool, Engine};
+use pcstall::exec::{pool, Engine, ShardSpec};
+use pcstall::harness::sweep::{self, SweepPlan};
 use pcstall::harness::{all_experiments, run_experiment, ExpOptions, Scale};
 use pcstall::stats::emit::Json;
 use pcstall::trace::{capture_named, parse_accelsim, synthesize, Trace};
@@ -48,6 +52,7 @@ fn run() -> Result<()> {
     match cmd {
         "simulate" => simulate(&args[1..]),
         "run" | "experiment" => experiment(&args[1..]),
+        "sweep" => sweep_cmd(&args[1..]),
         "trace" => trace_cmd(&args[1..]),
         "cache" => cache_cmd(&args[1..]),
         "list" => list(),
@@ -69,6 +74,9 @@ USAGE:
                        [--jobs N] [--no-cache] [--seed s]
                        [--workload <spec> ...]
   pcstall experiment ...   (alias of `run`)
+  pcstall sweep <plan.toml|preset> [run options] [--shard i/N]
+  pcstall sweep merge <dir>
+  pcstall sweep list
   pcstall trace record <spec> [--out file] [--waves-scale x] [--binary]
   pcstall trace replay <file> [simulate options]
   pcstall trace gen [--seed s] [--out file] [--binary]
@@ -107,6 +115,21 @@ SIMULATE / REPLAY OPTIONS:
   --set k=v             config override (repeatable)
   --backend native|pjrt compute backend            (default native)
   --json <file>         dump the run result as JSON
+
+SWEEP COMMANDS:
+  <plan.toml|preset>    run a declarative sweep plan (grid over epoch
+                        length x cus_per_domain x workload source x
+                        objective x design); presets: epoch_x_granularity,
+                        epoch_sweep, granularity_sweep.  Accepts all RUN
+                        OPTIONS plus:
+    --shard i/N         run only partition i of N (deterministic split by
+                        RunKey fingerprint; shards are disjoint and
+                        cache-compatible).  Writes
+                        <out>/sweep_<name>.part<i>of<N>.csv
+  merge <dir>           combine a complete part set into
+                        <out>/sweep_<name>.csv (byte-identical to an
+                        unsharded run)
+  list                  show presets and the plan TOML grammar
 
 TRACE COMMANDS:
   record <spec>         capture a workload's executed stream to a file
@@ -168,24 +191,6 @@ impl Opts {
     }
 }
 
-fn parse_objective(s: &str) -> Result<Objective> {
-    let lower = s.to_ascii_lowercase();
-    Ok(match lower.as_str() {
-        "edp" => Objective::Edp,
-        "ed2p" => Objective::Ed2p,
-        _ => {
-            if let Some(pct) = lower.strip_prefix("energy@") {
-                let p: f64 = pct.trim_end_matches('%').parse()?;
-                Objective::EnergyBound {
-                    max_slowdown: p / 100.0,
-                }
-            } else {
-                anyhow::bail!("unknown objective '{s}' (edp|ed2p|energy@<pct>)");
-            }
-        }
-    })
-}
-
 fn simulate(args: &[String]) -> Result<()> {
     let mut o = Opts::new(args);
     let workload = o
@@ -198,7 +203,7 @@ fn simulate(args: &[String]) -> Result<()> {
 /// (catalog / trace file / synth seed) and print the result.
 fn run_one(spec: &str, mut o: Opts) -> Result<()> {
     let policy = Policy::parse(&o.take("--policy").unwrap_or_else(|| "pcstall".into()))?;
-    let objective = parse_objective(&o.take("--objective").unwrap_or_else(|| "ed2p".into()))?;
+    let objective = Objective::parse(&o.take("--objective").unwrap_or_else(|| "ed2p".into()))?;
     let epochs = o.take("--epochs").map(|s| s.parse::<u64>()).transpose()?;
     let epoch_ns = o.take("--epoch-ns").map(|s| s.parse::<f64>()).transpose()?;
     let waves_flag = o.take("--waves-scale").map(|s| s.parse::<f64>()).transpose()?;
@@ -298,8 +303,9 @@ fn run_one(spec: &str, mut o: Opts) -> Result<()> {
     Ok(())
 }
 
-fn experiment(args: &[String]) -> Result<()> {
-    let mut o = Opts::new(args);
+/// Build the shared experiment/sweep options from an arg list (scale,
+/// output dir, jobs, cache, seed, workload overrides).
+fn exp_options_from(o: &mut Opts) -> Result<ExpOptions> {
     let mut opts = ExpOptions::default();
     if o.take_flag("--quick") {
         opts.scale = Scale::Quick;
@@ -331,6 +337,12 @@ fn experiment(args: &[String]) -> Result<()> {
     } else {
         Engine::with_cache_dir(opts.out_dir.join("cache"))
     });
+    Ok(opts)
+}
+
+fn experiment(args: &[String]) -> Result<()> {
+    let mut o = Opts::new(args);
+    let opts = exp_options_from(&mut o)?;
     let rest = o.finish()?;
     let id = rest.first().map(|s| s.as_str()).unwrap_or("all");
     let t0 = std::time::Instant::now();
@@ -338,6 +350,93 @@ fn experiment(args: &[String]) -> Result<()> {
     println!("\n{}", opts.engine.summary(opts.jobs));
     println!("[experiment {id} done in {:.1?}]", t0.elapsed());
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// `pcstall sweep ...`
+// ---------------------------------------------------------------------------
+
+fn sweep_cmd(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        None | Some("list") => {
+            println!("sweep presets:");
+            for p in sweep::preset_names() {
+                println!("  {p}");
+            }
+            println!(
+                "\nplan file grammar (TOML subset; every key optional):\n\
+                 \n\
+                 name = \"my_sweep\"\n\
+                 epoch_ns = [1000, 10000, 50000, 100000]  # epoch-length axis (ns)\n\
+                 cus_per_domain = [1, 2, 4]               # V/f-domain granularity axis\n\
+                 workloads = [\"comd\", \"trace:t.trace\", \"synth:7\"]  # workload-source axis\n\
+                 workloads_add = [\"synth:7\"]              # or: scale's sweep set + extras\n\
+                 designs = [\"crisp\", \"pcstall\", \"oracle\"]  # predictor-design axis\n\
+                 objectives = [\"ed2p\"]                    # edp | ed2p | energy@<pct>\n\
+                 baseline = \"static:1.7\"                  # improvement reference\n\
+                 epochs = 40                              # fixed epochs (default: completion)\n\
+                 [set]                                    # config overrides for every cell\n\
+                 gpu.n_wf = 16\n\
+                 \n\
+                 run:   pcstall sweep <plan> [--quick|--full] [--jobs N] [--shard i/N]\n\
+                 merge: pcstall sweep merge <dir>"
+            );
+            Ok(())
+        }
+        Some("merge") => {
+            let mut o = Opts::new(&args[1..]);
+            let rest = o.finish()?;
+            anyhow::ensure!(
+                rest.len() <= 1,
+                "sweep merge takes one directory, got: {}",
+                rest.join(" ")
+            );
+            let dir = rest
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("results");
+            let written = sweep::merge_dir(Path::new(dir))?;
+            println!(
+                "merged {} sweep(s) in {dir}",
+                written.len()
+            );
+            Ok(())
+        }
+        Some(plan_ref) => {
+            let mut o = Opts::new(&args[1..]);
+            let shard = match o.take("--shard") {
+                Some(s) => ShardSpec::parse(&s)?,
+                None => ShardSpec::whole(),
+            };
+            let opts = exp_options_from(&mut o)?;
+            let rest = o.finish()?;
+            anyhow::ensure!(
+                rest.is_empty(),
+                "unexpected argument(s) after the plan: {}",
+                rest.join(" ")
+            );
+            let plan = SweepPlan::load(plan_ref)?;
+            let t0 = std::time::Instant::now();
+            let path = sweep::run_sweep(&opts, &plan, shard)?;
+            println!("\n{}", opts.engine.summary(opts.jobs));
+            if shard.count > 1 {
+                println!(
+                    "[sweep {} shard {shard} done in {:.1?}] merge with: pcstall sweep merge {}",
+                    plan.name,
+                    t0.elapsed(),
+                    opts.out_dir.display()
+                );
+            } else {
+                println!(
+                    "[sweep {} done in {:.1?}] wrote {}",
+                    plan.name,
+                    t0.elapsed(),
+                    path.display()
+                );
+            }
+            Ok(())
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------

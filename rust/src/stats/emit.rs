@@ -24,6 +24,9 @@ impl CsvTable {
         self.rows.push(row);
     }
 
+    /// Render to CSV text.  (An inherent method rather than `Display`:
+    /// this is a file encoding, not a human-facing representation.)
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         let _ = writeln!(out, "{}", self.header.join(","));
@@ -39,6 +42,94 @@ impl CsvTable {
             std::fs::create_dir_all(dir)?;
         }
         std::fs::write(path, self.to_string())
+    }
+
+    /// Inverse of [`CsvTable::to_string`]: parse CSV text (quoted cells
+    /// with `""` escapes, no embedded newlines) back into a table.
+    /// Ragged rows are an error — sweep-shard merging must never
+    /// silently mix schemas.
+    pub fn parse(text: &str) -> Result<CsvTable, String> {
+        let mut lines = text.lines().enumerate();
+        let (_, first) = lines.next().ok_or("empty CSV document")?;
+        let header = split_csv_line(first)?;
+        if header.is_empty() {
+            return Err("empty CSV header".into());
+        }
+        let mut rows = Vec::new();
+        for (lineno, line) in lines {
+            let row = split_csv_line(line).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            if row.len() != header.len() {
+                return Err(format!(
+                    "line {}: {} cell(s), header has {}",
+                    lineno + 1,
+                    row.len(),
+                    header.len()
+                ));
+            }
+            rows.push(row);
+        }
+        Ok(CsvTable { header, rows })
+    }
+
+    /// Load a CSV file written by [`CsvTable::write`].
+    pub fn read(path: &Path) -> Result<CsvTable, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        CsvTable::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+/// Split one CSV line into unescaped cells.
+fn split_csv_line(line: &str) -> Result<Vec<String>, String> {
+    let mut cells = Vec::new();
+    let mut cell = String::new();
+    let mut chars = line.chars().peekable();
+    loop {
+        match chars.peek().copied() {
+            Some('"') => {
+                // quoted cell: consume to the closing quote, "" unescapes
+                chars.next();
+                loop {
+                    match chars.next() {
+                        Some('"') => {
+                            if chars.peek() == Some(&'"') {
+                                chars.next();
+                                cell.push('"');
+                            } else {
+                                break;
+                            }
+                        }
+                        Some(c) => cell.push(c),
+                        None => return Err("unterminated quoted cell".into()),
+                    }
+                }
+                match chars.next() {
+                    None => {
+                        cells.push(std::mem::take(&mut cell));
+                        return Ok(cells);
+                    }
+                    Some(',') => cells.push(std::mem::take(&mut cell)),
+                    Some(c) => return Err(format!("unexpected '{c}' after quoted cell")),
+                }
+            }
+            _ => {
+                // bare cell: read to the next comma or end of line
+                loop {
+                    match chars.next() {
+                        None => {
+                            cells.push(std::mem::take(&mut cell));
+                            return Ok(cells);
+                        }
+                        Some(',') => {
+                            cells.push(std::mem::take(&mut cell));
+                            break;
+                        }
+                        Some('"') => return Err("stray '\"' in unquoted cell".into()),
+                        Some(c) => cell.push(c),
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -181,6 +272,35 @@ mod tests {
     fn csv_rejects_ragged_rows() {
         let mut t = CsvTable::new(&["a", "b"]);
         t.push(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_parse_inverts_to_string() {
+        let mut t = CsvTable::new(&["a", "b", "c"]);
+        t.push(vec!["1".into(), "x,y".into(), "he said \"hi\"".into()]);
+        t.push(vec!["".into(), "plain".into(), "2.5".into()]);
+        let back = CsvTable::parse(&t.to_string()).unwrap();
+        assert_eq!(back.header, t.header);
+        assert_eq!(back.rows, t.rows);
+        // and re-rendering is byte-identical (merge determinism depends
+        // on parse → render being the identity)
+        assert_eq!(back.to_string(), t.to_string());
+    }
+
+    #[test]
+    fn csv_parse_rejects_malformed() {
+        assert!(CsvTable::parse("").is_err());
+        assert!(CsvTable::parse("a,b\n1\n").is_err(), "ragged row accepted");
+        assert!(CsvTable::parse("a\n\"unterminated\n").is_err());
+        assert!(CsvTable::parse("a\n\"x\"y\n").is_err());
+        assert!(CsvTable::parse("a\nx\"y\n").is_err());
+    }
+
+    #[test]
+    fn csv_parse_header_only() {
+        let t = CsvTable::parse("a,b\n").unwrap();
+        assert_eq!(t.header, vec!["a", "b"]);
+        assert!(t.rows.is_empty());
     }
 
     #[test]

@@ -1,0 +1,125 @@
+//! Sweep-plan sharding integration: a grid split `--shard 0/3..2/3` and
+//! merged must reproduce the unsharded CSV byte-for-byte, shards must be
+//! cache-compatible (a warm rerun of any shard executes zero
+//! simulations), and an incomplete part set must refuse to merge.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use pcstall::exec::{Engine, ShardSpec};
+use pcstall::harness::sweep::{merge_dir, run_sweep, SweepPlan};
+use pcstall::harness::{ExpOptions, Scale};
+
+/// Tiny but genuinely multi-dimensional: 2 epoch lengths × 2 domain
+/// granularities × 2 workload sources (catalog + synth) × 1 design.
+const TINY_PLAN: &str = r#"
+name = "tiny"
+epoch_ns = [1000, 10000]
+cus_per_domain = [1, 2]
+workloads = ["comd", "synth:5"]
+designs = ["pcstall"]
+epochs = 12
+"#;
+
+fn opts(dir: &Path, engine: Arc<Engine>) -> ExpOptions {
+    ExpOptions {
+        scale: Scale::Quick,
+        out_dir: dir.to_path_buf(),
+        jobs: 2,
+        engine,
+        ..Default::default()
+    }
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pcstall_sweep_shard_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn sharded_merge_is_byte_identical_and_warm_shard_executes_nothing() {
+    let plan = SweepPlan::from_toml(TINY_PLAN).unwrap();
+
+    // 1. unsharded reference, no cache involved at all
+    let ref_dir = fresh_dir("unsharded");
+    run_sweep(
+        &opts(&ref_dir, Arc::new(Engine::no_cache())),
+        &plan,
+        ShardSpec::whole(),
+    )
+    .unwrap();
+    let reference = std::fs::read(ref_dir.join("sweep_tiny.csv")).unwrap();
+    let ref_rows = reference.iter().filter(|&&b| b == b'\n').count() - 1;
+    assert_eq!(ref_rows, 8, "2 epochs x 2 grans x 2 workloads x 1 design");
+
+    // 2. three shards into one directory, sharing one result cache
+    let shard_dir = fresh_dir("sharded");
+    let cache_dir = shard_dir.join("cache");
+    let mut owned_total = 0u64;
+    for index in 0..3usize {
+        let engine = Arc::new(Engine::with_cache_dir(cache_dir.clone()));
+        run_sweep(
+            &opts(&shard_dir, engine.clone()),
+            &plan,
+            ShardSpec { index, count: 3 },
+        )
+        .unwrap();
+        owned_total += engine.executed() + engine.cache_stats().hits;
+        let part = shard_dir.join(format!("sweep_tiny.part{index}of3.csv"));
+        assert!(part.exists(), "missing {}", part.display());
+    }
+    // every unique cell ran (or hit) somewhere; shared baselines may be
+    // computed by one shard and hit by another, never more than once each
+    assert!(owned_total > 0);
+
+    // 3. merge reproduces the unsharded CSV byte-for-byte
+    let written = merge_dir(&shard_dir).unwrap();
+    assert_eq!(written, vec![shard_dir.join("sweep_tiny.csv")]);
+    let merged = std::fs::read(&written[0]).unwrap();
+    assert_eq!(
+        merged, reference,
+        "merged shard output must be byte-identical to the unsharded run"
+    );
+
+    // 4. a warm-cache rerun of any shard executes zero simulations
+    let part1 = shard_dir.join("sweep_tiny.part1of3.csv");
+    let owned_rows = std::fs::read_to_string(&part1).unwrap().lines().count() - 1;
+    let warm = Arc::new(Engine::with_cache_dir(cache_dir.clone()));
+    run_sweep(
+        &opts(&shard_dir, warm.clone()),
+        &plan,
+        ShardSpec { index: 1, count: 3 },
+    )
+    .unwrap();
+    assert_eq!(warm.executed(), 0, "warm shard rerun must not simulate");
+    let stats = warm.cache_stats();
+    assert_eq!(stats.misses, 0, "{stats:?}");
+    if owned_rows > 0 {
+        assert!(stats.hits > 0, "{stats:?}");
+    }
+
+    // 5. an incomplete part set refuses to merge
+    std::fs::remove_file(shard_dir.join("sweep_tiny.part2of3.csv")).unwrap();
+    let err = merge_dir(&shard_dir).unwrap_err().to_string();
+    assert!(err.contains("missing"), "unhelpful error: {err}");
+
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&shard_dir);
+}
+
+#[test]
+fn shard_of_one_equals_unsharded_rows() {
+    // --shard 0/1 is the whole grid: same rows, same final CSV name.
+    let plan = SweepPlan::from_toml(TINY_PLAN).unwrap();
+    let dir = fresh_dir("whole");
+    run_sweep(
+        &opts(&dir, Arc::new(Engine::no_cache())),
+        &plan,
+        ShardSpec::parse("0/1").unwrap(),
+    )
+    .unwrap();
+    assert!(dir.join("sweep_tiny.csv").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
