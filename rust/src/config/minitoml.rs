@@ -244,6 +244,42 @@ enabled = true
     }
 
     #[test]
+    fn seed_arrays_parse_as_int_arrays() {
+        // the sweep-plan seed axis rides on plain integer arrays,
+        // including underscore separators and trailing commas
+        let kv = parse("seed = [2, 3, 5, 1_000,]\n").unwrap();
+        assert_eq!(kv[0].0, "seed");
+        assert_eq!(
+            kv[0].1,
+            Value::Arr(vec![
+                Value::Int(2),
+                Value::Int(3),
+                Value::Int(5),
+                Value::Int(1_000),
+            ])
+        );
+        let ints: Option<Vec<i64>> = kv[0].1.as_arr().unwrap().iter().map(|v| v.as_int()).collect();
+        assert_eq!(ints, Some(vec![2, 3, 5, 1_000]));
+    }
+
+    #[test]
+    fn seed_key_is_section_qualified_under_set() {
+        // a plan's top-level `seed = [..]` axis and a `[set]` master-seed
+        // override are different keys: position relative to the section
+        // header decides which one the parser yields
+        let kv = parse("seed = [1, 2]\n[set]\nseed = 9\ngpu.n_wf = 4\n").unwrap();
+        assert_eq!(kv[0].0, "seed");
+        assert!(matches!(kv[0].1, Value::Arr(_)));
+        assert_eq!(kv[1], ("set.seed".into(), Value::Int(9)));
+        assert_eq!(kv[2], ("set.gpu.n_wf".into(), Value::Int(4)));
+        // and the same spelling *below* the header is a [set] key, which
+        // the plan grammar rejects as an array (sweep::from_toml)
+        let kv = parse("[set]\nseed = [1, 2]\n").unwrap();
+        assert_eq!(kv[0].0, "set.seed");
+        assert!(matches!(kv[0].1, Value::Arr(_)));
+    }
+
+    #[test]
     fn hash_inside_string_is_not_comment() {
         let kv = parse("k = \"a#b\"\n").unwrap();
         assert_eq!(kv[0].1, Value::Str("a#b".into()));

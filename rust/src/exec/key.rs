@@ -318,6 +318,42 @@ mod tests {
     }
 
     #[test]
+    fn synth_seed_population_keys_are_distinct() {
+        // The sweep-plan seed axis resolves each seed to its synthesized
+        // trace's `trace:<content-hash>` id; distinct seeds must give
+        // distinct cache addresses and a stable shard assignment, or a
+        // seed-population sweep could alias cells across seeds/shards.
+        let cfg = SimConfig::small();
+        let keys: Vec<RunKey> = [2u64, 3, 5, 7, 11, 13]
+            .iter()
+            .map(|s| {
+                let t = crate::trace::synth::synthesize(*s);
+                RunKey::new(
+                    &cfg,
+                    "quick",
+                    "native",
+                    &format!("trace:{}", t.content_hash()),
+                    Policy::PcStall,
+                    Objective::Ed2p,
+                    RunMode::Epochs(24),
+                    1.0,
+                )
+            })
+            .collect();
+        let mut hexes: Vec<String> = keys.iter().map(|k| k.hash_hex()).collect();
+        let n = hexes.len();
+        hexes.sort();
+        hexes.dedup();
+        assert_eq!(hexes.len(), n, "seed-population keys must not collide");
+        for shards in [2usize, 3] {
+            for k in &keys {
+                assert!(k.shard_of(shards) < shards);
+                assert_eq!(k.shard_of(shards), k.shard_of(shards), "must be stable");
+            }
+        }
+    }
+
+    #[test]
     fn fnv_is_stable() {
         // Golden value: pins the hash function across refactors so old
         // cache entries stay addressable.

@@ -112,6 +112,27 @@ mod tests {
     }
 
     #[test]
+    fn seed_population_keys_partition_exactly() {
+        // Per-seed workload ids (what a `seed = [..]` sweep plan shards
+        // on) are owned by exactly one shard each — the property that
+        // keeps population shards disjoint and their union complete.
+        let keys: Vec<RunKey> = (0..16u64)
+            .map(|s| {
+                let t = crate::trace::synth::synthesize(s);
+                a_key(&format!("trace:{}", t.content_hash()), 1000.0)
+            })
+            .collect();
+        for count in [1usize, 2, 4] {
+            for key in &keys {
+                let owners: Vec<usize> = (0..count)
+                    .filter(|&index| ShardSpec { index, count }.owns(key))
+                    .collect();
+                assert_eq!(owners.len(), 1, "key owned by {owners:?} of {count}");
+            }
+        }
+    }
+
+    #[test]
     fn whole_owns_everything() {
         assert!(ShardSpec::whole().owns(&a_key("comd", 1000.0)));
     }

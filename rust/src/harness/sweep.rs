@@ -10,6 +10,8 @@
 //! * **V/f-domain granularity** (`cus_per_domain`),
 //! * **workload source** (any [`WorkloadSource`] spec: catalog name,
 //!   `trace:<path>`, `synth:<seed>`),
+//! * **synth-seed population** (`seed`: expands the bare `synth`
+//!   workload template into one `synth:<seed>` source per seed),
 //! * **objective** (`edp` / `ed2p` / `energy@<pct>`),
 //! * **predictor design** (any [`Policy`]),
 //!
@@ -38,6 +40,7 @@
 //! cus_per_domain = [1, 2, 4]             # default: doubling_axis(n_cu)
 //! workloads = ["comd", "synth:7"]        # default: the scale's sweep set
 //! workloads_add = ["synth:7"]            # or: scale set + extras
+//! seed = [2, 3, 5]                       # synth-seed population axis
 //! designs = ["crisp", "pcstall"]         # default: crisp, pcstall, oracle
 //! objectives = ["ed2p", "energy@5"]      # default: ed2p
 //! baseline = "static:1.7"                # improvement reference
@@ -45,6 +48,18 @@
 //! [set]                                  # config overrides for every cell
 //! gpu.n_wf = 16                          # (grid axes override [set] keys)
 //! ```
+//!
+//! ## Seed populations
+//!
+//! `seed = [..]` turns the grid into a *population* sweep: each grid
+//! point carries a seed coordinate, the workload axis must consist of
+//! bare `synth` templates (each point resolves `synth:<seed>`), and the
+//! CSV grows a `seed` column (`-` for plans without the axis).  Because
+//! every seed synthesizes a distinct trace, each seed's cells get their
+//! own content-hashed workload id — per-seed [`RunKey`] fingerprints —
+//! so seed-axis shards stay disjoint and cache-compatible exactly like
+//! every other axis.  `pcstall sweep plot` ([`crate::stats::plot`])
+//! aggregates the merged CSV over the population (mean ± min/max band).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -100,6 +115,11 @@ pub struct SweepPlan {
     /// Domain-granularity axis; empty → `doubling_axis(n_cu)`.
     pub cus_per_domain: Vec<usize>,
     pub workloads: WorkloadAxis,
+    /// Synth-seed population axis; empty → no seed dimension.  When
+    /// non-empty, every workload spec must be the bare `synth` template
+    /// (each grid point resolves `synth:<seed>`); duplicates are
+    /// rejected at parse time.
+    pub seeds: Vec<u64>,
     pub designs: Vec<Policy>,
     pub objectives: Vec<Objective>,
     /// Reference policy for the improvement columns.
@@ -119,6 +139,7 @@ impl Default for SweepPlan {
             epoch_ns: Vec::new(),
             cus_per_domain: Vec::new(),
             workloads: WorkloadAxis::Scale,
+            seeds: Vec::new(),
             designs: vec![
                 Policy::Reactive(crate::models::EstModel::Crisp),
                 Policy::PcStall,
@@ -134,7 +155,12 @@ impl Default for SweepPlan {
 
 /// Names of the built-in plans (`pcstall sweep <preset>`).
 pub fn preset_names() -> Vec<&'static str> {
-    vec!["epoch_x_granularity", "epoch_sweep", "granularity_sweep"]
+    vec![
+        "epoch_x_granularity",
+        "epoch_sweep",
+        "granularity_sweep",
+        "seed_population",
+    ]
 }
 
 impl SweepPlan {
@@ -163,6 +189,26 @@ impl SweepPlan {
             "granularity_sweep" => Some(SweepPlan {
                 name: name.into(),
                 epoch_ns: vec![1_000.0],
+                ..SweepPlan::default()
+            }),
+            // The ROADMAP's PCSTALL-accuracy-over-seeds figure: the
+            // paper's headline accuracy claim is a population statistic,
+            // so sweep a population of synthesized workloads (six fixed
+            // seeds — part of the figure's identity, like the cross
+            // preset's) along the epoch axis and aggregate with
+            // `pcstall sweep plot` (mean ± min/max band over seeds).
+            // Fixed-epoch mode keeps every (epoch, seed) point the same
+            // statistical length, so the bands compare like for like.
+            "seed_population" => Some(SweepPlan {
+                name: name.into(),
+                cus_per_domain: vec![1],
+                workloads: WorkloadAxis::Explicit(vec!["synth".into()]),
+                seeds: vec![2, 3, 5, 7, 11, 13],
+                designs: vec![
+                    Policy::Reactive(crate::models::EstModel::Crisp),
+                    Policy::PcStall,
+                ],
+                epochs: Some(24),
                 ..SweepPlan::default()
             }),
             _ => None,
@@ -229,6 +275,27 @@ impl SweepPlan {
                 }
                 "workloads" => explicit = Some(string_axis(&value, "workloads")?),
                 "workloads_add" => add = Some(string_axis(&value, "workloads_add")?),
+                "seed" => {
+                    let items = value.as_arr().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "seed must be an array of integer seeds (e.g. seed = [2, 3, 5]); \
+                             for the simulator master seed use [set] seed = <n>"
+                        )
+                    })?;
+                    anyhow::ensure!(!items.is_empty(), "seed must not be empty");
+                    let mut seeds: Vec<u64> = Vec::with_capacity(items.len());
+                    for v in items {
+                        let s = v.as_int().filter(|s| *s >= 0).ok_or_else(|| {
+                            anyhow::anyhow!("seed: expected a non-negative integer, got {v:?}")
+                        })?;
+                        anyhow::ensure!(
+                            !seeds.contains(&(s as u64)),
+                            "seed: duplicate seed {s} (each synth seed may appear once)"
+                        );
+                        seeds.push(s as u64);
+                    }
+                    plan.seeds = seeds;
+                }
                 "designs" => {
                     plan.designs = string_axis(&value, "designs")?
                         .iter()
@@ -257,12 +324,18 @@ impl SweepPlan {
                 }
                 _ => {
                     if let Some(cfg_key) = key.strip_prefix("set.") {
+                        anyhow::ensure!(
+                            cfg_key != "seed" || value.as_arr().is_none(),
+                            "seed = [..] is a plan-level axis and must appear above [set] \
+                             (inside [set], 'seed' is the scalar simulator master-seed \
+                             override)"
+                        );
                         plan.overrides.push((cfg_key.to_string(), value));
                     } else {
                         anyhow::bail!(
                             "unknown plan key '{key}' (axes: epoch_ns, cus_per_domain, \
-                             workloads, workloads_add, designs, objectives; scalars: name, \
-                             baseline, epochs; config overrides go under [set])"
+                             workloads, workloads_add, seed, designs, objectives; scalars: \
+                             name, baseline, epochs; config overrides go under [set])"
                         );
                     }
                 }
@@ -314,6 +387,35 @@ impl SweepPlan {
         }
     }
 
+    /// [`Self::workload_specs`] under the seed axis: with `seed = [..]`
+    /// every spec must be the bare `synth` template (the axis supplies
+    /// the seed), and a plan that left the workload axis defaulted gets
+    /// `["synth"]` instead of the scale's catalog set.
+    fn seeded_workload_specs(&self, opts: &ExpOptions) -> anyhow::Result<Vec<String>> {
+        if self.seeds.is_empty() {
+            return Ok(self.workload_specs(opts));
+        }
+        if opts.workloads_override.is_empty() && self.workloads == WorkloadAxis::Scale {
+            return Ok(vec!["synth".into()]);
+        }
+        for wl in &self.workload_specs(opts) {
+            anyhow::ensure!(
+                !wl.starts_with("synth:"),
+                "plan seed axis: workload '{wl}' pins its own seed — use the bare 'synth' \
+                 template (the seed = [..] axis supplies the seed)"
+            );
+            anyhow::ensure!(
+                wl == "synth",
+                "plan seed axis: workload '{wl}' is not a synth source — seed = [..] \
+                 expands only bare 'synth' templates (catalog and trace: sources carry \
+                 no seed)"
+            );
+        }
+        // every entry validated to be the one template — collapse repeats
+        // so `workloads = ["synth", "synth"]` cannot duplicate the grid
+        Ok(vec!["synth".into()])
+    }
+
     /// Compile the plan into a flat, deterministically-ordered grid.
     /// Workload specs are resolved (and trace files read + content-
     /// hashed) exactly once here and carried on the grid points, so the
@@ -341,8 +443,15 @@ impl SweepPlan {
         } else {
             self.cus_per_domain.clone()
         };
-        let workloads = self.workload_specs(opts);
+        let workloads = self.seeded_workload_specs(opts)?;
         anyhow::ensure!(!workloads.is_empty(), "plan has no workloads to run");
+        // No seed axis: one degenerate coordinate so the nest below
+        // stays a plain cross product.
+        let seed_axis: Vec<Option<u64>> = if self.seeds.is_empty() {
+            vec![None]
+        } else {
+            self.seeds.iter().map(|s| Some(*s)).collect()
+        };
 
         let mut resolved_memo: HashMap<String, Arc<ResolvedWorkload>> = HashMap::new();
         let mut points = Vec::new();
@@ -351,45 +460,55 @@ impl SweepPlan {
                 for &objective in &self.objectives {
                     for &design in &self.designs {
                         for wl in &workloads {
-                            let resolved = match resolved_memo.get(wl) {
-                                Some(r) => r.clone(),
-                                None => {
-                                    let r = Arc::new(WorkloadSource::parse(wl)?.resolve()?);
-                                    resolved_memo.insert(wl.clone(), r.clone());
-                                    r
-                                }
-                            };
-                            let mut cfg = proto_cfg.clone();
-                            cfg.dvfs.epoch_ns = epoch_ns;
-                            cfg.dvfs.cus_per_domain = gran;
-                            let mode = match self.epochs {
-                                Some(n) => RunMode::Epochs(n),
-                                None => completion(epoch_ns),
-                            };
-                            let waves = opts.waves_scale();
-                            let mut baseline_cell = Cell::with_cfg(
-                                cfg.clone(),
-                                wl,
-                                self.baseline,
-                                objective,
-                                mode,
-                                waves,
-                            );
-                            let design_cell =
-                                Cell::with_cfg(cfg, wl, design, objective, mode, waves);
-                            let shard_key = cell_key(opts, &mut baseline_cell, &resolved);
-                            points.push(SweepPoint {
-                                row: points.len(),
-                                epoch_ns,
-                                cus_per_domain: gran,
-                                workload: wl.clone(),
-                                design,
-                                objective,
-                                shard_key,
-                                baseline_cell,
-                                design_cell,
-                                resolved,
-                            });
+                            for &seed in &seed_axis {
+                                // a seed coordinate instantiates the bare
+                                // `synth` template into a concrete source
+                                let spec = match seed {
+                                    Some(s) => format!("synth:{s}"),
+                                    None => wl.clone(),
+                                };
+                                let resolved = match resolved_memo.get(&spec) {
+                                    Some(r) => r.clone(),
+                                    None => {
+                                        let r =
+                                            Arc::new(WorkloadSource::parse(&spec)?.resolve()?);
+                                        resolved_memo.insert(spec.clone(), r.clone());
+                                        r
+                                    }
+                                };
+                                let mut cfg = proto_cfg.clone();
+                                cfg.dvfs.epoch_ns = epoch_ns;
+                                cfg.dvfs.cus_per_domain = gran;
+                                let mode = match self.epochs {
+                                    Some(n) => RunMode::Epochs(n),
+                                    None => completion(epoch_ns),
+                                };
+                                let waves = opts.waves_scale();
+                                let mut baseline_cell = Cell::with_cfg(
+                                    cfg.clone(),
+                                    &spec,
+                                    self.baseline,
+                                    objective,
+                                    mode,
+                                    waves,
+                                );
+                                let design_cell =
+                                    Cell::with_cfg(cfg, &spec, design, objective, mode, waves);
+                                let shard_key = cell_key(opts, &mut baseline_cell, &resolved);
+                                points.push(SweepPoint {
+                                    row: points.len(),
+                                    epoch_ns,
+                                    cus_per_domain: gran,
+                                    workload: spec,
+                                    seed,
+                                    design,
+                                    objective,
+                                    shard_key,
+                                    baseline_cell,
+                                    design_cell,
+                                    resolved,
+                                });
+                            }
                         }
                     }
                 }
@@ -410,7 +529,10 @@ pub struct SweepPoint {
     pub row: usize,
     pub epoch_ns: f64,
     pub cus_per_domain: usize,
+    /// Concrete workload spec (`synth:<seed>` for seed-axis points).
     pub workload: String,
+    /// The seed coordinate, for plans with a `seed = [..]` axis.
+    pub seed: Option<u64>,
     pub design: Policy,
     pub objective: Objective,
     /// The *baseline* cell's fingerprint — the shard-partition domain.
@@ -433,10 +555,13 @@ pub struct SweepGrid {
 }
 
 /// Column schema of every sweep CSV (part files prepend a `row` column).
-pub const SWEEP_HEADER: [&str; 10] = [
+/// `seed` is the population coordinate of a `seed = [..]` plan, `-` for
+/// plans without the axis.
+pub const SWEEP_HEADER: [&str; 11] = [
     "epoch_us",
     "cus_per_domain",
     "workload",
+    "seed",
     "design",
     "objective",
     "improvement_pct",
@@ -462,6 +587,10 @@ fn render_row(p: &SweepPoint, base: &RunResult, r: &RunResult) -> Vec<String> {
         format!("{}", p.epoch_ns / 1000.0),
         p.cus_per_domain.to_string(),
         p.workload.clone(),
+        match p.seed {
+            Some(s) => s.to_string(),
+            None => "-".into(),
+        },
         p.design.name(),
         p.objective.name(),
         format!("{:.2}", (1.0 - norm) * 100.0),
@@ -559,9 +688,7 @@ pub fn run_sweep(
 }
 
 fn sanitize_name(s: &str) -> String {
-    s.chars()
-        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
-        .collect()
+    crate::stats::emit::sanitize_ident(s)
 }
 
 /// A non-empty numeric axis from a plan value.
@@ -776,9 +903,131 @@ gpu.n_wf = 16
                 "workloads = [\"comd\"]\nworkloads_add = [\"synth:1\"]\n",
                 "exclusive workload keys",
             ),
+            ("seed = []\n", "empty seed population"),
+            ("seed = [1, 1]\n", "duplicate seeds"),
+            ("seed = [1.5]\n", "fractional seed"),
+            ("seed = [-3]\n", "negative seed"),
+            ("seed = 7\n", "scalar where seed array expected"),
+            ("[set]\nseed = [1, 2]\n", "seed axis below [set]"),
         ] {
             assert!(SweepPlan::from_toml(bad).is_err(), "accepted ({why}): {bad}");
         }
+    }
+
+    #[test]
+    fn seed_axis_expands_a_synth_population() {
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        };
+        let plan = SweepPlan::from_toml(
+            "epoch_ns = [1000, 10000]\ncus_per_domain = [1]\nworkloads = [\"synth\"]\n\
+             seed = [1, 2, 3]\ndesigns = [\"pcstall\"]\nepochs = 4\n",
+        )
+        .unwrap();
+        assert_eq!(plan.seeds, vec![1, 2, 3]);
+        let grid = plan.compile(&opts).unwrap();
+        assert_eq!(grid.points.len(), 6, "2 epochs x 3 seeds");
+        for (i, p) in grid.points.iter().enumerate() {
+            assert_eq!(p.row, i);
+            let s = p.seed.expect("seed-axis points carry a seed coordinate");
+            assert_eq!(p.workload, format!("synth:{s}"));
+        }
+        // per-seed RunKey fingerprints: with one design, every
+        // (epoch, seed) baseline is distinct, so shards stay disjoint
+        let mut keys: Vec<String> =
+            grid.points.iter().map(|p| p.shard_key.hash_hex()).collect();
+        let n = keys.len();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), n, "per-seed baseline fingerprints must be distinct");
+    }
+
+    #[test]
+    fn seed_axis_defaults_workloads_to_the_synth_template() {
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        };
+        let plan = SweepPlan::from_toml(
+            "epoch_ns = [1000]\ncus_per_domain = [1]\nseed = [4, 9]\n\
+             designs = [\"pcstall\"]\nepochs = 4\n",
+        )
+        .unwrap();
+        let grid = plan.compile(&opts).unwrap();
+        assert_eq!(grid.points.len(), 2);
+        assert!(grid.points.iter().all(|p| p.workload.starts_with("synth:")));
+    }
+
+    #[test]
+    fn seed_axis_rejects_non_synth_and_pinned_workloads() {
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        };
+        for (toml, why) in [
+            ("workloads = [\"comd\"]\nseed = [1, 2]\n", "catalog workload"),
+            ("workloads = [\"synth:7\"]\nseed = [1, 2]\n", "pinned synth seed"),
+            (
+                "workloads_add = [\"synth\"]\nseed = [1, 2]\n",
+                "scale catalog set riding along",
+            ),
+        ] {
+            let plan = SweepPlan::from_toml(toml).unwrap();
+            assert!(plan.compile(&opts).is_err(), "compiled ({why}): {toml}");
+        }
+        // the CLI --workload override is validated the same way
+        let plan = SweepPlan::from_toml("seed = [1, 2]\n").unwrap();
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            workloads_override: vec!["comd"],
+            ..Default::default()
+        };
+        assert!(plan.compile(&opts).is_err());
+    }
+
+    #[test]
+    fn seed_axis_composes_with_set_overrides() {
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        };
+        let plan = SweepPlan::from_toml(
+            "epoch_ns = [1000]\ncus_per_domain = [1]\nseed = [1, 2]\n\
+             designs = [\"pcstall\"]\nepochs = 4\n[set]\ngpu.n_wf = 4\nseed = 9\n",
+        )
+        .unwrap();
+        let grid = plan.compile(&opts).unwrap();
+        assert_eq!(grid.points.len(), 2);
+        for p in &grid.points {
+            assert_eq!(p.baseline_cell.cfg.gpu.n_wf, 4);
+            assert_eq!(
+                p.baseline_cell.cfg.seed, 9,
+                "[set] seed stays the scalar master-seed override"
+            );
+        }
+    }
+
+    #[test]
+    fn preset_seed_population_covers_a_population() {
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        };
+        let plan = SweepPlan::preset("seed_population").unwrap();
+        assert!(plan.seeds.len() >= 5, "acceptance: >= 5 synth seeds");
+        assert!(plan.designs.contains(&Policy::PcStall));
+        let grid = plan.compile(&opts).unwrap();
+        let seeds: std::collections::BTreeSet<u64> =
+            grid.points.iter().filter_map(|p| p.seed).collect();
+        assert!(seeds.len() >= 5, "{seeds:?}");
+        assert!(grid.points.iter().all(|p| p.workload.starts_with("synth:")));
+        // along the paper's full epoch axis
+        let epochs: std::collections::BTreeSet<u64> =
+            grid.points.iter().map(|p| p.epoch_ns as u64).collect();
+        assert!(epochs.len() >= 4, "{epochs:?}");
+        // the seed column is part of the schema the plot emitter groups on
+        assert!(SWEEP_HEADER.contains(&"seed"));
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! pcstall experiment ...   (alias of `run`)
 //! pcstall sweep <plan.toml|preset> [run options] [--shard i/N]
 //! pcstall sweep merge <dir>
+//! pcstall sweep plot <merged.csv> [--metric col] [--out dir]
 //! pcstall sweep list
 //! pcstall trace record|replay|gen|info|ingest ...
 //! pcstall cache stats|clear [--dir d] [--max-age days] [--max-bytes MB]
@@ -36,6 +37,7 @@ use pcstall::exec::{pool, Engine, ShardSpec};
 use pcstall::harness::sweep::{self, SweepPlan};
 use pcstall::harness::{all_experiments, run_experiment, ExpOptions, Scale};
 use pcstall::stats::emit::Json;
+use pcstall::stats::plot;
 use pcstall::trace::{capture_named, parse_accelsim, synthesize, Trace};
 use pcstall::workloads::{self, WorkloadSource};
 
@@ -76,6 +78,7 @@ USAGE:
   pcstall experiment ...   (alias of `run`)
   pcstall sweep <plan.toml|preset> [run options] [--shard i/N]
   pcstall sweep merge <dir>
+  pcstall sweep plot <merged.csv> [--metric col] [--out dir]
   pcstall sweep list
   pcstall trace record <spec> [--out file] [--waves-scale x] [--binary]
   pcstall trace replay <file> [simulate options]
@@ -119,9 +122,10 @@ SIMULATE / REPLAY OPTIONS:
 SWEEP COMMANDS:
   <plan.toml|preset>    run a declarative sweep plan (grid over epoch
                         length x cus_per_domain x workload source x
-                        objective x design); presets: epoch_x_granularity,
-                        epoch_sweep, granularity_sweep.  Accepts all RUN
-                        OPTIONS plus:
+                        synth-seed population x objective x design);
+                        presets: epoch_x_granularity, epoch_sweep,
+                        granularity_sweep, seed_population.  Accepts all
+                        RUN OPTIONS plus:
     --shard i/N         run only partition i of N (deterministic split by
                         RunKey fingerprint; shards are disjoint and
                         cache-compatible).  Writes
@@ -129,6 +133,12 @@ SWEEP COMMANDS:
   merge <dir>           combine a complete part set into
                         <out>/sweep_<name>.csv (byte-identical to an
                         unsharded run)
+  plot <merged.csv>     emit a self-contained gnuplot script + matplotlib
+                        fallback from a merged sweep CSV: one panel per
+                        (objective, pinned axis), one series per design,
+                        mean +/- min-max band over the seed/workload
+                        population.  --metric picks the column (default
+                        accuracy); --out redirects the scripts
   list                  show presets and the plan TOML grammar
 
 TRACE COMMANDS:
@@ -371,6 +381,7 @@ fn sweep_cmd(args: &[String]) -> Result<()> {
                  cus_per_domain = [1, 2, 4]               # V/f-domain granularity axis\n\
                  workloads = [\"comd\", \"trace:t.trace\", \"synth:7\"]  # workload-source axis\n\
                  workloads_add = [\"synth:7\"]              # or: scale's sweep set + extras\n\
+                 seed = [2, 3, 5]                         # synth-seed population axis\n\
                  designs = [\"crisp\", \"pcstall\", \"oracle\"]  # predictor-design axis\n\
                  objectives = [\"ed2p\"]                    # edp | ed2p | energy@<pct>\n\
                  baseline = \"static:1.7\"                  # improvement reference\n\
@@ -378,8 +389,40 @@ fn sweep_cmd(args: &[String]) -> Result<()> {
                  [set]                                    # config overrides for every cell\n\
                  gpu.n_wf = 16\n\
                  \n\
+                 with a seed axis, workloads defaults to the bare \"synth\" template\n\
+                 (each grid point runs synth:<seed>); the CSV carries a seed column\n\
+                 \n\
                  run:   pcstall sweep <plan> [--quick|--full] [--jobs N] [--shard i/N]\n\
-                 merge: pcstall sweep merge <dir>"
+                 merge: pcstall sweep merge <dir>\n\
+                 plot:  pcstall sweep plot <merged.csv> [--metric col] [--out dir]"
+            );
+            Ok(())
+        }
+        Some("plot") => {
+            let mut o = Opts::new(&args[1..]);
+            let metric = o
+                .take("--metric")
+                .unwrap_or_else(|| plot::DEFAULT_METRIC.into());
+            let out_dir = o.take("--out").map(PathBuf::from);
+            let rest = o.finish()?;
+            anyhow::ensure!(
+                rest.len() == 1,
+                "usage: pcstall sweep plot <merged.csv> [--metric col] [--out dir]"
+            );
+            let (gp, py) =
+                plot::emit_plot_scripts(Path::new(&rest[0]), &metric, out_dir.as_deref())?;
+            println!("wrote {}", gp.display());
+            println!("wrote {}", py.display());
+            // the scripts write their PNG into the invoker's cwd, so
+            // render from the scripts' own directory
+            let dir = gp.parent().unwrap_or_else(|| Path::new("."));
+            let file =
+                |p: &Path| p.file_name().unwrap_or_default().to_string_lossy().into_owned();
+            println!(
+                "render: (cd {} && gnuplot {})   # or: python3 {}",
+                dir.display(),
+                file(&gp),
+                file(&py)
             );
             Ok(())
         }

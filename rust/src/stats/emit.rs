@@ -24,6 +24,12 @@ impl CsvTable {
         self.rows.push(row);
     }
 
+    /// Index of the named header column (schema lookups in consumers
+    /// like the sweep merger and `sweep plot`).
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
     /// Render to CSV text.  (An inherent method rather than `Display`:
     /// this is a file encoding, not a human-facing representation.)
     #[allow(clippy::inherent_to_string)]
@@ -77,6 +83,16 @@ impl CsvTable {
             .map_err(|e| format!("reading {}: {e}", path.display()))?;
         CsvTable::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
     }
+}
+
+/// Replace everything but `[A-Za-z0-9]` with `_`: the file-stem /
+/// identifier sanitizer shared by sweep plan names and plot script
+/// names (one definition, so `sweep_<name>.csv` and the emitted
+/// `<stem>_<metric>.gnuplot` can never disagree on sanitization).
+pub fn sanitize_ident(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
 }
 
 /// Split one CSV line into unescaped cells.
@@ -301,6 +317,14 @@ mod tests {
         let t = CsvTable::parse("a,b\n").unwrap();
         assert_eq!(t.header, vec!["a", "b"]);
         assert!(t.rows.is_empty());
+    }
+
+    #[test]
+    fn csv_col_lookup() {
+        let t = CsvTable::new(&["epoch_us", "seed", "accuracy"]);
+        assert_eq!(t.col("seed"), Some(1));
+        assert_eq!(t.col("accuracy"), Some(2));
+        assert_eq!(t.col("nope"), None);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 pub mod bench;
 pub mod emit;
 pub mod json;
+pub mod plot;
 
 /// One epoch's aggregate record.
 #[derive(Debug, Clone)]

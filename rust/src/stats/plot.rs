@@ -1,0 +1,669 @@
+//! `pcstall sweep plot`: figure-script emission from merged sweep CSVs.
+//!
+//! Takes the merged CSV a sweep plan wrote (`sweep_<name>.csv`, schema
+//! [`crate::harness::sweep::SWEEP_HEADER`]), groups it by the plan's
+//! axes, and emits two self-contained figure scripts next to it:
+//!
+//! * `<stem>_<metric>.gnuplot` — the data inlined as gnuplot
+//!   datablocks, rendered with `gnuplot <file>`;
+//! * `<stem>_<metric>.py` — a matplotlib fallback carrying the same
+//!   aggregated data, rendered with `python3 <file>`.
+//!
+//! ## Grouping (axis inference)
+//!
+//! The **x axis** is whichever numeric grid axis actually varies in the
+//! CSV — epoch length when the plan swept epochs, domain granularity
+//! when it swept granularity (ties go to the epoch axis).  One **panel**
+//! is emitted per (objective, value-of-the-other-axis), one **series**
+//! per design, and the remaining population axes (`seed`, `workload`)
+//! are aggregated per x position into mean / min / max — the
+//! seed-population accuracy figure the ROADMAP calls for renders as a
+//! mean line inside a min–max band over the seeds.
+//!
+//! ## Determinism
+//!
+//! Script bytes are a pure function of the CSV content: groups are
+//! sorted (never hash-ordered), floats print at fixed precision, x
+//! labels are carried verbatim from the CSV, and no timestamp, path, or
+//! hostname leaks into the output.  Re-plotting the same CSV — in any
+//! row order — is byte-identical, which CI gates on.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::stats::emit::{sanitize_ident as ident, CsvTable};
+
+/// Metric column plotted when `--metric` is not given.
+pub const DEFAULT_METRIC: &str = "accuracy";
+
+/// Grid-axis columns a sweep CSV must carry (the `seed` column is
+/// optional so CSVs predating the seed axis still plot).
+const AXIS_COLS: [&str; 5] = ["epoch_us", "cus_per_domain", "workload", "design", "objective"];
+
+/// One aggregated x position of a series: the population's mean and
+/// min–max envelope at that grid point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BandPoint {
+    pub x: f64,
+    /// The x cell verbatim from the CSV (emitted as-is — re-formatting
+    /// floats could drift bytes between runs).
+    pub x_label: String,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Population size aggregated into this point.
+    pub n: usize,
+}
+
+/// One design's line (+band) inside a panel.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub design: String,
+    pub points: Vec<BandPoint>,
+}
+
+/// One subplot: a fixed (objective, other-axis value) slice.
+#[derive(Debug, Clone)]
+pub struct Panel {
+    pub objective: String,
+    /// Value of the non-x grid axis this panel pins (`cus_per_domain`
+    /// when x is the epoch axis, and vice versa).
+    pub fixed: String,
+    pub series: Vec<Series>,
+}
+
+/// A fully-aggregated figure: everything the script emitters need.
+#[derive(Debug, Clone)]
+pub struct PlotSpec {
+    /// Sanitized CSV stem — becomes the script/png base name.
+    pub name: String,
+    pub metric: String,
+    /// `epoch_us` or `cus_per_domain` (inferred).
+    pub x_col: String,
+    /// The pinned per-panel axis (the other one of the pair).
+    pub panel_col: String,
+    /// Population column the band aggregates over (`seed`, `workload`),
+    /// empty when every group is a single run (degenerate band).
+    pub band_over: Option<String>,
+    /// Largest population aggregated into any one point.
+    pub population: usize,
+    pub panels: Vec<Panel>,
+}
+
+
+/// Fixed-precision float for script bytes (deterministic, locale-free).
+fn num(v: f64) -> String {
+    format!("{v:.6}")
+}
+
+/// Build the aggregated figure from a merged sweep CSV.
+pub fn plot_spec(table: &CsvTable, name: &str, metric: &str) -> anyhow::Result<PlotSpec> {
+    let col = |n: &str| table.col(n);
+    for c in AXIS_COLS {
+        anyhow::ensure!(
+            col(c).is_some(),
+            "not a sweep CSV: missing '{c}' column (header: {})",
+            table.header.join(",")
+        );
+    }
+    anyhow::ensure!(!table.rows.is_empty(), "sweep CSV has no data rows");
+    anyhow::ensure!(
+        !AXIS_COLS.contains(&metric) && metric != "seed",
+        "'{metric}' is a grid axis, not a plottable metric"
+    );
+    let metric_idx = col(metric).ok_or_else(|| {
+        // name the columns that would have worked
+        let numeric: Vec<&str> = table
+            .header
+            .iter()
+            .enumerate()
+            .filter(|(i, h)| {
+                !AXIS_COLS.contains(&h.as_str())
+                    && h.as_str() != "seed"
+                    && table.rows.iter().all(|r| r[*i].parse::<f64>().is_ok())
+            })
+            .map(|(_, h)| h.as_str())
+            .collect();
+        anyhow::anyhow!(
+            "no '{metric}' column in the CSV; plottable metrics: {}",
+            numeric.join(", ")
+        )
+    })?;
+
+    let (epoch_idx, gran_idx) = (col("epoch_us").unwrap(), col("cus_per_domain").unwrap());
+    let (wl_idx, design_idx) = (col("workload").unwrap(), col("design").unwrap());
+    let obj_idx = col("objective").unwrap();
+    let seed_idx = col("seed");
+
+    let distinct = |idx: usize| {
+        let mut vals: Vec<&str> = table.rows.iter().map(|r| r[idx].as_str()).collect();
+        vals.sort_unstable();
+        vals.dedup();
+        vals.len()
+    };
+    // x = the grid axis that actually varies; ties go to the epoch axis
+    // (the paper's canonical x).
+    let (x_idx, panel_idx, x_col, panel_col) = if distinct(epoch_idx) >= distinct(gran_idx) {
+        (epoch_idx, gran_idx, "epoch_us", "cus_per_domain")
+    } else {
+        (gran_idx, epoch_idx, "cus_per_domain", "epoch_us")
+    };
+
+    // (objective, panel value) -> design -> x label -> metric values.
+    // String-keyed BTreeMaps give a deterministic build order; the real
+    // (numeric-aware) ordering is applied on the sorted Vecs below.
+    type XMap = std::collections::BTreeMap<String, Vec<f64>>;
+    type SeriesMap = std::collections::BTreeMap<String, XMap>;
+    let mut groups: std::collections::BTreeMap<(String, String), SeriesMap> =
+        std::collections::BTreeMap::new();
+    let mut band_cols: Vec<&str> = Vec::new();
+    let mut seen_pop: Vec<(String, String)> = Vec::new(); // (seed, workload) pairs
+    for (lineno, row) in table.rows.iter().enumerate() {
+        let v: f64 = row[metric_idx].parse().map_err(|_| {
+            anyhow::anyhow!(
+                "row {}: '{}' is not a number in metric column '{metric}'",
+                lineno + 2,
+                row[metric_idx]
+            )
+        })?;
+        let x: f64 = row[x_idx].parse().unwrap_or(f64::NAN);
+        anyhow::ensure!(
+            x.is_finite(),
+            "row {}: bad {x_col} value '{}'",
+            lineno + 2,
+            row[x_idx]
+        );
+        seen_pop.push((
+            seed_idx.map(|i| row[i].clone()).unwrap_or_default(),
+            row[wl_idx].clone(),
+        ));
+        let vals = groups
+            .entry((row[obj_idx].clone(), row[panel_idx].clone()))
+            .or_default()
+            .entry(row[design_idx].clone())
+            .or_default()
+            .entry(row[x_idx].clone())
+            .or_default();
+        // non-finite metric cells (a design that never predicts has NaN
+        // accuracy) drop out of the band rather than poisoning it
+        if v.is_finite() {
+            vals.push(v);
+        }
+    }
+    let varies = |f: fn(&(String, String)) -> &String| {
+        let mut vals: Vec<&String> = seen_pop.iter().map(f).collect();
+        vals.sort_unstable();
+        vals.dedup();
+        vals.len() > 1
+    };
+    if seed_idx.is_some() && varies(|p| &p.0) {
+        band_cols.push("seed");
+    } else if varies(|p| &p.1) {
+        band_cols.push("workload");
+    }
+
+    let mut population = 0usize;
+    let mut panels: Vec<Panel> = Vec::new();
+    for ((objective, fixed), designs) in groups {
+        let mut series: Vec<Series> = Vec::new();
+        for (design, xs) in designs {
+            let mut points: Vec<BandPoint> = Vec::new();
+            for (x_label, vals) in xs {
+                if vals.is_empty() {
+                    continue; // every population member was non-finite
+                }
+                let (mut lo, mut hi, mut sum) = (f64::INFINITY, f64::NEG_INFINITY, 0.0);
+                for &v in &vals {
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                    sum += v;
+                }
+                population = population.max(vals.len());
+                points.push(BandPoint {
+                    x: x_label.parse().expect("validated above"),
+                    x_label,
+                    mean: sum / vals.len() as f64,
+                    min: lo,
+                    max: hi,
+                    n: vals.len(),
+                });
+            }
+            points.sort_by(|a, b| a.x.partial_cmp(&b.x).expect("finite x"));
+            if !points.is_empty() {
+                series.push(Series { design, points });
+            }
+        }
+        if !series.is_empty() {
+            panels.push(Panel {
+                objective,
+                fixed,
+                series,
+            });
+        }
+    }
+    // numeric panel order (BTreeMap gave lexicographic: "16" < "2")
+    panels.sort_by(|a, b| {
+        a.objective.cmp(&b.objective).then(
+            a.fixed
+                .parse::<f64>()
+                .unwrap_or(f64::MAX)
+                .partial_cmp(&b.fixed.parse::<f64>().unwrap_or(f64::MAX))
+                .expect("panel keys are finite or MAX"),
+        )
+    });
+    anyhow::ensure!(
+        !panels.is_empty(),
+        "nothing to plot: every '{metric}' value in the CSV is non-finite"
+    );
+    Ok(PlotSpec {
+        name: ident(name),
+        metric: metric.to_string(),
+        x_col: x_col.into(),
+        panel_col: panel_col.into(),
+        band_over: band_cols.first().map(|s| s.to_string()),
+        population,
+        panels,
+    })
+}
+
+/// Grid layout: up to 3 panels per row.
+fn layout(n: usize) -> (usize, usize) {
+    let cols = n.clamp(1, 3);
+    (n.div_ceil(cols), cols)
+}
+
+fn x_axis_label(x_col: &str) -> &'static str {
+    match x_col {
+        "cus_per_domain" => "CUs per V/f domain",
+        _ => "epoch length (us)",
+    }
+}
+
+fn panel_title(spec: &PlotSpec, p: &Panel) -> String {
+    match spec.panel_col.as_str() {
+        "cus_per_domain" => format!("{}, {} CU/domain", p.objective, p.fixed),
+        _ => format!("{}, epoch {} us", p.objective, p.fixed),
+    }
+}
+
+fn figure_title(spec: &PlotSpec) -> String {
+    match &spec.band_over {
+        Some(col) => format!(
+            "{}: {} (band: min-max over {col}, n={})",
+            spec.name, spec.metric, spec.population
+        ),
+        None => format!("{}: {}", spec.name, spec.metric),
+    }
+}
+
+/// Render the self-contained gnuplot script.
+pub fn render_gnuplot(spec: &PlotSpec) -> String {
+    let (rows, cols) = layout(spec.panels.len());
+    let (w, h) = (520 * cols, 390 * rows);
+    let png = format!("{}_{}.png", spec.name, ident(&spec.metric));
+    let mut out = String::new();
+    let _ = writeln!(out, "# {} — generated by `pcstall sweep plot`", figure_title(spec));
+    let _ = writeln!(out, "# render: gnuplot <this file>   (writes {png} into the cwd)");
+    let _ = writeln!(out, "# columns: x mean min max n");
+    let _ = writeln!(
+        out,
+        "if (strstrt(GPVAL_TERMINALS, \"pngcairo\") > 0) {{\n    set terminal pngcairo size {w},{h} font \"sans,10\" noenhanced\n}} else {{\n    set terminal png size {w},{h} noenhanced\n}}"
+    );
+    let _ = writeln!(out, "set output \"{png}\"");
+    let _ = writeln!(
+        out,
+        "set multiplot layout {rows},{cols} title \"{}\"",
+        figure_title(spec)
+    );
+    if spec.x_col == "cus_per_domain" {
+        let _ = writeln!(out, "set logscale x 2");
+    } else {
+        let _ = writeln!(out, "set logscale x 10");
+    }
+    let _ = writeln!(out, "set xlabel \"{}\"", x_axis_label(&spec.x_col));
+    let _ = writeln!(out, "set ylabel \"{}\"", spec.metric);
+    let _ = writeln!(out, "set key bottom left");
+    let _ = writeln!(out, "set grid");
+    for (pi, panel) in spec.panels.iter().enumerate() {
+        let _ = writeln!(out);
+        // one datablock per series: x mean min max n (design named in
+        // the plot clause title)
+        for (si, s) in panel.series.iter().enumerate() {
+            let _ = writeln!(out, "$p{pi}_s{si} << EOD");
+            for pt in &s.points {
+                let _ = writeln!(
+                    out,
+                    "{} {} {} {} {}",
+                    pt.x_label,
+                    num(pt.mean),
+                    num(pt.min),
+                    num(pt.max),
+                    pt.n
+                );
+            }
+            let _ = writeln!(out, "EOD");
+        }
+        let _ = writeln!(out, "set title \"{}\"", panel_title(spec, panel));
+        let mut clauses: Vec<String> = Vec::new();
+        for (si, s) in panel.series.iter().enumerate() {
+            let lc = si + 1;
+            clauses.push(format!(
+                "$p{pi}_s{si} using 1:3:4 with filledcurves fs transparent solid 0.15 lc {lc} notitle"
+            ));
+            clauses.push(format!(
+                "$p{pi}_s{si} using 1:2 with linespoints pt 7 lc {lc} title \"{}\"",
+                s.design
+            ));
+        }
+        let _ = writeln!(out, "plot {}", clauses.join(", \\\n     "));
+    }
+    let _ = writeln!(out, "\nunset multiplot");
+    out
+}
+
+/// Render the matplotlib fallback script.
+pub fn render_matplotlib(spec: &PlotSpec) -> String {
+    let (rows, cols) = layout(spec.panels.len());
+    let png = format!("{}_{}.png", spec.name, ident(&spec.metric));
+    let mut out = String::new();
+    let _ = writeln!(out, "#!/usr/bin/env python3");
+    let _ = writeln!(out, "# {} — generated by `pcstall sweep plot`", figure_title(spec));
+    let _ = writeln!(out, "# render: python3 <this file>   (writes {png} into the cwd)");
+    let _ = writeln!(
+        out,
+        "# DATA: [(panel_title, [(design, [(x, mean, min, max, n), ...]), ...]), ...]"
+    );
+    let _ = writeln!(out, "DATA = [");
+    for panel in &spec.panels {
+        let _ = writeln!(out, "    (\"{}\", [", panel_title(spec, panel));
+        for s in &panel.series {
+            let _ = writeln!(out, "        (\"{}\", [", s.design);
+            for pt in &s.points {
+                let _ = writeln!(
+                    out,
+                    "            ({}, {}, {}, {}, {}),",
+                    pt.x_label,
+                    num(pt.mean),
+                    num(pt.min),
+                    num(pt.max),
+                    pt.n
+                );
+            }
+            let _ = writeln!(out, "        ]),");
+        }
+        let _ = writeln!(out, "    ]),");
+    }
+    let _ = writeln!(out, "]");
+    let log_base = if spec.x_col == "cus_per_domain" { 2 } else { 10 };
+    let _ = writeln!(
+        out,
+        r#"
+def main():
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+    rows, cols = {rows}, {cols}
+    fig, axes = plt.subplots(rows, cols, figsize=(5.2 * cols, 3.9 * rows), squeeze=False)
+    for i, (title, series) in enumerate(DATA):
+        ax = axes[i // cols][i % cols]
+        for label, pts in series:
+            xs = [p[0] for p in pts]
+            ax.fill_between(xs, [p[2] for p in pts], [p[3] for p in pts], alpha=0.15)
+            ax.plot(xs, [p[1] for p in pts], marker="o", label=label)
+        ax.set_xscale("log", base={log_base})
+        ax.set_title(title)
+        ax.set_xlabel("{xlabel}")
+        ax.set_ylabel("{metric}")
+        ax.grid(True, alpha=0.4)
+        ax.legend(loc="lower left")
+    for j in range(len(DATA), rows * cols):
+        axes[j // cols][j % cols].axis("off")
+    fig.suptitle("{title}")
+    fig.tight_layout()
+    fig.savefig("{png}", dpi=150)
+    print("wrote {png}")
+
+
+if __name__ == "__main__":
+    main()"#,
+        rows = rows,
+        cols = cols,
+        log_base = log_base,
+        xlabel = x_axis_label(&spec.x_col),
+        metric = spec.metric,
+        title = figure_title(spec),
+        png = png,
+    );
+    out
+}
+
+/// Read `csv`, aggregate, and write the script pair.  Returns
+/// `(gnuplot_path, matplotlib_path)`.  Scripts land next to the CSV
+/// unless `out_dir` redirects them.
+pub fn emit_plot_scripts(
+    csv: &Path,
+    metric: &str,
+    out_dir: Option<&Path>,
+) -> anyhow::Result<(PathBuf, PathBuf)> {
+    let table = CsvTable::read(csv).map_err(anyhow::Error::msg)?;
+    let stem = csv
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("sweep");
+    let spec = plot_spec(&table, stem, metric)?;
+    let dir = match out_dir {
+        Some(d) => d.to_path_buf(),
+        None => csv.parent().unwrap_or_else(|| Path::new(".")).to_path_buf(),
+    };
+    std::fs::create_dir_all(&dir)
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+    let base = format!("{}_{}", spec.name, ident(metric));
+    let gp = dir.join(format!("{base}.gnuplot"));
+    let py = dir.join(format!("{base}.py"));
+    std::fs::write(&gp, render_gnuplot(&spec))
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", gp.display()))?;
+    std::fs::write(&py, render_matplotlib(&spec))
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", py.display()))?;
+    Ok((gp, py))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::sweep::SWEEP_HEADER;
+
+    /// A seed-population CSV: 2 designs x 2 epochs x 3 seeds, 1 panel.
+    fn population_table() -> CsvTable {
+        let mut t = CsvTable::new(&SWEEP_HEADER);
+        for (design, base) in [("crisp", 0.6), ("pcstall", 0.8)] {
+            for (ei, epoch) in ["1", "10"].iter().enumerate() {
+                for seed in 1..=3u64 {
+                    let acc = base + 0.01 * seed as f64 - 0.05 * ei as f64;
+                    t.push(vec![
+                        epoch.to_string(),
+                        "1".into(),
+                        format!("synth:{seed}"),
+                        seed.to_string(),
+                        design.into(),
+                        "ed2p".into(),
+                        "12.00".into(),
+                        "0.8800".into(),
+                        "1.0000e-3".into(),
+                        "0.0400".into(),
+                        format!("{acc:.3}"),
+                    ]);
+                }
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn aggregates_the_seed_population() {
+        let spec = plot_spec(&population_table(), "sweep_pop", "accuracy").unwrap();
+        assert_eq!(spec.x_col, "epoch_us");
+        assert_eq!(spec.panel_col, "cus_per_domain");
+        assert_eq!(spec.band_over.as_deref(), Some("seed"));
+        assert_eq!(spec.population, 3);
+        assert_eq!(spec.panels.len(), 1);
+        let panel = &spec.panels[0];
+        assert_eq!(panel.objective, "ed2p");
+        assert_eq!(panel.fixed, "1");
+        // series sorted by design name
+        let designs: Vec<&str> = panel.series.iter().map(|s| s.design.as_str()).collect();
+        assert_eq!(designs, vec!["crisp", "pcstall"]);
+        // band stats at epoch 1 for crisp: 0.61, 0.62, 0.63
+        let p = &panel.series[0].points[0];
+        assert_eq!(p.x_label, "1");
+        assert_eq!(p.n, 3);
+        assert!((p.mean - 0.62).abs() < 1e-9, "{}", p.mean);
+        assert!((p.min - 0.61).abs() < 1e-9);
+        assert!((p.max - 0.63).abs() < 1e-9);
+        // x sorted numerically
+        assert!(panel.series[0].points[0].x < panel.series[0].points[1].x);
+    }
+
+    #[test]
+    fn scripts_are_deterministic_and_row_order_independent() {
+        let t = population_table();
+        let spec = plot_spec(&t, "sweep_pop", "accuracy").unwrap();
+        let (gp1, py1) = (render_gnuplot(&spec), render_matplotlib(&spec));
+        // same CSV, reversed row order
+        let mut rev = t.clone();
+        rev.rows.reverse();
+        let spec2 = plot_spec(&rev, "sweep_pop", "accuracy").unwrap();
+        assert_eq!(gp1, render_gnuplot(&spec2));
+        assert_eq!(py1, render_matplotlib(&spec2));
+        // and a second render of the same spec is byte-identical
+        assert_eq!(gp1, render_gnuplot(&spec));
+        // the scripts are self-contained: datablocks inline, png named
+        assert!(gp1.contains("$p0_s0 << EOD"));
+        assert!(gp1.contains("set output \"sweep_pop_accuracy.png\""));
+        assert!(gp1.contains("min-max over seed, n=3"));
+        assert!(py1.contains("DATA = ["));
+        assert!(py1.contains("sweep_pop_accuracy.png"));
+    }
+
+    #[test]
+    fn infers_the_granularity_axis_when_epochs_are_pinned() {
+        let mut t = CsvTable::new(&SWEEP_HEADER);
+        for gran in ["1", "2", "4"] {
+            t.push(vec![
+                "1".into(),
+                gran.into(),
+                "comd".into(),
+                "-".into(),
+                "pcstall".into(),
+                "ed2p".into(),
+                "10.00".into(),
+                "0.9000".into(),
+                "1.0000e-3".into(),
+                "0.0400".into(),
+                "0.900".into(),
+            ]);
+        }
+        let spec = plot_spec(&t, "sweep_gran", "improvement_pct").unwrap();
+        assert_eq!(spec.x_col, "cus_per_domain");
+        assert_eq!(spec.panel_col, "epoch_us");
+        assert_eq!(spec.band_over, None, "single workload, no population");
+        let gp = render_gnuplot(&spec);
+        assert!(gp.contains("set logscale x 2"));
+        assert!(gp.contains("CUs per V/f domain"));
+    }
+
+    #[test]
+    fn panels_sort_numerically_not_lexicographically() {
+        // 4 epochs vary more than 3 grans, so epoch is x and the
+        // granularity values become panels — in numeric order
+        let mut t = CsvTable::new(&SWEEP_HEADER);
+        for gran in ["16", "2", "1"] {
+            for epoch in ["1", "10", "50", "100"] {
+                t.push(vec![
+                    epoch.into(),
+                    gran.into(),
+                    "comd".into(),
+                    "-".into(),
+                    "pcstall".into(),
+                    "ed2p".into(),
+                    "10.00".into(),
+                    "0.9000".into(),
+                    "1.0000e-3".into(),
+                    "0.0400".into(),
+                    "0.900".into(),
+                ]);
+            }
+        }
+        let spec = plot_spec(&t, "s", "accuracy").unwrap();
+        let fixed: Vec<&str> = spec.panels.iter().map(|p| p.fixed.as_str()).collect();
+        assert_eq!(fixed, vec!["1", "2", "16"]);
+    }
+
+    #[test]
+    fn non_finite_metric_cells_drop_out_of_the_band() {
+        let mut t = population_table();
+        // a static-like design that never predicts: all-NaN accuracy
+        for epoch in ["1", "10"] {
+            t.push(vec![
+                epoch.into(),
+                "1".into(),
+                "synth:1".into(),
+                "1".into(),
+                "static-1.7".into(),
+                "ed2p".into(),
+                "0.00".into(),
+                "1.0000".into(),
+                "1.0000e-3".into(),
+                "0.0400".into(),
+                "NaN".into(),
+            ]);
+        }
+        let spec = plot_spec(&t, "s", "accuracy").unwrap();
+        let designs: Vec<&str> = spec.panels[0]
+            .series
+            .iter()
+            .map(|s| s.design.as_str())
+            .collect();
+        assert_eq!(
+            designs,
+            vec!["crisp", "pcstall"],
+            "all-NaN series must disappear, not plot as zeros"
+        );
+    }
+
+    #[test]
+    fn rejects_non_sweep_csvs_and_unknown_metrics() {
+        let bogus = CsvTable::new(&["a", "b"]);
+        assert!(plot_spec(&bogus, "x", "accuracy").is_err());
+
+        let empty = CsvTable::new(&SWEEP_HEADER);
+        assert!(plot_spec(&empty, "x", "accuracy").is_err());
+
+        let err = plot_spec(&population_table(), "x", "nope")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("accuracy"), "should list metrics: {err}");
+
+        let err = plot_spec(&population_table(), "x", "workload")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("axis"), "{err}");
+    }
+
+    #[test]
+    fn emit_writes_the_script_pair() {
+        let dir = std::env::temp_dir().join(format!("pcstall_plot_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let csv = dir.join("sweep_pop.csv");
+        population_table().write(&csv).unwrap();
+        let (gp, py) = emit_plot_scripts(&csv, DEFAULT_METRIC, None).unwrap();
+        assert_eq!(gp, dir.join("sweep_pop_accuracy.gnuplot"));
+        assert_eq!(py, dir.join("sweep_pop_accuracy.py"));
+        let first = std::fs::read(&gp).unwrap();
+        // re-emitting is byte-identical (the CI determinism gate)
+        let sub = dir.join("again");
+        let (gp2, _) = emit_plot_scripts(&csv, DEFAULT_METRIC, Some(&sub)).unwrap();
+        assert_eq!(std::fs::read(&gp2).unwrap(), first);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

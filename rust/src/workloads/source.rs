@@ -41,6 +41,13 @@ impl WorkloadSource {
                 .parse()
                 .map_err(|_| anyhow::anyhow!("'synth:' spec needs an integer seed, got '{seed}'"))?;
             Ok(WorkloadSource::Synth(seed))
+        } else if spec == "synth" {
+            // the bare template is only meaningful inside a sweep plan,
+            // where the plan-level seed axis instantiates it
+            anyhow::bail!(
+                "bare 'synth' needs a seed (synth:<seed>); in a sweep plan, a plan-level \
+                 seed = [..] axis supplies one per grid point"
+            )
         } else {
             anyhow::ensure!(
                 crate::workloads::names().iter().any(|n| *n == spec),
@@ -137,6 +144,15 @@ mod tests {
         assert!(WorkloadSource::parse("bogus").is_err());
         assert!(WorkloadSource::parse("trace:").is_err());
         assert!(WorkloadSource::parse("synth:notanumber").is_err());
+    }
+
+    #[test]
+    fn bare_synth_template_points_at_the_seed_axis() {
+        // `synth` without a seed only exists inside sweep plans (the
+        // seed = [..] axis instantiates it); everywhere else the error
+        // must say so instead of "unknown workload"
+        let err = WorkloadSource::parse("synth").unwrap_err().to_string();
+        assert!(err.contains("seed = [..]"), "unhelpful error: {err}");
     }
 
     #[test]

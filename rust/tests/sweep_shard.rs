@@ -109,6 +109,101 @@ fn sharded_merge_is_byte_identical_and_warm_shard_executes_nothing() {
     let _ = std::fs::remove_dir_all(&shard_dir);
 }
 
+/// A seed-population plan: 2 epoch lengths × 3 synth seeds, with a
+/// `[set]` override riding along (the satellite contract: the seed axis
+/// and `[set]` compose).
+const SEED_PLAN: &str = r#"
+name = "pop"
+epoch_ns = [1000, 10000]
+cus_per_domain = [1]
+workloads = ["synth"]
+seed = [1, 2, 3]
+designs = ["pcstall"]
+epochs = 6
+[set]
+gpu.n_wf = 4
+"#;
+
+#[test]
+fn seed_axis_shard_union_is_byte_identical_to_unsharded_csv() {
+    let plan = SweepPlan::from_toml(SEED_PLAN).unwrap();
+
+    // unsharded reference, no cache
+    let ref_dir = fresh_dir("seed_unsharded");
+    run_sweep(
+        &opts(&ref_dir, Arc::new(Engine::no_cache())),
+        &plan,
+        ShardSpec::whole(),
+    )
+    .unwrap();
+    let reference = std::fs::read_to_string(ref_dir.join("sweep_pop.csv")).unwrap();
+    let rows: Vec<&str> = reference.lines().skip(1).collect();
+    assert_eq!(rows.len(), 6, "2 epochs x 3 seeds x 1 design");
+    // the seed coordinate is a first-class CSV column
+    let header = reference.lines().next().unwrap();
+    let seed_col = header
+        .split(',')
+        .position(|h| h == "seed")
+        .expect("seed column in sweep CSV header");
+    let mut seeds: Vec<&str> = rows
+        .iter()
+        .map(|r| r.split(',').nth(seed_col).unwrap())
+        .collect();
+    seeds.sort_unstable();
+    seeds.dedup();
+    assert_eq!(seeds, vec!["1", "2", "3"]);
+    assert!(
+        rows.iter().all(|r| r.contains("synth:")),
+        "every population row runs a synthesized source"
+    );
+
+    // 2-way shard into one directory, shared cache, then merge
+    let shard_dir = fresh_dir("seed_sharded");
+    let cache_dir = shard_dir.join("cache");
+    for index in 0..2usize {
+        run_sweep(
+            &opts(&shard_dir, Arc::new(Engine::with_cache_dir(cache_dir.clone()))),
+            &plan,
+            ShardSpec { index, count: 2 },
+        )
+        .unwrap();
+    }
+    let written = merge_dir(&shard_dir).unwrap();
+    assert_eq!(written, vec![shard_dir.join("sweep_pop.csv")]);
+    let merged = std::fs::read_to_string(&written[0]).unwrap();
+    assert_eq!(
+        merged, reference,
+        "seed-axis shard union must be byte-identical to the unsharded CSV"
+    );
+
+    // end-to-end figure trail: plotting the merged CSV twice emits
+    // byte-identical script pairs (the CI determinism gate)
+    let plot_a = shard_dir.join("plot_a");
+    let plot_b = shard_dir.join("plot_b");
+    let (gp_a, py_a) =
+        pcstall::stats::plot::emit_plot_scripts(&written[0], "accuracy", Some(&plot_a)).unwrap();
+    let (gp_b, py_b) =
+        pcstall::stats::plot::emit_plot_scripts(&written[0], "accuracy", Some(&plot_b)).unwrap();
+    assert_eq!(
+        std::fs::read(&gp_a).unwrap(),
+        std::fs::read(&gp_b).unwrap(),
+        "gnuplot script must be deterministic"
+    );
+    assert_eq!(
+        std::fs::read(&py_a).unwrap(),
+        std::fs::read(&py_b).unwrap(),
+        "matplotlib script must be deterministic"
+    );
+    let gp = std::fs::read_to_string(&gp_a).unwrap();
+    assert!(
+        gp.contains("min-max over seed, n=3"),
+        "band must aggregate the 3-seed population: {gp}"
+    );
+
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&shard_dir);
+}
+
 #[test]
 fn shard_of_one_equals_unsharded_rows() {
     // --shard 0/1 is the whole grid: same rows, same final CSV name.
