@@ -94,6 +94,15 @@ pub fn parse(text: &str) -> anyhow::Result<Vec<(String, Value)>> {
             .split_once('=')
             .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
         let key = key.trim();
+        // TOML-style quoted keys: `"dvfs.transition_ns" = [..]` names the
+        // same key as the bare spelling (needed because dots in bare keys
+        // are literal here, and sweep-plan `[axis]` tables quote them)
+        let key = match key.strip_prefix('"') {
+            Some(rest) => rest
+                .strip_suffix('"')
+                .ok_or_else(|| anyhow::anyhow!("line {}: unterminated quoted key", lineno + 1))?,
+            None => key,
+        };
         if key.is_empty() {
             anyhow::bail!("line {}: empty key", lineno + 1);
         }
@@ -277,6 +286,25 @@ enabled = true
         let kv = parse("[set]\nseed = [1, 2]\n").unwrap();
         assert_eq!(kv[0].0, "set.seed");
         assert!(matches!(kv[0].1, Value::Arr(_)));
+    }
+
+    #[test]
+    fn quoted_keys_name_the_same_key_as_bare_ones() {
+        // the `[axis]` plan table quotes dotted config keys, TOML-style
+        let kv = parse("[axis]\n\"dvfs.transition_ns\" = [5, 20]\n").unwrap();
+        assert_eq!(kv[0].0, "axis.dvfs.transition_ns");
+        assert_eq!(kv[0].1, Value::Arr(vec![Value::Int(5), Value::Int(20)]));
+        let bare = parse("[axis]\ndvfs.transition_ns = [5, 20]\n").unwrap();
+        assert_eq!(kv, bare, "quoted and bare spellings must agree");
+        // quoting works at top level too
+        let kv = parse("\"seed\" = 7\n").unwrap();
+        assert_eq!(kv[0], ("seed".into(), Value::Int(7)));
+    }
+
+    #[test]
+    fn malformed_quoted_keys_are_rejected() {
+        assert!(parse("\"unterminated = 1\n").is_err());
+        assert!(parse("\"\" = 1\n").is_err(), "empty quoted key");
     }
 
     #[test]

@@ -5,8 +5,15 @@
 //! module ships a small self-contained TOML-subset parser
 //! ([`minitoml`]) covering what configs need: `[section]` headers,
 //! integer/float/bool/string values, comments, and blank lines.
+//!
+//! Every `[set]`-addressable key is declared exactly once, in the
+//! [`config_fields!`] macro seam below: the typed key *registry*
+//! ([`registry`]), the setter ([`SimConfig::set_key`]), the getter
+//! ([`SimConfig::get_key`]) and the serializer ([`SimConfig::to_toml`])
+//! all expand from it, so the key set cannot drift between them.
 
 pub mod minitoml;
+pub mod registry;
 
 use crate::power::PowerParams;
 
@@ -125,48 +132,57 @@ pub struct SimConfig {
     pub seed: u64,
 }
 
+/// The single declaration of every addressable config key:
+/// `(key path, kind, field lvalue, one-line doc)`.  The registry
+/// ([`registry::key_schema`]), [`SimConfig::set_key`],
+/// [`SimConfig::get_key`] and [`SimConfig::to_toml`] all expand from
+/// this list — add a field here and every surface (TOML files, `--set`,
+/// plan `[set]` / `[axis]` tables, `pcstall config keys`) picks it up.
 macro_rules! config_fields {
     ($self:ident, $apply:ident) => {
-        // (key path, getter expression, setter closure)
-        $apply!("gpu.n_cu", usize, $self.gpu.n_cu);
-        $apply!("gpu.n_wf", usize, $self.gpu.n_wf);
-        $apply!("gpu.issue_width", usize, $self.gpu.issue_width);
-        $apply!("gpu.wf_per_wg", usize, $self.gpu.wf_per_wg);
-        $apply!("gpu.mem_freq_ghz", f64, $self.gpu.mem_freq_ghz);
-        $apply!("gpu.l1_bytes", usize, $self.gpu.l1_bytes);
-        $apply!("gpu.l1_line", usize, $self.gpu.l1_line);
-        $apply!("gpu.l1_ways", usize, $self.gpu.l1_ways);
-        $apply!("gpu.l1_hit_cycles", u32, $self.gpu.l1_hit_cycles);
-        $apply!("gpu.l2_bytes", usize, $self.gpu.l2_bytes);
-        $apply!("gpu.l2_banks", usize, $self.gpu.l2_banks);
-        $apply!("gpu.l2_ways", usize, $self.gpu.l2_ways);
-        $apply!("gpu.l2_hit_ns", f64, $self.gpu.l2_hit_ns);
-        $apply!("gpu.l2_service_ns", f64, $self.gpu.l2_service_ns);
-        $apply!("gpu.dram_ns", f64, $self.gpu.dram_ns);
-        $apply!("gpu.dram_bw_bytes_per_ns", f64, $self.gpu.dram_bw_bytes_per_ns);
-        $apply!("gpu.quantum_ns", f64, $self.gpu.quantum_ns);
-        $apply!("dvfs.epoch_ns", f64, $self.dvfs.epoch_ns);
-        $apply!("dvfs.cus_per_domain", usize, $self.dvfs.cus_per_domain);
-        $apply!("dvfs.transition_ns", f64, $self.dvfs.transition_ns);
-        $apply!("dvfs.pc_table_entries", usize, $self.dvfs.pc_table_entries);
-        $apply!("dvfs.pc_offset_bits", u32, $self.dvfs.pc_offset_bits);
-        $apply!("dvfs.pc_update_alpha", f64, $self.dvfs.pc_update_alpha);
-        $apply!("dvfs.pc_table_share", usize, $self.dvfs.pc_table_share);
-        $apply!("power.f_min_ghz", f64, $self.power.f_min_ghz);
-        $apply!("power.f_max_ghz", f64, $self.power.f_max_ghz);
-        $apply!("power.v0", f64, $self.power.v0);
-        $apply!("power.kv", f64, $self.power.kv);
-        $apply!("power.v_nom", f64, $self.power.v_nom);
-        $apply!("power.c1", f64, $self.power.c1);
-        $apply!("power.c2", f64, $self.power.c2);
-        $apply!("power.l0", f64, $self.power.l0);
-        $apply!("power.lv", f64, $self.power.lv);
-        $apply!("power.eta0", f64, $self.power.eta0);
-        $apply!("power.eta_slope", f64, $self.power.eta_slope);
-        $apply!("power.rail_cj", f64, $self.power.rail_cj);
-        $apply!("seed", u64, $self.seed);
+        $apply!("gpu.n_cu", usize, $self.gpu.n_cu, "Number of compute units");
+        $apply!("gpu.n_wf", usize, $self.gpu.n_wf, "Wavefront slots per CU");
+        $apply!("gpu.issue_width", usize, $self.gpu.issue_width, "Instructions issued per CU per cycle");
+        $apply!("gpu.wf_per_wg", usize, $self.gpu.wf_per_wg, "Wavefronts per workgroup (barrier scope)");
+        $apply!("gpu.mem_freq_ghz", f64, $self.gpu.mem_freq_ghz, "Fixed memory/L2 domain frequency (GHz)");
+        $apply!("gpu.l1_bytes", usize, $self.gpu.l1_bytes, "L1 vector cache size (bytes)");
+        $apply!("gpu.l1_line", usize, $self.gpu.l1_line, "L1 line size (bytes)");
+        $apply!("gpu.l1_ways", usize, $self.gpu.l1_ways, "L1 associativity");
+        $apply!("gpu.l1_hit_cycles", u32, $self.gpu.l1_hit_cycles, "L1 hit latency (CU cycles)");
+        $apply!("gpu.l2_bytes", usize, $self.gpu.l2_bytes, "Shared L2 size (bytes)");
+        $apply!("gpu.l2_banks", usize, $self.gpu.l2_banks, "L2 bank count");
+        $apply!("gpu.l2_ways", usize, $self.gpu.l2_ways, "L2 associativity");
+        $apply!("gpu.l2_hit_ns", f64, $self.gpu.l2_hit_ns, "L2 hit latency (ns)");
+        $apply!("gpu.l2_service_ns", f64, $self.gpu.l2_service_ns, "L2 bank service time per access (ns)");
+        $apply!("gpu.dram_ns", f64, $self.gpu.dram_ns, "DRAM latency (ns)");
+        $apply!("gpu.dram_bw_bytes_per_ns", f64, $self.gpu.dram_bw_bytes_per_ns, "DRAM bandwidth (bytes/ns)");
+        $apply!("gpu.quantum_ns", f64, $self.gpu.quantum_ns, "Cross-CU contention coupling quantum (ns)");
+        $apply!("dvfs.epoch_ns", f64, $self.dvfs.epoch_ns, "DVFS epoch duration (ns)");
+        $apply!("dvfs.cus_per_domain", usize, $self.dvfs.cus_per_domain, "CUs per V/f domain");
+        $apply!("dvfs.transition_ns", f64, $self.dvfs.transition_ns, "V/f transition latency (ns; negative derives ~0.4% of epoch)");
+        $apply!("dvfs.pc_table_entries", usize, $self.dvfs.pc_table_entries, "PC-table entries per instance");
+        $apply!("dvfs.pc_offset_bits", u32, $self.dvfs.pc_offset_bits, "PC index offset bits over byte PCs");
+        $apply!("dvfs.pc_update_alpha", f64, $self.dvfs.pc_update_alpha, "EWMA weight for PC-table updates (1.0 = overwrite)");
+        $apply!("dvfs.pc_table_share", usize, $self.dvfs.pc_table_share, "CUs sharing one PC table");
+        $apply!("power.f_min_ghz", f64, $self.power.f_min_ghz, "Lowest ladder frequency (GHz)");
+        $apply!("power.f_max_ghz", f64, $self.power.f_max_ghz, "Highest ladder frequency (GHz)");
+        $apply!("power.v0", f64, $self.power.v0, "Voltage at f_min (V)");
+        $apply!("power.kv", f64, $self.power.kv, "Voltage slope (V per GHz)");
+        $apply!("power.v_nom", f64, $self.power.v_nom, "Leakage reference voltage (V)");
+        $apply!("power.c1", f64, $self.power.c1, "Instruction-driven switching coefficient");
+        $apply!("power.c2", f64, $self.power.c2, "Clock-tree switching coefficient");
+        $apply!("power.l0", f64, $self.power.l0, "Leakage magnitude at v_nom (W)");
+        $apply!("power.lv", f64, $self.power.lv, "Leakage exponential slope (1/V)");
+        $apply!("power.eta0", f64, $self.power.eta0, "IVR efficiency at the lowest state");
+        $apply!("power.eta_slope", f64, $self.power.eta_slope, "IVR efficiency rise across the ladder");
+        $apply!("power.rail_cj", f64, $self.power.rail_cj, "Rail charge constant for transition energy (J per V)");
+        $apply!("seed", u64, $self.seed, "Master seed for workload generation");
     };
 }
+
+/// Make the declaration seam importable by [`registry`] (macros are
+/// textually scoped; the re-export gives it a path).
+pub(crate) use config_fields;
 
 impl SimConfig {
     /// Parse from TOML-subset text, starting from defaults.
@@ -194,36 +210,71 @@ impl SimConfig {
     }
 
     /// Apply one parsed `section.key` value (TOML loading, CLI overrides,
-    /// and sweep-plan `[set]` tables).
+    /// and sweep-plan `[set]` tables / `[axis]` dimensions).  The key is
+    /// resolved and type-checked against the registry first, so every
+    /// caller reports the same error for the same mistake.
     pub(crate) fn set_key(&mut self, key: &str, value: &minitoml::Value) -> Result<(), String> {
+        let desc = registry::key_schema()
+            .lookup(key)
+            .ok_or_else(|| format!("unknown config key: {key} (see `pcstall config keys`)"))?;
+        desc.canonicalize(value)?;
         macro_rules! apply {
-            ($name:literal, usize, $field:expr) => {
+            ($name:literal, usize, $field:expr, $doc:literal) => {
                 if key == $name {
-                    $field = value.as_int().ok_or("expected integer")? as usize;
+                    $field = value.as_int().expect("canonicalize admitted an integer") as usize;
                     return Ok(());
                 }
             };
-            ($name:literal, u32, $field:expr) => {
+            ($name:literal, u32, $field:expr, $doc:literal) => {
                 if key == $name {
-                    $field = value.as_int().ok_or("expected integer")? as u32;
+                    $field = value.as_int().expect("canonicalize admitted an integer") as u32;
                     return Ok(());
                 }
             };
-            ($name:literal, u64, $field:expr) => {
+            ($name:literal, u64, $field:expr, $doc:literal) => {
                 if key == $name {
-                    $field = value.as_int().ok_or("expected integer")? as u64;
+                    $field = value.as_int().expect("canonicalize admitted an integer") as u64;
                     return Ok(());
                 }
             };
-            ($name:literal, f64, $field:expr) => {
+            ($name:literal, f64, $field:expr, $doc:literal) => {
                 if key == $name {
-                    $field = value.as_float().ok_or("expected number")?;
+                    $field = value.as_float().expect("canonicalize admitted a number");
                     return Ok(());
                 }
             };
         }
         config_fields!(self, apply);
-        Err(format!("unknown config key: {key}"))
+        unreachable!("registry and set_key expand from the same config_fields! seam")
+    }
+
+    /// Read one `section.key` back as a typed value — the inverse of
+    /// [`Self::set_key`] (registry queries, round-trip tests).
+    pub fn get_key(&self, key: &str) -> Option<minitoml::Value> {
+        macro_rules! apply {
+            ($name:literal, usize, $field:expr, $doc:literal) => {
+                if key == $name {
+                    return Some(minitoml::Value::Int($field as i64));
+                }
+            };
+            ($name:literal, u32, $field:expr, $doc:literal) => {
+                if key == $name {
+                    return Some(minitoml::Value::Int($field as i64));
+                }
+            };
+            ($name:literal, u64, $field:expr, $doc:literal) => {
+                if key == $name {
+                    return Some(minitoml::Value::Int($field as i64));
+                }
+            };
+            ($name:literal, f64, $field:expr, $doc:literal) => {
+                if key == $name {
+                    return Some(minitoml::Value::Float($field));
+                }
+            };
+        }
+        config_fields!(self, apply);
+        None
     }
 
     /// Serialize to TOML (used by `pcstall config dump`).
@@ -232,7 +283,7 @@ impl SimConfig {
         #[allow(unused_assignments)]
         let mut section = "";
         macro_rules! apply {
-            ($name:literal, $_ty:ident, $field:expr) => {{
+            ($name:literal, $_ty:ident, $field:expr, $doc:literal) => {{
                 let (sec, leaf) = match $name.split_once('.') {
                     Some((s, l)) => (s, l),
                     None => ("", $name),
@@ -251,9 +302,9 @@ impl SimConfig {
         out.push_str(&format!("seed = {}\n", self.seed));
         let this = self;
         macro_rules! apply_skip_seed {
-            ("seed", $t:ident, $f:expr) => {};
-            ($name:literal, $t:ident, $f:expr) => {
-                apply!($name, $t, $f)
+            ("seed", $t:ident, $f:expr, $d:literal) => {};
+            ($name:literal, $t:ident, $f:expr, $d:literal) => {
+                apply!($name, $t, $f, $d)
             };
         }
         config_fields!(this, apply_skip_seed);
@@ -342,6 +393,36 @@ mod tests {
         assert!(c.apply_override("gpu.bogus=1").is_err());
         assert!(c.apply_override("no_equals").is_err());
         assert!(c.apply_override("gpu.n_cu=notanumber").is_err());
+    }
+
+    #[test]
+    fn set_key_rejects_negative_unsigned_values() {
+        // pre-registry this silently wrapped through an `as usize` cast
+        let mut c = SimConfig::default();
+        assert!(c.apply_override("gpu.n_cu=-1").is_err());
+        assert!(c.apply_override("seed=-3").is_err());
+        assert_eq!(c.gpu.n_cu, 64, "failed override must not mutate");
+    }
+
+    #[test]
+    fn get_key_reads_what_set_key_wrote() {
+        let mut c = SimConfig::default();
+        c.set_key("dvfs.transition_ns", &minitoml::Value::Int(20))
+            .unwrap();
+        assert_eq!(
+            c.get_key("dvfs.transition_ns"),
+            Some(minitoml::Value::Float(20.0))
+        );
+        c.set_key("gpu.n_wf", &minitoml::Value::Int(16)).unwrap();
+        assert_eq!(c.get_key("gpu.n_wf"), Some(minitoml::Value::Int(16)));
+        assert_eq!(c.get_key("gpu.bogus"), None);
+    }
+
+    #[test]
+    fn unknown_key_error_points_at_the_registry() {
+        let mut c = SimConfig::default();
+        let err = c.apply_override("gpu.bogus=1").unwrap_err().to_string();
+        assert!(err.contains("config keys"), "no discovery hint: {err}");
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! Typed, queryable registry of every `[set]`-addressable config key.
+//!
+//! The `config_fields!` seam in [`crate::config`] used to be write-only:
+//! keys existed only as macro arms inside `set_key`, so nothing could
+//! *enumerate* them, describe their types, or canonicalize a value
+//! without mutating a config.  This module expands the same seam into a
+//! [`KeySchema`] — one [`KeyDesc`] per key, carrying its dotted path,
+//! [`KeyKind`], compiled default, and one-line doc — which makes keys
+//!
+//! * **enumerable** (`pcstall config keys`, plan validation),
+//! * **type-checkable without side effects** ([`KeyDesc::canonicalize`]
+//!   rejects a wrong-kind value with the same error every caller sees),
+//! * **value-roundtrip-stable**: `canonicalize` renders the canonical
+//!   text form of a value, and canonicalizing a re-parse of that text
+//!   yields the same bytes — so sweep-axis CSV cells and cache/shard
+//!   fingerprints survive re-encoding (`5` vs `5.0` for an f64 key are
+//!   one identity).
+//!
+//! The sweep-plan `[axis]` grammar ([`crate::harness::sweep`]) is the
+//! main consumer: any key listed here can be swept as a grid dimension.
+
+use std::sync::OnceLock;
+
+use super::minitoml::Value;
+use super::{config_fields, SimConfig};
+
+/// The scalar type of a config key, as declared in `config_fields!`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KeyKind {
+    F64,
+    USize,
+    U32,
+    U64,
+}
+
+impl KeyKind {
+    /// Display name (`pcstall config keys`).
+    pub fn name(self) -> &'static str {
+        match self {
+            KeyKind::F64 => "f64",
+            KeyKind::USize => "usize",
+            KeyKind::U32 => "u32",
+            KeyKind::U64 => "u64",
+        }
+    }
+}
+
+/// Canonical text form of an f64 (Rust's shortest round-trip `{:?}`),
+/// shared with [`crate::exec::key::RunKey::canonical`]'s float style.
+pub fn canonical_f64(x: f64) -> String {
+    format!("{x:?}")
+}
+
+/// One addressable config key: path, kind, compiled default, doc line.
+#[derive(Debug, Clone)]
+pub struct KeyDesc {
+    /// Dotted key path (`dvfs.transition_ns`).
+    pub path: &'static str,
+    pub kind: KeyKind,
+    /// Canonical rendering of the compiled-in default value.
+    pub default: String,
+    /// One-line description.
+    pub doc: &'static str,
+}
+
+impl KeyDesc {
+    /// Type-check `v` against this key's kind and render its canonical
+    /// text form.  Canonicalizing a re-parse of the result is stable:
+    /// `canonicalize(parse(canonicalize(v))) == canonicalize(v)`.
+    /// Errors do not name the key — callers add their own context.
+    pub fn canonicalize(&self, v: &Value) -> Result<String, String> {
+        match self.kind {
+            KeyKind::F64 => v
+                .as_float()
+                .map(canonical_f64)
+                .ok_or_else(|| format!("expected a number, got {v:?}")),
+            KeyKind::USize | KeyKind::U64 => v
+                .as_int()
+                .filter(|i| *i >= 0)
+                .map(|i| i.to_string())
+                .ok_or_else(|| format!("expected a non-negative integer, got {v:?}")),
+            KeyKind::U32 => v
+                .as_int()
+                .filter(|i| *i >= 0 && *i <= u32::MAX as i64)
+                .map(|i| i.to_string())
+                .ok_or_else(|| format!("expected a non-negative 32-bit integer, got {v:?}")),
+        }
+    }
+}
+
+/// The full key registry, in `config_fields!` declaration order.
+#[derive(Debug)]
+pub struct KeySchema {
+    keys: Vec<KeyDesc>,
+}
+
+impl KeySchema {
+    /// Every addressable key, in declaration order.
+    pub fn keys(&self) -> &[KeyDesc] {
+        &self.keys
+    }
+
+    /// Look a key up by its dotted path.
+    pub fn lookup(&self, path: &str) -> Option<&KeyDesc> {
+        self.keys.iter().find(|d| d.path == path)
+    }
+}
+
+/// The process-wide schema (defaults are rendered from
+/// [`SimConfig::default`] exactly once).
+pub fn key_schema() -> &'static KeySchema {
+    static SCHEMA: OnceLock<KeySchema> = OnceLock::new();
+    SCHEMA.get_or_init(|| {
+        let dflt = SimConfig::default();
+        let mut keys: Vec<KeyDesc> = Vec::new();
+        macro_rules! apply {
+            ($name:literal, usize, $field:expr, $doc:literal) => {
+                keys.push(KeyDesc {
+                    path: $name,
+                    kind: KeyKind::USize,
+                    default: $field.to_string(),
+                    doc: $doc,
+                });
+            };
+            ($name:literal, u32, $field:expr, $doc:literal) => {
+                keys.push(KeyDesc {
+                    path: $name,
+                    kind: KeyKind::U32,
+                    default: $field.to_string(),
+                    doc: $doc,
+                });
+            };
+            ($name:literal, u64, $field:expr, $doc:literal) => {
+                keys.push(KeyDesc {
+                    path: $name,
+                    kind: KeyKind::U64,
+                    default: $field.to_string(),
+                    doc: $doc,
+                });
+            };
+            ($name:literal, f64, $field:expr, $doc:literal) => {
+                keys.push(KeyDesc {
+                    path: $name,
+                    kind: KeyKind::F64,
+                    default: canonical_f64($field),
+                    doc: $doc,
+                });
+            };
+        }
+        config_fields!(dflt, apply);
+        KeySchema { keys }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schema_enumerates_distinct_documented_keys() {
+        let schema = key_schema();
+        assert!(schema.keys().len() >= 30, "registry lost keys");
+        let mut paths: Vec<&str> = schema.keys().iter().map(|d| d.path).collect();
+        let n = paths.len();
+        paths.sort_unstable();
+        paths.dedup();
+        assert_eq!(paths.len(), n, "duplicate key paths");
+        for d in schema.keys() {
+            assert!(!d.doc.is_empty(), "{} has no doc line", d.path);
+            assert!(!d.default.is_empty(), "{} has no default", d.path);
+        }
+    }
+
+    #[test]
+    fn lookup_finds_known_keys_only() {
+        let schema = key_schema();
+        let t = schema.lookup("dvfs.transition_ns").expect("registered");
+        assert_eq!(t.kind, KeyKind::F64);
+        assert_eq!(t.default, "-1.0");
+        assert_eq!(schema.lookup("gpu.n_cu").map(|d| d.kind), Some(KeyKind::USize));
+        assert_eq!(schema.lookup("seed").map(|d| d.kind), Some(KeyKind::U64));
+        assert!(schema.lookup("gpu.bogus").is_none());
+        assert!(schema.lookup("").is_none());
+    }
+
+    #[test]
+    fn canonicalize_unifies_int_and_float_spellings() {
+        let t = key_schema().lookup("dvfs.transition_ns").unwrap();
+        // 5, 5.0 and a re-parse of the canonical text are one identity
+        assert_eq!(t.canonicalize(&Value::Int(5)).unwrap(), "5.0");
+        assert_eq!(t.canonicalize(&Value::Float(5.0)).unwrap(), "5.0");
+        let canon = t.canonicalize(&Value::Int(5)).unwrap();
+        assert_eq!(t.canonicalize(&Value::parse(&canon)).unwrap(), canon);
+    }
+
+    #[test]
+    fn canonicalize_rejects_wrong_kinds() {
+        let schema = key_schema();
+        let n_cu = schema.lookup("gpu.n_cu").unwrap();
+        assert!(n_cu.canonicalize(&Value::Float(1.5)).is_err(), "fractional int");
+        assert!(n_cu.canonicalize(&Value::Int(-1)).is_err(), "negative int");
+        assert!(n_cu.canonicalize(&Value::Str("x".into())).is_err());
+        assert!(n_cu.canonicalize(&Value::Bool(true)).is_err());
+        assert!(n_cu.canonicalize(&Value::Arr(vec![])).is_err());
+        let f = schema.lookup("power.c1").unwrap();
+        assert!(f.canonicalize(&Value::Str("1.0".into())).is_err());
+        let hit = schema.lookup("gpu.l1_hit_cycles").unwrap();
+        assert!(hit.canonicalize(&Value::Int(i64::MAX)).is_err(), "u32 overflow");
+    }
+
+    #[test]
+    fn defaults_are_roundtrip_stable_and_match_the_config() {
+        let dflt = SimConfig::default();
+        for d in key_schema().keys() {
+            // the rendered default re-parses and re-canonicalizes to
+            // itself (the fingerprint-stability contract), ...
+            let v = Value::parse(&d.default);
+            assert_eq!(
+                d.canonicalize(&v).unwrap(),
+                d.default,
+                "{} default not canonical",
+                d.path
+            );
+            // ... and agrees with what the compiled config reports
+            let got = dflt.get_key(d.path).expect("every registry key is readable");
+            assert_eq!(d.canonicalize(&got).unwrap(), d.default, "{} drifted", d.path);
+        }
+    }
+
+    #[test]
+    fn every_key_sets_and_reads_back() {
+        let mut cfg = SimConfig::default();
+        for d in key_schema().keys() {
+            let v = Value::parse(&d.default);
+            cfg.set_key(d.path, &v).unwrap_or_else(|e| panic!("{}: {e}", d.path));
+            let back = cfg.get_key(d.path).unwrap();
+            assert_eq!(
+                d.canonicalize(&back).unwrap(),
+                d.default,
+                "{} set/get roundtrip drifted",
+                d.path
+            );
+        }
+    }
+}

@@ -354,6 +354,46 @@ mod tests {
     }
 
     #[test]
+    fn config_axis_overrides_fingerprint_canonically() {
+        // A sweep-plan `[axis]` dimension reaches the key through the
+        // cell config: distinct axis values must give distinct cache
+        // addresses, while different *spellings* of one value (`5` vs
+        // `5.0` for an f64 key) must collapse to one — cache and shard
+        // identity survive re-encoding the plan.
+        use crate::config::minitoml::Value;
+        let key_with = |v: &Value| {
+            let mut cfg = SimConfig::small();
+            cfg.set_key("dvfs.transition_ns", v).unwrap();
+            RunKey::new(
+                &cfg,
+                "quick",
+                "native",
+                "comd",
+                Policy::PcStall,
+                Objective::Ed2p,
+                RunMode::Epochs(24),
+                0.05,
+            )
+        };
+        let int5 = key_with(&Value::Int(5));
+        let float5 = key_with(&Value::Float(5.0));
+        assert_eq!(int5, float5, "value spelling must not change the key");
+        assert_eq!(int5.hash_hex(), float5.hash_hex());
+        let lat20 = key_with(&Value::Int(20));
+        assert_ne!(int5.cfg_fp, lat20.cfg_fp);
+        assert_ne!(int5.hash_hex(), lat20.hash_hex());
+        // and the paper's regimes are pairwise distinct
+        let mut hexes: Vec<String> = [5, 20, 100, 1000]
+            .iter()
+            .map(|ns| key_with(&Value::Int(*ns)).hash_hex())
+            .collect();
+        let n = hexes.len();
+        hexes.sort();
+        hexes.dedup();
+        assert_eq!(hexes.len(), n);
+    }
+
+    #[test]
     fn fnv_is_stable() {
         // Golden value: pins the hash function across refactors so old
         // cache entries stay addressable.

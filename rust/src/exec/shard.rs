@@ -133,6 +133,51 @@ mod tests {
     }
 
     #[test]
+    fn config_axis_keys_partition_exactly() {
+        // Keys that differ only in a config-axis value (the sweep-plan
+        // `[axis]` dimension, e.g. `dvfs.transition_ns`) are owned by
+        // exactly one shard each, and the assignment is identical no
+        // matter how the plan spelled the value (int vs float).
+        use crate::config::minitoml::Value;
+        let key_with = |v: &Value| {
+            let mut cfg = SimConfig::small();
+            cfg.set_key("dvfs.transition_ns", v).unwrap();
+            RunKey::new(
+                &cfg,
+                "quick",
+                "native",
+                "comd",
+                Policy::PcStall,
+                Objective::Ed2p,
+                RunMode::Epochs(24),
+                0.05,
+            )
+        };
+        let keys: Vec<RunKey> = [5i64, 20, 100, 1000]
+            .iter()
+            .map(|ns| key_with(&Value::Int(*ns)))
+            .collect();
+        for count in [1usize, 2, 3] {
+            for key in &keys {
+                let owners: Vec<usize> = (0..count)
+                    .filter(|&index| ShardSpec { index, count }.owns(key))
+                    .collect();
+                assert_eq!(owners.len(), 1, "key owned by {owners:?} of {count}");
+            }
+        }
+        for (ns, key) in [5i64, 20, 100, 1000].iter().zip(&keys) {
+            let respelled = key_with(&Value::Float(*ns as f64));
+            for count in [2usize, 3, 5] {
+                assert_eq!(
+                    key.shard_of(count),
+                    respelled.shard_of(count),
+                    "spelling changed the shard at {ns} ns / {count} shards"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn whole_owns_everything() {
         assert!(ShardSpec::whole().owns(&a_key("comd", 1000.0)));
     }

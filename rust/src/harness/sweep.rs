@@ -14,6 +14,9 @@
 //!   workload template into one `synth:<seed>` source per seed),
 //! * **objective** (`edp` / `ed2p` / `energy@<pct>`),
 //! * **predictor design** (any [`Policy`]),
+//! * **any config key** (`[axis]`: every key in the typed registry,
+//!   [`crate::config::registry`], can be swept as a grid dimension —
+//!   e.g. `dvfs.transition_ns` for transition-latency sensitivity),
 //!
 //! — and compiles their cross product into the existing [`Cell`] /
 //! [`RunKey`] batch machinery: one baseline + one design cell per grid
@@ -47,7 +50,23 @@
 //! epochs = 40                            # fixed-epoch mode; default: completion
 //! [set]                                  # config overrides for every cell
 //! gpu.n_wf = 16                          # (grid axes override [set] keys)
+//! [axis]                                 # config-key grid dimensions
+//! "dvfs.transition_ns" = [5, 20, 100, 1000]   # quoted or bare keys
 //! ```
+//!
+//! ## Config axes (`[axis]`)
+//!
+//! Each `[axis]` entry turns one registry key into a grid dimension:
+//! the key is validated against [`crate::config::registry::key_schema`]
+//! at parse time (unknown key, wrong-kind value, empty or duplicate
+//! value lists are errors, as is a key that also appears under `[set]`),
+//! values are *canonicalized* (`5` and `5.0` for an f64 key are one
+//! identity), and the CSV grows one column per axis, named by the key,
+//! between the coordinate and metric columns ([`sweep_header`]).  Cache
+//! and shard identity need no special casing: the axis value is applied
+//! to the cell's config before its [`RunKey`] is computed, so the config
+//! fingerprint covers it — canonically, because equal post-apply configs
+//! serialize identically regardless of how the plan spelled the value.
 //!
 //! ## Seed populations
 //!
@@ -93,6 +112,67 @@ pub fn doubling_axis(max: usize) -> Vec<usize> {
     axis
 }
 
+/// One config-key grid dimension (`[axis]` plan table): a registry key
+/// plus the value list it sweeps over.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigAxis {
+    /// Registry key path (e.g. `dvfs.transition_ns`).
+    pub key: String,
+    /// Parsed values, in plan order (applied via
+    /// [`crate::config::SimConfig::set_key`]).
+    pub values: Vec<Value>,
+    /// Canonical rendering of each value, aligned with `values` —
+    /// the CSV cell text ([`crate::config::registry::KeyDesc::canonicalize`]).
+    pub canon: Vec<String>,
+}
+
+impl ConfigAxis {
+    /// Validate a raw `(key, values)` pair against the config-key
+    /// registry: the key must exist (and not shadow a dedicated plan
+    /// axis), every value must parse under the key's kind, and the
+    /// canonicalized values must be non-empty and distinct.
+    pub fn new(key: &str, values: &[Value]) -> anyhow::Result<ConfigAxis> {
+        let desc = crate::config::registry::key_schema().lookup(key).ok_or_else(|| {
+            anyhow::anyhow!(
+                "[axis] {key}: not a config key (run `pcstall config keys` for the \
+                 sweepable set)"
+            )
+        })?;
+        match key {
+            "dvfs.epoch_ns" => anyhow::bail!(
+                "[axis] dvfs.epoch_ns: the epoch length has a dedicated plan axis — \
+                 use `epoch_ns = [..]` at the top level"
+            ),
+            "dvfs.cus_per_domain" => anyhow::bail!(
+                "[axis] dvfs.cus_per_domain: the domain granularity has a dedicated \
+                 plan axis — use `cus_per_domain = [..]` at the top level"
+            ),
+            "seed" => anyhow::bail!(
+                "[axis] seed: use the plan-level `seed = [..]` synth-population axis, \
+                 or `[set] seed = <n>` for a scalar master-seed override"
+            ),
+            _ => {}
+        }
+        anyhow::ensure!(!values.is_empty(), "[axis] {key}: value list must not be empty");
+        let mut canon: Vec<String> = Vec::with_capacity(values.len());
+        for v in values {
+            let c = desc
+                .canonicalize(v)
+                .map_err(|e| anyhow::anyhow!("[axis] {key}: {e}"))?;
+            anyhow::ensure!(
+                !canon.contains(&c),
+                "[axis] {key}: duplicate value {c} (each axis value may appear once)"
+            );
+            canon.push(c);
+        }
+        Ok(ConfigAxis {
+            key: key.to_string(),
+            values: values.to_vec(),
+            canon,
+        })
+    }
+}
+
 /// The workload-source axis of a plan.
 #[derive(Debug, Clone, PartialEq)]
 pub enum WorkloadAxis {
@@ -130,6 +210,9 @@ pub struct SweepPlan {
     /// `[set]` config overrides applied to every cell before the grid
     /// axes (axes win on conflict).
     pub overrides: Vec<(String, Value)>,
+    /// `[axis]` config-key grid dimensions, in plan order (the first
+    /// axis is the outermost loop of the compiled grid).
+    pub config_axes: Vec<ConfigAxis>,
 }
 
 impl Default for SweepPlan {
@@ -149,6 +232,7 @@ impl Default for SweepPlan {
             baseline: Policy::Static(F_STATIC_IDX),
             epochs: None,
             overrides: Vec::new(),
+            config_axes: Vec::new(),
         }
     }
 }
@@ -160,6 +244,7 @@ pub fn preset_names() -> Vec<&'static str> {
         "epoch_sweep",
         "granularity_sweep",
         "seed_population",
+        "transition_latency",
     ]
 }
 
@@ -208,6 +293,28 @@ impl SweepPlan {
                     Policy::Reactive(crate::models::EstModel::Crisp),
                     Policy::PcStall,
                 ],
+                epochs: Some(24),
+                ..SweepPlan::default()
+            }),
+            // The ROADMAP's named next figure: DVFS transition-latency
+            // sensitivity.  The paper's headline contrast (32% power
+            // efficiency at 1 µs vs 19% ED²P at 50 µs) assumes the V/f
+            // transition cost scales with the epoch regime (4 ns at
+            // 1 µs … 400 ns at 100 µs); this plan sweeps the latency
+            // *explicitly* — ns through µs — against the full epoch
+            // axis via a `dvfs.transition_ns` config axis, crisp vs
+            // pcstall vs oracle, over one catalog and one synth source.
+            // Fixed-epoch mode keeps every point the same statistical
+            // length across the latency regimes.
+            "transition_latency" => Some(SweepPlan {
+                name: name.into(),
+                cus_per_domain: vec![1],
+                workloads: WorkloadAxis::Explicit(vec!["comd".into(), "synth:11".into()]),
+                config_axes: vec![ConfigAxis::new(
+                    "dvfs.transition_ns",
+                    &[Value::Int(5), Value::Int(20), Value::Int(100), Value::Int(1000)],
+                )
+                .expect("preset axis is registry-valid")],
                 epochs: Some(24),
                 ..SweepPlan::default()
             }),
@@ -323,7 +430,20 @@ impl SweepPlan {
                     plan.epochs = Some(n as u64);
                 }
                 _ => {
-                    if let Some(cfg_key) = key.strip_prefix("set.") {
+                    if let Some(cfg_key) = key.strip_prefix("axis.") {
+                        let items = value.as_arr().ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "[axis] {cfg_key}: must be an array of values \
+                                 (e.g. {cfg_key} = [5, 20, 100])"
+                            )
+                        })?;
+                        anyhow::ensure!(
+                            !plan.config_axes.iter().any(|a| a.key == cfg_key),
+                            "[axis] {cfg_key}: declared twice (each config key may be \
+                             one grid dimension)"
+                        );
+                        plan.config_axes.push(ConfigAxis::new(cfg_key, items)?);
+                    } else if let Some(cfg_key) = key.strip_prefix("set.") {
                         anyhow::ensure!(
                             cfg_key != "seed" || value.as_arr().is_none(),
                             "seed = [..] is a plan-level axis and must appear above [set] \
@@ -335,7 +455,8 @@ impl SweepPlan {
                         anyhow::bail!(
                             "unknown plan key '{key}' (axes: epoch_ns, cus_per_domain, \
                              workloads, workloads_add, seed, designs, objectives; scalars: \
-                             name, baseline, epochs; config overrides go under [set])"
+                             name, baseline, epochs; config overrides go under [set], \
+                             config-key grid dimensions under [axis])"
                         );
                     }
                 }
@@ -354,7 +475,59 @@ impl SweepPlan {
         }
         anyhow::ensure!(!plan.designs.is_empty(), "designs must not be empty");
         anyhow::ensure!(!plan.objectives.is_empty(), "objectives must not be empty");
+        // a key that is both a scalar override and a grid dimension used
+        // to be silently last-writer-wins at the override seam — make the
+        // ambiguity a parse error naming both sites
+        for axis in &plan.config_axes {
+            anyhow::ensure!(
+                !plan.overrides.iter().any(|(k, _)| *k == axis.key),
+                "config key '{0}' appears under both [set] ('[set] {0} = <value>', a \
+                 scalar override) and [axis] ('[axis] {0} = [..]', a grid dimension) — \
+                 drop one of the two",
+                axis.key
+            );
+        }
         Ok(plan)
+    }
+
+    /// Human-readable axis summary, derived from the plan itself (the
+    /// `pcstall sweep list` renderer — presets can never drift from
+    /// their descriptions because there is no hand-written description).
+    pub fn describe(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        out.push(match &self.epoch_ns[..] {
+            [] => format!("epoch_ns: paper axis {EPOCH_LENS_NS:?}"),
+            v => format!("epoch_ns: {v:?}"),
+        });
+        out.push(match &self.cus_per_domain[..] {
+            [] => "cus_per_domain: 1, 2, 4, ... up to the GPU's n_cu".to_string(),
+            v => format!("cus_per_domain: {v:?}"),
+        });
+        out.push(match &self.workloads {
+            WorkloadAxis::Scale => "workloads: the scale's sweep set".to_string(),
+            WorkloadAxis::ScalePlus(extra) => {
+                format!("workloads: the scale's sweep set + {extra:?}")
+            }
+            WorkloadAxis::Explicit(w) => format!("workloads: {w:?}"),
+        });
+        if !self.seeds.is_empty() {
+            out.push(format!("seed population: {:?}", self.seeds));
+        }
+        for axis in &self.config_axes {
+            out.push(format!("axis {}: [{}]", axis.key, axis.canon.join(", ")));
+        }
+        let names = |ps: &[Policy]| ps.iter().map(|p| p.name()).collect::<Vec<_>>().join(", ");
+        out.push(format!("designs: {}", names(&self.designs)));
+        out.push(format!(
+            "objectives: {}",
+            self.objectives.iter().map(|o| o.name()).collect::<Vec<_>>().join(", ")
+        ));
+        out.push(format!("baseline: {}", self.baseline.name()));
+        out.push(match self.epochs {
+            Some(n) => format!("epochs: {n} (fixed)"),
+            None => "epochs: run to completion".to_string(),
+        });
+        out
     }
 
     /// The workload spec list this plan runs under `opts` (the CLI
@@ -443,6 +616,15 @@ impl SweepPlan {
         } else {
             self.cus_per_domain.clone()
         };
+        // the default granularity axis is derived from one GPU shape; a
+        // config axis varying that shape would desynchronize the two
+        if self.cus_per_domain.is_empty() {
+            anyhow::ensure!(
+                self.config_axes.iter().all(|a| a.key != "gpu.n_cu"),
+                "plan [axis] gpu.n_cu: give an explicit cus_per_domain axis (the default \
+                 granularity axis would be derived from a single GPU shape)"
+            );
+        }
         let workloads = self.seeded_workload_specs(opts)?;
         anyhow::ensure!(!workloads.is_empty(), "plan has no workloads to run");
         // No seed axis: one degenerate coordinate so the nest below
@@ -452,62 +634,81 @@ impl SweepPlan {
         } else {
             self.seeds.iter().map(|s| Some(*s)).collect()
         };
+        // Config-axis value combinations, first axis outermost.  With no
+        // `[axis]` table this is one empty combination and the grid (and
+        // its CSV) is byte-identical to the closed-axis-set era.
+        let combos = index_cross(
+            &self.config_axes.iter().map(|a| a.values.len()).collect::<Vec<_>>(),
+        );
 
         let mut resolved_memo: HashMap<String, Arc<ResolvedWorkload>> = HashMap::new();
         let mut points = Vec::new();
-        for &epoch_ns in &epoch_axis {
-            for &gran in &gran_axis {
-                for &objective in &self.objectives {
-                    for &design in &self.designs {
-                        for wl in &workloads {
-                            for &seed in &seed_axis {
-                                // a seed coordinate instantiates the bare
-                                // `synth` template into a concrete source
-                                let spec = match seed {
-                                    Some(s) => format!("synth:{s}"),
-                                    None => wl.clone(),
-                                };
-                                let resolved = match resolved_memo.get(&spec) {
-                                    Some(r) => r.clone(),
-                                    None => {
-                                        let r =
-                                            Arc::new(WorkloadSource::parse(&spec)?.resolve()?);
-                                        resolved_memo.insert(spec.clone(), r.clone());
-                                        r
-                                    }
-                                };
-                                let mut cfg = proto_cfg.clone();
-                                cfg.dvfs.epoch_ns = epoch_ns;
-                                cfg.dvfs.cus_per_domain = gran;
-                                let mode = match self.epochs {
-                                    Some(n) => RunMode::Epochs(n),
-                                    None => completion(epoch_ns),
-                                };
-                                let waves = opts.waves_scale();
-                                let mut baseline_cell = Cell::with_cfg(
-                                    cfg.clone(),
-                                    &spec,
-                                    self.baseline,
-                                    objective,
-                                    mode,
-                                    waves,
-                                );
-                                let design_cell =
-                                    Cell::with_cfg(cfg, &spec, design, objective, mode, waves);
-                                let shard_key = cell_key(opts, &mut baseline_cell, &resolved);
-                                points.push(SweepPoint {
-                                    row: points.len(),
-                                    epoch_ns,
-                                    cus_per_domain: gran,
-                                    workload: spec,
-                                    seed,
-                                    design,
-                                    objective,
-                                    shard_key,
-                                    baseline_cell,
-                                    design_cell,
-                                    resolved,
-                                });
+        for combo in &combos {
+            let mut combo_cfg = proto_cfg.clone();
+            let mut config_vals: Vec<String> = Vec::with_capacity(combo.len());
+            for (axis, &vi) in self.config_axes.iter().zip(combo) {
+                combo_cfg
+                    .set_key(&axis.key, &axis.values[vi])
+                    .map_err(|e| anyhow::anyhow!("plan [axis] {}: {e}", axis.key))?;
+                config_vals.push(axis.canon[vi].clone());
+            }
+            for &epoch_ns in &epoch_axis {
+                for &gran in &gran_axis {
+                    for &objective in &self.objectives {
+                        for &design in &self.designs {
+                            for wl in &workloads {
+                                for &seed in &seed_axis {
+                                    // a seed coordinate instantiates the bare
+                                    // `synth` template into a concrete source
+                                    let spec = match seed {
+                                        Some(s) => format!("synth:{s}"),
+                                        None => wl.clone(),
+                                    };
+                                    let resolved = match resolved_memo.get(&spec) {
+                                        Some(r) => r.clone(),
+                                        None => {
+                                            let r = Arc::new(
+                                                WorkloadSource::parse(&spec)?.resolve()?,
+                                            );
+                                            resolved_memo.insert(spec.clone(), r.clone());
+                                            r
+                                        }
+                                    };
+                                    let mut cfg = combo_cfg.clone();
+                                    cfg.dvfs.epoch_ns = epoch_ns;
+                                    cfg.dvfs.cus_per_domain = gran;
+                                    let mode = match self.epochs {
+                                        Some(n) => RunMode::Epochs(n),
+                                        None => completion(epoch_ns),
+                                    };
+                                    let waves = opts.waves_scale();
+                                    let mut baseline_cell = Cell::with_cfg(
+                                        cfg.clone(),
+                                        &spec,
+                                        self.baseline,
+                                        objective,
+                                        mode,
+                                        waves,
+                                    );
+                                    let design_cell =
+                                        Cell::with_cfg(cfg, &spec, design, objective, mode, waves);
+                                    let shard_key =
+                                        cell_key(opts, &mut baseline_cell, &resolved);
+                                    points.push(SweepPoint {
+                                        row: points.len(),
+                                        epoch_ns,
+                                        cus_per_domain: gran,
+                                        workload: spec,
+                                        seed,
+                                        config: config_vals.clone(),
+                                        design,
+                                        objective,
+                                        shard_key,
+                                        baseline_cell,
+                                        design_cell,
+                                        resolved,
+                                    });
+                                }
                             }
                         }
                     }
@@ -516,9 +717,28 @@ impl SweepPlan {
         }
         Ok(SweepGrid {
             name: self.name.clone(),
+            config_keys: self.config_axes.iter().map(|a| a.key.clone()).collect(),
             points,
         })
     }
+}
+
+/// Cross product of index ranges `0..lens[i]`, first range outermost;
+/// `[[]]` (one empty combination) for no ranges.
+fn index_cross(lens: &[usize]) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new()];
+    for &len in lens {
+        let mut next = Vec::with_capacity(out.len() * len);
+        for prefix in &out {
+            for i in 0..len {
+                let mut combo = prefix.clone();
+                combo.push(i);
+                next.push(combo);
+            }
+        }
+        out = next;
+    }
+    out
 }
 
 /// One fully-resolved grid point: a (baseline, design) cell pair plus
@@ -533,6 +753,9 @@ pub struct SweepPoint {
     pub workload: String,
     /// The seed coordinate, for plans with a `seed = [..]` axis.
     pub seed: Option<u64>,
+    /// Canonical config-axis values, aligned with the grid's
+    /// [`SweepGrid::config_keys`] (empty without an `[axis]` table).
+    pub config: Vec<String>,
     pub design: Policy,
     pub objective: Objective,
     /// The *baseline* cell's fingerprint — the shard-partition domain.
@@ -551,12 +774,15 @@ pub struct SweepPoint {
 #[derive(Debug)]
 pub struct SweepGrid {
     pub name: String,
+    /// Config-axis key paths, in plan order — one CSV column each.
+    pub config_keys: Vec<String>,
     pub points: Vec<SweepPoint>,
 }
 
-/// Column schema of every sweep CSV (part files prepend a `row` column).
-/// `seed` is the population coordinate of a `seed = [..]` plan, `-` for
-/// plans without the axis.
+/// Base column schema of every sweep CSV (part files prepend a `row`
+/// column; config-axis plans splice their key columns in — see
+/// [`sweep_header`]).  `seed` is the population coordinate of a
+/// `seed = [..]` plan, `-` for plans without the axis.
 pub const SWEEP_HEADER: [&str; 11] = [
     "epoch_us",
     "cus_per_domain",
@@ -571,6 +797,23 @@ pub const SWEEP_HEADER: [&str; 11] = [
     "accuracy",
 ];
 
+/// Where config-axis columns are spliced into [`SWEEP_HEADER`]: after
+/// the coordinate columns (`..objective`), before the metric columns
+/// (`improvement_pct..`).
+const CONFIG_COL_AT: usize = 6;
+
+/// The dynamic CSV schema for a grid with `config_keys` config axes —
+/// one column per key, named by the key path.  With no config axes this
+/// is exactly [`SWEEP_HEADER`], so legacy plans emit byte-identical
+/// CSVs.
+pub fn sweep_header(config_keys: &[String]) -> Vec<String> {
+    let mut header: Vec<String> =
+        SWEEP_HEADER[..CONFIG_COL_AT].iter().map(|s| s.to_string()).collect();
+    header.extend(config_keys.iter().cloned());
+    header.extend(SWEEP_HEADER[CONFIG_COL_AT..].iter().map(|s| s.to_string()));
+    header
+}
+
 /// The objective's scalar figure of merit (lower is better): ED^nP for
 /// EDP/ED²P points, plain energy for energy-bound points.
 fn merit(objective: Objective, r: &RunResult) -> f64 {
@@ -583,7 +826,7 @@ fn merit(objective: Objective, r: &RunResult) -> f64 {
 
 fn render_row(p: &SweepPoint, base: &RunResult, r: &RunResult) -> Vec<String> {
     let norm = merit(p.objective, r) / merit(p.objective, base);
-    vec![
+    let mut row = vec![
         format!("{}", p.epoch_ns / 1000.0),
         p.cus_per_domain.to_string(),
         p.workload.clone(),
@@ -593,15 +836,24 @@ fn render_row(p: &SweepPoint, base: &RunResult, r: &RunResult) -> Vec<String> {
         },
         p.design.name(),
         p.objective.name(),
+    ];
+    row.extend(p.config.iter().cloned());
+    row.extend([
         format!("{:.2}", (1.0 - norm) * 100.0),
         format!("{:.4}", norm),
         format!("{:.4e}", r.total_energy_j),
         format!("{:.4}", r.total_time_ns / 1e6),
         format!("{:.3}", r.mean_accuracy),
-    ]
+    ]);
+    row
 }
 
 impl SweepGrid {
+    /// This grid's CSV schema (see [`sweep_header`]).
+    pub fn header(&self) -> Vec<String> {
+        sweep_header(&self.config_keys)
+    }
+
     /// The subset of the grid a shard owns, in row order.
     pub fn shard_points(&self, shard: ShardSpec) -> Vec<&SweepPoint> {
         self.points
@@ -659,9 +911,9 @@ pub fn run_sweep(
     let rows = grid.execute(opts, &points)?;
 
     let (id, table) = if shard.count > 1 {
-        let mut header: Vec<&str> = vec!["row"];
-        header.extend(SWEEP_HEADER);
-        let mut table = CsvTable::new(&header);
+        let mut header: Vec<String> = vec!["row".to_string()];
+        header.extend(grid.header());
+        let mut table = CsvTable::with_header(header);
         for (row, cells) in rows {
             let mut line = vec![row.to_string()];
             line.extend(cells);
@@ -672,7 +924,7 @@ pub fn run_sweep(
             table,
         )
     } else {
-        let mut table = CsvTable::new(&SWEEP_HEADER);
+        let mut table = CsvTable::with_header(grid.header());
         for (_, cells) in rows {
             table.push(cells);
         }
@@ -867,6 +1119,9 @@ baseline = "static:1.3"
 epochs = 24
 [set]
 gpu.n_wf = 16
+[axis]
+"dvfs.transition_ns" = [5, 20.0]
+dvfs.pc_update_alpha = [0.5, 1.0]
 "#,
         )
         .unwrap();
@@ -886,6 +1141,13 @@ gpu.n_wf = 16
         assert_eq!(plan.epochs, Some(24));
         assert_eq!(plan.overrides.len(), 1);
         assert_eq!(plan.overrides[0].0, "gpu.n_wf");
+        // [axis] dimensions, in plan order, values canonicalized (the
+        // int spelling 5 and the float spelling 20.0 both land as f64)
+        assert_eq!(plan.config_axes.len(), 2);
+        assert_eq!(plan.config_axes[0].key, "dvfs.transition_ns");
+        assert_eq!(plan.config_axes[0].canon, vec!["5.0", "20.0"]);
+        assert_eq!(plan.config_axes[1].key, "dvfs.pc_update_alpha");
+        assert_eq!(plan.config_axes[1].canon, vec!["0.5", "1.0"]);
     }
 
     #[test]
@@ -909,9 +1171,37 @@ gpu.n_wf = 16
             ("seed = [-3]\n", "negative seed"),
             ("seed = 7\n", "scalar where seed array expected"),
             ("[set]\nseed = [1, 2]\n", "seed axis below [set]"),
+            ("[axis]\ngpu.bogus = [1, 2]\n", "unknown config key"),
+            ("[axis]\ndvfs.transition_ns = [\"a\"]\n", "type mismatch"),
+            ("[axis]\ngpu.n_wf = [1.5]\n", "fractional int axis value"),
+            ("[axis]\ndvfs.transition_ns = []\n", "empty axis"),
+            ("[axis]\ndvfs.transition_ns = 5\n", "scalar where axis expected"),
+            ("[axis]\ndvfs.transition_ns = [5, 5.0]\n", "duplicate axis value"),
+            (
+                "[axis]\ndvfs.transition_ns = [5]\ndvfs.transition_ns = [9]\n",
+                "axis declared twice",
+            ),
+            ("[axis]\ndvfs.epoch_ns = [1000]\n", "dedicated epoch axis"),
+            ("[axis]\ndvfs.cus_per_domain = [1, 2]\n", "dedicated granularity axis"),
+            ("[axis]\nseed = [1, 2]\n", "plan-level seed axis"),
+            (
+                "[set]\ndvfs.transition_ns = 9\n[axis]\ndvfs.transition_ns = [5]\n",
+                "[set]/[axis] conflict",
+            ),
         ] {
             assert!(SweepPlan::from_toml(bad).is_err(), "accepted ({why}): {bad}");
         }
+    }
+
+    #[test]
+    fn set_axis_conflict_error_names_both_sites() {
+        let err = SweepPlan::from_toml(
+            "[axis]\ndvfs.transition_ns = [5, 20]\n[set]\ndvfs.transition_ns = 9\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("[set]") && err.contains("[axis]"), "{err}");
+        assert!(err.contains("dvfs.transition_ns"), "{err}");
     }
 
     #[test]
@@ -1109,6 +1399,193 @@ gpu.n_wf = 16
             "sweep_x.part0of1.txt",
         ] {
             assert_eq!(parse_part_name(bad), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn config_axis_expands_the_grid_and_patches_cell_configs() {
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        };
+        let plan = SweepPlan::from_toml(
+            "epoch_ns = [1000, 10000]\ncus_per_domain = [1]\nworkloads = [\"comd\"]\n\
+             designs = [\"pcstall\"]\nepochs = 4\n[axis]\ndvfs.transition_ns = [5, 1000]\n",
+        )
+        .unwrap();
+        let grid = plan.compile(&opts).unwrap();
+        assert_eq!(grid.config_keys, vec!["dvfs.transition_ns"]);
+        assert_eq!(grid.points.len(), 4, "2 transitions x 2 epochs");
+        // first axis is outermost; the coordinate reaches the cell config
+        let coords: Vec<(String, f64)> = grid
+            .points
+            .iter()
+            .map(|p| (p.config[0].clone(), p.baseline_cell.cfg.dvfs.transition_ns))
+            .collect();
+        assert_eq!(
+            coords,
+            vec![
+                ("5.0".into(), 5.0),
+                ("5.0".into(), 5.0),
+                ("1000.0".into(), 1000.0),
+                ("1000.0".into(), 1000.0),
+            ]
+        );
+        // one CSV column per axis, spliced before the metric columns
+        let header = grid.header();
+        assert_eq!(header[6], "dvfs.transition_ns");
+        assert_eq!(header[7], "improvement_pct");
+        // distinct axis values give distinct shard fingerprints
+        let mut keys: Vec<String> = grid.points.iter().map(|p| p.shard_key.hash_hex()).collect();
+        let n = keys.len();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), n, "config-axis fingerprints must be distinct");
+    }
+
+    #[test]
+    fn config_axis_value_spelling_does_not_change_cache_identity() {
+        // `5` and `5.0` for an f64 key are one canonical value: the
+        // compiled grids carry identical RunKey fingerprints, so cache
+        // entries and shard assignments survive re-encoding the plan.
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        };
+        let base = "epoch_ns = [1000]\ncus_per_domain = [1]\nworkloads = [\"comd\"]\n\
+                    designs = [\"pcstall\"]\nepochs = 4\n[axis]\n";
+        let a = SweepPlan::from_toml(&format!("{base}dvfs.transition_ns = [5, 20]\n"))
+            .unwrap()
+            .compile(&opts)
+            .unwrap();
+        let b = SweepPlan::from_toml(&format!("{base}dvfs.transition_ns = [5.0, 20.0]\n"))
+            .unwrap()
+            .compile(&opts)
+            .unwrap();
+        assert_eq!(a.points.len(), b.points.len());
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.shard_key.hash_hex(), pb.shard_key.hash_hex());
+            assert_eq!(pa.config, pb.config);
+        }
+    }
+
+    #[test]
+    fn default_granularity_axis_rejects_an_n_cu_config_axis() {
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        };
+        let plan = SweepPlan::from_toml(
+            "epoch_ns = [1000]\nworkloads = [\"comd\"]\ndesigns = [\"pcstall\"]\n\
+             epochs = 4\n[axis]\ngpu.n_cu = [2, 4]\n",
+        )
+        .unwrap();
+        assert!(plan.compile(&opts).is_err(), "defaulted cus_per_domain is ambiguous");
+        // with an explicit granularity axis the same sweep compiles
+        let plan = SweepPlan::from_toml(
+            "epoch_ns = [1000]\ncus_per_domain = [1]\nworkloads = [\"comd\"]\n\
+             designs = [\"pcstall\"]\nepochs = 4\n[axis]\ngpu.n_cu = [2, 4]\n",
+        )
+        .unwrap();
+        let grid = plan.compile(&opts).unwrap();
+        assert_eq!(grid.points.len(), 2);
+        let n_cus: Vec<usize> =
+            grid.points.iter().map(|p| p.baseline_cell.cfg.gpu.n_cu).collect();
+        assert_eq!(n_cus, vec![2, 4]);
+    }
+
+    #[test]
+    fn legacy_plans_keep_the_golden_schema_and_row_order() {
+        // Back-compat golden: a pre-redesign plan (no [axis] table) must
+        // compile to exactly the closed-axis-set schema and grid order,
+        // so its CSVs stay byte-identical across the API redesign.
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        };
+        let plan = SweepPlan::from_toml(
+            "epoch_ns = [1000, 10000]\ncus_per_domain = [1, 2]\n\
+             workloads = [\"comd\", \"synth:5\"]\ndesigns = [\"pcstall\"]\nepochs = 12\n",
+        )
+        .unwrap();
+        let grid = plan.compile(&opts).unwrap();
+        assert!(grid.config_keys.is_empty());
+        assert_eq!(
+            grid.header(),
+            SWEEP_HEADER.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+            "legacy schema drifted"
+        );
+        let coords: Vec<String> = grid
+            .points
+            .iter()
+            .map(|p| format!("{}|{}|{}", p.epoch_ns, p.cus_per_domain, p.workload))
+            .collect();
+        assert_eq!(
+            coords,
+            vec![
+                "1000|1|comd",
+                "1000|1|synth:5",
+                "1000|2|comd",
+                "1000|2|synth:5",
+                "10000|1|comd",
+                "10000|1|synth:5",
+                "10000|2|comd",
+                "10000|2|synth:5",
+            ],
+            "legacy grid order drifted"
+        );
+        assert!(grid.points.iter().all(|p| p.config.is_empty()));
+        // every preset still compiles with an unchanged base schema,
+        // except the one that declares a config axis
+        for name in preset_names() {
+            let preset = SweepPlan::preset(name).unwrap();
+            let grid = preset.compile(&opts).unwrap();
+            if name == "transition_latency" {
+                assert_eq!(grid.config_keys, vec!["dvfs.transition_ns"]);
+            } else {
+                assert!(grid.config_keys.is_empty(), "{name} grew a config axis");
+                assert_eq!(grid.header().len(), SWEEP_HEADER.len(), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn preset_transition_latency_covers_the_regimes() {
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        };
+        let plan = SweepPlan::preset("transition_latency").unwrap();
+        assert_eq!(plan.epochs, Some(24), "fixed-epoch mode for like-for-like rows");
+        let grid = plan.compile(&opts).unwrap();
+        // >= 4 latency regimes (ns -> us) x the full paper epoch axis
+        let lats: std::collections::BTreeSet<String> =
+            grid.points.iter().map(|p| p.config[0].clone()).collect();
+        assert!(lats.len() >= 4, "{lats:?}");
+        let epochs: std::collections::BTreeSet<u64> =
+            grid.points.iter().map(|p| p.epoch_ns as u64).collect();
+        assert!(epochs.len() >= 4, "{epochs:?}");
+        // crisp vs pcstall vs oracle, over catalog + synth sources
+        let designs: std::collections::BTreeSet<String> =
+            grid.points.iter().map(|p| p.design.name()).collect();
+        assert!(designs.len() >= 3, "{designs:?}");
+        assert!(grid.points.iter().any(|p| !p.workload.contains(':')));
+        assert!(grid.points.iter().any(|p| p.workload.starts_with("synth:")));
+        // the latency coordinate reaches the simulated config
+        for p in &grid.points {
+            let applied = p.baseline_cell.cfg.dvfs.transition_ns;
+            assert_eq!(crate::config::registry::canonical_f64(applied), p.config[0]);
+        }
+    }
+
+    #[test]
+    fn describe_is_derived_from_the_plan() {
+        let plan = SweepPlan::preset("transition_latency").unwrap();
+        let desc = plan.describe().join("\n");
+        assert!(desc.contains("axis dvfs.transition_ns: [5.0, 20.0, 100.0, 1000.0]"), "{desc}");
+        assert!(desc.contains("epochs: 24 (fixed)"), "{desc}");
+        for p in preset_names() {
+            assert!(!SweepPlan::preset(p).unwrap().describe().is_empty());
         }
     }
 

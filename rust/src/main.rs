@@ -12,12 +12,13 @@
 //! pcstall experiment ...   (alias of `run`)
 //! pcstall sweep <plan.toml|preset> [run options] [--shard i/N]
 //! pcstall sweep merge <dir>
-//! pcstall sweep plot <merged.csv> [--metric col] [--out dir]
+//! pcstall sweep plot <merged.csv> [--metric col] [--band minmax|iqr] [--out dir]
 //! pcstall sweep list
 //! pcstall trace record|replay|gen|info|ingest ...
 //! pcstall cache stats|clear [--dir d] [--max-age days] [--max-bytes MB]
 //! pcstall list
 //! pcstall config dump [--set k=v ...]
+//! pcstall config keys
 //! pcstall table1
 //! ```
 //!
@@ -78,7 +79,7 @@ USAGE:
   pcstall experiment ...   (alias of `run`)
   pcstall sweep <plan.toml|preset> [run options] [--shard i/N]
   pcstall sweep merge <dir>
-  pcstall sweep plot <merged.csv> [--metric col] [--out dir]
+  pcstall sweep plot <merged.csv> [--metric col] [--band minmax|iqr] [--out dir]
   pcstall sweep list
   pcstall trace record <spec> [--out file] [--waves-scale x] [--binary]
   pcstall trace replay <file> [simulate options]
@@ -89,6 +90,7 @@ USAGE:
   pcstall cache clear [--dir results/cache] [--max-age days] [--max-bytes MB]
   pcstall list
   pcstall config dump [--set k=v ...]
+  pcstall config keys
   pcstall table1
 
 WORKLOAD SPECS (accepted wherever a workload name is):
@@ -122,10 +124,10 @@ SIMULATE / REPLAY OPTIONS:
 SWEEP COMMANDS:
   <plan.toml|preset>    run a declarative sweep plan (grid over epoch
                         length x cus_per_domain x workload source x
-                        synth-seed population x objective x design);
-                        presets: epoch_x_granularity, epoch_sweep,
-                        granularity_sweep, seed_population.  Accepts all
-                        RUN OPTIONS plus:
+                        synth-seed population x objective x design x any
+                        [axis] config key); presets: epoch_x_granularity,
+                        epoch_sweep, granularity_sweep, seed_population,
+                        transition_latency.  Accepts all RUN OPTIONS plus:
     --shard i/N         run only partition i of N (deterministic split by
                         RunKey fingerprint; shards are disjoint and
                         cache-compatible).  Writes
@@ -134,12 +136,21 @@ SWEEP COMMANDS:
                         <out>/sweep_<name>.csv (byte-identical to an
                         unsharded run)
   plot <merged.csv>     emit a self-contained gnuplot script + matplotlib
-                        fallback from a merged sweep CSV: one panel per
-                        (objective, pinned axis), one series per design,
-                        mean +/- min-max band over the seed/workload
+                        fallback from a merged sweep CSV: x = the most-
+                        varying grid axis (config axes win ties), one
+                        panel per (objective, other axes), one series per
+                        design, mean inside a band over the seed/workload
                         population.  --metric picks the column (default
-                        accuracy); --out redirects the scripts
-  list                  show presets and the plan TOML grammar
+                        accuracy); --band picks the envelope (minmax |
+                        iqr, default minmax); --out redirects the scripts
+  list                  show presets (axes derived from the plans
+                        themselves) and the plan TOML grammar
+
+CONFIG COMMANDS:
+  dump                  print the effective TOML config (with --set)
+  keys                  print the typed config-key registry: every key
+                        usable in --set, plan [set] tables, and plan
+                        [axis] grid dimensions (key, type, default, doc)
 
 TRACE COMMANDS:
   record <spec>         capture a workload's executed stream to a file
@@ -369,9 +380,13 @@ fn experiment(args: &[String]) -> Result<()> {
 fn sweep_cmd(args: &[String]) -> Result<()> {
     match args.first().map(|s| s.as_str()) {
         None | Some("list") => {
-            println!("sweep presets:");
+            println!("sweep presets (axes rendered from the plans themselves):");
             for p in sweep::preset_names() {
+                let plan = SweepPlan::preset(p).expect("preset_names lists only presets");
                 println!("  {p}");
+                for line in plan.describe() {
+                    println!("      {line}");
+                }
             }
             println!(
                 "\nplan file grammar (TOML subset; every key optional):\n\
@@ -388,13 +403,18 @@ fn sweep_cmd(args: &[String]) -> Result<()> {
                  epochs = 40                              # fixed epochs (default: completion)\n\
                  [set]                                    # config overrides for every cell\n\
                  gpu.n_wf = 16\n\
+                 [axis]                                   # config-key grid dimensions\n\
+                 \"dvfs.transition_ns\" = [5, 20, 100, 1000]\n\
                  \n\
+                 any `pcstall config keys` entry can be an [axis] dimension (one CSV\n\
+                 column per key); a key under both [set] and [axis] is a parse error.\n\
                  with a seed axis, workloads defaults to the bare \"synth\" template\n\
                  (each grid point runs synth:<seed>); the CSV carries a seed column\n\
                  \n\
                  run:   pcstall sweep <plan> [--quick|--full] [--jobs N] [--shard i/N]\n\
                  merge: pcstall sweep merge <dir>\n\
-                 plot:  pcstall sweep plot <merged.csv> [--metric col] [--out dir]"
+                 plot:  pcstall sweep plot <merged.csv> [--metric col] [--band minmax|iqr]\n\
+                        [--out dir]"
             );
             Ok(())
         }
@@ -403,14 +423,16 @@ fn sweep_cmd(args: &[String]) -> Result<()> {
             let metric = o
                 .take("--metric")
                 .unwrap_or_else(|| plot::DEFAULT_METRIC.into());
+            let band = plot::Band::parse(&o.take("--band").unwrap_or_else(|| "minmax".into()))?;
             let out_dir = o.take("--out").map(PathBuf::from);
             let rest = o.finish()?;
             anyhow::ensure!(
                 rest.len() == 1,
-                "usage: pcstall sweep plot <merged.csv> [--metric col] [--out dir]"
+                "usage: pcstall sweep plot <merged.csv> [--metric col] [--band minmax|iqr] \
+                 [--out dir]"
             );
             let (gp, py) =
-                plot::emit_plot_scripts(Path::new(&rest[0]), &metric, out_dir.as_deref())?;
+                plot::emit_plot_scripts(Path::new(&rest[0]), &metric, band, out_dir.as_deref())?;
             println!("wrote {}", gp.display());
             println!("wrote {}", py.display());
             // the scripts write their PNG into the invoker's cwd, so
@@ -694,17 +716,48 @@ fn list() -> Result<()> {
 }
 
 fn config_cmd(args: &[String]) -> Result<()> {
-    let mut o = Opts::new(args);
-    let sets = o.take_all("--set");
-    let rest = o.finish()?;
-    anyhow::ensure!(
-        rest.first().map(|s| s.as_str()) == Some("dump"),
-        "usage: pcstall config dump [--set k=v ...]"
-    );
-    let mut cfg = SimConfig::default();
-    for s in sets {
-        cfg.apply_override(&s)?;
+    let verb = args.first().map(|s| s.as_str()).unwrap_or("");
+    match verb {
+        "dump" => {
+            let mut o = Opts::new(&args[1..]);
+            let sets = o.take_all("--set");
+            let rest = o.finish()?;
+            anyhow::ensure!(rest.is_empty(), "usage: pcstall config dump [--set k=v ...]");
+            let mut cfg = SimConfig::default();
+            for s in sets {
+                cfg.apply_override(&s)?;
+            }
+            print!("{}", cfg.to_toml());
+            Ok(())
+        }
+        "keys" => {
+            let o = Opts::new(&args[1..]);
+            let rest = o.finish()?;
+            anyhow::ensure!(rest.is_empty(), "usage: pcstall config keys");
+            let schema = pcstall::config::registry::key_schema();
+            println!(
+                "{} config keys (usable in --set k=v, plan [set] tables, and plan \
+                 [axis] grid dimensions):\n",
+                schema.keys().len()
+            );
+            let width = schema
+                .keys()
+                .iter()
+                .map(|d| d.path.len())
+                .max()
+                .unwrap_or(0);
+            for d in schema.keys() {
+                println!(
+                    "  {:<width$}  {:<5}  {:<22}  {}",
+                    d.path,
+                    d.kind.name(),
+                    d.default,
+                    d.doc,
+                    width = width
+                );
+            }
+            Ok(())
+        }
+        _ => anyhow::bail!("usage: pcstall config dump [--set k=v ...] | pcstall config keys"),
     }
-    print!("{}", cfg.to_toml());
-    Ok(())
 }

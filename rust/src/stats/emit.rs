@@ -19,6 +19,15 @@ impl CsvTable {
         }
     }
 
+    /// Table with an owned header (dynamic schemas, e.g. the config-axis
+    /// columns of `pcstall sweep`).
+    pub fn with_header(header: Vec<String>) -> Self {
+        CsvTable {
+            header,
+            rows: Vec::new(),
+        }
+    }
+
     pub fn push(&mut self, row: Vec<String>) {
         assert_eq!(row.len(), self.header.len(), "ragged CSV row");
         self.rows.push(row);

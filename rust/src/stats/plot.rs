@@ -1,7 +1,7 @@
 //! `pcstall sweep plot`: figure-script emission from merged sweep CSVs.
 //!
 //! Takes the merged CSV a sweep plan wrote (`sweep_<name>.csv`, schema
-//! [`crate::harness::sweep::SWEEP_HEADER`]), groups it by the plan's
+//! [`crate::harness::sweep::sweep_header`]), groups it by the plan's
 //! axes, and emits two self-contained figure scripts next to it:
 //!
 //! * `<stem>_<metric>.gnuplot` — the data inlined as gnuplot
@@ -11,23 +11,29 @@
 //!
 //! ## Grouping (axis inference)
 //!
-//! The **x axis** is whichever numeric grid axis actually varies in the
-//! CSV — epoch length when the plan swept epochs, domain granularity
-//! when it swept granularity (ties go to the epoch axis).  One **panel**
-//! is emitted per (objective, value-of-the-other-axis), one **series**
-//! per design, and the remaining population axes (`seed`, `workload`)
-//! are aggregated per x position into mean / min / max — the
-//! seed-population accuracy figure the ROADMAP calls for renders as a
-//! mean line inside a min–max band over the seeds.
+//! The grid axes are discovered from the CSV itself: every column left
+//! of `improvement_pct` that is not a role column (`workload`, `design`,
+//! `objective`, `seed`) is a numeric grid axis — `epoch_us`,
+//! `cus_per_domain`, and one column per plan `[axis]` config dimension.
+//! The **x axis** is the grid axis with the most distinct values; ties
+//! prefer the plan's declared config axes (the knob the plan explicitly
+//! swept), then the paper's canonical epoch axis, then granularity.
+//! One **panel** is emitted per (objective, values-of-the-other-axes),
+//! one **series** per design, and the remaining population axes
+//! (`seed`, `workload`) are aggregated per x position into a mean line
+//! inside a band — min–max by default, inter-quartile with
+//! [`Band::Iqr`] (`--band iqr`, the sane envelope once populations grow
+//! past ~20 seeds).
 //!
 //! ## Determinism
 //!
-//! Script bytes are a pure function of the CSV content: groups are
-//! sorted (never hash-ordered), floats print at fixed precision, x
-//! labels are carried verbatim from the CSV, and no timestamp, path, or
-//! hostname leaks into the output.  Re-plotting the same CSV — in any
-//! row order — is byte-identical, which CI gates on.
+//! Script bytes are a pure function of the CSV content and the band
+//! choice: groups are sorted (never hash-ordered), floats print at
+//! fixed precision, x labels are carried verbatim from the CSV, and no
+//! timestamp, path, or hostname leaks into the output.  Re-plotting the
+//! same CSV — in any row order — is byte-identical, which CI gates on.
 
+use std::cmp::Ordering;
 use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
 
@@ -36,12 +42,45 @@ use crate::stats::emit::{sanitize_ident as ident, CsvTable};
 /// Metric column plotted when `--metric` is not given.
 pub const DEFAULT_METRIC: &str = "accuracy";
 
-/// Grid-axis columns a sweep CSV must carry (the `seed` column is
+/// Role columns every sweep CSV must carry (the `seed` column is
 /// optional so CSVs predating the seed axis still plot).
 const AXIS_COLS: [&str; 5] = ["epoch_us", "cus_per_domain", "workload", "design", "objective"];
 
+/// The first metric column of every sweep CSV — everything left of it
+/// is a grid coordinate (built-in axes, roles, config-axis columns).
+const FIRST_METRIC: &str = "improvement_pct";
+
+/// The population envelope drawn around each series' mean line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Band {
+    /// Full min–max envelope (default).
+    MinMax,
+    /// 25th–75th percentile envelope (`--band iqr`) — outlier-robust
+    /// for populations past ~20 seeds.
+    Iqr,
+}
+
+impl Band {
+    /// Parse the CLI form (`minmax` | `iqr`).
+    pub fn parse(s: &str) -> anyhow::Result<Band> {
+        match s {
+            "minmax" => Ok(Band::MinMax),
+            "iqr" => Ok(Band::Iqr),
+            _ => anyhow::bail!("unknown band '{s}' (expected: minmax | iqr)"),
+        }
+    }
+
+    /// Label used in figure titles.
+    fn label(self) -> &'static str {
+        match self {
+            Band::MinMax => "min-max",
+            Band::Iqr => "iqr",
+        }
+    }
+}
+
 /// One aggregated x position of a series: the population's mean and
-/// min–max envelope at that grid point.
+/// band envelope (min–max or IQR) at that grid point.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BandPoint {
     pub x: f64,
@@ -49,7 +88,9 @@ pub struct BandPoint {
     /// floats could drift bytes between runs).
     pub x_label: String,
     pub mean: f64,
+    /// Lower band edge (population min, or 25th percentile for IQR).
     pub min: f64,
+    /// Upper band edge (population max, or 75th percentile for IQR).
     pub max: f64,
     /// Population size aggregated into this point.
     pub n: usize,
@@ -62,13 +103,12 @@ pub struct Series {
     pub points: Vec<BandPoint>,
 }
 
-/// One subplot: a fixed (objective, other-axis value) slice.
+/// One subplot: a fixed (objective, other-axes values) slice.
 #[derive(Debug, Clone)]
 pub struct Panel {
     pub objective: String,
-    /// Value of the non-x grid axis this panel pins (`cus_per_domain`
-    /// when x is the epoch axis, and vice versa).
-    pub fixed: String,
+    /// Values of [`PlotSpec::panel_cols`], aligned by index.
+    pub fixed: Vec<String>,
     pub series: Vec<Series>,
 }
 
@@ -78,26 +118,66 @@ pub struct PlotSpec {
     /// Sanitized CSV stem — becomes the script/png base name.
     pub name: String,
     pub metric: String,
-    /// `epoch_us` or `cus_per_domain` (inferred).
+    /// The inferred x grid axis (`epoch_us`, `cus_per_domain`, or a
+    /// config-axis column like `dvfs.transition_ns`).
     pub x_col: String,
-    /// The pinned per-panel axis (the other one of the pair).
-    pub panel_col: String,
+    /// The non-x grid axes pinned per panel, in column order.
+    pub panel_cols: Vec<String>,
     /// Population column the band aggregates over (`seed`, `workload`),
     /// empty when every group is a single run (degenerate band).
     pub band_over: Option<String>,
+    pub band: Band,
     /// Largest population aggregated into any one point.
     pub population: usize,
     pub panels: Vec<Panel>,
 }
 
+impl PlotSpec {
+    /// Script/PNG base name: `<csv-stem>_<metric>`, with an `_iqr`
+    /// suffix for the IQR band so the two variants never clobber.
+    pub fn base_name(&self) -> String {
+        let mut base = format!("{}_{}", self.name, ident(&self.metric));
+        if self.band == Band::Iqr {
+            base.push_str("_iqr");
+        }
+        base
+    }
+}
 
 /// Fixed-precision float for script bytes (deterministic, locale-free).
 fn num(v: f64) -> String {
     format!("{v:.6}")
 }
 
+/// Deterministic linear-interpolation quantile of an ascending-sorted,
+/// finite, non-empty slice.
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    let last = sorted.len() - 1;
+    let pos = q * last as f64;
+    let i = pos.floor() as usize;
+    let frac = pos - i as f64;
+    if i < last {
+        sorted[i] * (1.0 - frac) + sorted[i + 1] * frac
+    } else {
+        sorted[last]
+    }
+}
+
+/// Numeric-aware ordering for axis values carried as CSV text.
+fn numeric_cmp(a: &str, b: &str) -> Ordering {
+    match (a.parse::<f64>(), b.parse::<f64>()) {
+        (Ok(x), Ok(y)) => x.partial_cmp(&y).unwrap_or(Ordering::Equal),
+        _ => a.cmp(b),
+    }
+}
+
 /// Build the aggregated figure from a merged sweep CSV.
-pub fn plot_spec(table: &CsvTable, name: &str, metric: &str) -> anyhow::Result<PlotSpec> {
+pub fn plot_spec(
+    table: &CsvTable,
+    name: &str,
+    metric: &str,
+    band: Band,
+) -> anyhow::Result<PlotSpec> {
     let col = |n: &str| table.col(n);
     for c in AXIS_COLS {
         anyhow::ensure!(
@@ -106,34 +186,45 @@ pub fn plot_spec(table: &CsvTable, name: &str, metric: &str) -> anyhow::Result<P
             table.header.join(",")
         );
     }
-    anyhow::ensure!(!table.rows.is_empty(), "sweep CSV has no data rows");
     anyhow::ensure!(
-        !AXIS_COLS.contains(&metric) && metric != "seed",
-        "'{metric}' is a grid axis, not a plottable metric"
+        col("row").is_none(),
+        "this is a sweep *part* file — combine the part set with `pcstall sweep merge` first"
     );
-    let metric_idx = col(metric).ok_or_else(|| {
-        // name the columns that would have worked
-        let numeric: Vec<&str> = table
-            .header
-            .iter()
-            .enumerate()
-            .filter(|(i, h)| {
-                !AXIS_COLS.contains(&h.as_str())
-                    && h.as_str() != "seed"
-                    && table.rows.iter().all(|r| r[*i].parse::<f64>().is_ok())
-            })
-            .map(|(_, h)| h.as_str())
-            .collect();
+    anyhow::ensure!(!table.rows.is_empty(), "sweep CSV has no data rows");
+    let metric_start = col(FIRST_METRIC).ok_or_else(|| {
         anyhow::anyhow!(
-            "no '{metric}' column in the CSV; plottable metrics: {}",
-            numeric.join(", ")
+            "not a sweep CSV: missing '{FIRST_METRIC}' column (header: {})",
+            table.header.join(",")
         )
     })?;
-
-    let (epoch_idx, gran_idx) = (col("epoch_us").unwrap(), col("cus_per_domain").unwrap());
-    let (wl_idx, design_idx) = (col("workload").unwrap(), col("design").unwrap());
-    let obj_idx = col("objective").unwrap();
-    let seed_idx = col("seed");
+    // grid axes: every coordinate column that is not a role column —
+    // epoch_us, cus_per_domain, plus one column per plan config axis
+    let is_role = |h: &str| matches!(h, "workload" | "design" | "objective" | "seed");
+    let grid_axes: Vec<(String, usize)> = table.header[..metric_start]
+        .iter()
+        .enumerate()
+        .filter(|(_, h)| !is_role(h))
+        .map(|(i, h)| (h.clone(), i))
+        .collect();
+    let metric_idx = match col(metric) {
+        Some(i) if i >= metric_start => i,
+        Some(_) => anyhow::bail!("'{metric}' is a grid axis, not a plottable metric"),
+        None => {
+            // name the columns that would have worked
+            let numeric: Vec<&str> = table
+                .header
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i >= metric_start)
+                .filter(|(i, _)| table.rows.iter().all(|r| r[*i].parse::<f64>().is_ok()))
+                .map(|(_, h)| h.as_str())
+                .collect();
+            anyhow::bail!(
+                "no '{metric}' column in the CSV; plottable metrics: {}",
+                numeric.join(", ")
+            );
+        }
+    };
 
     let distinct = |idx: usize| {
         let mut vals: Vec<&str> = table.rows.iter().map(|r| r[idx].as_str()).collect();
@@ -141,20 +232,44 @@ pub fn plot_spec(table: &CsvTable, name: &str, metric: &str) -> anyhow::Result<P
         vals.dedup();
         vals.len()
     };
-    // x = the grid axis that actually varies; ties go to the epoch axis
-    // (the paper's canonical x).
-    let (x_idx, panel_idx, x_col, panel_col) = if distinct(epoch_idx) >= distinct(gran_idx) {
-        (epoch_idx, gran_idx, "epoch_us", "cus_per_domain")
-    } else {
-        (gran_idx, epoch_idx, "cus_per_domain", "epoch_us")
-    };
+    // x = the grid axis that varies the most; ties prefer the plan's
+    // declared config axes (in column order), then the paper's
+    // canonical epoch axis, then granularity.
+    let mut candidates: Vec<(String, usize)> = grid_axes
+        .iter()
+        .filter(|(h, _)| h != "epoch_us" && h != "cus_per_domain")
+        .cloned()
+        .collect();
+    candidates.push(("epoch_us".into(), col("epoch_us").expect("checked above")));
+    candidates.push((
+        "cus_per_domain".into(),
+        col("cus_per_domain").expect("checked above"),
+    ));
+    let max_distinct = candidates
+        .iter()
+        .map(|(_, i)| distinct(*i))
+        .max()
+        .expect("candidates non-empty");
+    let (x_col, x_idx) = candidates
+        .iter()
+        .find(|(_, i)| distinct(*i) == max_distinct)
+        .expect("max came from the list")
+        .clone();
+    let panel_axes: Vec<(String, usize)> =
+        grid_axes.iter().filter(|(h, _)| *h != x_col).cloned().collect();
 
-    // (objective, panel value) -> design -> x label -> metric values.
-    // String-keyed BTreeMaps give a deterministic build order; the real
-    // (numeric-aware) ordering is applied on the sorted Vecs below.
+    let (wl_idx, design_idx) = (col("workload").unwrap(), col("design").unwrap());
+    let obj_idx = col("objective").unwrap();
+    let seed_idx = col("seed");
+
+    // (objective, panel-axes values) -> design -> x label -> metric
+    // values.  String-keyed BTreeMaps give a deterministic build order;
+    // the real (numeric-aware) ordering is applied on the sorted Vecs
+    // below.
     type XMap = std::collections::BTreeMap<String, Vec<f64>>;
     type SeriesMap = std::collections::BTreeMap<String, XMap>;
-    let mut groups: std::collections::BTreeMap<(String, String), SeriesMap> =
+    type PanelKey = (String, Vec<String>);
+    let mut groups: std::collections::BTreeMap<PanelKey, SeriesMap> =
         std::collections::BTreeMap::new();
     let mut band_cols: Vec<&str> = Vec::new();
     let mut seen_pop: Vec<(String, String)> = Vec::new(); // (seed, workload) pairs
@@ -177,8 +292,9 @@ pub fn plot_spec(table: &CsvTable, name: &str, metric: &str) -> anyhow::Result<P
             seed_idx.map(|i| row[i].clone()).unwrap_or_default(),
             row[wl_idx].clone(),
         ));
+        let fixed: Vec<String> = panel_axes.iter().map(|(_, i)| row[*i].clone()).collect();
         let vals = groups
-            .entry((row[obj_idx].clone(), row[panel_idx].clone()))
+            .entry((row[obj_idx].clone(), fixed))
             .or_default()
             .entry(row[design_idx].clone())
             .or_default()
@@ -208,21 +324,21 @@ pub fn plot_spec(table: &CsvTable, name: &str, metric: &str) -> anyhow::Result<P
         let mut series: Vec<Series> = Vec::new();
         for (design, xs) in designs {
             let mut points: Vec<BandPoint> = Vec::new();
-            for (x_label, vals) in xs {
+            for (x_label, mut vals) in xs {
                 if vals.is_empty() {
                     continue; // every population member was non-finite
                 }
-                let (mut lo, mut hi, mut sum) = (f64::INFINITY, f64::NEG_INFINITY, 0.0);
-                for &v in &vals {
-                    lo = lo.min(v);
-                    hi = hi.max(v);
-                    sum += v;
-                }
+                vals.sort_by(|a, b| a.partial_cmp(b).expect("finite metric values"));
+                let (lo, hi) = match band {
+                    Band::MinMax => (vals[0], vals[vals.len() - 1]),
+                    Band::Iqr => (quantile(&vals, 0.25), quantile(&vals, 0.75)),
+                };
+                let mean = vals.iter().sum::<f64>() / vals.len() as f64;
                 population = population.max(vals.len());
                 points.push(BandPoint {
                     x: x_label.parse().expect("validated above"),
                     x_label,
-                    mean: sum / vals.len() as f64,
+                    mean,
                     min: lo,
                     max: hi,
                     n: vals.len(),
@@ -243,13 +359,15 @@ pub fn plot_spec(table: &CsvTable, name: &str, metric: &str) -> anyhow::Result<P
     }
     // numeric panel order (BTreeMap gave lexicographic: "16" < "2")
     panels.sort_by(|a, b| {
-        a.objective.cmp(&b.objective).then(
-            a.fixed
-                .parse::<f64>()
-                .unwrap_or(f64::MAX)
-                .partial_cmp(&b.fixed.parse::<f64>().unwrap_or(f64::MAX))
-                .expect("panel keys are finite or MAX"),
-        )
+        a.objective.cmp(&b.objective).then_with(|| {
+            for (x, y) in a.fixed.iter().zip(&b.fixed) {
+                let ord = numeric_cmp(x, y);
+                if ord != Ordering::Equal {
+                    return ord;
+                }
+            }
+            Ordering::Equal
+        })
     });
     anyhow::ensure!(
         !panels.is_empty(),
@@ -258,9 +376,10 @@ pub fn plot_spec(table: &CsvTable, name: &str, metric: &str) -> anyhow::Result<P
     Ok(PlotSpec {
         name: ident(name),
         metric: metric.to_string(),
-        x_col: x_col.into(),
-        panel_col: panel_col.into(),
+        x_col,
+        panel_cols: panel_axes.into_iter().map(|(h, _)| h).collect(),
         band_over: band_cols.first().map(|s| s.to_string()),
+        band,
         population,
         panels,
     })
@@ -272,25 +391,60 @@ fn layout(n: usize) -> (usize, usize) {
     (n.div_ceil(cols), cols)
 }
 
-fn x_axis_label(x_col: &str) -> &'static str {
+fn x_axis_label(x_col: &str) -> String {
     match x_col {
-        "cus_per_domain" => "CUs per V/f domain",
-        _ => "epoch length (us)",
+        "cus_per_domain" => "CUs per V/f domain".into(),
+        "epoch_us" => "epoch length (us)".into(),
+        other => other.to_string(),
+    }
+}
+
+/// Log base for the x axis: the built-in axes keep their canonical
+/// bases; config axes go log-10 when the data spans a decade, linear
+/// otherwise (a pure function of the aggregated points — deterministic).
+fn x_log_base(spec: &PlotSpec) -> Option<u32> {
+    match spec.x_col.as_str() {
+        "epoch_us" => Some(10),
+        "cus_per_domain" => Some(2),
+        _ => {
+            let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+            for panel in &spec.panels {
+                for s in &panel.series {
+                    for pt in &s.points {
+                        lo = lo.min(pt.x);
+                        hi = hi.max(pt.x);
+                    }
+                }
+            }
+            if lo > 0.0 && hi / lo >= 10.0 {
+                Some(10)
+            } else {
+                None
+            }
+        }
     }
 }
 
 fn panel_title(spec: &PlotSpec, p: &Panel) -> String {
-    match spec.panel_col.as_str() {
-        "cus_per_domain" => format!("{}, {} CU/domain", p.objective, p.fixed),
-        _ => format!("{}, epoch {} us", p.objective, p.fixed),
+    let mut parts = vec![p.objective.clone()];
+    for (col, val) in spec.panel_cols.iter().zip(&p.fixed) {
+        parts.push(match col.as_str() {
+            "cus_per_domain" => format!("{val} CU/domain"),
+            "epoch_us" => format!("epoch {val} us"),
+            other => format!("{other}={val}"),
+        });
     }
+    parts.join(", ")
 }
 
 fn figure_title(spec: &PlotSpec) -> String {
     match &spec.band_over {
         Some(col) => format!(
-            "{}: {} (band: min-max over {col}, n={})",
-            spec.name, spec.metric, spec.population
+            "{}: {} (band: {} over {col}, n={})",
+            spec.name,
+            spec.metric,
+            spec.band.label(),
+            spec.population
         ),
         None => format!("{}: {}", spec.name, spec.metric),
     }
@@ -300,7 +454,7 @@ fn figure_title(spec: &PlotSpec) -> String {
 pub fn render_gnuplot(spec: &PlotSpec) -> String {
     let (rows, cols) = layout(spec.panels.len());
     let (w, h) = (520 * cols, 390 * rows);
-    let png = format!("{}_{}.png", spec.name, ident(&spec.metric));
+    let png = format!("{}.png", spec.base_name());
     let mut out = String::new();
     let _ = writeln!(out, "# {} — generated by `pcstall sweep plot`", figure_title(spec));
     let _ = writeln!(out, "# render: gnuplot <this file>   (writes {png} into the cwd)");
@@ -315,10 +469,13 @@ pub fn render_gnuplot(spec: &PlotSpec) -> String {
         "set multiplot layout {rows},{cols} title \"{}\"",
         figure_title(spec)
     );
-    if spec.x_col == "cus_per_domain" {
-        let _ = writeln!(out, "set logscale x 2");
-    } else {
-        let _ = writeln!(out, "set logscale x 10");
+    match x_log_base(spec) {
+        Some(base) => {
+            let _ = writeln!(out, "set logscale x {base}");
+        }
+        None => {
+            let _ = writeln!(out, "unset logscale x");
+        }
     }
     let _ = writeln!(out, "set xlabel \"{}\"", x_axis_label(&spec.x_col));
     let _ = writeln!(out, "set ylabel \"{}\"", spec.metric);
@@ -364,7 +521,7 @@ pub fn render_gnuplot(spec: &PlotSpec) -> String {
 /// Render the matplotlib fallback script.
 pub fn render_matplotlib(spec: &PlotSpec) -> String {
     let (rows, cols) = layout(spec.panels.len());
-    let png = format!("{}_{}.png", spec.name, ident(&spec.metric));
+    let png = format!("{}.png", spec.base_name());
     let mut out = String::new();
     let _ = writeln!(out, "#!/usr/bin/env python3");
     let _ = writeln!(out, "# {} — generated by `pcstall sweep plot`", figure_title(spec));
@@ -394,7 +551,10 @@ pub fn render_matplotlib(spec: &PlotSpec) -> String {
         let _ = writeln!(out, "    ]),");
     }
     let _ = writeln!(out, "]");
-    let log_base = if spec.x_col == "cus_per_domain" { 2 } else { 10 };
+    let xscale = match x_log_base(spec) {
+        Some(base) => format!("ax.set_xscale(\"log\", base={base})"),
+        None => "ax.set_xscale(\"linear\")".to_string(),
+    };
     let _ = writeln!(
         out,
         r#"
@@ -410,7 +570,7 @@ def main():
             xs = [p[0] for p in pts]
             ax.fill_between(xs, [p[2] for p in pts], [p[3] for p in pts], alpha=0.15)
             ax.plot(xs, [p[1] for p in pts], marker="o", label=label)
-        ax.set_xscale("log", base={log_base})
+        {xscale}
         ax.set_title(title)
         ax.set_xlabel("{xlabel}")
         ax.set_ylabel("{metric}")
@@ -428,7 +588,7 @@ if __name__ == "__main__":
     main()"#,
         rows = rows,
         cols = cols,
-        log_base = log_base,
+        xscale = xscale,
         xlabel = x_axis_label(&spec.x_col),
         metric = spec.metric,
         title = figure_title(spec),
@@ -443,6 +603,7 @@ if __name__ == "__main__":
 pub fn emit_plot_scripts(
     csv: &Path,
     metric: &str,
+    band: Band,
     out_dir: Option<&Path>,
 ) -> anyhow::Result<(PathBuf, PathBuf)> {
     let table = CsvTable::read(csv).map_err(anyhow::Error::msg)?;
@@ -450,14 +611,14 @@ pub fn emit_plot_scripts(
         .file_stem()
         .and_then(|s| s.to_str())
         .unwrap_or("sweep");
-    let spec = plot_spec(&table, stem, metric)?;
+    let spec = plot_spec(&table, stem, metric, band)?;
     let dir = match out_dir {
         Some(d) => d.to_path_buf(),
         None => csv.parent().unwrap_or_else(|| Path::new(".")).to_path_buf(),
     };
     std::fs::create_dir_all(&dir)
         .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
-    let base = format!("{}_{}", spec.name, ident(metric));
+    let base = spec.base_name();
     let gp = dir.join(format!("{base}.gnuplot"));
     let py = dir.join(format!("{base}.py"));
     std::fs::write(&gp, render_gnuplot(&spec))
@@ -470,7 +631,7 @@ pub fn emit_plot_scripts(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::harness::sweep::SWEEP_HEADER;
+    use crate::harness::sweep::{sweep_header, SWEEP_HEADER};
 
     /// A seed-population CSV: 2 designs x 2 epochs x 3 seeds, 1 panel.
     fn population_table() -> CsvTable {
@@ -498,17 +659,45 @@ mod tests {
         t
     }
 
+    /// A config-axis CSV (schema from `sweep_header`): 2 transition
+    /// latencies x 2 epochs x 2 workloads, 1 design.
+    fn transition_table() -> CsvTable {
+        let mut t = CsvTable::with_header(sweep_header(&["dvfs.transition_ns".to_string()]));
+        for lat in ["5.0", "1000.0"] {
+            for epoch in ["1", "10"] {
+                for wl in ["comd", "synth:11"] {
+                    let imp = if lat == "5.0" { "20.00" } else { "8.00" };
+                    t.push(vec![
+                        epoch.into(),
+                        "1".into(),
+                        wl.into(),
+                        "-".into(),
+                        "pcstall".into(),
+                        "ed2p".into(),
+                        lat.into(),
+                        imp.into(),
+                        "0.8800".into(),
+                        "1.0000e-3".into(),
+                        "0.0400".into(),
+                        "0.900".into(),
+                    ]);
+                }
+            }
+        }
+        t
+    }
+
     #[test]
     fn aggregates_the_seed_population() {
-        let spec = plot_spec(&population_table(), "sweep_pop", "accuracy").unwrap();
+        let spec = plot_spec(&population_table(), "sweep_pop", "accuracy", Band::MinMax).unwrap();
         assert_eq!(spec.x_col, "epoch_us");
-        assert_eq!(spec.panel_col, "cus_per_domain");
+        assert_eq!(spec.panel_cols, vec!["cus_per_domain"]);
         assert_eq!(spec.band_over.as_deref(), Some("seed"));
         assert_eq!(spec.population, 3);
         assert_eq!(spec.panels.len(), 1);
         let panel = &spec.panels[0];
         assert_eq!(panel.objective, "ed2p");
-        assert_eq!(panel.fixed, "1");
+        assert_eq!(panel.fixed, vec!["1"]);
         // series sorted by design name
         let designs: Vec<&str> = panel.series.iter().map(|s| s.design.as_str()).collect();
         assert_eq!(designs, vec!["crisp", "pcstall"]);
@@ -524,14 +713,89 @@ mod tests {
     }
 
     #[test]
+    fn iqr_band_narrows_the_envelope_deterministically() {
+        // 5 seeds at one grid point: values 0.1, 0.2, 0.3, 0.4, 0.5
+        let mut t = CsvTable::new(&SWEEP_HEADER);
+        for seed in 1..=5u64 {
+            t.push(vec![
+                "1".into(),
+                "1".into(),
+                format!("synth:{seed}"),
+                seed.to_string(),
+                "pcstall".into(),
+                "ed2p".into(),
+                "10.00".into(),
+                "0.9000".into(),
+                "1.0000e-3".into(),
+                "0.0400".into(),
+                format!("0.{seed}"),
+            ]);
+        }
+        let spec = plot_spec(&t, "s", "accuracy", Band::Iqr).unwrap();
+        let p = &spec.panels[0].series[0].points[0];
+        assert!((p.mean - 0.3).abs() < 1e-9);
+        assert!((p.min - 0.2).abs() < 1e-9, "25th pct of 0.1..0.5: {}", p.min);
+        assert!((p.max - 0.4).abs() < 1e-9, "75th pct of 0.1..0.5: {}", p.max);
+        // row order does not change the quantiles or the script bytes
+        let mut rev = t.clone();
+        rev.rows.reverse();
+        let spec2 = plot_spec(&rev, "s", "accuracy", Band::Iqr).unwrap();
+        assert_eq!(render_gnuplot(&spec), render_gnuplot(&spec2));
+        assert_eq!(render_matplotlib(&spec), render_matplotlib(&spec2));
+        // titles and file names carry the band choice
+        assert!(render_gnuplot(&spec).contains("band: iqr over seed, n=5"));
+        assert_eq!(spec.base_name(), "s_accuracy_iqr");
+        // the min-max envelope of the same data is wider
+        let mm = plot_spec(&t, "s", "accuracy", Band::MinMax).unwrap();
+        let q = &mm.panels[0].series[0].points[0];
+        assert!(q.min < p.min && q.max > p.max);
+        assert_eq!(mm.base_name(), "s_accuracy");
+    }
+
+    #[test]
+    fn quantile_interpolates_and_handles_tiny_populations() {
+        assert_eq!(quantile(&[7.0], 0.25), 7.0);
+        assert_eq!(quantile(&[1.0, 2.0], 0.25), 1.25);
+        assert_eq!(quantile(&[1.0, 2.0], 0.75), 1.75);
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((quantile(&xs, 0.25) - 1.75).abs() < 1e-12);
+        assert!((quantile(&xs, 0.75) - 3.25).abs() < 1e-12);
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+    }
+
+    #[test]
+    fn infers_a_config_axis_as_x_and_pins_the_rest_per_panel() {
+        // transition latency ties the epoch axis at 2 distinct values;
+        // the declared config axis wins the tie and becomes x, epochs
+        // become panels, and the workload pair becomes the band
+        let spec =
+            plot_spec(&transition_table(), "sweep_lat", "improvement_pct", Band::MinMax).unwrap();
+        assert_eq!(spec.x_col, "dvfs.transition_ns");
+        assert_eq!(spec.panel_cols, vec!["epoch_us", "cus_per_domain"]);
+        assert_eq!(spec.band_over.as_deref(), Some("workload"));
+        assert_eq!(spec.panels.len(), 2, "one panel per epoch length");
+        assert_eq!(spec.panels[0].fixed, vec!["1", "1"]);
+        assert_eq!(spec.panels[1].fixed, vec!["10", "1"]);
+        // x sorted numerically: 5.0 before 1000.0
+        let pts = &spec.panels[0].series[0].points;
+        assert_eq!(pts[0].x_label, "5.0");
+        assert_eq!(pts[1].x_label, "1000.0");
+        let gp = render_gnuplot(&spec);
+        assert!(gp.contains("set xlabel \"dvfs.transition_ns\""), "{gp}");
+        assert!(gp.contains("set logscale x 10"), "spans a decade: {gp}");
+        assert!(gp.contains("ed2p, epoch 1 us, 1 CU/domain"), "{gp}");
+    }
+
+    #[test]
     fn scripts_are_deterministic_and_row_order_independent() {
         let t = population_table();
-        let spec = plot_spec(&t, "sweep_pop", "accuracy").unwrap();
+        let spec = plot_spec(&t, "sweep_pop", "accuracy", Band::MinMax).unwrap();
         let (gp1, py1) = (render_gnuplot(&spec), render_matplotlib(&spec));
         // same CSV, reversed row order
         let mut rev = t.clone();
         rev.rows.reverse();
-        let spec2 = plot_spec(&rev, "sweep_pop", "accuracy").unwrap();
+        let spec2 = plot_spec(&rev, "sweep_pop", "accuracy", Band::MinMax).unwrap();
         assert_eq!(gp1, render_gnuplot(&spec2));
         assert_eq!(py1, render_matplotlib(&spec2));
         // and a second render of the same spec is byte-identical
@@ -562,9 +826,9 @@ mod tests {
                 "0.900".into(),
             ]);
         }
-        let spec = plot_spec(&t, "sweep_gran", "improvement_pct").unwrap();
+        let spec = plot_spec(&t, "sweep_gran", "improvement_pct", Band::MinMax).unwrap();
         assert_eq!(spec.x_col, "cus_per_domain");
-        assert_eq!(spec.panel_col, "epoch_us");
+        assert_eq!(spec.panel_cols, vec!["epoch_us"]);
         assert_eq!(spec.band_over, None, "single workload, no population");
         let gp = render_gnuplot(&spec);
         assert!(gp.contains("set logscale x 2"));
@@ -593,8 +857,8 @@ mod tests {
                 ]);
             }
         }
-        let spec = plot_spec(&t, "s", "accuracy").unwrap();
-        let fixed: Vec<&str> = spec.panels.iter().map(|p| p.fixed.as_str()).collect();
+        let spec = plot_spec(&t, "s", "accuracy", Band::MinMax).unwrap();
+        let fixed: Vec<&str> = spec.panels.iter().map(|p| p.fixed[0].as_str()).collect();
         assert_eq!(fixed, vec!["1", "2", "16"]);
     }
 
@@ -617,7 +881,7 @@ mod tests {
                 "NaN".into(),
             ]);
         }
-        let spec = plot_spec(&t, "s", "accuracy").unwrap();
+        let spec = plot_spec(&t, "s", "accuracy", Band::MinMax).unwrap();
         let designs: Vec<&str> = spec.panels[0]
             .series
             .iter()
@@ -633,20 +897,39 @@ mod tests {
     #[test]
     fn rejects_non_sweep_csvs_and_unknown_metrics() {
         let bogus = CsvTable::new(&["a", "b"]);
-        assert!(plot_spec(&bogus, "x", "accuracy").is_err());
+        assert!(plot_spec(&bogus, "x", "accuracy", Band::MinMax).is_err());
 
         let empty = CsvTable::new(&SWEEP_HEADER);
-        assert!(plot_spec(&empty, "x", "accuracy").is_err());
+        assert!(plot_spec(&empty, "x", "accuracy", Band::MinMax).is_err());
 
-        let err = plot_spec(&population_table(), "x", "nope")
+        let err = plot_spec(&population_table(), "x", "nope", Band::MinMax)
             .unwrap_err()
             .to_string();
         assert!(err.contains("accuracy"), "should list metrics: {err}");
 
-        let err = plot_spec(&population_table(), "x", "workload")
+        let err = plot_spec(&population_table(), "x", "workload", Band::MinMax)
             .unwrap_err()
             .to_string();
         assert!(err.contains("axis"), "{err}");
+
+        // a config-axis column is a coordinate, not a metric
+        let err = plot_spec(&transition_table(), "x", "dvfs.transition_ns", Band::MinMax)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("axis"), "{err}");
+
+        // a part file must be merged before plotting
+        let mut header = vec!["row".to_string()];
+        header.extend(SWEEP_HEADER.iter().map(|s| s.to_string()));
+        let part = CsvTable::with_header(header);
+        let err = plot_spec(&part, "x", "accuracy", Band::MinMax)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("merge"), "{err}");
+
+        assert!(Band::parse("minmax").is_ok());
+        assert!(Band::parse("iqr").is_ok());
+        assert!(Band::parse("quartile").is_err());
     }
 
     #[test]
@@ -656,14 +939,18 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let csv = dir.join("sweep_pop.csv");
         population_table().write(&csv).unwrap();
-        let (gp, py) = emit_plot_scripts(&csv, DEFAULT_METRIC, None).unwrap();
+        let (gp, py) = emit_plot_scripts(&csv, DEFAULT_METRIC, Band::MinMax, None).unwrap();
         assert_eq!(gp, dir.join("sweep_pop_accuracy.gnuplot"));
         assert_eq!(py, dir.join("sweep_pop_accuracy.py"));
         let first = std::fs::read(&gp).unwrap();
         // re-emitting is byte-identical (the CI determinism gate)
         let sub = dir.join("again");
-        let (gp2, _) = emit_plot_scripts(&csv, DEFAULT_METRIC, Some(&sub)).unwrap();
+        let (gp2, _) = emit_plot_scripts(&csv, DEFAULT_METRIC, Band::MinMax, Some(&sub)).unwrap();
         assert_eq!(std::fs::read(&gp2).unwrap(), first);
+        // the IQR variant lands under its own suffix
+        let (gp3, py3) = emit_plot_scripts(&csv, DEFAULT_METRIC, Band::Iqr, Some(&sub)).unwrap();
+        assert_eq!(gp3, sub.join("sweep_pop_accuracy_iqr.gnuplot"));
+        assert_eq!(py3, sub.join("sweep_pop_accuracy_iqr.py"));
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

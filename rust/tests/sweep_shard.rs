@@ -9,6 +9,7 @@ use std::sync::Arc;
 use pcstall::exec::{Engine, ShardSpec};
 use pcstall::harness::sweep::{merge_dir, run_sweep, SweepPlan};
 use pcstall::harness::{ExpOptions, Scale};
+use pcstall::stats::plot::Band;
 
 /// Tiny but genuinely multi-dimensional: 2 epoch lengths × 2 domain
 /// granularities × 2 workload sources (catalog + synth) × 1 design.
@@ -53,6 +54,15 @@ fn sharded_merge_is_byte_identical_and_warm_shard_executes_nothing() {
     let reference = std::fs::read(ref_dir.join("sweep_tiny.csv")).unwrap();
     let ref_rows = reference.iter().filter(|&&b| b == b'\n').count() - 1;
     assert_eq!(ref_rows, 8, "2 epochs x 2 grans x 2 workloads x 1 design");
+    // golden back-compat: a plan without an [axis] table must keep the
+    // closed-axis-set era's exact CSV schema
+    let header = std::str::from_utf8(&reference).unwrap().lines().next().unwrap();
+    assert_eq!(
+        header,
+        "epoch_us,cus_per_domain,workload,seed,design,objective,\
+         improvement_pct,norm,energy_j,time_ms,accuracy",
+        "legacy sweep CSV schema drifted"
+    );
 
     // 2. three shards into one directory, sharing one result cache
     let shard_dir = fresh_dir("sharded");
@@ -181,9 +191,11 @@ fn seed_axis_shard_union_is_byte_identical_to_unsharded_csv() {
     let plot_a = shard_dir.join("plot_a");
     let plot_b = shard_dir.join("plot_b");
     let (gp_a, py_a) =
-        pcstall::stats::plot::emit_plot_scripts(&written[0], "accuracy", Some(&plot_a)).unwrap();
+        pcstall::stats::plot::emit_plot_scripts(&written[0], "accuracy", Band::MinMax, Some(&plot_a))
+            .unwrap();
     let (gp_b, py_b) =
-        pcstall::stats::plot::emit_plot_scripts(&written[0], "accuracy", Some(&plot_b)).unwrap();
+        pcstall::stats::plot::emit_plot_scripts(&written[0], "accuracy", Band::MinMax, Some(&plot_b))
+            .unwrap();
     assert_eq!(
         std::fs::read(&gp_a).unwrap(),
         std::fs::read(&gp_b).unwrap(),
@@ -198,6 +210,103 @@ fn seed_axis_shard_union_is_byte_identical_to_unsharded_csv() {
     assert!(
         gp.contains("min-max over seed, n=3"),
         "band must aggregate the 3-seed population: {gp}"
+    );
+
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&shard_dir);
+}
+
+/// A config-axis plan: a `dvfs.transition_ns` grid dimension riding the
+/// epoch axis (the acceptance path of the generic-axis redesign).
+const AXIS_PLAN: &str = r#"
+name = "lat"
+epoch_ns = [1000, 10000]
+cus_per_domain = [1]
+workloads = ["comd"]
+designs = ["pcstall"]
+epochs = 6
+[axis]
+"dvfs.transition_ns" = [5, 1000]
+"#;
+
+#[test]
+fn config_axis_shard_union_is_byte_identical_and_plots_the_axis_as_x() {
+    let plan = SweepPlan::from_toml(AXIS_PLAN).unwrap();
+
+    // unsharded reference, no cache
+    let ref_dir = fresh_dir("axis_unsharded");
+    run_sweep(
+        &opts(&ref_dir, Arc::new(Engine::no_cache())),
+        &plan,
+        ShardSpec::whole(),
+    )
+    .unwrap();
+    let reference = std::fs::read_to_string(ref_dir.join("sweep_lat.csv")).unwrap();
+    let header = reference.lines().next().unwrap();
+    // the config axis is a first-class CSV column, named by its key,
+    // spliced between the coordinate and metric columns
+    assert_eq!(
+        header,
+        "epoch_us,cus_per_domain,workload,seed,design,objective,\
+         dvfs.transition_ns,improvement_pct,norm,energy_j,time_ms,accuracy"
+    );
+    let rows: Vec<&str> = reference.lines().skip(1).collect();
+    assert_eq!(rows.len(), 4, "2 transition latencies x 2 epochs");
+    let lat_col = header.split(',').position(|h| h == "dvfs.transition_ns").unwrap();
+    let mut lats: Vec<&str> = rows
+        .iter()
+        .map(|r| r.split(',').nth(lat_col).unwrap())
+        .collect();
+    lats.sort_unstable();
+    lats.dedup();
+    assert_eq!(lats, vec!["1000.0", "5.0"], "canonical axis coordinates");
+
+    // 2-way shard into one directory, shared cache, then merge
+    let shard_dir = fresh_dir("axis_sharded");
+    let cache_dir = shard_dir.join("cache");
+    for index in 0..2usize {
+        run_sweep(
+            &opts(&shard_dir, Arc::new(Engine::with_cache_dir(cache_dir.clone()))),
+            &plan,
+            ShardSpec { index, count: 2 },
+        )
+        .unwrap();
+    }
+    let written = merge_dir(&shard_dir).unwrap();
+    assert_eq!(written, vec![shard_dir.join("sweep_lat.csv")]);
+    let merged = std::fs::read_to_string(&written[0]).unwrap();
+    assert_eq!(
+        merged, reference,
+        "config-axis shard union must be byte-identical to the unsharded CSV"
+    );
+
+    // `sweep plot` infers the config axis as x (it ties the epoch axis
+    // at 2 distinct values; declared axes win ties), deterministically
+    let plot_a = shard_dir.join("plot_a");
+    let plot_b = shard_dir.join("plot_b");
+    let (gp_a, _) = pcstall::stats::plot::emit_plot_scripts(
+        &written[0],
+        "improvement_pct",
+        Band::MinMax,
+        Some(&plot_a),
+    )
+    .unwrap();
+    let (gp_b, _) = pcstall::stats::plot::emit_plot_scripts(
+        &written[0],
+        "improvement_pct",
+        Band::MinMax,
+        Some(&plot_b),
+    )
+    .unwrap();
+    assert_eq!(
+        std::fs::read(&gp_a).unwrap(),
+        std::fs::read(&gp_b).unwrap(),
+        "gnuplot script must be deterministic"
+    );
+    let gp = std::fs::read_to_string(&gp_a).unwrap();
+    assert!(
+        gp.contains("set xlabel \"dvfs.transition_ns\""),
+        "config axis must be the inferred x axis: {gp}"
     );
 
     let _ = std::fs::remove_dir_all(&ref_dir);
