@@ -26,6 +26,7 @@ use crate::dvfs::native::{DvfsStepBackend, NativeBackend, StepInputs, StepOutput
 use crate::dvfs::objective::Objective;
 use crate::dvfs::sensitivity::{prediction_accuracy, SensEstimate};
 use crate::models::{estimate_cu, EstModel};
+use crate::obs::{EpochSample, NoopSink, ObsSink, RunCounters, RunEndSample};
 use crate::power::params::{freq_index, FREQS_GHZ, N_FREQ};
 use crate::predictors::{OracleSampler, PcTables, ReactiveState};
 use crate::sim::gpu::{EpochObservation, Gpu, KernelLaunch};
@@ -138,6 +139,10 @@ pub struct DvfsManager {
     /// Oracle sample of the elapsed epoch (ACCREAC/ACCPC update payload).
     last_sample: Option<crate::predictors::OracleSample>,
     epoch_idx: u64,
+    /// Observability sink, consulted at epoch boundaries only.  The
+    /// default [`NoopSink`] reports `enabled() == false`, so the loop
+    /// pays one virtual call per epoch and builds no samples.
+    obs_sink: Box<dyn ObsSink>,
 }
 
 impl DvfsManager {
@@ -203,6 +208,7 @@ impl DvfsManager {
             last_ob: None,
             last_sample: None,
             epoch_idx: 0,
+            obs_sink: Box::new(NoopSink),
             gpu,
             cfg,
             policy,
@@ -252,6 +258,20 @@ impl DvfsManager {
         } else {
             records.len() as f64 * self.cfg.dvfs.epoch_ns
         };
+
+        // Obs channel 1: run-cumulative counters (memory + PC table)
+        // only make sense as whole-run totals.
+        if self.obs_sink.enabled() {
+            let (pc_hits, pc_misses, pc_evictions) = self.pc.counts();
+            let end = RunEndSample {
+                mem: self.gpu.mem_counters(),
+                pc_hits,
+                pc_misses,
+                pc_evictions,
+                n_domains: self.gpu.n_domains(),
+            };
+            self.obs_sink.on_run_end(&end);
+        }
         RunResult {
             workload: workload_name.to_string(),
             policy: self.policy.name(),
@@ -326,6 +346,8 @@ impl DvfsManager {
         }
 
         // energy cost of the transitions we are about to make
+        let obs_on = self.obs_sink.enabled();
+        let mut switched_domains: Vec<usize> = Vec::new();
         let mut transition_energy = 0f64;
         for d in 0..n_dom {
             let from = self.gpu.domain_frequency(d);
@@ -333,12 +355,32 @@ impl DvfsManager {
             if (from - to).abs() > 1e-9 {
                 transition_energy += self.cfg.power.transition_energy_j(from, to)
                     * self.gpu.domain_cus(d).len() as f64;
+                if obs_on {
+                    switched_domains.push(d);
+                }
             }
             self.gpu.set_domain_frequency(d, to);
         }
 
         // ---- 3. run the epoch --------------------------------------------
         let ob = self.gpu.run_epoch();
+
+        // ---- obs channel 1: epoch-boundary counter sample ----------------
+        if obs_on {
+            let mut s = EpochSample {
+                switched_domains,
+                ..EpochSample::default()
+            };
+            for c in &ob.cu {
+                s.instr += c.instr;
+                s.cycles += c.cycles;
+                s.issued_cycles += c.issued_cycles;
+                s.stall_waitcnt_ps += c.stall_all_ps;
+                s.stall_mem_outstanding_ps += c.mem_outstanding_ps;
+                s.stall_issue_empty_ps += c.issue_empty_ps;
+            }
+            self.obs_sink.on_epoch(&s);
+        }
 
         // ---- accuracy scoring (prediction made for THIS epoch) ----------
         let actual_dom = self.gpu.domain_epoch_instr();
@@ -538,6 +580,16 @@ impl DvfsManager {
     pub fn pc_hit_rate(&self) -> f64 {
         self.pc.hit_rate()
     }
+
+    /// Install an observability sink (default: the no-op sink).
+    pub fn set_obs_sink(&mut self, sink: Box<dyn ObsSink>) {
+        self.obs_sink = sink;
+    }
+
+    /// Counter totals accumulated by the installed sink, if any.
+    pub fn obs_counters(&self) -> Option<&RunCounters> {
+        self.obs_sink.counters()
+    }
 }
 
 /// Extract one domain's N_FREQ-row from a flattened grid.
@@ -645,6 +697,39 @@ mod tests {
         let mut m = DvfsManager::new(small_cfg(), &wl, Policy::PcStall, Objective::Ed2p);
         m.run(RunMode::Epochs(20), "comd");
         assert!(m.pc_hit_rate() > 0.3, "hit rate {}", m.pc_hit_rate());
+    }
+
+    #[test]
+    fn counter_sink_observes_without_perturbing() {
+        let wl = workloads::build("comd", 0.25);
+        let run = |with_sink: bool| {
+            let mut m = DvfsManager::new(small_cfg(), &wl, Policy::PcStall, Objective::Ed2p);
+            if with_sink {
+                m.set_obs_sink(Box::new(crate::obs::CounterSink::new()));
+            }
+            let r = m.run(RunMode::Epochs(8), "comd");
+            let c = m.obs_counters().cloned();
+            (r, c)
+        };
+        let (r_off, c_off) = run(false);
+        let (r_on, c_on) = run(true);
+        assert!(c_off.is_none(), "noop sink must expose no counters");
+        let c = c_on.expect("counter sink must expose totals");
+        // bit-identical results: the sink only reads, never steers
+        assert_eq!(r_off.total_energy_j.to_bits(), r_on.total_energy_j.to_bits());
+        assert_eq!(r_off.total_instr.to_bits(), r_on.total_instr.to_bits());
+        assert_eq!(r_off.total_time_ns.to_bits(), r_on.total_time_ns.to_bits());
+        for (a, b) in r_off.records.iter().zip(&r_on.records) {
+            assert_eq!(a.freq_idx, b.freq_idx);
+        }
+        // and the totals are live: epochs, work, stalls, memory, PC table
+        assert_eq!(c.epochs, 8);
+        assert!((c.instr as f64 - r_on.total_instr).abs() < 1e-6);
+        assert!(c.stall_total_ps() > 0, "no stall breakdown recorded");
+        assert!(c.l2_accesses > 0);
+        assert!(c.l2_queue_depth_hist.iter().sum::<u64>() > 0);
+        assert!(c.pc_hits + c.pc_misses > 0, "no PC-table traffic");
+        assert_eq!(c.transitions_per_domain.len(), r_on.records[0].freq_idx.len());
     }
 
     #[test]

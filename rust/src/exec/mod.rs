@@ -26,7 +26,10 @@ pub mod shard;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
+use crate::obs::ObsRecorder;
 use crate::stats::RunResult;
 use cache::{CacheStats, ResultCache};
 use key::RunKey;
@@ -42,6 +45,10 @@ pub struct Engine {
     executed: AtomicU64,
     /// Batch slots answered by another slot of the same batch.
     deduped: AtomicU64,
+    /// Span recorder (`--obs`): cache read/write + pool spans.
+    obs: Option<Arc<ObsRecorder>>,
+    /// `--progress`: periodic stderr lines while a batch executes.
+    progress: bool,
 }
 
 impl Engine {
@@ -50,7 +57,20 @@ impl Engine {
             cache,
             executed: AtomicU64::new(0),
             deduped: AtomicU64::new(0),
+            obs: None,
+            progress: false,
         }
+    }
+
+    /// Attach a span recorder (before the engine is shared/Arc-wrapped).
+    pub fn set_obs(&mut self, obs: Option<Arc<ObsRecorder>>) {
+        self.obs = obs;
+    }
+
+    /// Enable periodic stderr progress lines during batch execution.
+    /// Stdout and every emitted artifact stay byte-identical.
+    pub fn set_progress(&mut self, on: bool) {
+        self.progress = on;
     }
 
     /// Engine with the on-disk cache rooted at `dir`.
@@ -121,6 +141,7 @@ impl Engine {
         let mut srcs: Vec<Src> = Vec::with_capacity(uniques.len());
         let mut run_uniques: Vec<usize> = Vec::new();
         let mut run_jobs: Vec<F> = Vec::new();
+        let t_read = Instant::now();
         for (u, (key, job)) in uniques.iter_mut().enumerate() {
             match self.cache.lookup(key) {
                 Some(r) => srcs.push(Src::Ready(r)),
@@ -131,13 +152,55 @@ impl Engine {
                 }
             }
         }
+        if let Some(o) = &self.obs {
+            o.add_span("exec", "cache.read", t_read, Instant::now(), 0);
+        }
 
-        // 3. Execute the misses (out of order, collected in order).
-        let ran = pool::run_ordered(run_jobs, workers);
+        // 3. Execute the misses (out of order, collected in order),
+        // optionally narrating progress to stderr (`--progress`).  The
+        // wrapper only counts completions — results and their order are
+        // untouched, so stdout/CSV bytes cannot change.
+        let total_to_run = run_jobs.len();
+        let served = n - total_to_run; // cache hits + in-batch dedups
+        if self.progress && total_to_run == 0 && n > 0 {
+            eprintln!("[progress] 0 to run — all {n} cell(s) served by cache/dedup");
+        }
+        let done = AtomicU64::new(0);
+        let last_line = Mutex::new(Instant::now());
+        let t_run = Instant::now();
+        let progress = self.progress;
+        let wrapped: Vec<_> = run_jobs
+            .into_iter()
+            .map(|f| {
+                let done = &done;
+                let last_line = &last_line;
+                move || {
+                    let r = f();
+                    if progress {
+                        let d = done.fetch_add(1, Ordering::Relaxed) + 1;
+                        let mut last = last_line.lock().unwrap();
+                        if d == total_to_run as u64 || last.elapsed().as_secs() >= 1 {
+                            *last = Instant::now();
+                            let elapsed = t_run.elapsed().as_secs_f64();
+                            let eta = elapsed / d as f64 * (total_to_run as f64 - d as f64);
+                            eprintln!(
+                                "[progress] {d}/{total_to_run} cells, {served} served by cache/dedup, ETA {eta:.0}s"
+                            );
+                        }
+                    }
+                    r
+                }
+            })
+            .collect();
+        let ran = pool::run_ordered_obs(wrapped, workers, self.obs.as_deref());
         self.executed.fetch_add(ran.len() as u64, Ordering::Relaxed);
+        let t_write = Instant::now();
         for (k, result) in ran.iter().enumerate() {
             let (key, _) = &uniques[run_uniques[k]];
             self.cache.store(key, result);
+        }
+        if let Some(o) = &self.obs {
+            o.add_span("exec", "cache.write", t_write, Instant::now(), 0);
         }
 
         // 4. Resolve every slot in submission order, moving each unique
@@ -272,6 +335,27 @@ mod tests {
             assert_eq!(a.total_energy_j, b.total_energy_j);
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn obs_and_progress_do_not_change_results() {
+        let mk_batch = || -> Vec<_> {
+            (0..4)
+                .map(|i| (a_key("comd", i), move || a_result(i as f64)))
+                .collect()
+        };
+        let rec = Arc::new(ObsRecorder::new(PathBuf::from("/nonexistent-unused")));
+        let mut observed = Engine::no_cache();
+        observed.set_obs(Some(rec.clone()));
+        observed.set_progress(true);
+        let out = observed.run_batch(2, mk_batch());
+        let plain = Engine::no_cache().run_batch(2, mk_batch());
+        assert_eq!(out.len(), plain.len());
+        for (a, b) in out.iter().zip(&plain) {
+            assert_eq!(a.total_energy_j, b.total_energy_j);
+        }
+        // 4 jobs x (queue + run) + cache.read + cache.write
+        assert_eq!(rec.span_count(), 10);
     }
 
     #[test]

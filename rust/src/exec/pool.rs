@@ -9,6 +9,9 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::obs::ObsRecorder;
 
 /// Default worker count: the machine's available parallelism.
 pub fn default_jobs() -> usize {
@@ -25,10 +28,34 @@ where
     T: Send,
     F: FnOnce() -> T + Send,
 {
+    run_ordered_obs(jobs, workers, None)
+}
+
+/// [`run_ordered`] with optional span recording (obs channel 2): each
+/// job contributes a `pool.queue` span (batch start → claim) and a
+/// `pool.run` span (claim → done), tagged with the worker lane as the
+/// trace `tid`.  Results are unaffected — spans only observe.
+pub fn run_ordered_obs<T, F>(jobs: Vec<F>, workers: usize, obs: Option<&ObsRecorder>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
     let n = jobs.len();
     let workers = workers.clamp(1, n.max(1));
+    let t_batch = Instant::now();
     if workers <= 1 || n <= 1 {
-        return jobs.into_iter().map(|f| f()).collect();
+        return jobs
+            .into_iter()
+            .map(|f| {
+                let claimed = Instant::now();
+                let out = f();
+                if let Some(o) = obs {
+                    o.add_span("exec", "pool.queue", t_batch, claimed, 0);
+                    o.add_span("exec", "pool.run", claimed, Instant::now(), 0);
+                }
+                out
+            })
+            .collect();
     }
 
     // Each slot holds one pending job; workers claim the next index from
@@ -38,7 +65,7 @@ where
     let (tx, rx) = mpsc::channel::<(usize, T)>();
 
     std::thread::scope(|s| {
-        for _ in 0..workers {
+        for w in 0..workers {
             let tx = tx.clone();
             let slots = &slots;
             let next = &next;
@@ -48,7 +75,12 @@ where
                     break;
                 }
                 let job = slots[i].lock().unwrap().take().expect("job claimed twice");
+                let claimed = Instant::now();
                 let out = job();
+                if let Some(o) = obs {
+                    o.add_span("exec", "pool.queue", t_batch, claimed, w as u64);
+                    o.add_span("exec", "pool.run", claimed, Instant::now(), w as u64);
+                }
                 if tx.send((i, out)).is_err() {
                     break;
                 }
@@ -124,6 +156,21 @@ mod tests {
     #[test]
     fn default_jobs_is_positive() {
         assert!(default_jobs() >= 1);
+    }
+
+    #[test]
+    fn span_recording_does_not_change_results() {
+        let rec = ObsRecorder::new(std::path::PathBuf::from("/nonexistent-unused"));
+        let mk = || (0..16u64).map(|i| move || i * 3).collect::<Vec<_>>();
+        let plain = run_ordered(mk(), 4);
+        let observed = run_ordered_obs(mk(), 4, Some(&rec));
+        assert_eq!(plain, observed);
+        // 16 jobs -> 16 queue spans + 16 run spans in the timeline
+        assert_eq!(rec.span_count(), 32);
+        // serial path records spans too
+        let rec2 = ObsRecorder::new(std::path::PathBuf::from("/nonexistent-unused"));
+        run_ordered_obs(vec![|| 1], 1, Some(&rec2));
+        assert_eq!(rec2.span_count(), 2);
     }
 
     #[test]

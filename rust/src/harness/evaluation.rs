@@ -105,8 +105,17 @@ impl Cell {
         )
     }
 
-    /// Execute the simulation this cell describes.
-    fn execute(self, use_pjrt: bool, resolved: &ResolvedWorkload) -> RunResult {
+    /// Execute the simulation this cell describes.  When an obs
+    /// recorder is passed, a [`CounterSink`](crate::obs::CounterSink)
+    /// observes the run (bit-identical results either way) and the
+    /// counters land in the recorder under the cell's canonical key.
+    fn execute(
+        self,
+        use_pjrt: bool,
+        resolved: &ResolvedWorkload,
+        obs: Option<(&crate::obs::ObsRecorder, &str, &str)>,
+    ) -> RunResult {
+        let t_sim = std::time::Instant::now();
         let (launches, rounds) = resolved.lower(self.waves);
         let mut mgr = if use_pjrt {
             DvfsManager::from_launches_with_backend(
@@ -120,7 +129,17 @@ impl Cell {
         } else {
             DvfsManager::from_launches(self.cfg, launches, rounds, self.policy, self.objective)
         };
-        mgr.run(self.mode, &self.workload)
+        if obs.is_some() {
+            mgr.set_obs_sink(Box::new(crate::obs::CounterSink::new()));
+        }
+        let r = mgr.run(self.mode, &self.workload);
+        if let Some((rec, canonical, hash)) = obs {
+            if let Some(c) = mgr.obs_counters() {
+                rec.record_cell(canonical, hash, &r, c.clone());
+            }
+            rec.add_span("harness", "cell.simulate", t_sim, std::time::Instant::now(), 0);
+        }
+        r
     }
 }
 
@@ -145,7 +164,17 @@ pub fn run_cells(opts: &ExpOptions, cells: Vec<Cell>) -> anyhow::Result<Vec<RunR
         let resolved = match resolved_by_spec.get(&cell.workload) {
             Some(r) => r.clone(),
             None => {
+                let t_resolve = std::time::Instant::now();
                 let r = Arc::new(WorkloadSource::parse(&cell.workload)?.resolve()?);
+                if let Some(o) = &opts.obs {
+                    o.add_span(
+                        "harness",
+                        "cell.resolve",
+                        t_resolve,
+                        std::time::Instant::now(),
+                        0,
+                    );
+                }
                 resolved_by_spec.insert(cell.workload.clone(), r.clone());
                 r
             }
@@ -167,7 +196,15 @@ pub(crate) fn run_cells_resolved(
         .into_iter()
         .map(|(mut cell, resolved)| {
             let key = cell_key(opts, &mut cell, &resolved);
-            (key, move || cell.execute(use_pjrt, &resolved))
+            let obs = opts.obs.clone();
+            let canonical = key.canonical();
+            let hash = key.hash_hex();
+            (key, move || {
+                let obs_ref = obs
+                    .as_deref()
+                    .map(|rec| (rec, canonical.as_str(), hash.as_str()));
+                cell.execute(use_pjrt, &resolved, obs_ref)
+            })
         })
         .collect();
     opts.engine.run_batch(opts.jobs.max(1), batch)

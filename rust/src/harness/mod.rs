@@ -59,6 +59,11 @@ pub struct ExpOptions {
     /// `trace:<path>`, `synth:<seed>`.  (`&'static` because the CLI
     /// leaks its handful of argv strings once per process.)
     pub workloads_override: Vec<&'static str>,
+    /// Observability recorder (`--obs <dir>`): deterministic per-cell
+    /// counters + wall-clock spans.  `None` = off (zero overhead).
+    pub obs: Option<Arc<crate::obs::ObsRecorder>>,
+    /// `--progress`: periodic stderr progress from batch execution.
+    pub progress: bool,
 }
 
 impl Default for ExpOptions {
@@ -71,6 +76,8 @@ impl Default for ExpOptions {
             jobs: 1,
             engine: Arc::new(Engine::no_cache()),
             workloads_override: Vec::new(),
+            obs: None,
+            progress: false,
         }
     }
 }
@@ -157,6 +164,7 @@ impl ExpOptions {
 
     /// Save a table under `results/` and print it.
     pub fn emit(&self, id: &str, title: &str, table: &CsvTable) {
+        let t_emit = std::time::Instant::now();
         let path = self.out_dir.join(format!("{id}.csv"));
         if let Err(e) = table.write(&path) {
             eprintln!("[harness] failed to write {}: {e}", path.display());
@@ -168,6 +176,9 @@ impl ExpOptions {
             &table.header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
             &table.rows,
         );
+        if let Some(o) = &self.obs {
+            o.add_span("harness", "cell.emit", t_emit, std::time::Instant::now(), 0);
+        }
     }
 }
 

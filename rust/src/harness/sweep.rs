@@ -90,7 +90,7 @@ use crate::dvfs::objective::Objective;
 use crate::exec::key::RunKey;
 use crate::exec::ShardSpec;
 use crate::power::params::F_STATIC_IDX;
-use crate::stats::emit::CsvTable;
+use crate::stats::emit::{print_table, CsvTable, Json};
 use crate::stats::RunResult;
 use crate::workloads::{ResolvedWorkload, WorkloadSource};
 
@@ -936,7 +936,48 @@ pub fn run_sweep(
         if shard.count > 1 { "partial grid" } else { "full grid" },
     );
     opts.emit(&id, &title, &table);
+    if shard.count > 1 {
+        // Part meta sidecar: per-shard execution accounting consumed by
+        // the `sweep merge` summary table.  It rides *next to* the part
+        // CSV (never inside it), so the merged CSV stays byte-identical
+        // to an unsharded run; merges of part sets without sidecars
+        // (older runs) still work, with `-` in the accounting columns.
+        let c = opts.engine.cache_stats();
+        let meta = Json::obj(vec![
+            ("schema", Json::Num(1.0)),
+            ("sweep", Json::Str(grid.name.clone())),
+            ("part", Json::Num(shard.index as f64)),
+            ("of", Json::Num(shard.count as f64)),
+            ("rows", Json::Num(table.rows.len() as f64)),
+            ("cache_hits", Json::Num(c.hits as f64)),
+            ("cache_misses", Json::Num(c.misses as f64)),
+            ("executed", Json::Num(opts.engine.executed() as f64)),
+            ("deduped", Json::Num(opts.engine.deduped() as f64)),
+        ]);
+        let meta_path = opts.out_dir.join(format!("{id}.meta.json"));
+        meta.write(&meta_path)
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", meta_path.display()))?;
+        println!("[sweep {}] wrote {}", grid.name, meta_path.display());
+    }
     Ok(opts.out_dir.join(format!("{id}.csv")))
+}
+
+/// A part's cache-hit share, rendered from its `.meta.json` sidecar;
+/// `-` when the sidecar is absent or unreadable.
+fn part_cache_share(part: &Path) -> String {
+    let meta_path = part.with_extension("meta.json");
+    let Ok(text) = std::fs::read_to_string(&meta_path) else {
+        return "-".into();
+    };
+    let Ok(j) = Json::parse(&text) else {
+        return "-".into();
+    };
+    let num = |k: &str| j.get(k).and_then(|v| v.as_f64());
+    match (num("cache_hits"), num("cache_misses")) {
+        (Some(h), Some(m)) if h + m > 0.0 => format!("{:.0}%", h / (h + m) * 100.0),
+        (Some(_), Some(_)) => "0%".into(),
+        _ => "-".into(),
+    }
 }
 
 fn sanitize_name(s: &str) -> String {
@@ -1043,6 +1084,7 @@ pub fn merge_dir(dir: &Path) -> anyhow::Result<Vec<PathBuf>> {
         );
         let mut header: Option<Vec<String>> = None;
         let mut rows: Vec<(usize, Vec<String>)> = Vec::new();
+        let mut summary: Vec<Vec<String>> = Vec::new();
         for i in 0..*count {
             let table = CsvTable::read(&parts[&i]).map_err(anyhow::Error::msg)?;
             anyhow::ensure!(
@@ -1058,13 +1100,37 @@ pub fn merge_dir(dir: &Path) -> anyhow::Result<Vec<PathBuf>> {
                     parts[&i].display()
                 ),
             }
+            let n_rows = table.rows.len();
+            let (mut lo, mut hi) = (usize::MAX, 0usize);
             for row in table.rows {
                 let idx: usize = row[0]
                     .parse()
                     .map_err(|_| anyhow::anyhow!("{}: bad row index '{}'", parts[&i].display(), row[0]))?;
+                lo = lo.min(idx);
+                hi = hi.max(idx);
                 rows.push((idx, row[1..].to_vec()));
             }
+            summary.push(vec![
+                parts[&i]
+                    .file_name()
+                    .and_then(|s| s.to_str())
+                    .unwrap_or("?")
+                    .to_string(),
+                format!("{i}/{count}"),
+                n_rows.to_string(),
+                if n_rows == 0 {
+                    "-".into()
+                } else {
+                    format!("{lo}..{hi}")
+                },
+                part_cache_share(&parts[&i]),
+            ]);
         }
+        print_table(
+            &format!("sweep merge {base}: {count} part(s)"),
+            &["part", "shard", "rows", "row_range", "cache_hit_share"],
+            &summary,
+        );
         rows.sort_by_key(|(idx, _)| *idx);
         for (pos, (idx, _)) in rows.iter().enumerate() {
             anyhow::ensure!(
@@ -1400,6 +1466,25 @@ dvfs.pc_update_alpha = [0.5, 1.0]
         ] {
             assert_eq!(parse_part_name(bad), None, "{bad}");
         }
+    }
+
+    #[test]
+    fn part_cache_share_reads_the_meta_sidecar() {
+        let dir = std::env::temp_dir()
+            .join(format!("pcstall_part_share_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let part = dir.join("sweep_x.part0of2.csv");
+        // absent or malformed sidecars degrade to "-" (older part sets
+        // must keep merging)
+        assert_eq!(part_cache_share(&part), "-");
+        let meta = dir.join("sweep_x.part0of2.meta.json");
+        std::fs::write(&meta, "not json").unwrap();
+        assert_eq!(part_cache_share(&part), "-");
+        std::fs::write(&meta, "{\"cache_hits\": 3, \"cache_misses\": 1}").unwrap();
+        assert_eq!(part_cache_share(&part), "75%");
+        std::fs::write(&meta, "{\"cache_hits\": 0, \"cache_misses\": 0}").unwrap();
+        assert_eq!(part_cache_share(&part), "0%");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -26,6 +26,9 @@
 //! * [`exec`] — the sweep-execution engine: job keys, the
 //!   content-addressed result cache, and the ordered worker pool that
 //!   make experiment grids parallel and incremental.
+//! * [`obs`] — observability: deterministic stall/queue/PC-table
+//!   counters collected through an epoch-boundary `ObsSink`, plus a
+//!   wall-clock span timeline (`--obs <dir>`, `pcstall obs report`).
 //! * [`trace`] — wavefront instruction traces as first-class workloads:
 //!   a versioned text/binary format, simulator capture, accel-sim-style
 //!   ingest, and a seeded trace synthesizer.
@@ -43,6 +46,7 @@ pub mod dvfs;
 pub mod exec;
 pub mod harness;
 pub mod models;
+pub mod obs;
 pub mod power;
 pub mod predictors;
 pub mod runtime;

@@ -16,6 +16,7 @@
 //! pcstall sweep list
 //! pcstall trace record|replay|gen|info|ingest ...
 //! pcstall cache stats|clear [--dir d] [--max-age days] [--max-bytes MB]
+//! pcstall obs report [<dir>]
 //! pcstall list
 //! pcstall config dump [--set k=v ...]
 //! pcstall config keys
@@ -58,6 +59,7 @@ fn run() -> Result<()> {
         "sweep" => sweep_cmd(&args[1..]),
         "trace" => trace_cmd(&args[1..]),
         "cache" => cache_cmd(&args[1..]),
+        "obs" => obs_cmd(&args[1..]),
         "list" => list(),
         "config" => config_cmd(&args[1..]),
         "table1" => run_experiment("table1", &ExpOptions::default()),
@@ -88,6 +90,7 @@ USAGE:
   pcstall trace ingest <accel-sim-file> [--out file] [--binary]
   pcstall cache stats [--dir results/cache]
   pcstall cache clear [--dir results/cache] [--max-age days] [--max-bytes MB]
+  pcstall obs report [<dir>]
   pcstall list
   pcstall config dump [--set k=v ...]
   pcstall config keys
@@ -107,6 +110,14 @@ RUN OPTIONS:
   --pjrt                use the PJRT artifact backend when available
   --seed <s>            master workload seed
   --workload <spec>     replace the experiment's workload set (repeatable)
+  --obs <dir>           record observability artifacts into <dir>:
+                        byte-deterministic per-cell counters
+                        (counters.json / counters.csv — stall breakdown,
+                        queue-depth histograms, PC-table and DVFS traffic)
+                        plus a Chrome-trace span timeline (timeline.ndjson)
+  --progress            periodic stderr progress (cells done/total, cells
+                        served by cache, ETA); stdout and every emitted
+                        artifact stay byte-identical
 
 SIMULATE / REPLAY OPTIONS:
   --workload <spec>     workload spec (required for simulate)
@@ -145,6 +156,12 @@ SWEEP COMMANDS:
                         iqr, default minmax); --out redirects the scripts
   list                  show presets (axes derived from the plans
                         themselves) and the plan TOML grammar
+
+OBS COMMANDS:
+  report [<dir>]        summarize a --obs directory (default results/obs):
+                        counter totals across cells and the top wall-clock
+                        spans from the timeline.  Load timeline.ndjson in
+                        Perfetto / chrome://tracing for the full picture.
 
 CONFIG COMMANDS:
   dump                  print the effective TOML config (with --set)
@@ -353,12 +370,32 @@ fn exp_options_from(o: &mut Opts) -> Result<ExpOptions> {
             .push(&*Box::leak(spec.into_boxed_str()));
     }
     let no_cache = o.take_flag("--no-cache");
-    opts.engine = Arc::new(if no_cache {
+    opts.progress = o.take_flag("--progress");
+    if let Some(dir) = o.take("--obs") {
+        opts.obs = Some(Arc::new(pcstall::obs::ObsRecorder::new(PathBuf::from(dir))));
+    }
+    let mut engine = if no_cache {
         Engine::no_cache()
     } else {
         Engine::with_cache_dir(opts.out_dir.join("cache"))
-    });
+    };
+    engine.set_progress(opts.progress);
+    engine.set_obs(opts.obs.clone());
+    opts.engine = Arc::new(engine);
     Ok(opts)
+}
+
+/// Flush a `--obs` recorder's artifacts to its directory (no-op when
+/// obs is off).  Counter sidecars only cover *executed* cells, so
+/// byte-determinism gates should pair `--obs` with `--no-cache`.
+fn flush_obs(opts: &ExpOptions) -> Result<()> {
+    if let Some(rec) = &opts.obs {
+        let paths = rec.write().map_err(|e| anyhow::anyhow!(e))?;
+        for p in paths {
+            println!("[obs] wrote {}", p.display());
+        }
+    }
+    Ok(())
 }
 
 fn experiment(args: &[String]) -> Result<()> {
@@ -368,6 +405,7 @@ fn experiment(args: &[String]) -> Result<()> {
     let id = rest.first().map(|s| s.as_str()).unwrap_or("all");
     let t0 = std::time::Instant::now();
     run_experiment(id, &opts)?;
+    flush_obs(&opts)?;
     println!("\n{}", opts.engine.summary(opts.jobs));
     println!("[experiment {id} done in {:.1?}]", t0.elapsed());
     Ok(())
@@ -483,6 +521,7 @@ fn sweep_cmd(args: &[String]) -> Result<()> {
             let plan = SweepPlan::load(plan_ref)?;
             let t0 = std::time::Instant::now();
             let path = sweep::run_sweep(&opts, &plan, shard)?;
+            flush_obs(&opts)?;
             println!("\n{}", opts.engine.summary(opts.jobs));
             if shard.count > 1 {
                 println!(
@@ -694,6 +733,23 @@ fn cache_cmd(args: &[String]) -> Result<()> {
             Ok(())
         }
         _ => anyhow::bail!("usage: pcstall cache stats|clear [--dir d] [--max-age days] [--max-bytes MB]"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// `pcstall obs ...`
+// ---------------------------------------------------------------------------
+
+fn obs_cmd(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        Some("report") => {
+            let o = Opts::new(&args[1..]);
+            let rest = o.finish()?;
+            anyhow::ensure!(rest.len() <= 1, "usage: pcstall obs report [<dir>]");
+            let dir = rest.first().map(|s| s.as_str()).unwrap_or("results/obs");
+            pcstall::obs::report(Path::new(dir)).map_err(|e| anyhow::anyhow!(e))
+        }
+        _ => anyhow::bail!("usage: pcstall obs report [<dir>]"),
     }
 }
 

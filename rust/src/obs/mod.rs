@@ -1,0 +1,824 @@
+//! Observability: deterministic simulator counters + wall-clock spans.
+//!
+//! Two channels with deliberately different determinism contracts
+//! (ISSUE 6):
+//!
+//! * **Channel 1 — counters.**  The simulator unconditionally maintains
+//!   cheap `u64` counters (stall breakdown in `sim::cu`, queue-depth
+//!   histograms in `sim::memory`, PC-table traffic in
+//!   `predictors::pc_table`); the DVFS manager samples them through the
+//!   [`ObsSink`] trait at epoch boundaries only.  The default
+//!   [`NoopSink`] keeps that boundary a single virtual call per epoch
+//!   and the hot path branch-free, and because the counters themselves
+//!   never feed back into timing, simulation results are bit-identical
+//!   with the sink on or off.  Counter sidecars (`counters.json` /
+//!   `counters.csv`) contain no timestamps and are keyed/sorted by the
+//!   cell's canonical [`RunKey`](crate::exec::key::RunKey) text, so
+//!   they are byte-deterministic across reruns and `--jobs` values.
+//!
+//! * **Channel 2 — spans.**  Wall-clock span timing in the exec pool
+//!   (queue wait, run, cache read/write) and the harness cell stages
+//!   (resolve, simulate, emit).  Spans are inherently nondeterministic
+//!   and are therefore kept out of the counter sidecars entirely: they
+//!   go to `timeline.ndjson`, a Chrome trace-event-format file (one
+//!   complete `"ph":"X"` event per line) loadable in Perfetto or
+//!   `chrome://tracing`.  Timestamps are microseconds relative to the
+//!   recorder's construction instant — no absolute wall-clock values.
+//!
+//! `pcstall obs report <dir>` summarizes both channels.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::stats::emit::{print_table, CsvTable, Json};
+use crate::stats::RunResult;
+
+/// Queue-depth histogram size shared by the L2-bank and DRAM-channel
+/// histograms: bucket `k` counts accesses that waited about `k` service
+/// slots; the last bucket aggregates everything deeper.
+pub use crate::sim::memory::QUEUE_DEPTH_BUCKETS;
+
+// ---------------------------------------------------------------------------
+// Channel 1: deterministic counters
+// ---------------------------------------------------------------------------
+
+/// Deterministic per-run counter totals (channel 1).  Everything here
+/// is derived from simulated time / event counts only — no wall clock.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunCounters {
+    /// Epochs the manager ran.
+    pub epochs: u64,
+    /// Instructions committed (summed over CUs and epochs).
+    pub instr: u64,
+    /// CU cycles elapsed (summed over CUs and epochs).
+    pub cycles: u64,
+    /// CU cycles that issued an instruction.
+    pub issued_cycles: u64,
+    /// No-issue time blocked on a waitcnt (≥1 memory-blocked WF), ps.
+    pub stall_waitcnt_ps: u64,
+    /// No-issue time with loads in flight but nobody blocked yet, ps.
+    pub stall_mem_outstanding_ps: u64,
+    /// No-issue time with no memory involvement (ALU latency / empty
+    /// issue slots), ps.
+    pub stall_issue_empty_ps: u64,
+    /// L2 accesses (L1-miss traffic).
+    pub l2_accesses: u64,
+    /// L2 tag hits / misses.
+    pub l2_hits: u64,
+    pub l2_misses: u64,
+    /// Accesses that went to DRAM.
+    pub dram_accesses: u64,
+    /// L2-bank queue-depth histogram ([`QUEUE_DEPTH_BUCKETS`] buckets).
+    pub l2_queue_depth_hist: Vec<u64>,
+    /// DRAM-channel queue-depth histogram.
+    pub dram_queue_depth_hist: Vec<u64>,
+    /// PC-table lookup hits / misses, and destructive overwrites of a
+    /// valid entry (the no-blend update path).
+    pub pc_hits: u64,
+    pub pc_misses: u64,
+    pub pc_evictions: u64,
+    /// DVFS frequency transitions actually programmed, per domain.
+    pub transitions_per_domain: Vec<u64>,
+}
+
+impl RunCounters {
+    /// Total no-issue time (the three stall causes partition it).
+    pub fn stall_total_ps(&self) -> u64 {
+        self.stall_waitcnt_ps + self.stall_mem_outstanding_ps + self.stall_issue_empty_ps
+    }
+
+    /// Total DVFS transitions across domains.
+    pub fn transitions_total(&self) -> u64 {
+        self.transitions_per_domain.iter().sum()
+    }
+}
+
+/// Memory-side counter snapshot, produced by
+/// [`Gpu::mem_counters`](crate::sim::gpu::Gpu::mem_counters).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MemCounters {
+    pub l2_accesses: u64,
+    pub l2_hits: u64,
+    pub l2_misses: u64,
+    pub dram_accesses: u64,
+    pub l2_queue_depth_hist: Vec<u64>,
+    pub dram_queue_depth_hist: Vec<u64>,
+}
+
+/// Per-epoch sample the DVFS manager hands to the sink (summed over
+/// this epoch's CUs).
+#[derive(Debug, Clone, Default)]
+pub struct EpochSample {
+    pub instr: u64,
+    pub cycles: u64,
+    pub issued_cycles: u64,
+    pub stall_waitcnt_ps: u64,
+    pub stall_mem_outstanding_ps: u64,
+    pub stall_issue_empty_ps: u64,
+    /// Domains whose frequency actually changed entering this epoch.
+    pub switched_domains: Vec<usize>,
+}
+
+/// End-of-run sample: run-cumulative state that only makes sense as a
+/// whole-run total (cache/PC-table counters survive epoch resets).
+#[derive(Debug, Clone, Default)]
+pub struct RunEndSample {
+    pub mem: MemCounters,
+    pub pc_hits: u64,
+    pub pc_misses: u64,
+    pub pc_evictions: u64,
+    pub n_domains: usize,
+}
+
+/// Epoch-boundary observability sink.  The default impls are all no-ops
+/// and `enabled()` is false, so the manager's hot loop pays one
+/// predictable virtual call per epoch and nothing else.
+pub trait ObsSink: Send {
+    /// Gate: when false the manager skips building samples entirely.
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn on_epoch(&mut self, _s: &EpochSample) {}
+    fn on_run_end(&mut self, _s: &RunEndSample) {}
+    /// Accumulated totals, if this sink keeps any.
+    fn counters(&self) -> Option<&RunCounters> {
+        None
+    }
+}
+
+/// The zero-overhead default sink.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopSink;
+
+impl ObsSink for NoopSink {}
+
+/// Accumulating sink: sums epoch samples into [`RunCounters`].
+#[derive(Debug, Clone, Default)]
+pub struct CounterSink {
+    counters: RunCounters,
+}
+
+impl CounterSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ObsSink for CounterSink {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn on_epoch(&mut self, s: &EpochSample) {
+        let c = &mut self.counters;
+        c.epochs += 1;
+        c.instr += s.instr;
+        c.cycles += s.cycles;
+        c.issued_cycles += s.issued_cycles;
+        c.stall_waitcnt_ps += s.stall_waitcnt_ps;
+        c.stall_mem_outstanding_ps += s.stall_mem_outstanding_ps;
+        c.stall_issue_empty_ps += s.stall_issue_empty_ps;
+        for &d in &s.switched_domains {
+            if c.transitions_per_domain.len() <= d {
+                c.transitions_per_domain.resize(d + 1, 0);
+            }
+            c.transitions_per_domain[d] += 1;
+        }
+    }
+
+    fn on_run_end(&mut self, s: &RunEndSample) {
+        let c = &mut self.counters;
+        c.l2_accesses = s.mem.l2_accesses;
+        c.l2_hits = s.mem.l2_hits;
+        c.l2_misses = s.mem.l2_misses;
+        c.dram_accesses = s.mem.dram_accesses;
+        c.l2_queue_depth_hist = s.mem.l2_queue_depth_hist.clone();
+        c.dram_queue_depth_hist = s.mem.dram_queue_depth_hist.clone();
+        c.pc_hits = s.pc_hits;
+        c.pc_misses = s.pc_misses;
+        c.pc_evictions = s.pc_evictions;
+        if c.transitions_per_domain.len() < s.n_domains {
+            c.transitions_per_domain.resize(s.n_domains, 0);
+        }
+    }
+
+    fn counters(&self) -> Option<&RunCounters> {
+        Some(&self.counters)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recorder: collects both channels for one CLI invocation
+// ---------------------------------------------------------------------------
+
+/// One recorded cell: counters keyed by the canonical RunKey text.
+#[derive(Debug, Clone)]
+struct CellRecord {
+    key_hash: String,
+    workload: String,
+    policy: String,
+    objective: String,
+    counters: RunCounters,
+}
+
+/// One completed span (channel 2).
+#[derive(Debug, Clone)]
+struct SpanEvent {
+    cat: String,
+    name: String,
+    /// Microseconds since recorder construction.
+    ts_us: u64,
+    dur_us: u64,
+    /// Worker/lane id — becomes the trace `tid`.
+    tid: u64,
+}
+
+/// Process-wide recorder behind `--obs <dir>`: cells land in a
+/// `BTreeMap` keyed by canonical RunKey text (so emission order is
+/// content-defined, not schedule-defined), spans in an append-only log.
+#[derive(Debug)]
+pub struct ObsRecorder {
+    dir: PathBuf,
+    t0: Instant,
+    cells: Mutex<BTreeMap<String, CellRecord>>,
+    spans: Mutex<Vec<SpanEvent>>,
+}
+
+impl ObsRecorder {
+    pub fn new(dir: PathBuf) -> Self {
+        ObsRecorder {
+            dir,
+            t0: Instant::now(),
+            cells: Mutex::new(BTreeMap::new()),
+            spans: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Record one executed cell's deterministic counters.
+    pub fn record_cell(&self, canonical: &str, hash: &str, r: &RunResult, counters: RunCounters) {
+        let rec = CellRecord {
+            key_hash: hash.to_string(),
+            workload: r.workload.clone(),
+            policy: r.policy.clone(),
+            objective: r.objective.clone(),
+            counters,
+        };
+        self.cells.lock().unwrap().insert(canonical.to_string(), rec);
+    }
+
+    /// Record one wall-clock span (channel 2).
+    pub fn add_span(&self, cat: &str, name: &str, start: Instant, end: Instant, tid: u64) {
+        let ev = SpanEvent {
+            cat: cat.to_string(),
+            name: name.to_string(),
+            ts_us: start.saturating_duration_since(self.t0).as_micros() as u64,
+            dur_us: end.saturating_duration_since(start).as_micros() as u64,
+            tid,
+        };
+        self.spans.lock().unwrap().push(ev);
+    }
+
+    pub fn cell_count(&self) -> usize {
+        self.cells.lock().unwrap().len()
+    }
+
+    pub fn span_count(&self) -> usize {
+        self.spans.lock().unwrap().len()
+    }
+
+    /// The counter sidecar document (deterministic: sorted by canonical
+    /// key, no timestamps, integer-valued numbers).
+    pub fn counters_json(&self) -> Json {
+        let cells = self.cells.lock().unwrap();
+        let items: Vec<Json> = cells
+            .iter()
+            .map(|(canonical, rec)| {
+                Json::obj(vec![
+                    ("key", Json::Str(canonical.clone())),
+                    ("hash", Json::Str(rec.key_hash.clone())),
+                    ("workload", Json::Str(rec.workload.clone())),
+                    ("policy", Json::Str(rec.policy.clone())),
+                    ("objective", Json::Str(rec.objective.clone())),
+                    ("counters", counters_to_json(&rec.counters)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Num(1.0)),
+            ("cells", Json::Arr(items)),
+        ])
+    }
+
+    fn counters_csv(&self) -> CsvTable {
+        let mut t = CsvTable::new(&[
+            "key_hash",
+            "workload",
+            "policy",
+            "objective",
+            "epochs",
+            "instr",
+            "cycles",
+            "issued_cycles",
+            "stall_waitcnt_ps",
+            "stall_mem_outstanding_ps",
+            "stall_issue_empty_ps",
+            "l2_accesses",
+            "l2_hits",
+            "l2_misses",
+            "dram_accesses",
+            "pc_hits",
+            "pc_misses",
+            "pc_evictions",
+            "transitions_per_domain",
+            "l2_queue_depth_hist",
+            "dram_queue_depth_hist",
+        ]);
+        let cells = self.cells.lock().unwrap();
+        for rec in cells.values() {
+            let c = &rec.counters;
+            t.push(vec![
+                rec.key_hash.clone(),
+                rec.workload.clone(),
+                rec.policy.clone(),
+                rec.objective.clone(),
+                c.epochs.to_string(),
+                c.instr.to_string(),
+                c.cycles.to_string(),
+                c.issued_cycles.to_string(),
+                c.stall_waitcnt_ps.to_string(),
+                c.stall_mem_outstanding_ps.to_string(),
+                c.stall_issue_empty_ps.to_string(),
+                c.l2_accesses.to_string(),
+                c.l2_hits.to_string(),
+                c.l2_misses.to_string(),
+                c.dram_accesses.to_string(),
+                c.pc_hits.to_string(),
+                c.pc_misses.to_string(),
+                c.pc_evictions.to_string(),
+                join_u64(&c.transitions_per_domain),
+                join_u64(&c.l2_queue_depth_hist),
+                join_u64(&c.dram_queue_depth_hist),
+            ]);
+        }
+        t
+    }
+
+    /// Chrome trace-event text: a JSON array with exactly one complete
+    /// event object per line, so it is both NDJSON-ish (line tools work
+    /// after stripping `[`/`]`/trailing commas) and directly loadable
+    /// in Perfetto / `chrome://tracing`.
+    fn timeline_text(&self) -> String {
+        let mut spans = self.spans.lock().unwrap().clone();
+        spans.sort_by(|a, b| {
+            (a.ts_us, a.tid, &a.cat, &a.name).cmp(&(b.ts_us, b.tid, &b.cat, &b.name))
+        });
+        let mut out = String::from("[\n");
+        for (i, s) in spans.iter().enumerate() {
+            let ev = Json::obj(vec![
+                ("name", Json::Str(s.name.clone())),
+                ("cat", Json::Str(s.cat.clone())),
+                ("ph", Json::Str("X".into())),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(s.tid as f64)),
+                ("ts", Json::Num(s.ts_us as f64)),
+                ("dur", Json::Num(s.dur_us as f64)),
+            ]);
+            out.push_str(&ev.render());
+            out.push_str(if i + 1 < spans.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("]\n");
+        out
+    }
+
+    /// Write all artifacts under the recorder's directory; returns the
+    /// paths written.
+    pub fn write(&self) -> Result<Vec<PathBuf>, String> {
+        std::fs::create_dir_all(&self.dir)
+            .map_err(|e| format!("creating {}: {e}", self.dir.display()))?;
+        let mut out = Vec::new();
+        let jp = self.dir.join("counters.json");
+        self.counters_json()
+            .write(&jp)
+            .map_err(|e| format!("writing {}: {e}", jp.display()))?;
+        out.push(jp);
+        let cp = self.dir.join("counters.csv");
+        self.counters_csv()
+            .write(&cp)
+            .map_err(|e| format!("writing {}: {e}", cp.display()))?;
+        out.push(cp);
+        let tp = self.dir.join("timeline.ndjson");
+        std::fs::write(&tp, self.timeline_text())
+            .map_err(|e| format!("writing {}: {e}", tp.display()))?;
+        out.push(tp);
+        Ok(out)
+    }
+}
+
+fn join_u64(xs: &[u64]) -> String {
+    xs.iter()
+        .map(|x| x.to_string())
+        .collect::<Vec<_>>()
+        .join("|")
+}
+
+fn counters_to_json(c: &RunCounters) -> Json {
+    let n = |x: u64| Json::Num(x as f64);
+    let arr = |xs: &[u64]| Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect());
+    Json::obj(vec![
+        ("epochs", n(c.epochs)),
+        ("instr", n(c.instr)),
+        ("cycles", n(c.cycles)),
+        ("issued_cycles", n(c.issued_cycles)),
+        ("stall_waitcnt_ps", n(c.stall_waitcnt_ps)),
+        ("stall_mem_outstanding_ps", n(c.stall_mem_outstanding_ps)),
+        ("stall_issue_empty_ps", n(c.stall_issue_empty_ps)),
+        ("l2_accesses", n(c.l2_accesses)),
+        ("l2_hits", n(c.l2_hits)),
+        ("l2_misses", n(c.l2_misses)),
+        ("dram_accesses", n(c.dram_accesses)),
+        ("l2_queue_depth_hist", arr(&c.l2_queue_depth_hist)),
+        ("dram_queue_depth_hist", arr(&c.dram_queue_depth_hist)),
+        ("pc_hits", n(c.pc_hits)),
+        ("pc_misses", n(c.pc_misses)),
+        ("pc_evictions", n(c.pc_evictions)),
+        ("transitions_per_domain", arr(&c.transitions_per_domain)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// `pcstall obs report`
+// ---------------------------------------------------------------------------
+
+fn get_u64(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64
+}
+
+fn get_hist(j: &Json, key: &str) -> Vec<u64> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().map(|x| x.as_f64().unwrap_or(0.0) as u64).collect())
+        .unwrap_or_default()
+}
+
+fn add_hist(into: &mut Vec<u64>, from: &[u64]) {
+    if into.len() < from.len() {
+        into.resize(from.len(), 0);
+    }
+    for (a, &b) in into.iter_mut().zip(from) {
+        *a += b;
+    }
+}
+
+fn fmt_hist(h: &[u64]) -> String {
+    let nonzero: Vec<String> = h
+        .iter()
+        .enumerate()
+        .filter(|(_, &v)| v > 0)
+        .map(|(i, v)| format!("{i}:{v}"))
+        .collect();
+    if nonzero.is_empty() {
+        "-".into()
+    } else {
+        nonzero.join(" ")
+    }
+}
+
+fn pct(part: u64, total: u64) -> String {
+    if total == 0 {
+        "-".into()
+    } else {
+        format!("{:.1}%", 100.0 * part as f64 / total as f64)
+    }
+}
+
+/// Parse a counter sidecar back into per-cell totals.
+fn read_counters(dir: &Path) -> Result<Vec<(String, RunCounters)>, String> {
+    let path = dir.join("counters.json");
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        format!(
+            "reading {}: {e} (run with `--obs {}` first)",
+            path.display(),
+            dir.display()
+        )
+    })?;
+    let doc = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    let cells = doc
+        .get("cells")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{}: no \"cells\" array", path.display()))?;
+    let mut out = Vec::new();
+    for cell in cells {
+        let label = format!(
+            "{}/{}/{}",
+            cell.get("workload").and_then(Json::as_str).unwrap_or("?"),
+            cell.get("policy").and_then(Json::as_str).unwrap_or("?"),
+            cell.get("objective").and_then(Json::as_str).unwrap_or("?"),
+        );
+        let c = cell
+            .get("counters")
+            .ok_or_else(|| format!("{}: cell without counters", path.display()))?;
+        let rc = RunCounters {
+            epochs: get_u64(c, "epochs"),
+            instr: get_u64(c, "instr"),
+            cycles: get_u64(c, "cycles"),
+            issued_cycles: get_u64(c, "issued_cycles"),
+            stall_waitcnt_ps: get_u64(c, "stall_waitcnt_ps"),
+            stall_mem_outstanding_ps: get_u64(c, "stall_mem_outstanding_ps"),
+            stall_issue_empty_ps: get_u64(c, "stall_issue_empty_ps"),
+            l2_accesses: get_u64(c, "l2_accesses"),
+            l2_hits: get_u64(c, "l2_hits"),
+            l2_misses: get_u64(c, "l2_misses"),
+            dram_accesses: get_u64(c, "dram_accesses"),
+            l2_queue_depth_hist: get_hist(c, "l2_queue_depth_hist"),
+            dram_queue_depth_hist: get_hist(c, "dram_queue_depth_hist"),
+            pc_hits: get_u64(c, "pc_hits"),
+            pc_misses: get_u64(c, "pc_misses"),
+            pc_evictions: get_u64(c, "pc_evictions"),
+            transitions_per_domain: get_hist(c, "transitions_per_domain"),
+        };
+        out.push((label, rc));
+    }
+    Ok(out)
+}
+
+/// Aggregated span stats from `timeline.ndjson` (absent file → None).
+fn read_spans(dir: &Path) -> Option<BTreeMap<(String, String), (u64, u64, u64)>> {
+    let text = std::fs::read_to_string(dir.join("timeline.ndjson")).ok()?;
+    // (cat, name) -> (count, total_us, max_us)
+    let mut agg: BTreeMap<(String, String), (u64, u64, u64)> = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        if line.is_empty() || line == "[" || line == "]" {
+            continue;
+        }
+        let Ok(ev) = Json::parse(line) else { continue };
+        let cat = ev.get("cat").and_then(Json::as_str).unwrap_or("?").to_string();
+        let name = ev.get("name").and_then(Json::as_str).unwrap_or("?").to_string();
+        let dur = get_u64(&ev, "dur");
+        let e = agg.entry((cat, name)).or_insert((0, 0, 0));
+        e.0 += 1;
+        e.1 += dur;
+        e.2 = e.2.max(dur);
+    }
+    Some(agg)
+}
+
+/// `pcstall obs report <dir>`: counter totals + top spans.
+pub fn report(dir: &Path) -> Result<(), String> {
+    let cells = read_counters(dir)?;
+    println!("[obs report] {} — {} cell(s)", dir.display(), cells.len());
+
+    let mut total = RunCounters::default();
+    for (_, c) in &cells {
+        total.epochs += c.epochs;
+        total.instr += c.instr;
+        total.cycles += c.cycles;
+        total.issued_cycles += c.issued_cycles;
+        total.stall_waitcnt_ps += c.stall_waitcnt_ps;
+        total.stall_mem_outstanding_ps += c.stall_mem_outstanding_ps;
+        total.stall_issue_empty_ps += c.stall_issue_empty_ps;
+        total.l2_accesses += c.l2_accesses;
+        total.l2_hits += c.l2_hits;
+        total.l2_misses += c.l2_misses;
+        total.dram_accesses += c.dram_accesses;
+        add_hist(&mut total.l2_queue_depth_hist, &c.l2_queue_depth_hist);
+        add_hist(&mut total.dram_queue_depth_hist, &c.dram_queue_depth_hist);
+        total.pc_hits += c.pc_hits;
+        total.pc_misses += c.pc_misses;
+        total.pc_evictions += c.pc_evictions;
+        add_hist(
+            &mut total.transitions_per_domain,
+            &c.transitions_per_domain,
+        );
+    }
+
+    let stall = total.stall_total_ps();
+    let rows = vec![
+        vec!["epochs".into(), total.epochs.to_string(), String::new()],
+        vec!["instr".into(), total.instr.to_string(), String::new()],
+        vec![
+            "issued_cycles / cycles".into(),
+            format!("{} / {}", total.issued_cycles, total.cycles),
+            pct(total.issued_cycles, total.cycles),
+        ],
+        vec![
+            "stall: waitcnt".into(),
+            format!("{} ps", total.stall_waitcnt_ps),
+            pct(total.stall_waitcnt_ps, stall),
+        ],
+        vec![
+            "stall: mem outstanding".into(),
+            format!("{} ps", total.stall_mem_outstanding_ps),
+            pct(total.stall_mem_outstanding_ps, stall),
+        ],
+        vec![
+            "stall: issue empty".into(),
+            format!("{} ps", total.stall_issue_empty_ps),
+            pct(total.stall_issue_empty_ps, stall),
+        ],
+        vec![
+            "l2 hits / accesses".into(),
+            format!("{} / {}", total.l2_hits, total.l2_accesses),
+            pct(total.l2_hits, total.l2_accesses),
+        ],
+        vec![
+            "dram accesses".into(),
+            total.dram_accesses.to_string(),
+            pct(total.dram_accesses, total.l2_accesses),
+        ],
+        vec![
+            "l2 queue-depth hist".into(),
+            fmt_hist(&total.l2_queue_depth_hist),
+            String::new(),
+        ],
+        vec![
+            "dram queue-depth hist".into(),
+            fmt_hist(&total.dram_queue_depth_hist),
+            String::new(),
+        ],
+        vec![
+            "pc table hits / lookups".into(),
+            format!("{} / {}", total.pc_hits, total.pc_hits + total.pc_misses),
+            pct(total.pc_hits, total.pc_hits + total.pc_misses),
+        ],
+        vec![
+            "pc table evictions".into(),
+            total.pc_evictions.to_string(),
+            String::new(),
+        ],
+        vec![
+            "dvfs transitions/domain".into(),
+            fmt_hist(&total.transitions_per_domain),
+            String::new(),
+        ],
+    ];
+    print_table("counter totals", &["counter", "value", "share"], &rows);
+
+    match read_spans(dir) {
+        Some(agg) if !agg.is_empty() => {
+            let mut spans: Vec<_> = agg.into_iter().collect();
+            spans.sort_by(|a, b| b.1 .1.cmp(&a.1 .1).then_with(|| a.0.cmp(&b.0)));
+            let rows: Vec<Vec<String>> = spans
+                .iter()
+                .take(12)
+                .map(|((cat, name), (count, total_us, max_us))| {
+                    vec![
+                        format!("{cat}/{name}"),
+                        count.to_string(),
+                        format!("{:.3}", *total_us as f64 / 1e3),
+                        format!("{:.3}", *total_us as f64 / 1e3 / (*count).max(1) as f64),
+                        format!("{:.3}", *max_us as f64 / 1e3),
+                    ]
+                })
+                .collect();
+            print_table(
+                "top spans (by total wall-clock)",
+                &["span", "count", "total_ms", "mean_ms", "max_ms"],
+                &rows,
+            );
+        }
+        _ => println!("(no timeline.ndjson — span channel empty)"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_result() -> RunResult {
+        RunResult {
+            workload: "comd".into(),
+            policy: "pcstall".into(),
+            objective: "ed2p".into(),
+            records: vec![],
+            total_energy_j: 1.0,
+            total_time_ns: 1.0,
+            total_instr: 1.0,
+            mean_accuracy: 1.0,
+            pc_hit_rate: 0.0,
+            completed: true,
+        }
+    }
+
+    #[test]
+    fn noop_sink_is_disabled_and_counterless() {
+        let s = NoopSink;
+        assert!(!s.enabled());
+        assert!(s.counters().is_none());
+    }
+
+    #[test]
+    fn counter_sink_accumulates_epochs_and_transitions() {
+        let mut s = CounterSink::new();
+        assert!(s.enabled());
+        s.on_epoch(&EpochSample {
+            instr: 10,
+            cycles: 100,
+            issued_cycles: 40,
+            stall_waitcnt_ps: 7,
+            stall_mem_outstanding_ps: 3,
+            stall_issue_empty_ps: 2,
+            switched_domains: vec![0, 2],
+        });
+        s.on_epoch(&EpochSample {
+            instr: 5,
+            switched_domains: vec![2],
+            ..Default::default()
+        });
+        s.on_run_end(&RunEndSample {
+            mem: MemCounters {
+                l2_accesses: 9,
+                l2_hits: 6,
+                l2_misses: 3,
+                dram_accesses: 3,
+                l2_queue_depth_hist: vec![1, 2],
+                dram_queue_depth_hist: vec![3],
+            },
+            pc_hits: 4,
+            pc_misses: 2,
+            pc_evictions: 1,
+            n_domains: 4,
+        });
+        let c = s.counters().unwrap();
+        assert_eq!(c.epochs, 2);
+        assert_eq!(c.instr, 15);
+        assert_eq!(c.stall_total_ps(), 12);
+        assert_eq!(c.transitions_per_domain, vec![1, 0, 2, 0]);
+        assert_eq!(c.transitions_total(), 3);
+        assert_eq!(c.l2_hits, 6);
+        assert_eq!(c.pc_evictions, 1);
+    }
+
+    #[test]
+    fn recorder_counters_json_is_key_sorted_and_stable() {
+        let rec = ObsRecorder::new(PathBuf::from("/nonexistent-unused"));
+        let c = RunCounters {
+            epochs: 3,
+            ..Default::default()
+        };
+        // inserted out of order; emission must sort by canonical key
+        rec.record_cell("v1|wl=zz|cfg=02", "beef", &run_result(), c.clone());
+        rec.record_cell("v1|wl=aa|cfg=01", "cafe", &run_result(), c);
+        let a = rec.counters_json().render();
+        let b = rec.counters_json().render();
+        assert_eq!(a, b, "re-rendering must be byte-identical");
+        let first = a.find("wl=aa").unwrap();
+        let second = a.find("wl=zz").unwrap();
+        assert!(first < second, "cells must be canonical-key sorted");
+        assert!(!a.contains("\"ts\""), "counter sidecar must carry no timestamps");
+    }
+
+    #[test]
+    fn recorder_overwrite_same_key_is_idempotent() {
+        let rec = ObsRecorder::new(PathBuf::from("/nonexistent-unused"));
+        let c = RunCounters {
+            epochs: 1,
+            ..Default::default()
+        };
+        rec.record_cell("k", "h", &run_result(), c.clone());
+        rec.record_cell("k", "h", &run_result(), c);
+        assert_eq!(rec.cell_count(), 1);
+    }
+
+    #[test]
+    fn timeline_is_chrome_trace_shaped() {
+        let rec = ObsRecorder::new(PathBuf::from("/nonexistent-unused"));
+        let t = rec.t0;
+        rec.add_span(
+            "exec",
+            "pool.run",
+            t + std::time::Duration::from_micros(5),
+            t + std::time::Duration::from_micros(30),
+            1,
+        );
+        rec.add_span("harness", "cell.simulate", t, t + std::time::Duration::from_micros(9), 0);
+        let text = rec.timeline_text();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.first(), Some(&"["));
+        assert_eq!(lines.last(), Some(&"]"));
+        // one complete event per line, parseable after comma-stripping
+        let ev = Json::parse(lines[1].trim_end_matches(',')).unwrap();
+        assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+        // earliest span sorts first regardless of insertion order
+        assert_eq!(ev.get("name").and_then(Json::as_str), Some("cell.simulate"));
+        assert_eq!(ev.get("dur").and_then(Json::as_f64), Some(9.0));
+        // the whole document is also one valid JSON array
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.as_arr().map(<[Json]>::len), Some(2));
+    }
+
+    #[test]
+    fn hist_formatting_skips_zero_buckets() {
+        assert_eq!(fmt_hist(&[0, 3, 0, 1]), "1:3 3:1");
+        assert_eq!(fmt_hist(&[0, 0]), "-");
+        assert_eq!(pct(1, 4), "25.0%");
+        assert_eq!(pct(0, 0), "-");
+    }
+}

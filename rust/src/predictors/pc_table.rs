@@ -30,6 +30,10 @@ struct Table {
     alpha: f32,
     pub hits: u64,
     pub misses: u64,
+    /// Destructive overwrites of a valid entry (the no-blend update
+    /// path) — the obs proxy for table pressure: with `alpha < 1`,
+    /// live entries blend instead, so this only counts replacements.
+    pub evictions: u64,
 }
 
 impl Table {
@@ -42,6 +46,7 @@ impl Table {
             alpha: alpha as f32,
             hits: 0,
             misses: 0,
+            evictions: 0,
         }
     }
 
@@ -62,9 +67,13 @@ impl Table {
             e.sens = alpha * est.sens as f32 + (1.0 - alpha) * e.sens;
             e.i0 = alpha * est.i0 as f32 + (1.0 - alpha) * e.i0;
         } else {
+            let evicted = e.valid;
             e.sens = est.sens as f32;
             e.i0 = est.i0 as f32;
             e.valid = true;
+            if evicted {
+                self.evictions += 1;
+            }
         }
     }
 
@@ -144,6 +153,14 @@ impl PcTables {
 
     pub fn n_tables(&self) -> usize {
         self.tables.len()
+    }
+
+    /// Aggregate (hits, misses, evictions) over all tables — the obs
+    /// channel-1 PC-table counters.
+    pub fn counts(&self) -> (u64, u64, u64) {
+        self.tables.iter().fold((0, 0, 0), |(h, m, e), t| {
+            (h + t.hits, m + t.misses, e + t.evictions)
+        })
     }
 }
 
@@ -257,6 +274,26 @@ mod tests {
         t.lookup_wf(0, 0, 0, 0); // hit
         t.lookup_wf(0, 0, 0, 8); // different bucket -> miss
         assert!((t.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn counts_track_evictions_only_on_destructive_overwrite() {
+        let mut c = cfg();
+        c.pc_update_alpha = 0.5;
+        let mut t = PcTables::new(&c, 1, 4);
+        t.update_wf(0, 0, 0, SensEstimate::new(10.0, 0.0));
+        t.update_wf(0, 0, 0, SensEstimate::new(20.0, 0.0)); // blends
+        t.lookup_wf(0, 0, 0, 0); // hit
+        t.lookup_wf(0, 0, 0, 8); // miss
+        assert_eq!(t.counts(), (1, 1, 0));
+        // alpha = 1 disables blending: rewriting a valid entry evicts
+        let mut c1 = cfg();
+        c1.pc_update_alpha = 1.0;
+        let mut t1 = PcTables::new(&c1, 1, 4);
+        t1.update_wf(0, 0, 0, SensEstimate::new(1.0, 0.0));
+        assert_eq!(t1.counts().2, 0, "first fill is not an eviction");
+        t1.update_wf(0, 0, 0, SensEstimate::new(2.0, 0.0));
+        assert_eq!(t1.counts().2, 1);
     }
 
     #[test]

@@ -73,6 +73,14 @@ pub struct EpochCounters {
     /// Loads issued / L1 hits (phase diagnostics).
     pub loads: u64,
     pub l1_hits: u64,
+    /// Obs stall breakdown: no-issue time with loads in flight but no
+    /// WF blocked on a waitcnt yet (ps).  Together with `stall_all_ps`
+    /// (waitcnt-blocked) and `issue_empty_ps` these partition the
+    /// CU's total no-issue time by cause.
+    pub mem_outstanding_ps: u64,
+    /// Obs stall breakdown: no-issue time with no memory involvement
+    /// at all — ALU latency / empty issue slots (ps).
+    pub issue_empty_ps: u64,
 }
 
 /// One compute unit.
@@ -321,6 +329,15 @@ impl Cu {
             self.counters.stall_all_ps += dt;
             if n_load_waiting == 0 {
                 self.counters.store_stall_ps += dt;
+            }
+        }
+        // Obs stall breakdown: classify the remaining no-issue time
+        // (not waitcnt-blocked) by whether memory is still in flight.
+        if !issued && self.n_mem_waiting == 0 {
+            if self.outstanding_loads_cu > 0 {
+                self.counters.mem_outstanding_ps += dt;
+            } else {
+                self.counters.issue_empty_ps += dt;
             }
         }
         if issued && self.n_mem_waiting > 0 {
@@ -712,6 +729,36 @@ mod tests {
         );
         // and it must have stalled substantially
         assert!(lo.counters.stall_all_ps > ns_to_ps(1_000.0));
+    }
+
+    #[test]
+    fn stall_breakdown_partitions_no_issue_time() {
+        let cfg = cfg();
+        let mut mem = MemSystem::new(&cfg);
+        let mut cu = Cu::new(0, &cfg, 1.3);
+        cu.load_kernel(mem_program(10_000), 8);
+        run(&mut cu, &mut mem, 5_000.0);
+        let c = cu.counters;
+        // A waitcnt-heavy kernel must show waitcnt stalls, and the three
+        // causes never account for more time than the epoch itself.
+        assert!(c.stall_all_ps > 0, "no waitcnt stall recorded");
+        let breakdown = c.stall_all_ps + c.mem_outstanding_ps + c.issue_empty_ps;
+        assert!(
+            breakdown <= c.epoch_ps,
+            "breakdown {breakdown} exceeds epoch {}",
+            c.epoch_ps
+        );
+    }
+
+    #[test]
+    fn compute_bound_shows_no_memory_stall_causes() {
+        let cfg = cfg();
+        let mut mem = MemSystem::new(&cfg);
+        let mut cu = Cu::new(0, &cfg, 2.0);
+        cu.load_kernel(compute_program(10_000), 8);
+        run(&mut cu, &mut mem, 1_000.0);
+        assert_eq!(cu.counters.stall_all_ps, 0);
+        assert_eq!(cu.counters.mem_outstanding_ps, 0);
     }
 
     #[test]

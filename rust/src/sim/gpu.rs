@@ -184,6 +184,12 @@ impl Gpu {
         self.cus[lo].freq_ghz
     }
 
+    /// Memory-side deterministic counters (obs channel 1): L2/DRAM
+    /// traffic and queue-depth histograms, cumulative over the run.
+    pub fn mem_counters(&self) -> crate::obs::MemCounters {
+        self.mem.obs_counters()
+    }
+
     /// Run one fixed-time epoch and collect the observation bundle.
     pub fn run_epoch(&mut self) -> EpochObservation {
         let epoch_ps = ns_to_ps(self.cfg.dvfs.epoch_ns);

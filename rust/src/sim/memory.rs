@@ -93,6 +93,11 @@ impl Cache {
     }
 }
 
+/// Queue-depth histogram size: bucket `k` counts accesses whose
+/// queueing delay was about `k` service slots; the last bucket
+/// aggregates everything deeper.
+pub const QUEUE_DEPTH_BUCKETS: usize = 16;
+
 /// Outcome classification for stats.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MemLevel {
@@ -118,6 +123,12 @@ pub struct MemSystem {
     /// Counters.
     pub l2_accesses: u64,
     pub dram_accesses: u64,
+    /// Queue-depth histograms (delay quantized in service slots,
+    /// [`QUEUE_DEPTH_BUCKETS`] buckets).  Maintained unconditionally —
+    /// they never feed back into timing, so simulation results are
+    /// identical whether anyone reads them.
+    pub l2_queue_depth_hist: Vec<u64>,
+    pub dram_queue_depth_hist: Vec<u64>,
 }
 
 impl MemSystem {
@@ -137,6 +148,8 @@ impl MemSystem {
             dram_next_free_ps: 0,
             l2_accesses: 0,
             dram_accesses: 0,
+            l2_queue_depth_hist: vec![0; QUEUE_DEPTH_BUCKETS],
+            dram_queue_depth_hist: vec![0; QUEUE_DEPTH_BUCKETS],
         }
     }
 
@@ -149,6 +162,8 @@ impl MemSystem {
         let start = self.bank_next_free_ps[bank].max(now_ps);
         self.bank_next_free_ps[bank] = start + self.l2_service_ps;
         let queue = start - now_ps;
+        let depth = (queue / self.l2_service_ps.max(1)) as usize;
+        self.l2_queue_depth_hist[depth.min(QUEUE_DEPTH_BUCKETS - 1)] += 1;
 
         if self.l2.access(line) {
             (queue + self.l2_hit_ps, MemLevel::L2)
@@ -159,6 +174,8 @@ impl MemSystem {
             let dstart = self.dram_next_free_ps.max(at_dram);
             self.dram_next_free_ps = dstart + self.dram_line_ps;
             let dqueue = dstart - at_dram;
+            let ddepth = (dqueue / self.dram_line_ps.max(1)) as usize;
+            self.dram_queue_depth_hist[ddepth.min(QUEUE_DEPTH_BUCKETS - 1)] += 1;
             // Row-buffer locality variance: DRAM latency varies ±30% per
             // line (address-keyed, so identical across re-executions at
             // different frequencies — required by the oracle regression).
@@ -173,6 +190,18 @@ impl MemSystem {
 
     pub fn line_bytes(&self) -> usize {
         self.line_bytes
+    }
+
+    /// Snapshot the memory-side deterministic counters (obs channel 1).
+    pub fn obs_counters(&self) -> crate::obs::MemCounters {
+        crate::obs::MemCounters {
+            l2_accesses: self.l2_accesses,
+            l2_hits: self.l2.hits,
+            l2_misses: self.l2.misses,
+            dram_accesses: self.dram_accesses,
+            l2_queue_depth_hist: self.l2_queue_depth_hist.clone(),
+            dram_queue_depth_hist: self.dram_queue_depth_hist.clone(),
+        }
     }
 
     /// Kernel-boundary flush (cold caches per kernel, like the paper's
@@ -288,6 +317,35 @@ mod tests {
             last = m.access(l * 1000 + l, 0).0;
         }
         assert!(last > first, "no DRAM channel queueing: {first} vs {last}");
+    }
+
+    #[test]
+    fn queue_depth_histograms_see_contention() {
+        let mut m = MemSystem::new(&cfg());
+        // 64 back-to-back accesses to one bank at t=0: queue depth grows
+        // monotonically, so buckets past 0 must fill (capped at the top).
+        for _ in 0..64 {
+            m.access(7, 0);
+        }
+        assert_eq!(m.l2_queue_depth_hist.len(), QUEUE_DEPTH_BUCKETS);
+        assert_eq!(m.l2_queue_depth_hist.iter().sum::<u64>(), 64);
+        assert!(
+            m.l2_queue_depth_hist[1..].iter().sum::<u64>() > 0,
+            "no queueing recorded: {:?}",
+            m.l2_queue_depth_hist
+        );
+        let obs = m.obs_counters();
+        assert_eq!(obs.l2_accesses, 64);
+        assert_eq!(obs.l2_queue_depth_hist, m.l2_queue_depth_hist);
+        assert_eq!(obs.l2_hits + obs.l2_misses, 64);
+    }
+
+    #[test]
+    fn uncontended_access_lands_in_bucket_zero() {
+        let mut m = MemSystem::new(&cfg());
+        m.access(3, 0);
+        assert_eq!(m.l2_queue_depth_hist[0], 1);
+        assert_eq!(m.l2_queue_depth_hist[1..].iter().sum::<u64>(), 0);
     }
 
     #[test]

@@ -1,0 +1,185 @@
+//! Observability overhead + determinism gates (the obs subsystem's
+//! acceptance contract):
+//!
+//! 1. With the obs sink installed, every emitted stats CSV is
+//!    byte-identical to an uninstrumented run — counters observe, they
+//!    never perturb.
+//! 2. RunKeys are unchanged by obs: a cache warmed without obs serves a
+//!    with-obs rerun entirely from hits (zero misses, zero executions).
+//! 3. The counter sidecar (`counters.json`) is byte-deterministic
+//!    across reruns and across `--jobs 1` vs `--jobs 4`, and carries
+//!    nonzero stall-breakdown + queue-depth content at quick scale.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pcstall::exec::{Engine, ShardSpec};
+use pcstall::harness::sweep::{run_sweep, SweepPlan};
+use pcstall::harness::{ExpOptions, Scale};
+use pcstall::obs::ObsRecorder;
+use pcstall::stats::emit::Json;
+
+/// Small but representative: a memory-bound catalog workload and a
+/// synth source across two epoch lengths (4 grid points, 8 cells).
+const PLAN: &str = r#"
+name = "obsgate"
+epoch_ns = [1000, 10000]
+cus_per_domain = [1]
+workloads = ["comd", "synth:5"]
+designs = ["pcstall"]
+epochs = 8
+"#;
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pcstall_obs_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Run the gate plan once; returns (sweep CSV bytes, counters.json
+/// bytes when obs was on, run directory).
+fn run_once(
+    tag: &str,
+    jobs: usize,
+    obs: bool,
+    engine: Engine,
+) -> (Vec<u8>, Option<Vec<u8>>, PathBuf) {
+    let dir = fresh_dir(tag);
+    let rec = obs.then(|| Arc::new(ObsRecorder::new(dir.join("obs"))));
+    let mut engine = engine;
+    engine.set_obs(rec.clone());
+    let opts = ExpOptions {
+        scale: Scale::Quick,
+        out_dir: dir.clone(),
+        jobs,
+        engine: Arc::new(engine),
+        obs: rec.clone(),
+        ..Default::default()
+    };
+    let plan = SweepPlan::from_toml(PLAN).unwrap();
+    let csv_path = run_sweep(&opts, &plan, ShardSpec::whole()).unwrap();
+    let csv = std::fs::read(&csv_path).unwrap();
+    let counters = rec.map(|r| {
+        r.write().unwrap();
+        std::fs::read(dir.join("obs").join("counters.json")).unwrap()
+    });
+    (csv, counters, dir)
+}
+
+#[test]
+fn stats_csv_is_byte_identical_with_obs_on_and_off() {
+    let (off, none, d_off) = run_once("csv_off", 2, false, Engine::no_cache());
+    assert!(none.is_none());
+    let (on, counters, d_on) = run_once("csv_on", 2, true, Engine::no_cache());
+    assert_eq!(
+        off, on,
+        "obs sink must not perturb the emitted sweep CSV by a single byte"
+    );
+
+    // the sidecar carries real content: every executed cell, a nonzero
+    // stall breakdown, and populated queue-depth histograms
+    let text = String::from_utf8(counters.unwrap()).unwrap();
+    let j = Json::parse(&text).unwrap();
+    let cells = j.get("cells").and_then(Json::as_arr).unwrap();
+    assert_eq!(cells.len(), 8, "4 grid points x (baseline + design)");
+    let sum = |key: &str| -> f64 {
+        cells
+            .iter()
+            .map(|c| {
+                c.get("counters")
+                    .and_then(|k| k.get(key))
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0)
+            })
+            .sum()
+    };
+    assert!(sum("epochs") > 0.0);
+    assert!(
+        sum("stall_waitcnt_ps") + sum("stall_mem_outstanding_ps") + sum("stall_issue_empty_ps")
+            > 0.0,
+        "stall breakdown must be nonzero at quick scale"
+    );
+    assert!(sum("l2_accesses") > 0.0);
+    let hist_populated = cells.iter().any(|c| {
+        c.get("counters")
+            .and_then(|k| k.get("l2_queue_depth_hist"))
+            .and_then(Json::as_arr)
+            .is_some_and(|a| a.iter().any(|v| v.as_f64().unwrap_or(0.0) > 0.0))
+    });
+    assert!(hist_populated, "queue-depth histograms must be populated");
+
+    let _ = std::fs::remove_dir_all(&d_off);
+    let _ = std::fs::remove_dir_all(&d_on);
+}
+
+#[test]
+fn obs_does_not_perturb_run_keys() {
+    // Warm a cache without obs, then rerun with obs against the same
+    // cache: every cell must be a hit (identical RunKeys), and the
+    // CSVs must still match byte for byte.
+    let cache_root = fresh_dir("keys_cache");
+    let cache_dir = cache_root.join("cache");
+    let (cold, _, d1) = run_once(
+        "keys_cold",
+        2,
+        false,
+        Engine::with_cache_dir(cache_dir.clone()),
+    );
+    let warm_engine = Engine::with_cache_dir(cache_dir.clone());
+    let (warm, _, d2) = run_once("keys_warm", 2, true, warm_engine);
+    assert_eq!(cold, warm, "cache-served rerun must emit identical bytes");
+    // re-probe the cache stats through a fresh engine handle: the warm
+    // run's engine was moved, so assert indirectly — a third run with
+    // obs off must also be all hits (the cache was not invalidated or
+    // forked by the obs run writing different keys)
+    let probe = Arc::new(Engine::with_cache_dir(cache_dir.clone()));
+    let opts = ExpOptions {
+        scale: Scale::Quick,
+        out_dir: d2.clone(),
+        jobs: 1,
+        engine: probe.clone(),
+        ..Default::default()
+    };
+    let plan = SweepPlan::from_toml(PLAN).unwrap();
+    run_sweep(&opts, &plan, ShardSpec::whole()).unwrap();
+    assert_eq!(probe.executed(), 0, "obs must not change any RunKey");
+    assert_eq!(probe.cache_stats().misses, 0);
+    assert!(probe.cache_stats().hits > 0);
+
+    let _ = std::fs::remove_dir_all(&cache_root);
+    let _ = std::fs::remove_dir_all(&d1);
+    let _ = std::fs::remove_dir_all(&d2);
+}
+
+#[test]
+fn counter_sidecar_is_byte_deterministic_across_jobs_and_reruns() {
+    let (_, a, d1) = run_once("det_serial", 1, true, Engine::no_cache());
+    let (_, b, d2) = run_once("det_par", 4, true, Engine::no_cache());
+    let (_, c, d3) = run_once("det_rerun", 4, true, Engine::no_cache());
+    let (a, b, c) = (a.unwrap(), b.unwrap(), c.unwrap());
+    assert_eq!(a, b, "counters.json must not depend on --jobs");
+    assert_eq!(b, c, "counters.json must be byte-identical across reruns");
+
+    // the other two artifacts exist: a CSV mirror and a Chrome-trace
+    // timeline (wall-clock, so only its shape is checked)
+    let obs_dir = d1.join("obs");
+    let csv = std::fs::read_to_string(obs_dir.join("counters.csv")).unwrap();
+    assert!(csv.lines().next().unwrap().starts_with("key_hash,"));
+    assert_eq!(csv.lines().count(), 1 + 8, "header + one row per cell");
+    let timeline = std::fs::read_to_string(obs_dir.join("timeline.ndjson")).unwrap();
+    assert_eq!(timeline.lines().next(), Some("["));
+    assert_eq!(timeline.lines().last(), Some("]"));
+    assert!(
+        timeline.lines().any(|l| l.contains("\"cell.simulate\"")),
+        "timeline must carry harness spans: {timeline}"
+    );
+    assert!(
+        timeline.lines().any(|l| l.contains("\"pool.run\"")),
+        "timeline must carry pool spans"
+    );
+
+    let _ = std::fs::remove_dir_all(&d1);
+    let _ = std::fs::remove_dir_all(&d2);
+    let _ = std::fs::remove_dir_all(&d3);
+}

@@ -79,6 +79,13 @@ fn sharded_merge_is_byte_identical_and_warm_shard_executes_nothing() {
         owned_total += engine.executed() + engine.cache_stats().hits;
         let part = shard_dir.join(format!("sweep_tiny.part{index}of3.csv"));
         assert!(part.exists(), "missing {}", part.display());
+        // every sharded run leaves a meta sidecar for the merge summary
+        let meta = shard_dir.join(format!("sweep_tiny.part{index}of3.meta.json"));
+        let text = std::fs::read_to_string(&meta)
+            .unwrap_or_else(|e| panic!("missing {}: {e}", meta.display()));
+        for key in ["\"part\"", "\"of\"", "\"rows\"", "\"cache_hits\"", "\"executed\""] {
+            assert!(text.contains(key), "{key} missing from {text}");
+        }
     }
     // every unique cell ran (or hit) somewhere; shared baselines may be
     // computed by one shard and hit by another, never more than once each
