@@ -1,13 +1,15 @@
 //! Hot-path microbenchmarks: simulator epoch stepping, oracle sampling,
 //! snapshotting, and the native dvfs_step.  These are the L3 profiling
-//! targets of the §Perf pass (EXPERIMENTS.md).
+//! targets of the §Perf pass (EXPERIMENTS.md).  Besides the stdout
+//! report, writes `BENCH_sim_hotpath.json` (schema-versioned trajectory
+//! artifact; CI archives it per commit).
 
 use pcstall::config::SimConfig;
 use pcstall::dvfs::native::{dvfs_step_native, StepInputs};
 use pcstall::power::PowerParams;
 use pcstall::predictors::OracleSampler;
 use pcstall::sim::gpu::Gpu;
-use pcstall::stats::bench::{bench, bench_cfg};
+use pcstall::stats::bench::{bench, bench_cfg, write_bench_json, BenchResult};
 use pcstall::util::SplitMix64;
 use pcstall::workloads;
 use std::time::Duration;
@@ -24,6 +26,8 @@ fn gpu(n_cu: usize, n_wf: usize, wl: &str) -> Gpu {
 }
 
 fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+
     println!("== sim hot path ==");
     for (wl, tag) in [("hacc", "compute"), ("xsbench", "membound"), ("comd", "mixed")] {
         let mut g = gpu(8, 16, wl);
@@ -33,6 +37,7 @@ fn main() {
         let cycles: u64 = g.cus.iter().map(|c| c.counters.cycles).sum();
         let rate = cycles as f64 / r.median_ns();
         println!("    -> {:.1} M CU-cycles/s", rate * 1e3);
+        results.push(r);
     }
 
     {
@@ -51,12 +56,13 @@ fn main() {
             "    -> {:.1} M CU-cycles/s",
             cycles as f64 / r.median_ns() * 1e3
         );
+        results.push(r);
     }
 
     {
         let g = gpu(8, 16, "comd");
         let sampler = OracleSampler::default();
-        bench_cfg(
+        results.push(bench_cfg(
             "oracle sample (10 pre-executions, 8CU)",
             Duration::from_millis(400),
             5,
@@ -64,18 +70,18 @@ fn main() {
             &mut || {
                 let _ = sampler.sample(&g);
             },
-        );
+        ));
     }
 
     {
         let g = gpu(8, 16, "comd");
-        bench("gpu snapshot clone (8CU)", || {
+        results.push(bench("gpu snapshot clone (8CU)", || {
             let _ = g.snapshot();
-        });
+        }));
         let g64 = gpu(64, 40, "comd");
-        bench("gpu snapshot clone (64CU)", || {
+        results.push(bench("gpu snapshot clone (64CU)", || {
             let _ = g64.snapshot();
-        });
+        }));
     }
 
     {
@@ -88,8 +94,17 @@ fn main() {
             *v = (rng.next_f64() * 1000.0) as f32;
         }
         let p = PowerParams::default();
-        bench("native dvfs_step 64x40", || {
+        results.push(bench("native dvfs_step 64x40", || {
             let _ = dvfs_step_native(&inp, &p);
-        });
+        }));
+    }
+
+    // Trajectory artifact: run metadata comes from the environment so
+    // the emitter itself stays timestamp-free and deterministic.
+    let commit = std::env::var("GITHUB_SHA").unwrap_or_else(|_| "unknown".into());
+    let out = std::path::Path::new("BENCH_sim_hotpath.json");
+    match write_bench_json(out, "sim_hotpath", &[("commit", &commit)], &results) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", out.display()),
     }
 }

@@ -122,6 +122,38 @@ pub fn eval_grid_row(
     (instr, power, ednp)
 }
 
+/// Kernel 2 mirror over a *measured* ladder: the same power / ED^nP
+/// math as [`eval_grid_row`], but evaluated at instruction counts that
+/// were actually observed per state (the oracle's pre-executed ladder)
+/// instead of the linear-model extrapolation `i0 + sens·f`.  Used by
+/// the decision-trace regret column: it scores what each ladder state
+/// *did* cost, so chosen-vs-best differences are exact counterfactuals.
+pub fn eval_ladder_row(
+    instr_at: &[f64; N_FREQ],
+    n_exp: f64,
+    epoch_ns: f64,
+    p: &PowerParams,
+) -> ([f64; N_FREQ], [f64; N_FREQ], [f64; N_FREQ]) {
+    let mut instr = [0f64; N_FREQ];
+    let mut power = [0f64; N_FREQ];
+    let mut ednp = [0f64; N_FREQ];
+    for k in 0..N_FREQ {
+        let f = p.f_min_ghz + 0.1 * k as f64;
+        let v = p.v0 + p.kv * (f - p.f_min_ghz);
+        let eta = p.eta0 + p.eta_slope * (f - p.f_min_ghz) / (p.f_max_ghz - p.f_min_ghz);
+        let i = instr_at[k].max(EPS as f64);
+        let rate = i / epoch_ns;
+        let v2 = v * v;
+        let pw = (p.c1 * v2 * rate + p.c2 * v2 * f
+            + p.l0 * (p.lv * (v - p.v_nom)).exp())
+            / eta;
+        instr[k] = i;
+        power[k] = pw;
+        ednp[k] = pw / rate.max(EPS as f64).powf(n_exp);
+    }
+    (instr, power, ednp)
+}
+
 /// Kernel 2 mirror: full grid in f32 (exact artifact semantics incl.
 /// the masked-domain +inf rule).
 pub fn freq_grid_native(
@@ -270,6 +302,25 @@ mod tests {
             assert!((i64g[k] - i32g[k] as f64).abs() / i64g[k] < 1e-4);
             assert!((p64g[k] - p32g[k] as f64).abs() / p64g[k] < 1e-4);
             assert!((e64g[k] - e32g[k] as f64).abs() / e64g[k] < 1e-3);
+        }
+    }
+
+    #[test]
+    fn ladder_row_agrees_with_grid_row_on_linear_samples() {
+        // When the measured ladder happens to be exactly the linear model,
+        // both evaluators must produce identical rows.
+        let p = params();
+        let (sens, i0) = (12_345.0, 678.0);
+        let mut measured = [0f64; N_FREQ];
+        for (k, m) in measured.iter_mut().enumerate() {
+            *m = i0 + sens * (p.f_min_ghz + 0.1 * k as f64);
+        }
+        let (ig, pg, eg) = eval_grid_row(sens, i0, 3.0, 1000.0, &p);
+        let (il, pl, el) = eval_ladder_row(&measured, 3.0, 1000.0, &p);
+        for k in 0..N_FREQ {
+            assert!((ig[k] - il[k]).abs() < 1e-9);
+            assert!((pg[k] - pl[k]).abs() < 1e-12 * pg[k].abs().max(1.0));
+            assert!((eg[k] - el[k]).abs() < 1e-12 * eg[k].abs().max(1.0));
         }
     }
 

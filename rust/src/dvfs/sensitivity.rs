@@ -5,7 +5,9 @@
 //! high for compute phases, ~0 for memory-bound phases — and `I0` the
 //! frequency-independent intercept.
 
-use crate::power::params::{FREQS_GHZ, N_FREQ};
+use crate::dvfs::native::eval_ladder_row;
+use crate::dvfs::objective::Objective;
+use crate::power::params::{FREQS_GHZ, N_FREQ, PowerParams};
 use crate::util::linreg;
 
 /// A phase estimate for one scope (wavefront / CU / domain).
@@ -81,6 +83,27 @@ pub fn fit_ladder(samples: &FreqSamples) -> (SensEstimate, f64) {
     SensEstimate::fit(&FREQS_GHZ, samples)
 }
 
+/// Counterfactual regret of choosing ladder state `chosen` when the
+/// oracle measured `measured` instructions per state (decision-trace
+/// channel, paper §6.1 attribution).  Scores every state with the
+/// selector's own power/ED^nP math
+/// ([`eval_ladder_row`]) and the run's [`Objective`], then returns
+/// `(value[chosen] − value[best], best)`.  Clamped at 0: for
+/// `EnergyBound` the objective value (energy-per-instruction) of the
+/// constrained best can legitimately exceed an infeasible state's, and
+/// regret is defined against the *feasible* best.
+pub fn ladder_regret(
+    measured: &FreqSamples,
+    chosen: usize,
+    objective: &Objective,
+    epoch_ns: f64,
+    p: &PowerParams,
+) -> (f64, usize) {
+    let (instr, power, ednp) = eval_ladder_row(measured, objective.n_exp(), epoch_ns, p);
+    let best = objective.select(&instr, &power, &ednp);
+    ((ednp[chosen] - ednp[best]).max(0.0), best)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +145,42 @@ mod tests {
         assert!((relative_change(100.0, 100.0)).abs() < 1e-12);
         assert!((relative_change(100.0, 0.0) - 2.0).abs() < 1e-12);
         assert!((relative_change(100.0, 150.0) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ladder_regret_is_zero_at_best_and_positive_off_best() {
+        let p = PowerParams::default();
+        // compute-bound ladder: instructions scale with frequency
+        let mut measured = [0f64; N_FREQ];
+        for (k, m) in measured.iter_mut().enumerate() {
+            *m = 30_000.0 * (p.f_min_ghz + 0.1 * k as f64);
+        }
+        let obj = Objective::Ed2p;
+        let (_, best) = ladder_regret(&measured, 0, &obj, 1000.0, &p);
+        let (r_best, b2) = ladder_regret(&measured, best, &obj, 1000.0, &p);
+        assert_eq!(best, b2);
+        assert_eq!(r_best, 0.0, "regret at the best state is exactly 0");
+        for k in 0..N_FREQ {
+            let (r, _) = ladder_regret(&measured, k, &obj, 1000.0, &p);
+            assert!(r >= 0.0, "regret must be non-negative at state {k}");
+            if k != best {
+                assert!(r > 0.0, "off-best state {k} must carry regret");
+            }
+        }
+    }
+
+    #[test]
+    fn ladder_regret_energy_bound_is_clamped_non_negative() {
+        let p = PowerParams::default();
+        // memory-bound ladder: frequency buys nothing, so EnergyBound's
+        // feasible set spans all states and low f wins on energy.
+        let measured = [5_000.0; N_FREQ];
+        let obj = Objective::EnergyBound { max_slowdown: 0.1 };
+        for k in 0..N_FREQ {
+            let (r, best) = ladder_regret(&measured, k, &obj, 1000.0, &p);
+            assert!(r >= 0.0);
+            assert_eq!(best, 0, "flat ladder: lowest state is energy-best");
+        }
     }
 
     #[test]

@@ -141,10 +141,14 @@ impl Engine {
         let mut srcs: Vec<Src> = Vec::with_capacity(uniques.len());
         let mut run_uniques: Vec<usize> = Vec::new();
         let mut run_jobs: Vec<F> = Vec::new();
+        let mut cache_hits = 0u64;
         let t_read = Instant::now();
         for (u, (key, job)) in uniques.iter_mut().enumerate() {
             match self.cache.lookup(key) {
-                Some(r) => srcs.push(Src::Ready(r)),
+                Some(r) => {
+                    cache_hits += 1;
+                    srcs.push(Src::Ready(r));
+                }
                 None => {
                     srcs.push(Src::Ran(run_jobs.len()));
                     run_uniques.push(u);
@@ -154,6 +158,17 @@ impl Engine {
         }
         if let Some(o) = &self.obs {
             o.add_span("exec", "cache.read", t_read, Instant::now(), 0);
+            // Obs × cache interaction: cached cells never execute, so they
+            // leave no counter/decision records.  Account for them in the
+            // sidecar header and warn — silently-partial sidecars are the
+            // trap `--no-cache` exists to avoid.
+            o.note_batch(run_jobs.len() as u64, cache_hits);
+            if cache_hits > 0 {
+                eprintln!(
+                    "[obs] warning: {cache_hits} cell(s) served from the result cache carry no \
+                     obs records — pair --obs with --no-cache for complete sidecars"
+                );
+            }
         }
 
         // 3. Execute the misses (out of order, collected in order),

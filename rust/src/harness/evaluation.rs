@@ -135,7 +135,8 @@ impl Cell {
         let r = mgr.run(self.mode, &self.workload);
         if let Some((rec, canonical, hash)) = obs {
             if let Some(c) = mgr.obs_counters() {
-                rec.record_cell(canonical, hash, &r, c.clone());
+                let decisions = mgr.obs_decisions().map(<[_]>::to_vec).unwrap_or_default();
+                rec.record_cell(canonical, hash, &r, c.clone(), mgr.cfg.dvfs.epoch_ns, decisions);
             }
             rec.add_span("harness", "cell.simulate", t_sim, std::time::Instant::now(), 0);
         }

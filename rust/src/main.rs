@@ -17,6 +17,8 @@
 //! pcstall trace record|replay|gen|info|ingest ...
 //! pcstall cache stats|clear [--dir d] [--max-age days] [--max-bytes MB]
 //! pcstall obs report [<dir>]
+//! pcstall obs diff <dirA> <dirB>
+//! pcstall obs plot [<dir>] [--out dir]
 //! pcstall list
 //! pcstall config dump [--set k=v ...]
 //! pcstall config keys
@@ -91,6 +93,8 @@ USAGE:
   pcstall cache stats [--dir results/cache]
   pcstall cache clear [--dir results/cache] [--max-age days] [--max-bytes MB]
   pcstall obs report [<dir>]
+  pcstall obs diff <dirA> <dirB>
+  pcstall obs plot [<dir>] [--out dir]
   pcstall list
   pcstall config dump [--set k=v ...]
   pcstall config keys
@@ -113,8 +117,15 @@ RUN OPTIONS:
   --obs <dir>           record observability artifacts into <dir>:
                         byte-deterministic per-cell counters
                         (counters.json / counters.csv — stall breakdown,
-                        queue-depth histograms, PC-table and DVFS traffic)
-                        plus a Chrome-trace span timeline (timeline.ndjson)
+                        queue-depth histograms, PC-table and DVFS traffic),
+                        per-epoch decision traces (decisions.csv /
+                        decisions.ndjson — predicted vs actual
+                        instructions, chosen ladder state, counterfactual
+                        regret) and a Chrome-trace span timeline
+                        (timeline.ndjson).  Cells served by the result
+                        cache carry no obs records (a stderr warning names
+                        the count) — pair with --no-cache for complete
+                        sidecars
   --progress            periodic stderr progress (cells done/total, cells
                         served by cache, ETA); stdout and every emitted
                         artifact stay byte-identical
@@ -159,9 +170,23 @@ SWEEP COMMANDS:
 
 OBS COMMANDS:
   report [<dir>]        summarize a --obs directory (default results/obs):
-                        counter totals across cells and the top wall-clock
-                        spans from the timeline.  Load timeline.ndjson in
+                        counter totals across cells, the top wall-clock
+                        spans from the timeline, and — when decision
+                        traces are present — a prediction-accuracy
+                        histogram, the worst-regret epochs, and a per-PC
+                        mispredict leaderboard.  Load timeline.ndjson in
                         Perfetto / chrome://tracing for the full picture.
+  diff <dirA> <dirB>    align two decision traces by (cell, epoch, domain)
+                        and report where the policies diverge, with regret
+                        attribution per side (greppable
+                        `divergent pairs    : N` line); same-policy cells
+                        pair with themselves, leftover policies pair in
+                        sorted order (e.g. CRISP-only run vs PCSTALL-only
+                        run over the same workloads)
+  plot [<dir>]          emit a gnuplot script + matplotlib fallback
+                        rendering accuracy and mean chosen frequency vs
+                        epoch, one panel per cell, from <dir>/decisions.csv
+                        (--out redirects the scripts)
 
 CONFIG COMMANDS:
   dump                  print the effective TOML config (with --set)
@@ -749,7 +774,36 @@ fn obs_cmd(args: &[String]) -> Result<()> {
             let dir = rest.first().map(|s| s.as_str()).unwrap_or("results/obs");
             pcstall::obs::report(Path::new(dir)).map_err(|e| anyhow::anyhow!(e))
         }
-        _ => anyhow::bail!("usage: pcstall obs report [<dir>]"),
+        Some("diff") => {
+            let o = Opts::new(&args[1..]);
+            let rest = o.finish()?;
+            anyhow::ensure!(rest.len() == 2, "usage: pcstall obs diff <dirA> <dirB>");
+            let (a, b) = (Path::new(&rest[0]), Path::new(&rest[1]));
+            let summary = pcstall::obs::diff_decisions(a, b).map_err(|e| anyhow::anyhow!(e))?;
+            pcstall::obs::print_diff(a, b, &summary);
+            Ok(())
+        }
+        Some("plot") => {
+            let mut o = Opts::new(&args[1..]);
+            let out_dir = o.take("--out").map(PathBuf::from);
+            let rest = o.finish()?;
+            anyhow::ensure!(rest.len() <= 1, "usage: pcstall obs plot [<dir>] [--out dir]");
+            let dir = rest.first().map(|s| s.as_str()).unwrap_or("results/obs");
+            let (gp, py) = plot::emit_decision_timeline(Path::new(dir), out_dir.as_deref())?;
+            println!("wrote {}", gp.display());
+            println!("wrote {}", py.display());
+            let script_dir = gp.parent().unwrap_or_else(|| Path::new("."));
+            let file =
+                |p: &Path| p.file_name().unwrap_or_default().to_string_lossy().into_owned();
+            println!(
+                "render: (cd {} && gnuplot {})   # or: python3 {}",
+                script_dir.display(),
+                file(&gp),
+                file(&py)
+            );
+            Ok(())
+        }
+        _ => anyhow::bail!("usage: pcstall obs report|diff|plot ..."),
     }
 }
 

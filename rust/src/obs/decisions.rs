@@ -1,0 +1,322 @@
+//! Obs channel 3: per-epoch decision traces.
+//!
+//! Where channel 1 aggregates a run into totals, channel 3 keeps the
+//! per-epoch, per-domain audit trail of what the DVFS manager actually
+//! decided and what it cost: prediction vs outcome, the chosen ladder
+//! state, and — for oracle-laddered policies — the *counterfactual
+//! regret* of that choice (objective value at the chosen state minus at
+//! the measured-ladder best state).  The trace answers the question the
+//! scalar `mean_accuracy` cannot: *which* epochs and *which* PCs account
+//! for one predictor beating another (paper §6.1).
+//!
+//! Determinism contract is identical to channel 1: samples derive from
+//! simulated state only, sidecars (`decisions.csv` / `decisions.ndjson`)
+//! carry no timestamps and are sorted by canonical
+//! [`RunKey`](crate::exec::key::RunKey) text, then epoch, then domain —
+//! byte-identical across reruns and `--jobs` values.
+
+use std::path::Path;
+
+use crate::stats::emit::{CsvTable, Json};
+
+/// One per-domain DVFS decision at an epoch boundary (channel 3).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DecisionSample {
+    /// Epoch index (same numbering as `EpochRecord::epoch`).
+    pub epoch: u64,
+    /// Clock-domain index.
+    pub domain: usize,
+    /// Modal epoch-start PC among the domain's active wavefronts,
+    /// masked to the PC table's aliasing bucket
+    /// ([`PcTables::bucket_base_pc`](crate::predictors::PcTables::bucket_base_pc)),
+    /// ties broken toward the lowest PC.  Only meaningful when
+    /// `has_pc` (PC-keyed policies with at least one active wavefront).
+    pub pc: u32,
+    pub has_pc: bool,
+    /// Instructions predicted for this domain at the chosen state.
+    pub pred_instr: f64,
+    /// Chosen ladder state index.
+    pub chosen: u8,
+    /// Best state on the oracle's measured ladder for this epoch
+    /// (equals `chosen` when the policy took no oracle sample).
+    pub oracle_best: u8,
+    /// Instructions the domain actually committed this epoch.
+    pub actual_instr: f64,
+    /// Epoch-level prediction accuracy (paper §6.1), repeated on every
+    /// domain row of the epoch; NaN for static policies.
+    pub accuracy: f64,
+    /// This domain's no-issue fraction of the epoch (all three stall
+    /// causes over CU-time).
+    pub stall_frac: f64,
+    /// Epoch-level energy in J (transition + CU energy), repeated on
+    /// every domain row of the epoch.
+    pub energy_j: f64,
+    /// Counterfactual regret: objective value at the chosen state minus
+    /// at `oracle_best` on the measured ladder.  ≥ 0 by construction;
+    /// exactly 0 when no oracle sample exists and for `Policy::Oracle`
+    /// (it minimized over its own ladder).
+    pub regret: f64,
+}
+
+/// `decisions.csv` column order (the sidecar schema).
+pub const DECISIONS_HEADER: [&str; 16] = [
+    "key_hash",
+    "workload",
+    "policy",
+    "objective",
+    "epoch_ns",
+    "epoch",
+    "domain",
+    "pc",
+    "pred_instr",
+    "chosen_freq",
+    "oracle_best",
+    "actual_instr",
+    "accuracy",
+    "stall_frac",
+    "energy_j",
+    "regret",
+];
+
+/// Fixed-precision float text — the byte-determinism idiom shared with
+/// the sweep-plot emitter (`f64` Display is shortest-roundtrip and
+/// therefore stable, but fixed precision keeps diffs column-aligned).
+fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+fn f6(v: f64) -> String {
+    format!("{v:.6}")
+}
+
+fn f10(v: f64) -> String {
+    format!("{v:.10}")
+}
+
+fn e9(v: f64) -> String {
+    format!("{v:.9e}")
+}
+
+/// Render one sample as a `decisions.csv` row (cell identity prefixed).
+pub(crate) fn decision_csv_row(
+    key_hash: &str,
+    workload: &str,
+    policy: &str,
+    objective: &str,
+    epoch_ns: f64,
+    s: &DecisionSample,
+) -> Vec<String> {
+    vec![
+        key_hash.to_string(),
+        workload.to_string(),
+        policy.to_string(),
+        objective.to_string(),
+        format!("{epoch_ns}"),
+        s.epoch.to_string(),
+        s.domain.to_string(),
+        if s.has_pc { s.pc.to_string() } else { "-".into() },
+        f3(s.pred_instr),
+        s.chosen.to_string(),
+        s.oracle_best.to_string(),
+        f3(s.actual_instr),
+        f10(s.accuracy),
+        f6(s.stall_frac),
+        e9(s.energy_j),
+        e9(s.regret),
+    ]
+}
+
+/// Render one sample as a `decisions.ndjson` object (one line each;
+/// `Json::Num` renders NaN/Inf as `null`, which is what NDJSON
+/// consumers expect).
+pub(crate) fn decision_json(
+    key_hash: &str,
+    workload: &str,
+    policy: &str,
+    objective: &str,
+    epoch_ns: f64,
+    s: &DecisionSample,
+) -> Json {
+    Json::obj(vec![
+        ("hash", Json::Str(key_hash.to_string())),
+        ("workload", Json::Str(workload.to_string())),
+        ("policy", Json::Str(policy.to_string())),
+        ("objective", Json::Str(objective.to_string())),
+        ("epoch_ns", Json::Num(epoch_ns)),
+        ("epoch", Json::Num(s.epoch as f64)),
+        ("domain", Json::Num(s.domain as f64)),
+        (
+            "pc",
+            if s.has_pc {
+                Json::Num(s.pc as f64)
+            } else {
+                Json::Null
+            },
+        ),
+        ("pred_instr", Json::Num(s.pred_instr)),
+        ("chosen_freq", Json::Num(s.chosen as f64)),
+        ("oracle_best", Json::Num(s.oracle_best as f64)),
+        ("actual_instr", Json::Num(s.actual_instr)),
+        ("accuracy", Json::Num(s.accuracy)),
+        ("stall_frac", Json::Num(s.stall_frac)),
+        ("energy_j", Json::Num(s.energy_j)),
+        ("regret", Json::Num(s.regret)),
+    ])
+}
+
+/// One `decisions.csv` row joined with its cell identity (the parsed
+/// form consumed by `obs report`, `obs diff`, and the timeline plot).
+#[derive(Debug, Clone)]
+pub struct DecisionRow {
+    pub key_hash: String,
+    pub workload: String,
+    pub policy: String,
+    pub objective: String,
+    /// Kept as verbatim text: it is an alignment key, not arithmetic.
+    pub epoch_ns: String,
+    pub epoch: u64,
+    pub domain: u64,
+    /// `None` when the policy is not PC-keyed (the `-` column value).
+    pub pc: Option<u32>,
+    pub pred_instr: f64,
+    pub chosen: u8,
+    pub oracle_best: u8,
+    pub actual_instr: f64,
+    pub accuracy: f64,
+    pub stall_frac: f64,
+    pub energy_j: f64,
+    pub regret: f64,
+}
+
+impl DecisionRow {
+    /// Identity of the cell this row belongs to (one simulation).
+    pub fn cell_id(&self) -> (String, String, String, String) {
+        (
+            self.workload.clone(),
+            self.objective.clone(),
+            self.epoch_ns.clone(),
+            self.policy.clone(),
+        )
+    }
+}
+
+fn num<T: std::str::FromStr>(cell: &str, col: &str) -> Result<T, String> {
+    cell.parse()
+        .map_err(|_| format!("bad {col} value '{cell}' in decisions.csv"))
+}
+
+/// Parse a `decisions.csv` sidecar back into rows.
+pub fn read_decisions(dir: &Path) -> Result<Vec<DecisionRow>, String> {
+    let path = dir.join("decisions.csv");
+    if !path.exists() {
+        return Err(format!(
+            "no {} (run with `--obs {}` — and `--no-cache`, cached cells emit no trace)",
+            path.display(),
+            dir.display()
+        ));
+    }
+    let t = CsvTable::read(&path)?;
+    let expect: Vec<String> = DECISIONS_HEADER.iter().map(|s| s.to_string()).collect();
+    if t.header != expect {
+        return Err(format!("{}: unexpected header {:?}", path.display(), t.header));
+    }
+    let mut out = Vec::with_capacity(t.rows.len());
+    for r in &t.rows {
+        out.push(DecisionRow {
+            key_hash: r[0].clone(),
+            workload: r[1].clone(),
+            policy: r[2].clone(),
+            objective: r[3].clone(),
+            epoch_ns: r[4].clone(),
+            epoch: num(&r[5], "epoch")?,
+            domain: num(&r[6], "domain")?,
+            pc: if r[7] == "-" { None } else { Some(num(&r[7], "pc")?) },
+            pred_instr: num(&r[8], "pred_instr")?,
+            chosen: num(&r[9], "chosen_freq")?,
+            oracle_best: num(&r[10], "oracle_best")?,
+            actual_instr: num(&r[11], "actual_instr")?,
+            accuracy: num(&r[12], "accuracy")?,
+            stall_frac: num(&r[13], "stall_frac")?,
+            energy_j: num(&r[14], "energy_j")?,
+            regret: num(&r[15], "regret")?,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DecisionSample {
+        DecisionSample {
+            epoch: 3,
+            domain: 1,
+            pc: 128,
+            has_pc: true,
+            pred_instr: 1234.5,
+            chosen: 7,
+            oracle_best: 5,
+            actual_instr: 1100.0,
+            accuracy: 0.891,
+            stall_frac: 0.25,
+            energy_j: 1.5e-6,
+            regret: 0.0,
+        }
+    }
+
+    #[test]
+    fn csv_row_matches_header_width_and_is_stable() {
+        let s = sample();
+        let a = decision_csv_row("beef", "comd", "PCSTALL", "ED2P", 1000.0, &s);
+        let b = decision_csv_row("beef", "comd", "PCSTALL", "ED2P", 1000.0, &s);
+        assert_eq!(a.len(), DECISIONS_HEADER.len());
+        assert_eq!(a, b, "formatting must be deterministic");
+        assert_eq!(a[4], "1000", "epoch_ns uses shortest-roundtrip text");
+        assert_eq!(a[7], "128");
+        assert_eq!(a[15], "0.000000000e0", "regret is fixed-precision");
+    }
+
+    #[test]
+    fn non_pc_policies_emit_dash_and_null_pc() {
+        let s = DecisionSample {
+            has_pc: false,
+            ..sample()
+        };
+        let row = decision_csv_row("h", "w", "CRISP", "ED2P", 1000.0, &s);
+        assert_eq!(row[7], "-");
+        let j = decision_json("h", "w", "CRISP", "ED2P", 1000.0, &s).render();
+        assert!(j.contains("\"pc\":null"), "{j}");
+    }
+
+    #[test]
+    fn csv_roundtrips_through_read() {
+        let dir = std::env::temp_dir().join(format!("pcstall_dec_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut t = CsvTable::new(&DECISIONS_HEADER);
+        let s = sample();
+        t.push(decision_csv_row("beef", "comd", "PCSTALL", "ED2P", 1000.0, &s));
+        let nan = DecisionSample {
+            accuracy: f64::NAN,
+            has_pc: false,
+            ..sample()
+        };
+        t.push(decision_csv_row("beef", "comd", "STATIC-1.7", "ED2P", 1000.0, &nan));
+        t.write(&dir.join("decisions.csv")).unwrap();
+        let rows = read_decisions(&dir).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].pc, Some(128));
+        assert_eq!(rows[0].chosen, 7);
+        assert!((rows[0].accuracy - 0.891).abs() < 1e-9);
+        assert!(rows[1].pc.is_none());
+        assert!(rows[1].accuracy.is_nan(), "NaN accuracy must roundtrip");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_sidecar_error_mentions_no_cache() {
+        let err = read_decisions(Path::new("/nonexistent-unused")).unwrap_err();
+        assert!(err.contains("--no-cache"), "{err}");
+    }
+}

@@ -1,0 +1,328 @@
+//! `pcstall obs diff <dirA> <dirB>` — align two decision traces and
+//! report where the policies diverged.
+//!
+//! Alignment is two-stage.  Cells are first grouped by
+//! `(workload, objective, epoch_ns)`; within a group, a policy present
+//! in both dirs pairs with itself (a rerun-consistency pair — zero
+//! divergence expected), and the leftover policies are paired in sorted
+//! order (the cross-policy comparison, e.g. CRISP in dir A vs PCSTALL
+//! in dir B over the same workload).  Paired cells then align row-wise
+//! by `(epoch, domain)` — a *divergent pair* is an aligned row where
+//! the chosen ladder state differs.  Regret sums on both sides
+//! attribute the divergence: a diverging epoch where only one side
+//! pays regret is an epoch that side's predictor got wrong.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::stats::emit::print_table;
+
+use super::decisions::{read_decisions, DecisionRow};
+
+/// One aligned-but-divergent row (the per-epoch attribution record).
+#[derive(Debug, Clone)]
+pub struct DivergentRow {
+    pub workload: String,
+    pub objective: String,
+    pub epoch_ns: String,
+    pub policy_a: String,
+    pub policy_b: String,
+    pub epoch: u64,
+    pub domain: u64,
+    pub chosen_a: u8,
+    pub chosen_b: u8,
+    pub regret_a: f64,
+    pub regret_b: f64,
+    pub accuracy_a: f64,
+    pub accuracy_b: f64,
+}
+
+/// The outcome of aligning two decision traces.
+#[derive(Debug, Clone, Default)]
+pub struct DiffSummary {
+    /// Cell pairs aligned (same-policy + cross-policy).
+    pub cell_pairs: usize,
+    pub same_policy_pairs: usize,
+    pub cross_policy_pairs: usize,
+    /// Cells with no counterpart in the other dir.
+    pub unpaired_a: usize,
+    pub unpaired_b: usize,
+    /// Rows aligned by (cell pair, epoch, domain).
+    pub rows_aligned: usize,
+    /// Aligned rows whose chosen ladder state differs.
+    pub divergent: usize,
+    /// Rows present on only one side of a paired cell.
+    pub only_a: usize,
+    pub only_b: usize,
+    /// Regret summed over aligned rows, per side.
+    pub regret_a: f64,
+    pub regret_b: f64,
+    /// Worst divergent rows (by regret delta, then accuracy delta).
+    pub top: Vec<DivergentRow>,
+}
+
+type CellGroups<'a> =
+    BTreeMap<(String, String, String), BTreeMap<String, BTreeMap<(u64, u64), &'a DecisionRow>>>;
+
+/// `(workload, objective, epoch_ns) -> policy -> (epoch, domain) -> row`.
+fn group(rows: &[DecisionRow]) -> CellGroups<'_> {
+    let mut g: CellGroups = BTreeMap::new();
+    for r in rows {
+        g.entry((r.workload.clone(), r.objective.clone(), r.epoch_ns.clone()))
+            .or_default()
+            .entry(r.policy.clone())
+            .or_default()
+            .insert((r.epoch, r.domain), r);
+    }
+    g
+}
+
+/// Align the decision traces under two obs dirs.
+pub fn diff_decisions(dir_a: &Path, dir_b: &Path) -> Result<DiffSummary, String> {
+    let rows_a = read_decisions(dir_a)?;
+    let rows_b = read_decisions(dir_b)?;
+    let ga = group(&rows_a);
+    let gb = group(&rows_b);
+
+    let mut s = DiffSummary::default();
+    for (gkey, pols_a) in &ga {
+        let Some(pols_b) = gb.get(gkey) else {
+            s.unpaired_a += pols_a.len();
+            continue;
+        };
+        // same-policy pairs first, then leftovers zipped in sorted order
+        let mut pairs: Vec<(&str, &str)> = Vec::new();
+        let mut left_a: Vec<&str> = Vec::new();
+        for p in pols_a.keys() {
+            if pols_b.contains_key(p) {
+                pairs.push((p.as_str(), p.as_str()));
+                s.same_policy_pairs += 1;
+            } else {
+                left_a.push(p.as_str());
+            }
+        }
+        let left_b: Vec<&str> = pols_b
+            .keys()
+            .filter(|p| !pols_a.contains_key(*p))
+            .map(String::as_str)
+            .collect();
+        let crossed = left_a.len().min(left_b.len());
+        s.cross_policy_pairs += crossed;
+        s.unpaired_a += left_a.len() - crossed;
+        s.unpaired_b += left_b.len() - crossed;
+        for i in 0..crossed {
+            pairs.push((left_a[i], left_b[i]));
+        }
+
+        for (pa, pb) in pairs {
+            s.cell_pairs += 1;
+            let ca = &pols_a[pa];
+            let cb = &pols_b[pb];
+            for (rk, ra) in ca {
+                let Some(rb) = cb.get(rk) else {
+                    s.only_a += 1;
+                    continue;
+                };
+                s.rows_aligned += 1;
+                s.regret_a += ra.regret;
+                s.regret_b += rb.regret;
+                if ra.chosen != rb.chosen {
+                    s.divergent += 1;
+                    s.top.push(DivergentRow {
+                        workload: gkey.0.clone(),
+                        objective: gkey.1.clone(),
+                        epoch_ns: gkey.2.clone(),
+                        policy_a: pa.to_string(),
+                        policy_b: pb.to_string(),
+                        epoch: ra.epoch,
+                        domain: ra.domain,
+                        chosen_a: ra.chosen,
+                        chosen_b: rb.chosen,
+                        regret_a: ra.regret,
+                        regret_b: rb.regret,
+                        accuracy_a: ra.accuracy,
+                        accuracy_b: rb.accuracy,
+                    });
+                }
+            }
+            s.only_b += cb.keys().filter(|k| !ca.contains_key(*k)).count();
+        }
+    }
+    for (gkey, pols_b) in &gb {
+        if !ga.contains_key(gkey) {
+            s.unpaired_b += pols_b.len();
+        }
+    }
+
+    // Attribution order: regret delta first (the energy cost of the
+    // disagreement), accuracy delta as the tiebreak for regret-free
+    // (non-oracle) traces, then a stable key.
+    let key_of = |r: &DivergentRow| {
+        (
+            r.workload.clone(),
+            r.objective.clone(),
+            r.epoch_ns.clone(),
+            r.policy_a.clone(),
+            r.epoch,
+            r.domain,
+        )
+    };
+    s.top.sort_by(|a, b| {
+        let da = (a.regret_a - a.regret_b).abs();
+        let db = (b.regret_a - b.regret_b).abs();
+        let acc_a = nan_zero(a.accuracy_a - a.accuracy_b).abs();
+        let acc_b = nan_zero(b.accuracy_a - b.accuracy_b).abs();
+        db.partial_cmp(&da)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| acc_b.partial_cmp(&acc_a).unwrap_or(std::cmp::Ordering::Equal))
+            .then_with(|| key_of(a).cmp(&key_of(b)))
+    });
+    s.top.truncate(10);
+    Ok(s)
+}
+
+fn nan_zero(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+/// Print a [`DiffSummary`].  The `divergent pairs` line is the
+/// greppable contract line (CI asserts on it).
+pub fn print_diff(dir_a: &Path, dir_b: &Path, s: &DiffSummary) {
+    println!("[obs diff] A={} B={}", dir_a.display(), dir_b.display());
+    println!(
+        "cell pairs aligned : {} ({} same-policy, {} cross-policy; unpaired {}+{})",
+        s.cell_pairs, s.same_policy_pairs, s.cross_policy_pairs, s.unpaired_a, s.unpaired_b
+    );
+    println!(
+        "rows aligned       : {} (only-A {}, only-B {})",
+        s.rows_aligned, s.only_a, s.only_b
+    );
+    println!("divergent pairs    : {}", s.divergent);
+    println!(
+        "regret sum         : A {:.6e}  B {:.6e}",
+        s.regret_a, s.regret_b
+    );
+    if s.top.is_empty() {
+        println!("(no divergent rows)");
+        return;
+    }
+    let rows: Vec<Vec<String>> = s
+        .top
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}/{}@{}ns", r.workload, r.objective, r.epoch_ns),
+                format!("{} vs {}", r.policy_a, r.policy_b),
+                r.epoch.to_string(),
+                r.domain.to_string(),
+                format!("{} vs {}", r.chosen_a, r.chosen_b),
+                format!("{:.3e} vs {:.3e}", r.regret_a, r.regret_b),
+                format!("{:.3} vs {:.3}", r.accuracy_a, r.accuracy_b),
+            ]
+        })
+        .collect();
+    print_table(
+        "top divergent rows (by regret delta, then accuracy delta)",
+        &["cell", "policies", "epoch", "dom", "state", "regret", "accuracy"],
+        &rows,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::decisions::{decision_csv_row, DecisionSample, DECISIONS_HEADER};
+    use crate::stats::emit::CsvTable;
+    use std::path::PathBuf;
+
+    fn write_trace(tag: &str, cells: &[(&str, &str, Vec<DecisionSample>)]) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("pcstall_diff_{}_{}", std::process::id(), tag));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut t = CsvTable::new(&DECISIONS_HEADER);
+        for (hash, policy, samples) in cells {
+            for s in samples {
+                t.push(decision_csv_row(hash, "comd", policy, "ED2P", 1000.0, s));
+            }
+        }
+        t.write(&dir.join("decisions.csv")).unwrap();
+        dir
+    }
+
+    fn sample(epoch: u64, chosen: u8, regret: f64) -> DecisionSample {
+        DecisionSample {
+            epoch,
+            chosen,
+            oracle_best: chosen,
+            regret,
+            accuracy: 0.9,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn identical_dirs_have_zero_divergence() {
+        let cells = [
+            ("aa", "STATIC-1.7", vec![sample(0, 4, 0.0), sample(1, 4, 0.0)]),
+            ("bb", "PCSTALL", vec![sample(0, 7, 0.0), sample(1, 6, 0.0)]),
+        ];
+        let a = write_trace("ida", &cells);
+        let b = write_trace("idb", &cells);
+        let s = diff_decisions(&a, &b).unwrap();
+        assert_eq!(s.cell_pairs, 2);
+        assert_eq!(s.same_policy_pairs, 2);
+        assert_eq!(s.cross_policy_pairs, 0);
+        assert_eq!(s.rows_aligned, 4);
+        assert_eq!(s.divergent, 0, "identical traces must not diverge");
+        assert_eq!((s.only_a, s.only_b), (0, 0));
+        let _ = std::fs::remove_dir_all(&a);
+        let _ = std::fs::remove_dir_all(&b);
+    }
+
+    #[test]
+    fn cross_policy_cells_pair_and_report_divergence() {
+        // dir A: STATIC baseline + CRISP; dir B: STATIC baseline + PCSTALL.
+        // STATIC pairs with itself; CRISP pairs with PCSTALL.
+        let a = write_trace(
+            "xa",
+            &[
+                ("s", "STATIC-1.7", vec![sample(0, 4, 0.0)]),
+                ("c", "CRISP", vec![sample(0, 3, 0.0), sample(1, 3, 0.0)]),
+            ],
+        );
+        let b = write_trace(
+            "xb",
+            &[
+                ("s", "STATIC-1.7", vec![sample(0, 4, 0.0)]),
+                ("p", "PCSTALL", vec![sample(0, 7, 0.0), sample(1, 3, 0.0)]),
+            ],
+        );
+        let s = diff_decisions(&a, &b).unwrap();
+        assert_eq!(s.cell_pairs, 2);
+        assert_eq!(s.cross_policy_pairs, 1);
+        assert_eq!(s.rows_aligned, 3);
+        assert_eq!(s.divergent, 1, "epoch 0 differs (3 vs 7), epoch 1 agrees");
+        assert_eq!(s.top.len(), 1);
+        assert_eq!((s.top[0].chosen_a, s.top[0].chosen_b), (3, 7));
+        assert_eq!(s.top[0].policy_a, "CRISP");
+        assert_eq!(s.top[0].policy_b, "PCSTALL");
+        let _ = std::fs::remove_dir_all(&a);
+        let _ = std::fs::remove_dir_all(&b);
+    }
+
+    #[test]
+    fn regret_sums_attribute_sides_independently() {
+        let a = write_trace("ra", &[("x", "ACCPC", vec![sample(0, 5, 0.25)])]);
+        let b = write_trace("rb", &[("y", "ACCREAC", vec![sample(0, 2, 0.75)])]);
+        let s = diff_decisions(&a, &b).unwrap();
+        assert_eq!(s.divergent, 1);
+        assert!((s.regret_a - 0.25).abs() < 1e-9);
+        assert!((s.regret_b - 0.75).abs() < 1e-9);
+        let _ = std::fs::remove_dir_all(&a);
+        let _ = std::fs::remove_dir_all(&b);
+    }
+}

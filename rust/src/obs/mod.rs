@@ -1,7 +1,8 @@
-//! Observability: deterministic simulator counters + wall-clock spans.
+//! Observability: deterministic simulator counters, wall-clock spans,
+//! and per-epoch decision traces.
 //!
-//! Two channels with deliberately different determinism contracts
-//! (ISSUE 6):
+//! Three channels with deliberately different determinism contracts
+//! (ISSUEs 6 and 7):
 //!
 //! * **Channel 1 — counters.**  The simulator unconditionally maintains
 //!   cheap `u64` counters (stall breakdown in `sim::cu`, queue-depth
@@ -25,15 +26,31 @@
 //!   `chrome://tracing`.  Timestamps are microseconds relative to the
 //!   recorder's construction instant — no absolute wall-clock values.
 //!
-//! `pcstall obs report <dir>` summarizes both channels.
+//! * **Channel 3 — decision traces.**  One [`DecisionSample`] per
+//!   domain per epoch: prediction vs outcome, the chosen ladder state,
+//!   the modal PC, and counterfactual regret against the oracle's
+//!   measured ladder (see [`decisions`]).  Same determinism contract
+//!   as channel 1; sidecars are `decisions.csv` / `decisions.ndjson`.
+//!
+//! `pcstall obs report <dir>` summarizes all channels; `pcstall obs
+//! diff <dirA> <dirB>` aligns two decision traces ([`diff`]).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::stats::emit::{print_table, CsvTable, Json};
+use crate::stats::emit::{CsvTable, Json};
 use crate::stats::RunResult;
+
+pub mod decisions;
+pub mod diff;
+pub mod report;
+
+pub use decisions::{read_decisions, DecisionRow, DecisionSample, DECISIONS_HEADER};
+pub use diff::{diff_decisions, print_diff, DiffSummary, DivergentRow};
+pub use report::report;
 
 /// Queue-depth histogram size shared by the L2-bank and DRAM-channel
 /// histograms: bucket `k` counts accesses that waited about `k` service
@@ -141,9 +158,15 @@ pub trait ObsSink: Send {
         false
     }
     fn on_epoch(&mut self, _s: &EpochSample) {}
+    /// One per-domain decision audit record (channel 3).
+    fn on_decision(&mut self, _s: &DecisionSample) {}
     fn on_run_end(&mut self, _s: &RunEndSample) {}
     /// Accumulated totals, if this sink keeps any.
     fn counters(&self) -> Option<&RunCounters> {
+        None
+    }
+    /// Accumulated decision trace, if this sink keeps one.
+    fn decisions(&self) -> Option<&[DecisionSample]> {
         None
     }
 }
@@ -154,15 +177,22 @@ pub struct NoopSink;
 
 impl ObsSink for NoopSink {}
 
-/// Accumulating sink: sums epoch samples into [`RunCounters`].
+/// Accumulating sink: sums epoch samples into [`RunCounters`] and logs
+/// decision samples in emission order (epoch-major, domain-minor).
 #[derive(Debug, Clone, Default)]
 pub struct CounterSink {
     counters: RunCounters,
+    decisions: Vec<DecisionSample>,
 }
 
 impl CounterSink {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Consume the sink, handing the decision trace over to a recorder.
+    pub fn take_decisions(&mut self) -> Vec<DecisionSample> {
+        std::mem::take(&mut self.decisions)
     }
 }
 
@@ -188,6 +218,10 @@ impl ObsSink for CounterSink {
         }
     }
 
+    fn on_decision(&mut self, s: &DecisionSample) {
+        self.decisions.push(s.clone());
+    }
+
     fn on_run_end(&mut self, s: &RunEndSample) {
         let c = &mut self.counters;
         c.l2_accesses = s.mem.l2_accesses;
@@ -207,20 +241,29 @@ impl ObsSink for CounterSink {
     fn counters(&self) -> Option<&RunCounters> {
         Some(&self.counters)
     }
+
+    fn decisions(&self) -> Option<&[DecisionSample]> {
+        Some(&self.decisions)
+    }
 }
 
 // ---------------------------------------------------------------------------
-// Recorder: collects both channels for one CLI invocation
+// Recorder: collects all channels for one CLI invocation
 // ---------------------------------------------------------------------------
 
-/// One recorded cell: counters keyed by the canonical RunKey text.
+/// One recorded cell: counters + decision trace keyed by the canonical
+/// RunKey text.
 #[derive(Debug, Clone)]
 struct CellRecord {
     key_hash: String,
     workload: String,
     policy: String,
     objective: String,
+    /// Epoch length of the cell's config (a decision-trace column: the
+    /// diff alignment key needs it, and it is not part of `RunResult`).
+    epoch_ns: f64,
     counters: RunCounters,
+    decisions: Vec<DecisionSample>,
 }
 
 /// One completed span (channel 2).
@@ -244,6 +287,11 @@ pub struct ObsRecorder {
     t0: Instant,
     cells: Mutex<BTreeMap<String, CellRecord>>,
     spans: Mutex<Vec<SpanEvent>>,
+    /// Batch accounting (the obs × cache interaction): cells that
+    /// actually executed vs cells served from the result cache, which
+    /// carry no sidecar records.
+    cells_executed: AtomicU64,
+    cells_cached: AtomicU64,
 }
 
 impl ObsRecorder {
@@ -253,6 +301,8 @@ impl ObsRecorder {
             t0: Instant::now(),
             cells: Mutex::new(BTreeMap::new()),
             spans: Mutex::new(Vec::new()),
+            cells_executed: AtomicU64::new(0),
+            cells_cached: AtomicU64::new(0),
         }
     }
 
@@ -260,16 +310,43 @@ impl ObsRecorder {
         &self.dir
     }
 
-    /// Record one executed cell's deterministic counters.
-    pub fn record_cell(&self, canonical: &str, hash: &str, r: &RunResult, counters: RunCounters) {
+    /// Record one executed cell's deterministic counters and decision
+    /// trace.
+    pub fn record_cell(
+        &self,
+        canonical: &str,
+        hash: &str,
+        r: &RunResult,
+        counters: RunCounters,
+        epoch_ns: f64,
+        decisions: Vec<DecisionSample>,
+    ) {
         let rec = CellRecord {
             key_hash: hash.to_string(),
             workload: r.workload.clone(),
             policy: r.policy.clone(),
             objective: r.objective.clone(),
+            epoch_ns,
             counters,
+            decisions,
         };
         self.cells.lock().unwrap().insert(canonical.to_string(), rec);
+    }
+
+    /// Batch accounting from the exec engine: `executed` cells ran (and
+    /// will be recorded), `cached` were served by the result cache and
+    /// are therefore *missing* from the sidecars.
+    pub fn note_batch(&self, executed: u64, cached: u64) {
+        self.cells_executed.fetch_add(executed, Ordering::Relaxed);
+        self.cells_cached.fetch_add(cached, Ordering::Relaxed);
+    }
+
+    pub fn cells_executed(&self) -> u64 {
+        self.cells_executed.load(Ordering::Relaxed)
+    }
+
+    pub fn cells_cached(&self) -> u64 {
+        self.cells_cached.load(Ordering::Relaxed)
     }
 
     /// Record one wall-clock span (channel 2).
@@ -311,6 +388,8 @@ impl ObsRecorder {
             .collect();
         Json::obj(vec![
             ("schema", Json::Num(1.0)),
+            ("cells_executed", Json::Num(self.cells_executed() as f64)),
+            ("cells_cached", Json::Num(self.cells_cached() as f64)),
             ("cells", Json::Arr(items)),
         ])
     }
@@ -369,6 +448,59 @@ impl ObsRecorder {
         t
     }
 
+    /// The decision-trace CSV (channel 3): cells in canonical-key
+    /// order, rows within a cell in emission order (epoch-major,
+    /// domain-minor) — byte-deterministic like `counters.csv`.
+    pub fn decisions_csv(&self) -> CsvTable {
+        let mut t = CsvTable::new(&DECISIONS_HEADER);
+        let cells = self.cells.lock().unwrap();
+        for rec in cells.values() {
+            for s in &rec.decisions {
+                t.push(decisions::decision_csv_row(
+                    &rec.key_hash,
+                    &rec.workload,
+                    &rec.policy,
+                    &rec.objective,
+                    rec.epoch_ns,
+                    s,
+                ));
+            }
+        }
+        t
+    }
+
+    /// The decision-trace NDJSON: a header object (schema + the batch
+    /// accounting of [`ObsRecorder::note_batch`]) followed by one
+    /// decision object per line.
+    fn decisions_ndjson_text(&self) -> String {
+        let header = Json::obj(vec![
+            ("schema", Json::Num(1.0)),
+            ("channel", Json::Str("decisions".into())),
+            ("cells_executed", Json::Num(self.cells_executed() as f64)),
+            ("cells_cached", Json::Num(self.cells_cached() as f64)),
+        ]);
+        let mut out = header.render();
+        out.push('\n');
+        let cells = self.cells.lock().unwrap();
+        for rec in cells.values() {
+            for s in &rec.decisions {
+                out.push_str(
+                    &decisions::decision_json(
+                        &rec.key_hash,
+                        &rec.workload,
+                        &rec.policy,
+                        &rec.objective,
+                        rec.epoch_ns,
+                        s,
+                    )
+                    .render(),
+                );
+                out.push('\n');
+            }
+        }
+        out
+    }
+
     /// Chrome trace-event text: a JSON array with exactly one complete
     /// event object per line, so it is both NDJSON-ish (line tools work
     /// after stripping `[`/`]`/trailing commas) and directly loadable
@@ -412,6 +544,15 @@ impl ObsRecorder {
             .write(&cp)
             .map_err(|e| format!("writing {}: {e}", cp.display()))?;
         out.push(cp);
+        let dp = self.dir.join("decisions.csv");
+        self.decisions_csv()
+            .write(&dp)
+            .map_err(|e| format!("writing {}: {e}", dp.display()))?;
+        out.push(dp);
+        let np = self.dir.join("decisions.ndjson");
+        std::fs::write(&np, self.decisions_ndjson_text())
+            .map_err(|e| format!("writing {}: {e}", np.display()))?;
+        out.push(np);
         let tp = self.dir.join("timeline.ndjson");
         std::fs::write(&tp, self.timeline_text())
             .map_err(|e| format!("writing {}: {e}", tp.display()))?;
@@ -451,243 +592,6 @@ fn counters_to_json(c: &RunCounters) -> Json {
     ])
 }
 
-// ---------------------------------------------------------------------------
-// `pcstall obs report`
-// ---------------------------------------------------------------------------
-
-fn get_u64(j: &Json, key: &str) -> u64 {
-    j.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64
-}
-
-fn get_hist(j: &Json, key: &str) -> Vec<u64> {
-    j.get(key)
-        .and_then(Json::as_arr)
-        .map(|a| a.iter().map(|x| x.as_f64().unwrap_or(0.0) as u64).collect())
-        .unwrap_or_default()
-}
-
-fn add_hist(into: &mut Vec<u64>, from: &[u64]) {
-    if into.len() < from.len() {
-        into.resize(from.len(), 0);
-    }
-    for (a, &b) in into.iter_mut().zip(from) {
-        *a += b;
-    }
-}
-
-fn fmt_hist(h: &[u64]) -> String {
-    let nonzero: Vec<String> = h
-        .iter()
-        .enumerate()
-        .filter(|(_, &v)| v > 0)
-        .map(|(i, v)| format!("{i}:{v}"))
-        .collect();
-    if nonzero.is_empty() {
-        "-".into()
-    } else {
-        nonzero.join(" ")
-    }
-}
-
-fn pct(part: u64, total: u64) -> String {
-    if total == 0 {
-        "-".into()
-    } else {
-        format!("{:.1}%", 100.0 * part as f64 / total as f64)
-    }
-}
-
-/// Parse a counter sidecar back into per-cell totals.
-fn read_counters(dir: &Path) -> Result<Vec<(String, RunCounters)>, String> {
-    let path = dir.join("counters.json");
-    let text = std::fs::read_to_string(&path).map_err(|e| {
-        format!(
-            "reading {}: {e} (run with `--obs {}` first)",
-            path.display(),
-            dir.display()
-        )
-    })?;
-    let doc = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
-    let cells = doc
-        .get("cells")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| format!("{}: no \"cells\" array", path.display()))?;
-    let mut out = Vec::new();
-    for cell in cells {
-        let label = format!(
-            "{}/{}/{}",
-            cell.get("workload").and_then(Json::as_str).unwrap_or("?"),
-            cell.get("policy").and_then(Json::as_str).unwrap_or("?"),
-            cell.get("objective").and_then(Json::as_str).unwrap_or("?"),
-        );
-        let c = cell
-            .get("counters")
-            .ok_or_else(|| format!("{}: cell without counters", path.display()))?;
-        let rc = RunCounters {
-            epochs: get_u64(c, "epochs"),
-            instr: get_u64(c, "instr"),
-            cycles: get_u64(c, "cycles"),
-            issued_cycles: get_u64(c, "issued_cycles"),
-            stall_waitcnt_ps: get_u64(c, "stall_waitcnt_ps"),
-            stall_mem_outstanding_ps: get_u64(c, "stall_mem_outstanding_ps"),
-            stall_issue_empty_ps: get_u64(c, "stall_issue_empty_ps"),
-            l2_accesses: get_u64(c, "l2_accesses"),
-            l2_hits: get_u64(c, "l2_hits"),
-            l2_misses: get_u64(c, "l2_misses"),
-            dram_accesses: get_u64(c, "dram_accesses"),
-            l2_queue_depth_hist: get_hist(c, "l2_queue_depth_hist"),
-            dram_queue_depth_hist: get_hist(c, "dram_queue_depth_hist"),
-            pc_hits: get_u64(c, "pc_hits"),
-            pc_misses: get_u64(c, "pc_misses"),
-            pc_evictions: get_u64(c, "pc_evictions"),
-            transitions_per_domain: get_hist(c, "transitions_per_domain"),
-        };
-        out.push((label, rc));
-    }
-    Ok(out)
-}
-
-/// Aggregated span stats from `timeline.ndjson` (absent file → None).
-fn read_spans(dir: &Path) -> Option<BTreeMap<(String, String), (u64, u64, u64)>> {
-    let text = std::fs::read_to_string(dir.join("timeline.ndjson")).ok()?;
-    // (cat, name) -> (count, total_us, max_us)
-    let mut agg: BTreeMap<(String, String), (u64, u64, u64)> = BTreeMap::new();
-    for line in text.lines() {
-        let line = line.trim().trim_end_matches(',');
-        if line.is_empty() || line == "[" || line == "]" {
-            continue;
-        }
-        let Ok(ev) = Json::parse(line) else { continue };
-        let cat = ev.get("cat").and_then(Json::as_str).unwrap_or("?").to_string();
-        let name = ev.get("name").and_then(Json::as_str).unwrap_or("?").to_string();
-        let dur = get_u64(&ev, "dur");
-        let e = agg.entry((cat, name)).or_insert((0, 0, 0));
-        e.0 += 1;
-        e.1 += dur;
-        e.2 = e.2.max(dur);
-    }
-    Some(agg)
-}
-
-/// `pcstall obs report <dir>`: counter totals + top spans.
-pub fn report(dir: &Path) -> Result<(), String> {
-    let cells = read_counters(dir)?;
-    println!("[obs report] {} — {} cell(s)", dir.display(), cells.len());
-
-    let mut total = RunCounters::default();
-    for (_, c) in &cells {
-        total.epochs += c.epochs;
-        total.instr += c.instr;
-        total.cycles += c.cycles;
-        total.issued_cycles += c.issued_cycles;
-        total.stall_waitcnt_ps += c.stall_waitcnt_ps;
-        total.stall_mem_outstanding_ps += c.stall_mem_outstanding_ps;
-        total.stall_issue_empty_ps += c.stall_issue_empty_ps;
-        total.l2_accesses += c.l2_accesses;
-        total.l2_hits += c.l2_hits;
-        total.l2_misses += c.l2_misses;
-        total.dram_accesses += c.dram_accesses;
-        add_hist(&mut total.l2_queue_depth_hist, &c.l2_queue_depth_hist);
-        add_hist(&mut total.dram_queue_depth_hist, &c.dram_queue_depth_hist);
-        total.pc_hits += c.pc_hits;
-        total.pc_misses += c.pc_misses;
-        total.pc_evictions += c.pc_evictions;
-        add_hist(
-            &mut total.transitions_per_domain,
-            &c.transitions_per_domain,
-        );
-    }
-
-    let stall = total.stall_total_ps();
-    let rows = vec![
-        vec!["epochs".into(), total.epochs.to_string(), String::new()],
-        vec!["instr".into(), total.instr.to_string(), String::new()],
-        vec![
-            "issued_cycles / cycles".into(),
-            format!("{} / {}", total.issued_cycles, total.cycles),
-            pct(total.issued_cycles, total.cycles),
-        ],
-        vec![
-            "stall: waitcnt".into(),
-            format!("{} ps", total.stall_waitcnt_ps),
-            pct(total.stall_waitcnt_ps, stall),
-        ],
-        vec![
-            "stall: mem outstanding".into(),
-            format!("{} ps", total.stall_mem_outstanding_ps),
-            pct(total.stall_mem_outstanding_ps, stall),
-        ],
-        vec![
-            "stall: issue empty".into(),
-            format!("{} ps", total.stall_issue_empty_ps),
-            pct(total.stall_issue_empty_ps, stall),
-        ],
-        vec![
-            "l2 hits / accesses".into(),
-            format!("{} / {}", total.l2_hits, total.l2_accesses),
-            pct(total.l2_hits, total.l2_accesses),
-        ],
-        vec![
-            "dram accesses".into(),
-            total.dram_accesses.to_string(),
-            pct(total.dram_accesses, total.l2_accesses),
-        ],
-        vec![
-            "l2 queue-depth hist".into(),
-            fmt_hist(&total.l2_queue_depth_hist),
-            String::new(),
-        ],
-        vec![
-            "dram queue-depth hist".into(),
-            fmt_hist(&total.dram_queue_depth_hist),
-            String::new(),
-        ],
-        vec![
-            "pc table hits / lookups".into(),
-            format!("{} / {}", total.pc_hits, total.pc_hits + total.pc_misses),
-            pct(total.pc_hits, total.pc_hits + total.pc_misses),
-        ],
-        vec![
-            "pc table evictions".into(),
-            total.pc_evictions.to_string(),
-            String::new(),
-        ],
-        vec![
-            "dvfs transitions/domain".into(),
-            fmt_hist(&total.transitions_per_domain),
-            String::new(),
-        ],
-    ];
-    print_table("counter totals", &["counter", "value", "share"], &rows);
-
-    match read_spans(dir) {
-        Some(agg) if !agg.is_empty() => {
-            let mut spans: Vec<_> = agg.into_iter().collect();
-            spans.sort_by(|a, b| b.1 .1.cmp(&a.1 .1).then_with(|| a.0.cmp(&b.0)));
-            let rows: Vec<Vec<String>> = spans
-                .iter()
-                .take(12)
-                .map(|((cat, name), (count, total_us, max_us))| {
-                    vec![
-                        format!("{cat}/{name}"),
-                        count.to_string(),
-                        format!("{:.3}", *total_us as f64 / 1e3),
-                        format!("{:.3}", *total_us as f64 / 1e3 / (*count).max(1) as f64),
-                        format!("{:.3}", *max_us as f64 / 1e3),
-                    ]
-                })
-                .collect();
-            print_table(
-                "top spans (by total wall-clock)",
-                &["span", "count", "total_ms", "mean_ms", "max_ms"],
-                &rows,
-            );
-        }
-        _ => println!("(no timeline.ndjson — span channel empty)"),
-    }
-    Ok(())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -707,11 +611,23 @@ mod tests {
         }
     }
 
+    fn a_decision(epoch: u64, domain: usize) -> DecisionSample {
+        DecisionSample {
+            epoch,
+            domain,
+            chosen: 5,
+            oracle_best: 5,
+            accuracy: 0.75,
+            ..Default::default()
+        }
+    }
+
     #[test]
     fn noop_sink_is_disabled_and_counterless() {
         let s = NoopSink;
         assert!(!s.enabled());
         assert!(s.counters().is_none());
+        assert!(s.decisions().is_none());
     }
 
     #[test]
@@ -757,6 +673,19 @@ mod tests {
     }
 
     #[test]
+    fn counter_sink_logs_decisions_in_order() {
+        let mut s = CounterSink::new();
+        s.on_decision(&a_decision(0, 0));
+        s.on_decision(&a_decision(0, 1));
+        s.on_decision(&a_decision(1, 0));
+        let d = s.decisions().unwrap();
+        assert_eq!(d.len(), 3);
+        assert_eq!((d[1].epoch, d[1].domain), (0, 1));
+        assert_eq!(s.take_decisions().len(), 3);
+        assert_eq!(s.decisions().unwrap().len(), 0, "take drains the log");
+    }
+
+    #[test]
     fn recorder_counters_json_is_key_sorted_and_stable() {
         let rec = ObsRecorder::new(PathBuf::from("/nonexistent-unused"));
         let c = RunCounters {
@@ -764,8 +693,8 @@ mod tests {
             ..Default::default()
         };
         // inserted out of order; emission must sort by canonical key
-        rec.record_cell("v1|wl=zz|cfg=02", "beef", &run_result(), c.clone());
-        rec.record_cell("v1|wl=aa|cfg=01", "cafe", &run_result(), c);
+        rec.record_cell("v1|wl=zz|cfg=02", "beef", &run_result(), c.clone(), 1000.0, vec![]);
+        rec.record_cell("v1|wl=aa|cfg=01", "cafe", &run_result(), c, 1000.0, vec![]);
         let a = rec.counters_json().render();
         let b = rec.counters_json().render();
         assert_eq!(a, b, "re-rendering must be byte-identical");
@@ -773,6 +702,7 @@ mod tests {
         let second = a.find("wl=zz").unwrap();
         assert!(first < second, "cells must be canonical-key sorted");
         assert!(!a.contains("\"ts\""), "counter sidecar must carry no timestamps");
+        assert!(a.contains("\"cells_executed\""), "batch accounting in header");
     }
 
     #[test]
@@ -782,9 +712,41 @@ mod tests {
             epochs: 1,
             ..Default::default()
         };
-        rec.record_cell("k", "h", &run_result(), c.clone());
-        rec.record_cell("k", "h", &run_result(), c);
+        rec.record_cell("k", "h", &run_result(), c.clone(), 1000.0, vec![]);
+        rec.record_cell("k", "h", &run_result(), c, 1000.0, vec![]);
         assert_eq!(rec.cell_count(), 1);
+    }
+
+    #[test]
+    fn recorder_decision_sidecars_are_key_sorted_and_stable() {
+        let rec = ObsRecorder::new(PathBuf::from("/nonexistent-unused"));
+        let c = RunCounters::default();
+        rec.note_batch(2, 1);
+        rec.record_cell(
+            "v1|wl=zz",
+            "beef",
+            &run_result(),
+            c.clone(),
+            1000.0,
+            vec![a_decision(0, 0), a_decision(0, 1), a_decision(1, 0)],
+        );
+        rec.record_cell("v1|wl=aa", "cafe", &run_result(), c, 10000.0, vec![a_decision(0, 0)]);
+        let t = rec.decisions_csv();
+        assert_eq!(t.header, DECISIONS_HEADER.map(String::from).to_vec());
+        assert_eq!(t.rows.len(), 4);
+        // canonical-key order: the wl=aa cell's single row comes first
+        assert_eq!(t.rows[0][0], "cafe");
+        assert_eq!(t.rows[0][4], "10000");
+        assert_eq!(t.rows[1][0], "beef");
+        assert_eq!(t.to_string(), rec.decisions_csv().to_string());
+        let nd = rec.decisions_ndjson_text();
+        let first = nd.lines().next().unwrap();
+        assert!(first.contains("\"cells_executed\":2"), "{first}");
+        assert!(first.contains("\"cells_cached\":1"), "{first}");
+        assert_eq!(nd.lines().count(), 1 + 4, "header + one line per sample");
+        for line in nd.lines() {
+            Json::parse(line).expect("every ndjson line parses standalone");
+        }
     }
 
     #[test]
@@ -812,13 +774,5 @@ mod tests {
         // the whole document is also one valid JSON array
         let doc = Json::parse(&text).unwrap();
         assert_eq!(doc.as_arr().map(<[Json]>::len), Some(2));
-    }
-
-    #[test]
-    fn hist_formatting_skips_zero_buckets() {
-        assert_eq!(fmt_hist(&[0, 3, 0, 1]), "1:3 3:1");
-        assert_eq!(fmt_hist(&[0, 0]), "-");
-        assert_eq!(pct(1, 4), "25.0%");
-        assert_eq!(pct(0, 0), "-");
     }
 }

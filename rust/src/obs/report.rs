@@ -1,0 +1,383 @@
+//! `pcstall obs report` — human-readable summary of all obs channels:
+//! counter totals (channel 1), top wall-clock spans (channel 2), and —
+//! when a `decisions.csv` sidecar is present — the decision-trace
+//! section (channel 3): accuracy histogram, worst-regret epochs, and
+//! the per-PC mispredict leaderboard joined against the PC-table
+//! traffic counters.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::stats::emit::{print_table, Json};
+
+use super::decisions::{read_decisions, DecisionRow};
+use super::RunCounters;
+
+pub(crate) fn get_u64(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64
+}
+
+fn get_hist(j: &Json, key: &str) -> Vec<u64> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().map(|x| x.as_f64().unwrap_or(0.0) as u64).collect())
+        .unwrap_or_default()
+}
+
+fn add_hist(into: &mut Vec<u64>, from: &[u64]) {
+    if into.len() < from.len() {
+        into.resize(from.len(), 0);
+    }
+    for (a, &b) in into.iter_mut().zip(from) {
+        *a += b;
+    }
+}
+
+fn fmt_hist(h: &[u64]) -> String {
+    let nonzero: Vec<String> = h
+        .iter()
+        .enumerate()
+        .filter(|(_, &v)| v > 0)
+        .map(|(i, v)| format!("{i}:{v}"))
+        .collect();
+    if nonzero.is_empty() {
+        "-".into()
+    } else {
+        nonzero.join(" ")
+    }
+}
+
+fn pct(part: u64, total: u64) -> String {
+    if total == 0 {
+        "-".into()
+    } else {
+        format!("{:.1}%", 100.0 * part as f64 / total as f64)
+    }
+}
+
+/// Parse a counter sidecar back into per-cell totals, labelled
+/// `workload/policy/objective`.
+fn read_counters(dir: &Path) -> Result<Vec<(String, RunCounters)>, String> {
+    let path = dir.join("counters.json");
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        format!(
+            "reading {}: {e} (run with `--obs {}` first)",
+            path.display(),
+            dir.display()
+        )
+    })?;
+    let doc = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    let cells = doc
+        .get("cells")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{}: no \"cells\" array", path.display()))?;
+    let mut out = Vec::new();
+    for cell in cells {
+        let label = format!(
+            "{}/{}/{}",
+            cell.get("workload").and_then(Json::as_str).unwrap_or("?"),
+            cell.get("policy").and_then(Json::as_str).unwrap_or("?"),
+            cell.get("objective").and_then(Json::as_str).unwrap_or("?"),
+        );
+        let c = cell
+            .get("counters")
+            .ok_or_else(|| format!("{}: cell without counters", path.display()))?;
+        let rc = RunCounters {
+            epochs: get_u64(c, "epochs"),
+            instr: get_u64(c, "instr"),
+            cycles: get_u64(c, "cycles"),
+            issued_cycles: get_u64(c, "issued_cycles"),
+            stall_waitcnt_ps: get_u64(c, "stall_waitcnt_ps"),
+            stall_mem_outstanding_ps: get_u64(c, "stall_mem_outstanding_ps"),
+            stall_issue_empty_ps: get_u64(c, "stall_issue_empty_ps"),
+            l2_accesses: get_u64(c, "l2_accesses"),
+            l2_hits: get_u64(c, "l2_hits"),
+            l2_misses: get_u64(c, "l2_misses"),
+            dram_accesses: get_u64(c, "dram_accesses"),
+            l2_queue_depth_hist: get_hist(c, "l2_queue_depth_hist"),
+            dram_queue_depth_hist: get_hist(c, "dram_queue_depth_hist"),
+            pc_hits: get_u64(c, "pc_hits"),
+            pc_misses: get_u64(c, "pc_misses"),
+            pc_evictions: get_u64(c, "pc_evictions"),
+            transitions_per_domain: get_hist(c, "transitions_per_domain"),
+        };
+        out.push((label, rc));
+    }
+    Ok(out)
+}
+
+/// Aggregated span stats from `timeline.ndjson` (absent file → None).
+fn read_spans(dir: &Path) -> Option<BTreeMap<(String, String), (u64, u64, u64)>> {
+    let text = std::fs::read_to_string(dir.join("timeline.ndjson")).ok()?;
+    // (cat, name) -> (count, total_us, max_us)
+    let mut agg: BTreeMap<(String, String), (u64, u64, u64)> = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        if line.is_empty() || line == "[" || line == "]" {
+            continue;
+        }
+        let Ok(ev) = Json::parse(line) else { continue };
+        let cat = ev.get("cat").and_then(Json::as_str).unwrap_or("?").to_string();
+        let name = ev.get("name").and_then(Json::as_str).unwrap_or("?").to_string();
+        let dur = get_u64(&ev, "dur");
+        let e = agg.entry((cat, name)).or_insert((0, 0, 0));
+        e.0 += 1;
+        e.1 += dur;
+        e.2 = e.2.max(dur);
+    }
+    Some(agg)
+}
+
+/// `pcstall obs report <dir>`: counter totals + decision trace + spans.
+pub fn report(dir: &Path) -> Result<(), String> {
+    let cells = read_counters(dir)?;
+    println!("[obs report] {} — {} cell(s)", dir.display(), cells.len());
+
+    let mut total = RunCounters::default();
+    for (_, c) in &cells {
+        total.epochs += c.epochs;
+        total.instr += c.instr;
+        total.cycles += c.cycles;
+        total.issued_cycles += c.issued_cycles;
+        total.stall_waitcnt_ps += c.stall_waitcnt_ps;
+        total.stall_mem_outstanding_ps += c.stall_mem_outstanding_ps;
+        total.stall_issue_empty_ps += c.stall_issue_empty_ps;
+        total.l2_accesses += c.l2_accesses;
+        total.l2_hits += c.l2_hits;
+        total.l2_misses += c.l2_misses;
+        total.dram_accesses += c.dram_accesses;
+        add_hist(&mut total.l2_queue_depth_hist, &c.l2_queue_depth_hist);
+        add_hist(&mut total.dram_queue_depth_hist, &c.dram_queue_depth_hist);
+        total.pc_hits += c.pc_hits;
+        total.pc_misses += c.pc_misses;
+        total.pc_evictions += c.pc_evictions;
+        add_hist(
+            &mut total.transitions_per_domain,
+            &c.transitions_per_domain,
+        );
+    }
+
+    let stall = total.stall_total_ps();
+    let rows = vec![
+        vec!["epochs".into(), total.epochs.to_string(), String::new()],
+        vec!["instr".into(), total.instr.to_string(), String::new()],
+        vec![
+            "issued_cycles / cycles".into(),
+            format!("{} / {}", total.issued_cycles, total.cycles),
+            pct(total.issued_cycles, total.cycles),
+        ],
+        vec![
+            "stall: waitcnt".into(),
+            format!("{} ps", total.stall_waitcnt_ps),
+            pct(total.stall_waitcnt_ps, stall),
+        ],
+        vec![
+            "stall: mem outstanding".into(),
+            format!("{} ps", total.stall_mem_outstanding_ps),
+            pct(total.stall_mem_outstanding_ps, stall),
+        ],
+        vec![
+            "stall: issue empty".into(),
+            format!("{} ps", total.stall_issue_empty_ps),
+            pct(total.stall_issue_empty_ps, stall),
+        ],
+        vec![
+            "l2 hits / accesses".into(),
+            format!("{} / {}", total.l2_hits, total.l2_accesses),
+            pct(total.l2_hits, total.l2_accesses),
+        ],
+        vec![
+            "dram accesses".into(),
+            total.dram_accesses.to_string(),
+            pct(total.dram_accesses, total.l2_accesses),
+        ],
+        vec![
+            "l2 queue-depth hist".into(),
+            fmt_hist(&total.l2_queue_depth_hist),
+            String::new(),
+        ],
+        vec![
+            "dram queue-depth hist".into(),
+            fmt_hist(&total.dram_queue_depth_hist),
+            String::new(),
+        ],
+        vec![
+            "pc table hits / lookups".into(),
+            format!("{} / {}", total.pc_hits, total.pc_hits + total.pc_misses),
+            pct(total.pc_hits, total.pc_hits + total.pc_misses),
+        ],
+        vec![
+            "pc table evictions".into(),
+            total.pc_evictions.to_string(),
+            String::new(),
+        ],
+        vec![
+            "dvfs transitions/domain".into(),
+            fmt_hist(&total.transitions_per_domain),
+            String::new(),
+        ],
+    ];
+    print_table("counter totals", &["counter", "value", "share"], &rows);
+
+    match read_decisions(dir) {
+        Ok(rows) if !rows.is_empty() => decision_section(&rows, &cells),
+        _ => println!("(no decisions.csv — decision channel empty)"),
+    }
+
+    match read_spans(dir) {
+        Some(agg) if !agg.is_empty() => {
+            let mut spans: Vec<_> = agg.into_iter().collect();
+            spans.sort_by(|a, b| b.1 .1.cmp(&a.1 .1).then_with(|| a.0.cmp(&b.0)));
+            let rows: Vec<Vec<String>> = spans
+                .iter()
+                .take(12)
+                .map(|((cat, name), (count, total_us, max_us))| {
+                    vec![
+                        format!("{cat}/{name}"),
+                        count.to_string(),
+                        format!("{:.3}", *total_us as f64 / 1e3),
+                        format!("{:.3}", *total_us as f64 / 1e3 / (*count).max(1) as f64),
+                        format!("{:.3}", *max_us as f64 / 1e3),
+                    ]
+                })
+                .collect();
+            print_table(
+                "top spans (by total wall-clock)",
+                &["span", "count", "total_ms", "mean_ms", "max_ms"],
+                &rows,
+            );
+        }
+        _ => println!("(no timeline.ndjson — span channel empty)"),
+    }
+    Ok(())
+}
+
+/// Relative mispredict magnitude of one row (1 − accuracy of that
+/// domain's forecast, computed from the row's own pred/actual pair).
+fn row_err(r: &DecisionRow) -> f64 {
+    let m = r.pred_instr.max(r.actual_instr);
+    if m < 1.0 {
+        0.0
+    } else {
+        ((r.pred_instr - r.actual_instr).abs() / m).clamp(0.0, 1.0)
+    }
+}
+
+/// Channel-3 report section: accuracy histogram, top worst-regret
+/// epochs, per-PC mispredict leaderboard.
+fn decision_section(rows: &[DecisionRow], counters: &[(String, RunCounters)]) {
+    // -- accuracy histogram over per-epoch values (the accuracy column
+    // repeats on every domain row of an epoch: dedupe by cell + epoch).
+    let mut seen = std::collections::BTreeSet::new();
+    let mut hist = [0u64; 10];
+    let mut nan = 0u64;
+    for r in rows {
+        if !seen.insert((r.cell_id(), r.epoch)) {
+            continue;
+        }
+        if r.accuracy.is_finite() {
+            let b = ((r.accuracy * 10.0) as usize).min(9);
+            hist[b] += 1;
+        } else {
+            nan += 1;
+        }
+    }
+    let total_epochs: u64 = hist.iter().sum();
+    let hist_rows: Vec<Vec<String>> = (0..10)
+        .map(|b| {
+            vec![
+                format!("[{:.1}, {:.1})", b as f64 / 10.0, (b + 1) as f64 / 10.0),
+                hist[b].to_string(),
+                pct(hist[b], total_epochs),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!("decision trace: epoch accuracy histogram ({total_epochs} epochs, {nan} unscored)"),
+        &["accuracy", "epochs", "share"],
+        &hist_rows,
+    );
+
+    // -- top-K worst-regret (cell, epoch, domain) rows.
+    let mut by_regret: Vec<&DecisionRow> = rows.iter().filter(|r| r.regret > 0.0).collect();
+    by_regret.sort_by(|a, b| {
+        b.regret
+            .partial_cmp(&a.regret)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| (&a.workload, &a.policy, a.epoch).cmp(&(&b.workload, &b.policy, b.epoch)))
+    });
+    if by_regret.is_empty() {
+        println!("(no nonzero regret — no oracle-laddered cells in this trace)");
+    } else {
+        let rrows: Vec<Vec<String>> = by_regret
+            .iter()
+            .take(8)
+            .map(|r| {
+                vec![
+                    format!("{}/{}/{}", r.workload, r.policy, r.objective),
+                    r.epoch.to_string(),
+                    r.domain.to_string(),
+                    format!("{} -> {}", r.chosen, r.oracle_best),
+                    format!("{:.3e}", r.regret),
+                    format!("{:.3}", r.accuracy),
+                ]
+            })
+            .collect();
+        print_table(
+            "decision trace: worst-regret epochs",
+            &["cell", "epoch", "dom", "chosen->best", "regret", "accuracy"],
+            &rrows,
+        );
+    }
+
+    // -- per-PC mispredict leaderboard, joined per cell against the
+    // PC-table traffic counters from counters.json.
+    let mut by_pc: BTreeMap<(String, u32), (u64, f64, f64)> = BTreeMap::new();
+    for r in rows {
+        let Some(pc) = r.pc else { continue };
+        let label = format!("{}/{}/{}", r.workload, r.policy, r.objective);
+        let e = by_pc.entry((label, pc)).or_insert((0, 0.0, 0.0));
+        e.0 += 1;
+        e.1 += row_err(r);
+        e.2 += r.regret;
+    }
+    if by_pc.is_empty() {
+        println!("(no PC-keyed cells in this trace — leaderboard empty)");
+        return;
+    }
+    let pc_counts: BTreeMap<&str, &RunCounters> =
+        counters.iter().map(|(l, c)| (l.as_str(), c)).collect();
+    let mut board: Vec<_> = by_pc.into_iter().collect();
+    // worst mean mispredict first; count then key breaks ties
+    board.sort_by(|a, b| {
+        let ea = a.1 .1 / a.1 .0 as f64;
+        let eb = b.1 .1 / b.1 .0 as f64;
+        eb.partial_cmp(&ea)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| b.1 .0.cmp(&a.1 .0))
+            .then_with(|| a.0.cmp(&b.0))
+    });
+    let prows: Vec<Vec<String>> = board
+        .iter()
+        .take(10)
+        .map(|((label, pc), (n, err_sum, regret_sum))| {
+            let hit = pc_counts
+                .get(label.as_str())
+                .map(|c| pct(c.pc_hits, c.pc_hits + c.pc_misses))
+                .unwrap_or_else(|| "-".into());
+            vec![
+                label.clone(),
+                format!("0x{pc:x}"),
+                n.to_string(),
+                format!("{:.3}", err_sum / *n as f64),
+                format!("{:.3e}", regret_sum),
+                hit,
+            ]
+        })
+        .collect();
+    print_table(
+        "decision trace: per-PC mispredict leaderboard",
+        &["cell", "pc", "epochs", "mean_err", "regret", "cell_pc_hit%"],
+        &prows,
+    );
+}

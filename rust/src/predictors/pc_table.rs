@@ -155,6 +155,22 @@ impl PcTables {
         self.tables.len()
     }
 
+    /// Mask an instruction PC down to the base PC of its aliasing
+    /// bucket (the first instruction whose table slot it shares).  Two
+    /// PCs with equal `bucket_base_pc` are the same entry to the table,
+    /// so the decision trace groups mispredictions by this value rather
+    /// than by raw PC.  Inverse of `Table::index`'s byte-shift:
+    /// byte-PC = pc << 2, bucket = byte-PC >> offset_bits, so the
+    /// instruction-PC granule is `offset_bits − 2` low bits.
+    pub fn bucket_base_pc(&self, pc: u32) -> u32 {
+        let offset_bits = match self.tables.first() {
+            Some(t) => t.offset_bits,
+            None => return pc,
+        };
+        let shift = offset_bits.saturating_sub(2).min(31);
+        (pc >> shift) << shift
+    }
+
     /// Aggregate (hits, misses, evictions) over all tables — the obs
     /// channel-1 PC-table counters.
     pub fn counts(&self) -> (u64, u64, u64) {
@@ -224,6 +240,21 @@ mod tests {
         let mut t = PcTables::new(&c, 1, 4);
         t.update_wf(0, 0, 10, SensEstimate::new(5.0, 0.0));
         assert_eq!(t.lookup_wf(0, 0, 0, 11).sens, 0.0); // different bucket
+    }
+
+    #[test]
+    fn bucket_base_pc_matches_table_aliasing() {
+        // default offset 4 bits over byte PCs = 4 instructions per bucket
+        let t = PcTables::new(&cfg(), 1, 4);
+        assert_eq!(t.bucket_base_pc(100), 100);
+        assert_eq!(t.bucket_base_pc(101), 100);
+        assert_eq!(t.bucket_base_pc(103), 100);
+        assert_eq!(t.bucket_base_pc(104), 104);
+        // offset 0: every instruction PC is its own bucket
+        let mut c = cfg();
+        c.pc_offset_bits = 0;
+        let t0 = PcTables::new(&c, 1, 4);
+        assert_eq!(t0.bucket_base_pc(101), 101);
     }
 
     #[test]

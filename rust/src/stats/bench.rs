@@ -1,8 +1,13 @@
 //! Self-contained micro-benchmark driver (criterion is unavailable in
 //! this offline environment).  Provides warmup, repeated timed samples,
-//! and median/MAD reporting; used by every target in `rust/benches/`.
+//! median/MAD reporting, and a machine-readable trajectory emitter
+//! ([`write_bench_json`]) so CI can archive per-commit bench results;
+//! used by every target in `rust/benches/`.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::stats::emit::Json;
 
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
@@ -22,6 +27,19 @@ impl BenchResult {
 
     pub fn p90_ns(&self) -> f64 {
         percentile(&self.samples_ns, 0.9)
+    }
+
+    /// Summary object for the bench-trajectory artifact: the quantiles
+    /// plus the sample count, but not the raw samples (keeps per-commit
+    /// artifacts small and diffable).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("median_ns", Json::Num(self.median_ns())),
+            ("p10_ns", Json::Num(self.p10_ns())),
+            ("p90_ns", Json::Num(self.p90_ns())),
+            ("samples", Json::Num(self.samples_ns.len() as f64)),
+        ])
     }
 
     pub fn report(&self) {
@@ -91,6 +109,33 @@ pub fn bench_cfg<F: FnMut()>(
     r
 }
 
+/// Write the bench-trajectory artifact: schema-versioned JSON with one
+/// entry per target.  The bytes carry no timestamps — run metadata
+/// (commit, host, …) is passed in by the caller so the file stays
+/// deterministic for a fixed `meta` + result set.
+pub fn write_bench_json(
+    path: &Path,
+    suite: &str,
+    meta: &[(&str, &str)],
+    results: &[BenchResult],
+) -> std::io::Result<()> {
+    let meta_obj = Json::Obj(
+        meta.iter()
+            .map(|(k, v)| (k.to_string(), Json::Str(v.to_string())))
+            .collect(),
+    );
+    let j = Json::obj(vec![
+        ("schema", Json::Num(1.0)),
+        ("suite", Json::Str(suite.to_string())),
+        ("meta", meta_obj),
+        (
+            "targets",
+            Json::Arr(results.iter().map(BenchResult::to_json).collect()),
+        ),
+    ]);
+    j.write(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +164,36 @@ mod tests {
         assert!(r.p10_ns() <= r.median_ns());
         assert!(r.median_ns() <= r.p90_ns());
         assert_eq!(r.median_ns(), 3.0);
+    }
+
+    #[test]
+    fn bench_json_is_deterministic_and_timestamp_free() {
+        let rs = [
+            BenchResult {
+                name: "epoch mixed".into(),
+                samples_ns: vec![3.0, 1.0, 2.0],
+            },
+            BenchResult {
+                name: "dvfs_step".into(),
+                samples_ns: vec![10.0],
+            },
+        ];
+        let dir = std::env::temp_dir().join(format!("pcstall_bench_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let p1 = dir.join("a.json");
+        let p2 = dir.join("b.json");
+        write_bench_json(&p1, "sim_hotpath", &[("commit", "abc123")], &rs).unwrap();
+        write_bench_json(&p2, "sim_hotpath", &[("commit", "abc123")], &rs).unwrap();
+        let a = std::fs::read_to_string(&p1).unwrap();
+        let b = std::fs::read_to_string(&p2).unwrap();
+        assert_eq!(a, b, "same inputs must give identical bytes");
+        assert!(a.contains("\"schema\":1"));
+        assert!(a.contains("\"suite\":\"sim_hotpath\""));
+        assert!(a.contains("\"commit\":\"abc123\""));
+        assert!(a.contains("\"median_ns\":2"));
+        assert!(a.contains("\"samples\":3"));
+        assert!(!a.contains("\"ts\""), "no timestamps in the bytes");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

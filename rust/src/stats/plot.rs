@@ -628,6 +628,212 @@ pub fn emit_plot_scripts(
     Ok((gp, py))
 }
 
+// ---------------------------------------------------------------------------
+// `pcstall obs plot`: decision-trace timeline figures
+// ---------------------------------------------------------------------------
+
+/// Panels per decision-timeline figure; cells beyond the cap are dropped
+/// (reported on stdout — never silently).
+const MAX_TIMELINE_PANELS: usize = 6;
+
+/// One cell's aggregated timeline: per epoch, the epoch-level accuracy
+/// and the mean chosen frequency (GHz) across domains.
+struct CellTimeline {
+    title: String,
+    /// `(epoch, accuracy, mean_ghz)` sorted by epoch.
+    points: Vec<(u64, f64, f64)>,
+}
+
+/// gnuplot missing-data token for non-finite values.
+fn gnum(v: f64) -> String {
+    if v.is_finite() {
+        num(v)
+    } else {
+        "NaN".into()
+    }
+}
+
+/// Python literal for possibly-non-finite values (`nan` is defined in
+/// the emitted script's prologue).
+fn pynum(v: f64) -> String {
+    if v.is_finite() {
+        num(v)
+    } else {
+        "nan".into()
+    }
+}
+
+fn decision_timelines(rows: &[crate::obs::DecisionRow]) -> Vec<CellTimeline> {
+    use std::collections::BTreeMap;
+    // cell -> epoch -> (accuracy, freq sum, domain count)
+    let mut cells: BTreeMap<(String, String, String, String), BTreeMap<u64, (f64, f64, usize)>> =
+        BTreeMap::new();
+    for r in rows {
+        let e = cells
+            .entry(r.cell_id())
+            .or_default()
+            .entry(r.epoch)
+            .or_insert((f64::NAN, 0.0, 0));
+        e.0 = r.accuracy; // epoch-level, identical on every domain row
+        e.1 += crate::power::params::FREQS_GHZ[(r.chosen as usize).min(
+            crate::power::params::N_FREQ - 1,
+        )];
+        e.2 += 1;
+    }
+    cells
+        .into_iter()
+        .map(|((wl, obj, ens, pol), epochs)| CellTimeline {
+            title: format!("{wl} {pol} {obj} @{ens}ns"),
+            points: epochs
+                .into_iter()
+                .map(|(ep, (acc, fsum, n))| (ep, acc, fsum / n.max(1) as f64))
+                .collect(),
+        })
+        .collect()
+}
+
+fn render_timeline_gnuplot(panels: &[CellTimeline]) -> String {
+    let (rows, cols) = layout(panels.len());
+    let (w, h) = (520 * cols, 390 * rows);
+    let mut out = String::new();
+    let _ = writeln!(out, "# decision-trace timeline — generated by `pcstall obs plot`");
+    let _ = writeln!(
+        out,
+        "# render: gnuplot <this file>   (writes decisions_timeline.png into the cwd)"
+    );
+    let _ = writeln!(out, "# columns: epoch accuracy mean_chosen_ghz");
+    let _ = writeln!(
+        out,
+        "if (strstrt(GPVAL_TERMINALS, \"pngcairo\") > 0) {{\n    set terminal pngcairo size {w},{h} font \"sans,10\" noenhanced\n}} else {{\n    set terminal png size {w},{h} noenhanced\n}}"
+    );
+    let _ = writeln!(out, "set output \"decisions_timeline.png\"");
+    let _ = writeln!(
+        out,
+        "set multiplot layout {rows},{cols} title \"decision trace: accuracy + chosen frequency vs epoch\""
+    );
+    let _ = writeln!(out, "set xlabel \"epoch\"");
+    let _ = writeln!(out, "set ylabel \"accuracy\"");
+    let _ = writeln!(out, "set y2label \"mean chosen GHz\"");
+    let _ = writeln!(out, "set yrange [0:1.05]");
+    let _ = writeln!(out, "set y2range [1.2:2.3]");
+    let _ = writeln!(out, "set ytics nomirror");
+    let _ = writeln!(out, "set y2tics");
+    let _ = writeln!(out, "set key bottom right");
+    let _ = writeln!(out, "set grid");
+    for (pi, p) in panels.iter().enumerate() {
+        let _ = writeln!(out);
+        let _ = writeln!(out, "$c{pi} << EOD");
+        for &(ep, acc, ghz) in &p.points {
+            let _ = writeln!(out, "{ep} {} {}", gnum(acc), gnum(ghz));
+        }
+        let _ = writeln!(out, "EOD");
+        let _ = writeln!(out, "set title \"{}\"", p.title);
+        let _ = writeln!(
+            out,
+            "plot $c{pi} using 1:2 with linespoints pt 7 lc 1 title \"accuracy\", \\\n     $c{pi} using 1:3 axes x1y2 with steps lc 2 title \"chosen GHz\""
+        );
+    }
+    let _ = writeln!(out, "\nunset multiplot");
+    out
+}
+
+fn render_timeline_matplotlib(panels: &[CellTimeline]) -> String {
+    let (rows, cols) = layout(panels.len());
+    let mut out = String::new();
+    let _ = writeln!(out, "#!/usr/bin/env python3");
+    let _ = writeln!(out, "# decision-trace timeline — generated by `pcstall obs plot`");
+    let _ = writeln!(
+        out,
+        "# render: python3 <this file>   (writes decisions_timeline.png into the cwd)"
+    );
+    let _ = writeln!(out, "# DATA: [(title, [(epoch, accuracy, mean_chosen_ghz), ...]), ...]");
+    let _ = writeln!(out, "nan = float(\"nan\")");
+    let _ = writeln!(out, "DATA = [");
+    for p in panels {
+        let _ = writeln!(out, "    (\"{}\", [", p.title);
+        for &(ep, acc, ghz) in &p.points {
+            let _ = writeln!(out, "        ({ep}, {}, {}),", pynum(acc), pynum(ghz));
+        }
+        let _ = writeln!(out, "    ]),");
+    }
+    let _ = writeln!(out, "]");
+    let _ = writeln!(
+        out,
+        r#"
+def main():
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+    rows, cols = {rows}, {cols}
+    fig, axes = plt.subplots(rows, cols, figsize=(5.2 * cols, 3.9 * rows), squeeze=False)
+    for i, (title, pts) in enumerate(DATA):
+        ax = axes[i // cols][i % cols]
+        xs = [p[0] for p in pts]
+        ax.plot(xs, [p[1] for p in pts], marker="o", label="accuracy")
+        ax.set_ylim(0, 1.05)
+        ax2 = ax.twinx()
+        ax2.step(xs, [p[2] for p in pts], where="post", color="tab:orange", label="chosen GHz")
+        ax2.set_ylim(1.2, 2.3)
+        ax.set_title(title)
+        ax.set_xlabel("epoch")
+        ax.set_ylabel("accuracy")
+        ax2.set_ylabel("mean chosen GHz")
+        ax.grid(True, alpha=0.4)
+    for j in range(len(DATA), rows * cols):
+        axes[j // cols][j % cols].axis("off")
+    fig.suptitle("decision trace: accuracy + chosen frequency vs epoch")
+    fig.tight_layout()
+    fig.savefig("decisions_timeline.png", dpi=150)
+    print("wrote decisions_timeline.png")
+
+
+if __name__ == "__main__":
+    main()"#,
+        rows = rows,
+        cols = cols,
+    );
+    out
+}
+
+/// Read an obs dir's `decisions.csv` and emit the timeline script pair
+/// (`decisions_timeline.{gnuplot,py}`) — accuracy and mean chosen
+/// frequency vs epoch, one panel per cell (first
+/// [`MAX_TIMELINE_PANELS`]; any dropped cells are reported on stdout).
+/// Scripts land in the obs dir unless `out_dir` redirects them.  Bytes
+/// are a pure function of the CSV content — byte-identical on re-plot.
+pub fn emit_decision_timeline(
+    obs_dir: &Path,
+    out_dir: Option<&Path>,
+) -> anyhow::Result<(PathBuf, PathBuf)> {
+    let rows = crate::obs::read_decisions(obs_dir).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        !rows.is_empty(),
+        "decisions.csv in {} has no rows (cached cells emit no trace — rerun with --no-cache)",
+        obs_dir.display()
+    );
+    let mut panels = decision_timelines(&rows);
+    if panels.len() > MAX_TIMELINE_PANELS {
+        println!(
+            "(plotting first {MAX_TIMELINE_PANELS} of {} cells — narrow the run for the rest)",
+            panels.len()
+        );
+        panels.truncate(MAX_TIMELINE_PANELS);
+    }
+    let dir = match out_dir {
+        Some(d) => d.to_path_buf(),
+        None => obs_dir.to_path_buf(),
+    };
+    std::fs::create_dir_all(&dir)
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+    let gp = dir.join("decisions_timeline.gnuplot");
+    let py = dir.join("decisions_timeline.py");
+    std::fs::write(&gp, render_timeline_gnuplot(&panels))
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", gp.display()))?;
+    std::fs::write(&py, render_timeline_matplotlib(&panels))
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", py.display()))?;
+    Ok((gp, py))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -951,6 +1157,53 @@ mod tests {
         let (gp3, py3) = emit_plot_scripts(&csv, DEFAULT_METRIC, Band::Iqr, Some(&sub)).unwrap();
         assert_eq!(gp3, sub.join("sweep_pop_accuracy_iqr.gnuplot"));
         assert_eq!(py3, sub.join("sweep_pop_accuracy_iqr.py"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn decision_timeline_scripts_are_deterministic() {
+        use crate::obs::decisions::{decision_csv_row, DECISIONS_HEADER};
+        use crate::obs::DecisionSample;
+
+        let dir = std::env::temp_dir().join(format!("pcstall_dplot_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut t = CsvTable::new(&DECISIONS_HEADER);
+        for (policy, hash) in [("CRISP", "aaaa"), ("PCSTALL", "bbbb")] {
+            for epoch in 0..3u64 {
+                for domain in 0..2usize {
+                    let s = DecisionSample {
+                        epoch,
+                        domain,
+                        chosen: (4 + epoch as u8) % 10,
+                        oracle_best: 4,
+                        accuracy: if epoch == 0 { f64::NAN } else { 0.8 },
+                        ..Default::default()
+                    };
+                    t.push(decision_csv_row(hash, "comd", policy, "ED2P", 1000.0, &s));
+                }
+            }
+        }
+        t.write(&dir.join("decisions.csv")).unwrap();
+
+        let (gp, py) = emit_decision_timeline(&dir, None).unwrap();
+        assert_eq!(gp, dir.join("decisions_timeline.gnuplot"));
+        let gp_bytes = std::fs::read(&gp).unwrap();
+        let py_bytes = std::fs::read(&py).unwrap();
+        let text = String::from_utf8(gp_bytes.clone()).unwrap();
+        assert!(text.contains("comd CRISP ED2P @1000ns"), "{text}");
+        assert!(text.contains("comd PCSTALL ED2P @1000ns"));
+        // NaN accuracy renders as gnuplot's missing-data token
+        assert!(text.contains("0 NaN"), "{text}");
+        // the python twin defines nan before using it
+        let py_text = String::from_utf8(py_bytes.clone()).unwrap();
+        assert!(py_text.contains("nan = float(\"nan\")"));
+        assert!(py_text.contains("(0, nan,"), "{py_text}");
+        // re-emitting into another dir is byte-identical
+        let sub = dir.join("again");
+        let (gp2, py2) = emit_decision_timeline(&dir, Some(&sub)).unwrap();
+        assert_eq!(std::fs::read(&gp2).unwrap(), gp_bytes);
+        assert_eq!(std::fs::read(&py2).unwrap(), py_bytes);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

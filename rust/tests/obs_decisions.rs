@@ -1,0 +1,192 @@
+//! Decision-trace (obs channel 3) acceptance gates:
+//!
+//! 1. `decisions.csv` is byte-deterministic across reruns and across
+//!    `--jobs 1` vs `--jobs 4`, and the NDJSON sidecar's header object
+//!    carries the executed/cached cell accounting.
+//! 2. The per-epoch accuracy column reproduces the sweep CSV's
+//!    `accuracy` metric (i.e. `RunResult::mean_accuracy`) under the
+//!    same warmup exclusion the manager applies.
+//! 3. Counterfactual regret is non-negative for oracle-laddered
+//!    policies and exactly zero for ORACLE and for policies without a
+//!    ladder sample; `chosen == oracle_best` implies zero regret.
+//! 4. The emitted sweep CSV is byte-identical with the decision channel
+//!    on and off (covered jointly with tests/obs_overhead.rs — the obs
+//!    sink carries all three channels).
+//! 5. `obs diff` over two identical reruns aligns every row and reports
+//!    zero divergence.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pcstall::exec::{Engine, ShardSpec};
+use pcstall::harness::sweep::{run_sweep, SweepPlan};
+use pcstall::harness::{ExpOptions, Scale};
+use pcstall::obs::{diff_decisions, read_decisions, DecisionRow, ObsRecorder};
+use pcstall::stats::emit::CsvTable;
+
+/// The manager's prediction-accuracy warmup (first epochs excluded from
+/// `mean_accuracy`); must match `ACC_WARMUP` in `dvfs/manager.rs`.
+const ACC_WARMUP: u64 = 2;
+
+/// Two oracle-laddered designs (ACCPC pays real regret, ORACLE is the
+/// zero-regret fixed point) over a catalog and a synth source, against
+/// the default STATIC-1.7 baseline (a no-ladder policy).
+const PLAN: &str = r#"
+name = "decgate"
+epoch_ns = [1000]
+cus_per_domain = [1]
+workloads = ["comd", "synth:5"]
+designs = ["accpc", "oracle"]
+epochs = 8
+"#;
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pcstall_dec_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Run the gate plan once with obs; returns (sweep CSV bytes, run dir).
+fn run_once(tag: &str, jobs: usize, obs: bool) -> (Vec<u8>, PathBuf) {
+    let dir = fresh_dir(tag);
+    let rec = obs.then(|| Arc::new(ObsRecorder::new(dir.join("obs"))));
+    let mut engine = Engine::no_cache();
+    engine.set_obs(rec.clone());
+    let opts = ExpOptions {
+        scale: Scale::Quick,
+        out_dir: dir.clone(),
+        jobs,
+        engine: Arc::new(engine),
+        obs: rec.clone(),
+        ..Default::default()
+    };
+    let plan = SweepPlan::from_toml(PLAN).unwrap();
+    let csv_path = run_sweep(&opts, &plan, ShardSpec::whole()).unwrap();
+    let csv = std::fs::read(&csv_path).unwrap();
+    if let Some(r) = rec {
+        r.write().unwrap();
+    }
+    (csv, dir)
+}
+
+#[test]
+fn decisions_csv_is_byte_deterministic_across_jobs_and_reruns() {
+    let (csv_a, d1) = run_once("det_serial", 1, true);
+    let (csv_b, d2) = run_once("det_par", 4, true);
+    let (csv_c, d3) = run_once("det_rerun", 4, true);
+    let (csv_off, d4) = run_once("det_off", 4, false);
+
+    let dec = |d: &PathBuf| std::fs::read(d.join("obs").join("decisions.csv")).unwrap();
+    let (a, b, c) = (dec(&d1), dec(&d2), dec(&d3));
+    assert_eq!(a, b, "decisions.csv must not depend on --jobs");
+    assert_eq!(b, c, "decisions.csv must be byte-identical across reruns");
+
+    // decision channel on/off leaves the stats CSV untouched
+    assert_eq!(csv_a, csv_off, "obs decisions must not perturb the sweep CSV");
+    assert_eq!(csv_a, csv_b);
+    assert_eq!(csv_b, csv_c);
+
+    // NDJSON sidecar: header object with cell accounting, then one
+    // object per decision row (same count as the CSV's data rows)
+    let nd = std::fs::read_to_string(d1.join("obs").join("decisions.ndjson")).unwrap();
+    let header = nd.lines().next().unwrap();
+    assert!(header.contains("\"channel\":\"decisions\""), "bad header: {header}");
+    assert!(header.contains("\"cells_executed\""), "bad header: {header}");
+    assert!(header.contains("\"cells_cached\":0"), "no-cache run: {header}");
+    let csv_rows = String::from_utf8(a).unwrap().lines().count() - 1;
+    assert_eq!(nd.lines().count(), 1 + csv_rows, "header + one object per row");
+
+    for d in [d1, d2, d3, d4] {
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}
+
+/// Decision rows of one cell, in file order.
+fn cell_rows<'a>(rows: &'a [DecisionRow], workload: &str, policy: &str) -> Vec<&'a DecisionRow> {
+    rows.iter()
+        .filter(|r| r.workload == workload && r.policy == policy)
+        .collect()
+}
+
+#[test]
+fn accuracy_column_reproduces_sweep_csv_metric() {
+    let (csv, dir) = run_once("acc", 2, true);
+    let rows = read_decisions(&dir.join("obs")).unwrap();
+    let sweep = CsvTable::parse(&String::from_utf8(csv).unwrap()).unwrap();
+    let col = |name: &str| sweep.header.iter().position(|h| h == name).unwrap();
+    let (wl_c, design_c, acc_c) = (col("workload"), col("design"), col("accuracy"));
+
+    let mut checked = 0;
+    for row in &sweep.rows {
+        let (wl, design) = (&row[wl_c], &row[design_c]);
+        let cell = cell_rows(&rows, wl, design);
+        assert!(!cell.is_empty(), "no decision rows for {wl}/{design}");
+        // epoch-level accuracy is repeated on every domain row; average
+        // domain-0 rows past the warmup, as the manager does
+        let accs: Vec<f64> = cell
+            .iter()
+            .filter(|r| r.domain == 0 && r.epoch >= ACC_WARMUP && r.accuracy.is_finite())
+            .map(|r| r.accuracy)
+            .collect();
+        let expected: f64 = row[acc_c].parse().unwrap();
+        let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+        assert!(
+            (mean - expected).abs() < 6e-4, // sweep CSV rounds to 3 decimals
+            "{wl}/{design}: decisions-derived mean {mean} vs sweep CSV {expected}"
+        );
+        checked += 1;
+    }
+    assert_eq!(checked, 4, "2 workloads x 2 designs");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn regret_invariants_hold_per_policy() {
+    let (_, dir) = run_once("regret", 2, true);
+    let rows = read_decisions(&dir.join("obs")).unwrap();
+    assert!(!rows.is_empty());
+
+    for r in &rows {
+        assert!(r.regret >= 0.0, "regret must be non-negative: {r:?}");
+        assert!(r.regret.is_finite());
+        if r.chosen == r.oracle_best {
+            assert_eq!(r.regret, 0.0, "agreeing with the oracle costs nothing: {r:?}");
+        }
+    }
+    // ORACLE is the zero-regret fixed point by definition
+    for r in rows.iter().filter(|r| r.policy == "ORACLE") {
+        assert_eq!(r.regret, 0.0, "ORACLE row with regret: {r:?}");
+        assert_eq!(r.chosen, r.oracle_best);
+    }
+    // no-ladder policies (the static baseline) report zero regret too
+    for r in rows.iter().filter(|r| r.policy.starts_with("STATIC")) {
+        assert_eq!(r.regret, 0.0);
+        assert!(r.pc.is_none(), "static policy has no PC table");
+    }
+    // the PC-keyed design resolves epoch-start PCs
+    let accpc: Vec<_> = rows.iter().filter(|r| r.policy == "ACCPC").collect();
+    assert!(!accpc.is_empty());
+    assert!(
+        accpc.iter().any(|r| r.pc.is_some()),
+        "ACCPC rows must carry modal PCs"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn diff_of_identical_reruns_reports_zero_divergence() {
+    let (_, d1) = run_once("diff_a", 2, true);
+    let (_, d2) = run_once("diff_b", 2, true);
+    let s = diff_decisions(&d1.join("obs"), &d2.join("obs")).unwrap();
+    assert!(s.cell_pairs > 0);
+    assert_eq!(s.cross_policy_pairs, 0, "same plan on both sides");
+    assert!(s.rows_aligned > 0);
+    assert_eq!((s.only_a, s.only_b), (0, 0));
+    assert_eq!(s.divergent, 0, "identical reruns must not diverge");
+    assert_eq!(s.regret_a, s.regret_b);
+    let _ = std::fs::remove_dir_all(&d1);
+    let _ = std::fs::remove_dir_all(&d2);
+}
