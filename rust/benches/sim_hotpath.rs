@@ -15,9 +15,14 @@ use pcstall::workloads;
 use std::time::Duration;
 
 fn gpu(n_cu: usize, n_wf: usize, wl: &str) -> Gpu {
+    gpu_threaded(n_cu, n_wf, wl, 1)
+}
+
+fn gpu_threaded(n_cu: usize, n_wf: usize, wl: &str, sim_threads: usize) -> Gpu {
     let mut cfg = SimConfig::default();
     cfg.gpu.n_cu = n_cu;
     cfg.gpu.n_wf = n_wf;
+    cfg.gpu.sim_threads = sim_threads;
     let spec = workloads::build(wl, 1.0);
     let mut g = Gpu::new(cfg);
     g.load_workload(spec.launches(), spec.rounds);
@@ -57,6 +62,38 @@ fn main() {
             cycles as f64 / r.median_ns() * 1e3
         );
         results.push(r);
+    }
+
+    // Intra-sim parallelism scaling at paper scale: same work, stepped
+    // by 1/2/4/nproc CU threads.  Results are byte-identical across the
+    // axis (tests/sim_parallel.rs asserts it); only wall-clock moves.
+    {
+        let nproc = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let mut axis = vec![1usize, 2, 4];
+        if !axis.contains(&nproc) {
+            axis.push(nproc);
+        }
+        let mut serial_ns = 0.0;
+        for st in axis {
+            let mut g = gpu_threaded(64, 40, "comd", st);
+            let r = bench_cfg(
+                &format!("epoch 64CUx40WF comd threads={st}"),
+                Duration::from_millis(400),
+                5,
+                50,
+                &mut || {
+                    g.run_epoch();
+                },
+            );
+            if st == 1 {
+                serial_ns = r.median_ns();
+            } else if serial_ns > 0.0 {
+                println!("    -> {:.2}x vs serial", serial_ns / r.median_ns());
+            }
+            results.push(r);
+        }
     }
 
     {

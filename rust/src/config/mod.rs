@@ -49,6 +49,10 @@ pub struct GpuConfig {
     pub dram_bw_bytes_per_ns: f64,
     /// Coupling quantum for cross-CU contention statistics (ns).
     pub quantum_ns: f64,
+    /// CU-stepping threads per simulation (0 = all available cores).
+    /// Execution-only: results are byte-identical for every value, so
+    /// the key is excluded from run identity ([`SimConfig::identity_toml`]).
+    pub sim_threads: usize,
 }
 
 impl Default for GpuConfig {
@@ -71,6 +75,7 @@ impl Default for GpuConfig {
             dram_ns: 250.0,
             dram_bw_bytes_per_ns: 448.0,
             quantum_ns: 200.0,
+            sim_threads: 1,
         }
     }
 }
@@ -157,6 +162,11 @@ macro_rules! config_fields {
         $apply!("gpu.dram_ns", f64, $self.gpu.dram_ns, "DRAM latency (ns)");
         $apply!("gpu.dram_bw_bytes_per_ns", f64, $self.gpu.dram_bw_bytes_per_ns, "DRAM bandwidth (bytes/ns)");
         $apply!("gpu.quantum_ns", f64, $self.gpu.quantum_ns, "Cross-CU contention coupling quantum (ns)");
+        // NOTE: gpu.sim_threads must stay the *last* gpu key: it is an
+        // execution-only knob that identity_toml() skips, and keeping it
+        // at the section tail means the identity text is byte-identical
+        // to a serialization that never knew the key (stable RunKeys).
+        $apply!("gpu.sim_threads", usize, $self.gpu.sim_threads, "CU-stepping threads per simulation (0 = all cores; result-invariant)");
         $apply!("dvfs.epoch_ns", f64, $self.dvfs.epoch_ns, "DVFS epoch duration (ns)");
         $apply!("dvfs.cus_per_domain", usize, $self.dvfs.cus_per_domain, "CUs per V/f domain");
         $apply!("dvfs.transition_ns", f64, $self.dvfs.transition_ns, "V/f transition latency (ns; negative derives ~0.4% of epoch)");
@@ -279,6 +289,21 @@ impl SimConfig {
 
     /// Serialize to TOML (used by `pcstall config dump`).
     pub fn to_toml(&self) -> String {
+        self.render_toml(false)
+    }
+
+    /// The result-identity serialization: like [`Self::to_toml`] but
+    /// with execution-only keys (`gpu.sim_threads`) skipped.  RunKey
+    /// fingerprints hash this text, so knobs that cannot change results
+    /// cannot perturb cache identity.  Because the skipped key sits at
+    /// its section's tail, this text is byte-identical to what
+    /// `to_toml` produced before the key existed — every previously
+    /// cached RunKey stays valid.
+    pub fn identity_toml(&self) -> String {
+        self.render_toml(true)
+    }
+
+    fn render_toml(&self, skip_exec_keys: bool) -> String {
         let mut out = String::new();
         #[allow(unused_assignments)]
         let mut section = "";
@@ -301,13 +326,18 @@ impl SimConfig {
         // top-level keys must come first in TOML
         out.push_str(&format!("seed = {}\n", self.seed));
         let this = self;
-        macro_rules! apply_skip_seed {
+        macro_rules! apply_filtered {
             ("seed", $t:ident, $f:expr, $d:literal) => {};
+            ("gpu.sim_threads", $t:ident, $f:expr, $d:literal) => {
+                if !skip_exec_keys {
+                    apply!("gpu.sim_threads", $t, $f, $d)
+                }
+            };
             ($name:literal, $t:ident, $f:expr, $d:literal) => {
                 apply!($name, $t, $f, $d)
             };
         }
-        config_fields!(this, apply_skip_seed);
+        config_fields!(this, apply_filtered);
         out
     }
 
@@ -423,6 +453,58 @@ mod tests {
         let mut c = SimConfig::default();
         let err = c.apply_override("gpu.bogus=1").unwrap_err().to_string();
         assert!(err.contains("config keys"), "no discovery hint: {err}");
+    }
+
+    #[test]
+    fn identity_toml_skips_sim_threads_only() {
+        let mut a = SimConfig::default();
+        let mut b = SimConfig::default();
+        a.gpu.sim_threads = 1;
+        b.gpu.sim_threads = 8;
+        // full serialization sees the knob...
+        assert!(a.to_toml().contains("sim_threads = 1"));
+        assert!(b.to_toml().contains("sim_threads = 8"));
+        assert_ne!(a.to_toml(), b.to_toml());
+        // ...identity does not, so both configs share one identity
+        assert!(!a.identity_toml().contains("sim_threads"));
+        assert_eq!(a.identity_toml(), b.identity_toml());
+        // and everything else still flows into identity
+        b.gpu.n_cu = 8;
+        assert_ne!(a.identity_toml(), b.identity_toml());
+    }
+
+    #[test]
+    fn identity_toml_matches_pre_sim_threads_serialization() {
+        // the identity text must be exactly the full text minus the one
+        // sim_threads line (tail of [gpu]) — the invariant that keeps
+        // every RunKey minted before the key existed valid
+        let c = SimConfig::default();
+        let full: Vec<&str> = c.to_toml().lines().collect();
+        let ident: Vec<&str> = c.identity_toml().lines().collect();
+        let mut removed: Vec<&str> = Vec::new();
+        for l in &full {
+            if !ident.contains(l) {
+                removed.push(*l);
+            }
+        }
+        assert_eq!(removed, vec!["sim_threads = 1"]);
+        assert_eq!(ident.len() + 1, full.len());
+    }
+
+    #[test]
+    fn sim_threads_round_trips_like_any_key() {
+        let mut c = SimConfig::default();
+        c.apply_override("gpu.sim_threads=4").unwrap();
+        assert_eq!(c.gpu.sim_threads, 4);
+        assert_eq!(
+            c.get_key("gpu.sim_threads"),
+            Some(minitoml::Value::Int(4))
+        );
+        let c2 = SimConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(c, c2);
+        // 0 = auto is an admissible value
+        c.apply_override("gpu.sim_threads=0").unwrap();
+        assert_eq!(c.gpu.sim_threads, 0);
     }
 
     #[test]

@@ -38,9 +38,10 @@ pub struct RunKey {
     /// Effective workload-length multiplier passed to the generator.
     pub waves: f64,
     pub seed: u64,
-    /// FNV-1a fingerprint of the full `SimConfig` TOML serialization —
+    /// FNV-1a fingerprint of the `SimConfig` *identity* serialization —
     /// covers every ablation override (table sizes, domain granularity,
-    /// power constants, ...).
+    /// power constants, ...) but skips execution-only knobs like
+    /// `gpu.sim_threads`, which cannot change results.
     pub cfg_fp: u64,
 }
 
@@ -130,7 +131,7 @@ impl RunKey {
             epoch_ns: cfg.dvfs.epoch_ns,
             waves,
             seed: cfg.seed,
-            cfg_fp: fnv1a(cfg.to_toml().as_bytes(), FNV_OFFSET_A),
+            cfg_fp: fnv1a(cfg.identity_toml().as_bytes(), FNV_OFFSET_A),
         }
     }
 
@@ -391,6 +392,35 @@ mod tests {
         hexes.sort();
         hexes.dedup();
         assert_eq!(hexes.len(), n);
+    }
+
+    #[test]
+    fn sim_threads_is_absent_from_identity() {
+        // the thread count is result-invariant, so two requests that
+        // differ only in gpu.sim_threads must share one cache address
+        let key_with = |threads: usize| {
+            let mut cfg = SimConfig::small();
+            cfg.gpu.sim_threads = threads;
+            RunKey::new(
+                &cfg,
+                "quick",
+                "native",
+                "comd",
+                Policy::PcStall,
+                Objective::Ed2p,
+                RunMode::Epochs(24),
+                0.05,
+            )
+        };
+        let serial = key_with(1);
+        let wide = key_with(8);
+        let auto = key_with(0);
+        assert_eq!(serial, wide);
+        assert_eq!(serial.cfg_fp, wide.cfg_fp);
+        assert_eq!(serial.hash_hex(), auto.hash_hex());
+        for n in [2usize, 3, 7] {
+            assert_eq!(serial.shard_of(n), wide.shard_of(n));
+        }
     }
 
     #[test]

@@ -20,6 +20,34 @@ pub fn default_jobs() -> usize {
         .unwrap_or(1)
 }
 
+/// Split the machine between batch workers and per-simulation CU
+/// threads so `jobs x sim_threads` never oversubscribes `nproc`.
+/// Returns `(jobs, sim_threads)`.
+///
+/// `requested` is the user's `--sim-threads`: `Some(0)` means "as wide
+/// as the machine" (each sim gets every core; jobs shrink to fit),
+/// `Some(s)` pins the per-sim width, and `None` lets the policy decide:
+/// a batch big enough to fill the worker pool runs serial sims (between-
+/// cell parallelism already saturates the machine), while a smaller
+/// batch hands the idle cores to each simulation.
+pub fn thread_budget(
+    n_cells: usize,
+    jobs: usize,
+    requested: Option<usize>,
+    nproc: usize,
+) -> (usize, usize) {
+    let n = n_cells.max(1);
+    let nproc = nproc.max(1);
+    let st = match requested {
+        Some(0) => nproc,
+        Some(s) => s.max(1),
+        None if n >= jobs.max(1) => 1,
+        None => (nproc / n).max(1),
+    };
+    let j = jobs.clamp(1, n).min((nproc / st.min(nproc)).max(1));
+    (j, st)
+}
+
 /// Run every job, using up to `workers` threads, and return the results
 /// in submission order.  `workers <= 1` degenerates to a plain serial
 /// loop on the calling thread.
@@ -171,6 +199,44 @@ mod tests {
         let rec2 = ObsRecorder::new(std::path::PathBuf::from("/nonexistent-unused"));
         run_ordered_obs(vec![|| 1], 1, Some(&rec2));
         assert_eq!(rec2.span_count(), 2);
+    }
+
+    #[test]
+    fn thread_budget_never_oversubscribes() {
+        for n_cells in [1usize, 2, 5, 16, 100] {
+            for jobs in [1usize, 4, 16, 64] {
+                for req in [None, Some(0), Some(1), Some(4), Some(32)] {
+                    for nproc in [1usize, 4, 16] {
+                        let (j, st) = thread_budget(n_cells, jobs, req, nproc);
+                        assert!(j >= 1 && st >= 1);
+                        assert!(j <= n_cells.max(1));
+                        // explicit widths may exceed nproc on their own
+                        // (the user asked), but the pool never multiplies
+                        // the machine out: jobs shrink to compensate.
+                        assert!(
+                            j * st.min(nproc) <= nproc,
+                            "oversubscribed: {n_cells} cells, {jobs} jobs, {req:?}, {nproc} cores -> ({j}, {st})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn thread_budget_auto_policy() {
+        // big batch, default request: fill the pool with serial sims
+        assert_eq!(thread_budget(100, 16, None, 16), (16, 1));
+        // small batch: idle cores flow into each simulation
+        assert_eq!(thread_budget(4, 16, None, 16), (4, 4));
+        // single Full-scale run: one job, machine-wide sim
+        assert_eq!(thread_budget(1, 16, None, 16), (1, 16));
+        // explicit width caps the worker pool
+        assert_eq!(thread_budget(100, 16, Some(4), 16), (4, 4));
+        // --sim-threads 0: as wide as the machine, one job at a time
+        assert_eq!(thread_budget(100, 16, Some(0), 16), (1, 16));
+        // explicit serial: unchanged pool behavior
+        assert_eq!(thread_budget(100, 16, Some(1), 16), (16, 1));
     }
 
     #[test]

@@ -193,9 +193,26 @@ pub(crate) fn run_cells_resolved(
     cells: Vec<(Cell, Arc<ResolvedWorkload>)>,
 ) -> Vec<RunResult> {
     let use_pjrt = opts.use_pjrt;
+    // Split the machine between batch workers and per-simulation CU
+    // threads (never oversubscribing): big batches keep the worker pool
+    // wide with serial sims; small batches hand idle cores to each sim.
+    // sim_threads is execution-only, so budgeting it here cannot perturb
+    // any cell's RunKey.
+    let (jobs, sim_threads) = crate::exec::pool::thread_budget(
+        cells.len(),
+        opts.jobs.max(1),
+        opts.sim_threads,
+        crate::exec::pool::default_jobs(),
+    );
     let batch: Vec<_> = cells
         .into_iter()
         .map(|(mut cell, resolved)| {
+            // An explicit --sim-threads pins every cell; the automatic
+            // budget only fills cells still at the serial default, so a
+            // plan's own `[set] gpu.sim_threads` survives.
+            if opts.sim_threads.is_some() || cell.cfg.gpu.sim_threads == 1 {
+                cell.cfg.gpu.sim_threads = sim_threads;
+            }
             let key = cell_key(opts, &mut cell, &resolved);
             let obs = opts.obs.clone();
             let canonical = key.canonical();
@@ -208,7 +225,7 @@ pub(crate) fn run_cells_resolved(
             })
         })
         .collect();
-    opts.engine.run_batch(opts.jobs.max(1), batch)
+    opts.engine.run_batch(jobs, batch)
 }
 
 /// The fingerprint a cell will execute under, after normalization: the

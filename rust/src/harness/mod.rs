@@ -64,6 +64,11 @@ pub struct ExpOptions {
     pub obs: Option<Arc<crate::obs::ObsRecorder>>,
     /// `--progress`: periodic stderr progress from batch execution.
     pub progress: bool,
+    /// `--sim-threads`: CU-stepping threads per simulation.  `None`
+    /// lets [`crate::exec::pool::thread_budget`] decide from the batch
+    /// size; `Some(0)` = as wide as the machine; `Some(n)` pins the
+    /// width.  Result-invariant — never part of run identity.
+    pub sim_threads: Option<usize>,
 }
 
 impl Default for ExpOptions {
@@ -78,6 +83,7 @@ impl Default for ExpOptions {
             workloads_override: Vec::new(),
             obs: None,
             progress: false,
+            sim_threads: None,
         }
     }
 }

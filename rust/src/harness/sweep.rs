@@ -151,6 +151,11 @@ impl ConfigAxis {
                 "[axis] seed: use the plan-level `seed = [..]` synth-population axis, \
                  or `[set] seed = <n>` for a scalar master-seed override"
             ),
+            "gpu.sim_threads" => anyhow::bail!(
+                "[axis] gpu.sim_threads: the CU-stepping thread count is execution-only \
+                 and excluded from run identity, so every grid value would alias one \
+                 cached result — use `--sim-threads <n>` on the sweep invocation instead"
+            ),
             _ => {}
         }
         anyhow::ensure!(!values.is_empty(), "[axis] {key}: value list must not be empty");
@@ -1250,6 +1255,7 @@ dvfs.pc_update_alpha = [0.5, 1.0]
             ("[axis]\ndvfs.epoch_ns = [1000]\n", "dedicated epoch axis"),
             ("[axis]\ndvfs.cus_per_domain = [1, 2]\n", "dedicated granularity axis"),
             ("[axis]\nseed = [1, 2]\n", "plan-level seed axis"),
+            ("[axis]\n\"gpu.sim_threads\" = [1, 4]\n", "identity-excluded exec key"),
             (
                 "[set]\ndvfs.transition_ns = 9\n[axis]\ndvfs.transition_ns = [5]\n",
                 "[set]/[axis] conflict",

@@ -109,6 +109,12 @@ RUN OPTIONS:
   --quick | --full      scale preset (default: 8 CUs, all workloads)
   --out <dir>           output directory               (default results/)
   --jobs <n>            sweep worker threads   (default: all CPU cores)
+  --sim-threads <n>     CU-stepping threads inside each simulation
+                        (0 = as wide as the machine; default: auto —
+                        batches big enough to fill --jobs run serial
+                        sims, smaller batches hand idle cores to each
+                        sim).  Results are byte-identical for every
+                        value; jobs x sim-threads never oversubscribes
   --no-cache            recompute everything; do not read or write the
                         content-addressed result cache (<out>/cache/)
   --pjrt                use the PJRT artifact backend when available
@@ -142,6 +148,8 @@ SIMULATE / REPLAY OPTIONS:
   --set k=v             config override (repeatable)
   --backend native|pjrt compute backend            (default native)
   --json <file>         dump the run result as JSON
+  --sim-threads <n>     CU-stepping threads (0 = all cores; default 1);
+                        results are byte-identical for every value
 
 SWEEP COMMANDS:
   <plan.toml|preset>    run a declarative sweep plan (grid over epoch
@@ -274,6 +282,10 @@ fn run_one(spec: &str, mut o: Opts) -> Result<()> {
     let sets = o.take_all("--set");
     let backend = o.take("--backend").unwrap_or_else(|| "native".into());
     let json_out = o.take("--json").map(PathBuf::from);
+    let sim_threads = o
+        .take("--sim-threads")
+        .map(|s| s.parse::<usize>())
+        .transpose()?;
     o.finish()?;
 
     let mut cfg = match cfg_path {
@@ -290,6 +302,9 @@ fn run_one(spec: &str, mut o: Opts) -> Result<()> {
     }
     if let Some(e) = epoch_ns {
         cfg.dvfs.epoch_ns = e;
+    }
+    if let Some(st) = sim_threads {
+        cfg.gpu.sim_threads = st;
     }
 
     let source = WorkloadSource::parse(spec)?;
@@ -387,6 +402,10 @@ fn exp_options_from(o: &mut Opts) -> Result<ExpOptions> {
         Some(n) => n.parse::<usize>()?.max(1),
         None => pool::default_jobs(),
     };
+    opts.sim_threads = o
+        .take("--sim-threads")
+        .map(|s| s.parse::<usize>())
+        .transpose()?;
     // validate specs now for early errors; leak the handful of argv
     // strings (once per process) to satisfy the harness's &'static set
     for spec in o.take_all("--workload") {

@@ -8,14 +8,20 @@
 //! event (memory response / VALU completion) when it is not — this keeps
 //! memory-bound phases cheap to simulate without losing the interval
 //! accounting the STALL/LEAD/CRIT/CRISP models need.
+//!
+//! Shared-state discipline: a stepping CU touches only its own fields.
+//! L1 hits resolve locally; everything else crosses the [`MemPort`]
+//! seam as a [`MemRequest`].  With a deferring port the CU is a pure
+//! function of its own state over a quantum — the property that lets
+//! the GPU step CUs on separate threads and still arbitrate the shared
+//! hierarchy deterministically at the quantum barrier.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::sync::Arc;
 
-
 use super::isa::{Instr, Op, Pattern, Program};
-use super::memory::{Cache, MemSystem};
+use super::memory::{Cache, MemPort, MemRequest};
 use super::wavefront::{WaitState, Wavefront};
 use super::cycle_ps;
 use crate::config::GpuConfig;
@@ -95,7 +101,6 @@ pub struct Cu {
     pub wavefronts: Vec<Wavefront>,
     /// Active slots in age order (oldest first).
     order: Vec<u8>,
-    
     responses: BinaryHeap<Reverse<MemResponse>>,
     resp_seq: u64,
     pub l1: Cache,
@@ -105,7 +110,6 @@ pub struct Cu {
     /// Time of the most recent instruction commit (completion timing).
     pub last_commit_ps: u64,
     /// Current kernel.
-    
     program: Option<Arc<Program>>,
     /// Waves still to dispatch for the current kernel.
     pub pending_waves: u64,
@@ -117,6 +121,9 @@ pub struct Cu {
     issue_width: usize,
     wf_per_wg: usize,
     l1_hit_cycles: u32,
+    /// Cache-line size (address generation); mirrors the hierarchy's so
+    /// the CU never needs the shared side while stepping.
+    line_bytes: u64,
     /// CU-wide outstanding loads (leading-load detection).
     outstanding_loads_cu: u32,
     /// Memory-blocked WF count (STALL interval accounting).
@@ -124,7 +131,6 @@ pub struct Cu {
     /// Memory-blocked WFs whose outstanding ops are stores only.
     n_store_only: u32,
 }
-
 
 impl Cu {
     pub fn new(id: usize, cfg: &GpuConfig, freq_ghz: f64) -> Self {
@@ -149,6 +155,7 @@ impl Cu {
             issue_width: cfg.issue_width.max(1),
             wf_per_wg: cfg.wf_per_wg.max(1),
             l1_hit_cycles: cfg.l1_hit_cycles,
+            line_bytes: cfg.l1_line as u64,
             outstanding_loads_cu: 0,
             n_mem_waiting: 0,
             n_store_only: 0,
@@ -249,8 +256,10 @@ impl Cu {
         }
     }
 
-    /// Advance this CU to absolute time `t_end_ps`.
-    pub fn run_until(&mut self, t_end_ps: u64, mem: &mut MemSystem) {
+    /// Advance this CU to absolute time `t_end_ps`.  Always exits with
+    /// `now_ps == t_end_ps` when a program is loaded — the GPU's quantum
+    /// barrier relies on every CU landing exactly on the boundary.
+    pub fn run_until<P: MemPort>(&mut self, t_end_ps: u64, port: &mut P) {
         let cyc = cycle_ps(self.freq_ghz);
         // Hoist the program out of the Option<Arc> — dereferencing it per
         // instruction costs ~10% of the whole simulator (§Perf).
@@ -272,7 +281,7 @@ impl Cu {
                 continue;
             }
 
-            let issued = self.issue_cycle(instrs, mem, cyc);
+            let issued = self.issue_cycle(instrs, port, cyc);
             let dt = cyc.min(t_end_ps - self.now_ps);
             self.account_interval(dt, issued > 0);
             self.counters.cycles += 1;
@@ -401,7 +410,7 @@ impl Cu {
     }
 
     /// One issue cycle: pick up to `issue_width` ready WFs oldest-first.
-    fn issue_cycle(&mut self, instrs: &[Instr], mem: &mut MemSystem, cyc: u64) -> usize {
+    fn issue_cycle<P: MemPort>(&mut self, instrs: &[Instr], port: &mut P, cyc: u64) -> usize {
         let now = self.now_ps;
         let mut issued = 0usize;
         let mut i = 0usize;
@@ -414,7 +423,7 @@ impl Cu {
             if issued < self.issue_width {
                 issued += 1;
                 self.wavefronts[slot].ep.issue_won += 1;
-                let removed = self.execute(slot, instrs, mem, cyc);
+                let removed = self.execute(slot, instrs, port, cyc);
                 // execute may remove `slot` from order (EndPgm without
                 // redispatch); only advance when it didn't shift under us.
                 if !removed {
@@ -430,7 +439,13 @@ impl Cu {
 
     /// Execute the instruction at `wf.pc`; returns true if the slot was
     /// removed from the age order (wavefront completed, no redispatch).
-    fn execute(&mut self, slot: usize, instrs: &[Instr], mem: &mut MemSystem, cyc: u64) -> bool {
+    fn execute<P: MemPort>(
+        &mut self,
+        slot: usize,
+        instrs: &[Instr],
+        port: &mut P,
+        cyc: u64,
+    ) -> bool {
         let op = instrs[self.wavefronts[slot].pc as usize].op;
         let now = self.now_ps;
 
@@ -451,10 +466,10 @@ impl Cu {
                 wf.pc += 1;
             }
             Op::Load { pattern, fan } => {
-                self.issue_mem(slot, pattern, fan, false, mem, cyc);
+                self.issue_mem(slot, pattern, fan, false, port, cyc);
             }
             Op::Store { pattern, fan } => {
-                self.issue_mem(slot, pattern, fan, true, mem, cyc);
+                self.issue_mem(slot, pattern, fan, true, port, cyc);
             }
             Op::WaitCnt { max } => {
                 let wf = &mut self.wavefronts[slot];
@@ -516,32 +531,36 @@ impl Cu {
         false
     }
 
-    fn issue_mem(
+    fn issue_mem<P: MemPort>(
         &mut self,
         slot: usize,
         pattern: Pattern,
         fan: u8,
         is_store: bool,
-        mem: &mut MemSystem,
+        port: &mut P,
         cyc: u64,
     ) {
         let now = self.now_ps;
-        let line_bytes = mem.line_bytes() as u64;
+        let line_bytes = self.line_bytes;
         let leading = !is_store && self.outstanding_loads_cu == 0;
 
         // Fan-out: coalesced vector ops touch `fan` distinct lines; the
         // wavefront sees the *slowest* of them (one response at max lat).
-        let mut max_lat_ps = 0u64;
+        // L1 hits resolve locally into the latency floor; missing lines
+        // cross the port for the shared hierarchy to price.
+        let mut local_lat_ps = cyc;
+        let mut lines: Vec<u64> = Vec::new();
         for f in 0..fan {
             let line = self.gen_line(slot, pattern, f, line_bytes);
-            let lat = if self.l1.access(line) {
+            if self.l1.access(line) {
                 self.counters.l1_hits += 1;
-                self.l1_hit_cycles as u64 * cyc
+                local_lat_ps = local_lat_ps.max(self.l1_hit_cycles as u64 * cyc);
             } else {
-                let (l, _) = mem.access(line, now);
-                l
-            };
-            max_lat_ps = max_lat_ps.max(lat);
+                if lines.is_empty() {
+                    lines.reserve_exact((fan - f) as usize);
+                }
+                lines.push(line);
+            }
         }
         if !is_store {
             self.counters.loads += 1;
@@ -557,14 +576,45 @@ impl Cu {
         wf.busy_until_ps = now + cyc;
         wf.pc += 1;
         self.resp_seq += 1;
-        self.responses.push(Reverse(MemResponse {
-            at_ps: now + max_lat_ps.max(cyc),
-            seq: self.resp_seq,
+        let seq = self.resp_seq;
+        if lines.is_empty() {
+            // Every lane hit in L1: the response never leaves the CU.
+            self.responses.push(Reverse(MemResponse {
+                at_ps: now + local_lat_ps,
+                seq,
+                slot: slot as u8,
+                is_store,
+                leading,
+                issued_ps: now,
+            }));
+        } else if let Some(at_ps) = port.submit(MemRequest {
+            seq,
+            issued_ps: now,
             slot: slot as u8,
             is_store,
             leading,
-            issued_ps: now,
-        }));
+            local_lat_ps,
+            lines,
+        }) {
+            self.responses.push(Reverse(MemResponse {
+                at_ps,
+                seq,
+                slot: slot as u8,
+                is_store,
+                leading,
+                issued_ps: now,
+            }));
+        }
+        // submit() returning None means the request was deferred; the
+        // quantum barrier services it and hands back a MemResponse via
+        // push_response.
+    }
+
+    /// Deliver a barrier-serviced response for a request this CU
+    /// submitted earlier in the quantum (ordering restored by the
+    /// response heap's `(at_ps, seq)` key).
+    pub(crate) fn push_response(&mut self, r: MemResponse) {
+        self.responses.push(Reverse(r));
     }
 
     /// Deterministic address-stream generation (see `isa::Pattern`).
@@ -654,6 +704,7 @@ impl Cu {
 mod tests {
     use super::*;
     use crate::sim::isa::ProgramBuilder;
+    use crate::sim::memory::{DirectPort, MemSystem};
     use crate::sim::ns_to_ps;
 
     fn cfg() -> GpuConfig {
@@ -689,7 +740,7 @@ mod tests {
 
     fn run(cu: &mut Cu, mem: &mut MemSystem, t_ns: f64) {
         cu.begin_epoch();
-        cu.run_until(cu.now_ps + ns_to_ps(t_ns), mem);
+        cu.run_until(cu.now_ps + ns_to_ps(t_ns), &mut DirectPort(mem));
         cu.end_epoch();
     }
 
@@ -885,6 +936,41 @@ mod tests {
         assert_eq!(cu.counters.instr, cu2.counters.instr);
         assert_eq!(cu.now_ps, cu2.now_ps);
         assert_eq!(cu.total_instr, cu2.total_instr);
+    }
+
+    #[test]
+    fn queue_port_defers_until_barrier_delivery() {
+        use crate::sim::memory::QueuePort;
+        let cfg = cfg();
+        let mut cu = Cu::new(0, &cfg, 2.0);
+        cu.load_kernel(mem_program(4), 1);
+        let mut q = QueuePort::default();
+        cu.begin_epoch();
+        cu.run_until(ns_to_ps(1_000.0), &mut q);
+        // the first load crossed the seam; the WF is waitcnt-blocked and
+        // the CU still landed exactly on the quantum boundary
+        assert!(!q.pending.is_empty(), "no request was deferred");
+        assert_eq!(cu.now_ps, ns_to_ps(1_000.0));
+        let instr_before = cu.counters.instr;
+        // barrier: service the quantum's requests, deliver the responses
+        let mut mem = MemSystem::new(&cfg);
+        for r in q.pending.drain(..) {
+            let at_ps = mem.service(&r);
+            cu.push_response(MemResponse {
+                at_ps,
+                seq: r.seq,
+                slot: r.slot,
+                is_store: r.is_store,
+                leading: r.leading,
+                issued_ps: r.issued_ps,
+            });
+        }
+        cu.run_until(ns_to_ps(5_000.0), &mut q);
+        cu.end_epoch();
+        assert!(
+            cu.counters.instr > instr_before,
+            "delivered response must unblock issue"
+        );
     }
 
     #[test]

@@ -3,18 +3,26 @@
 //!
 //! Cross-CU coupling: CUs advance one *coupling quantum* at a time
 //! (`GpuConfig::quantum_ns`, default 200 ns).  Within a quantum each CU
-//! runs independently against the shared [`MemSystem`] whose bank/channel
-//! reservation clocks carry contention across CUs.  This is the documented
-//! accuracy/speed trade-off that replaces gem5's global event queue
-//! (DESIGN.md §5) — analogous in spirit to the paper's own 10-process
-//! sampling approximation.
+//! runs purely against its own state, depositing L1-missing accesses
+//! into a per-CU [`QueuePort`]; at the quantum barrier the shared
+//! [`MemSystem`] services every deferred request in fixed
+//! `(cu_id, issue-order)` arbitration and the responses land back in
+//! the CUs' heaps for the next quantum.  Because the arbitration point
+//! is serial and its order is a pure function of simulation state, the
+//! results — every counter, histogram bucket, and decision — are
+//! byte-identical whether the CUs stepped on one thread or many
+//! (`gpu.sim_threads`; threads only change wall-clock time, which is
+//! why the key is excluded from run identity).  `quantum_ns` is the
+//! documented accuracy/speed trade-off that replaces gem5's global
+//! event queue (DESIGN.md §5) — memory latencies resolve no earlier
+//! than the barrier, so shorter quanta tighten cross-CU coupling while
+//! longer ones amortize more stepping per synchronization.
 
 use std::sync::Arc;
 
-
-use super::cu::{Cu, EpochCounters};
+use super::cu::{Cu, EpochCounters, MemResponse};
 use super::isa::Program;
-use super::memory::MemSystem;
+use super::memory::{MemSystem, QueuePort};
 use super::ns_to_ps;
 use crate::config::SimConfig;
 use crate::power::params::F_STATIC_GHZ;
@@ -190,23 +198,62 @@ impl Gpu {
         self.mem.obs_counters()
     }
 
+    /// CU-stepping threads for this simulation: the registry key, with
+    /// 0 meaning "all available cores", capped at the CU count.
+    fn effective_sim_threads(&self) -> usize {
+        let n = match self.cfg.gpu.sim_threads {
+            0 => std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1),
+            n => n,
+        };
+        n.min(self.cus.len().max(1))
+    }
+
     /// Run one fixed-time epoch and collect the observation bundle.
     pub fn run_epoch(&mut self) -> EpochObservation {
         let epoch_ps = ns_to_ps(self.cfg.dvfs.epoch_ns);
         let quantum_ps = ns_to_ps(self.cfg.gpu.quantum_ns).clamp(1, epoch_ps);
         let t_end = self.now_ps + epoch_ps;
+        let threads = self.effective_sim_threads();
 
         for cu in &mut self.cus {
             cu.begin_epoch();
         }
 
+        // One deferring port per CU.  The ports live here rather than in
+        // `Gpu` — they are empty at every epoch boundary by construction,
+        // which keeps `Clone`/snapshot/restore untouched by threading.
+        let mut ports: Vec<QueuePort> =
+            (0..self.cus.len()).map(|_| QueuePort::default()).collect();
+
         let mut t = self.now_ps;
         while t < t_end {
             let t_next = (t + quantum_ps).min(t_end);
-            for cu in &mut self.cus {
-                cu.run_until(t_next, &mut self.mem);
+            if threads <= 1 {
+                for (cu, port) in self.cus.iter_mut().zip(ports.iter_mut()) {
+                    cu.run_until(t_next, port);
+                }
+            } else {
+                // Fork/join: each CU touches only its own state and its
+                // own port, so any partition of the CU set produces the
+                // same result; contiguous chunks keep spawn count equal
+                // to the thread count.
+                let chunk = self.cus.len().div_ceil(threads);
+                std::thread::scope(|s| {
+                    for (cus, ps) in self.cus.chunks_mut(chunk).zip(ports.chunks_mut(chunk)) {
+                        s.spawn(move || {
+                            for (cu, port) in cus.iter_mut().zip(ps.iter_mut()) {
+                                cu.run_until(t_next, port);
+                            }
+                        });
+                    }
+                });
             }
             t = t_next;
+            // Quantum barrier: the single deterministic arbitration
+            // point for the shared hierarchy.
+            self.service_quantum(&mut ports);
             // Kernel hand-over happens between quanta so all CUs launch
             // the next kernel at the same timestamp.
             self.for_each_done_kernel_advance(t);
@@ -219,8 +266,36 @@ impl Gpu {
         self.collect_observation()
     }
 
-    fn for_each_done_kernel_advance(&mut self, _now_ps: u64) {
+    /// Service every request deferred during the quantum in fixed
+    /// `(cu_id, issue-order)` arbitration, delivering the responses into
+    /// the owning CUs.  Runs serially — this is what makes hit/miss
+    /// state, reservation clocks, and queue-depth histograms identical
+    /// regardless of how many threads stepped the CUs.
+    fn service_quantum(&mut self, ports: &mut [QueuePort]) {
+        for (cu, port) in self.cus.iter_mut().zip(ports.iter_mut()) {
+            for req in port.pending.drain(..) {
+                let at_ps = self.mem.service(&req);
+                cu.push_response(MemResponse {
+                    at_ps,
+                    seq: req.seq,
+                    slot: req.slot,
+                    is_store: req.is_store,
+                    leading: req.leading,
+                    issued_ps: req.issued_ps,
+                });
+            }
+        }
+    }
+
+    /// Kernel hand-over at the quantum boundary `now_ps`: when the
+    /// resident kernel has drained on every CU, launch the next one so
+    /// all CUs start it at the same timestamp.
+    fn for_each_done_kernel_advance(&mut self, now_ps: u64) {
         if self.current_kernel.is_some() && self.cus.iter().all(|c| c.kernel_done()) {
+            debug_assert!(
+                self.cus.iter().all(|c| c.now_ps == now_ps),
+                "kernel hand-over must happen at a quantum boundary"
+            );
             self.advance_kernel_queue();
         }
     }
@@ -494,6 +569,34 @@ mod tests {
             vec![3.0, 7.0]
         );
         assert_eq!(ob.domain_sum(&[1.0, 2.0, 3.0], 2), vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let run_with = |threads: usize| {
+            let mut cfg = small_cfg();
+            cfg.gpu.sim_threads = threads;
+            let mut g = Gpu::new(cfg);
+            g.load_workload(vec![mem_kernel(200), compute_kernel(200)], 2);
+            let mut obs = Vec::new();
+            for _ in 0..6 {
+                obs.push(g.run_epoch());
+            }
+            (obs, g)
+        };
+        let (obs1, g1) = run_with(1);
+        let (obs4, g4) = run_with(4);
+        let (obs0, g0) = run_with(0); // auto: all cores
+        for ((a, b), c) in obs1.iter().zip(&obs4).zip(&obs0) {
+            assert_eq!(a.cu, b.cu, "per-CU counters depend on thread count");
+            assert_eq!(a.cu, c.cu);
+            assert_eq!(a.wf_instr, b.wf_instr);
+            assert_eq!(a.wf_next_pc, b.wf_next_pc);
+        }
+        assert_eq!(g1.total_instr(), g4.total_instr());
+        assert_eq!(g1.mem_counters(), g4.mem_counters());
+        assert_eq!(g1.mem_counters(), g0.mem_counters());
+        assert_eq!(g1.now_ps, g4.now_ps);
     }
 
     #[test]

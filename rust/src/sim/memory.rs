@@ -1,14 +1,29 @@
-//! Memory hierarchy: per-CU L1, shared banked L2 (fixed 1.6 GHz domain),
+//! Memory hierarchy: per-CU L1, shared sliced L2 (fixed 1.6 GHz domain),
 //! and DRAM with bandwidth queueing.
 //!
-//! Contention model: L2 banks and the DRAM channel keep *reservation
+//! Contention model: L2 slices and the DRAM channel keep *reservation
 //! clocks* (`next_free_ps`).  Each access reserves its service slot, so
 //! queueing delay emerges from aggregate request rate — this is what
 //! produces the paper's second-order effects (e.g. FwdSoft's L2 thrashing
-//! at high frequency, §6.2) without a full MSHR model.  CUs advance in
-//! small coupling quanta so reservation ordering across CUs is
-//! approximately time-ordered (DESIGN.md §5).
-
+//! at high frequency, §6.2) without a full MSHR model.
+//!
+//! The CU↔memory seam is the [`MemPort`] trait: CUs never hold `&mut
+//! MemSystem` while stepping.  During a coupling quantum a CU submits
+//! [`MemRequest`]s through its port; with a [`QueuePort`] the requests
+//! are buffered and serviced at the quantum barrier in fixed
+//! `(cu_id, issue-order)` arbitration ([`MemSystem::service`]), so the
+//! shared hierarchy sees one deterministic request order regardless of
+//! how many threads stepped the CUs.  [`DirectPort`] services requests
+//! synchronously against a `MemSystem` — the zero-deferral path used by
+//! unit tests that want latencies resolved at issue time.
+//!
+//! The L2 is address-interleaved into per-slice state (`slice = line %
+//! n_slices`, one slice per configured bank): each slice owns its tag
+//! array and reservation clock, so the
+//! global structure is a plain `Vec` of independent slices.  Slice-local
+//! line addresses (`line / n_slices`) keep the per-slice set mapping a
+//! bijection of the old single-cache set mapping whenever the slice
+//! count divides the set count, which it does for all shipped configs.
 
 use crate::config::GpuConfig;
 
@@ -106,19 +121,86 @@ pub enum MemLevel {
     Dram,
 }
 
+/// One L1-missing memory instruction, as a CU hands it across the
+/// [`MemPort`] seam.  Everything the shared hierarchy needs to resolve
+/// the completion time is captured at issue: the CU-side floor latency
+/// (`local_lat_ps`: the issue cycle and any L1-hit lanes of the fan)
+/// and the L1-missing line addresses in lane order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemRequest {
+    /// CU-local response sequence number (heap tie-break).
+    pub seq: u64,
+    /// Absolute issue time.
+    pub issued_ps: u64,
+    /// Wavefront slot that issued the instruction.
+    pub slot: u8,
+    pub is_store: bool,
+    /// Leading wavefront (per-kernel stall attribution).
+    pub leading: bool,
+    /// CU-side latency floor in ps (issue cycle, L1-hit lanes).
+    pub local_lat_ps: u64,
+    /// L1-missing line addresses, in lane order.
+    pub lines: Vec<u64>,
+}
+
+/// The CU↔memory seam.  `submit` either resolves the request now and
+/// returns its completion time (`Some(at_ps)`) or buffers it for
+/// barrier-time arbitration (`None`); in the latter case the owner of
+/// the queue delivers the response into the CU after servicing.
+pub trait MemPort {
+    fn submit(&mut self, req: MemRequest) -> Option<u64>;
+}
+
+/// Zero-deferral port: services each request against the wrapped
+/// [`MemSystem`] at issue time.  Single-CU semantics (unit tests, and
+/// any caller that steps exactly one CU against a private hierarchy).
+pub struct DirectPort<'a>(pub &'a mut MemSystem);
+
+impl MemPort for DirectPort<'_> {
+    fn submit(&mut self, req: MemRequest) -> Option<u64> {
+        Some(self.0.service(&req))
+    }
+}
+
+/// Deferring port: one per CU per quantum.  Requests accumulate in
+/// issue order and are serviced at the quantum barrier in `(cu_id,
+/// issue-order)` arbitration by the GPU, which makes the shared-memory
+/// request order — and therefore every hit/miss bit and histogram
+/// bucket — independent of the CU-stepping thread count.
+#[derive(Debug, Clone, Default)]
+pub struct QueuePort {
+    pub pending: Vec<MemRequest>,
+}
+
+impl MemPort for QueuePort {
+    fn submit(&mut self, req: MemRequest) -> Option<u64> {
+        self.pending.push(req);
+        None
+    }
+}
+
+/// One address-interleaved L2 slice: its share of the tag state and its
+/// own service-reservation clock.  Slices are fully independent — the
+/// bank-conflict behavior of the old monolithic cache falls out of the
+/// address interleave.
+#[derive(Debug, Clone, PartialEq)]
+struct MemSlice {
+    cache: Cache,
+    next_free_ps: u64,
+}
+
 /// The shared (CU-external) part of the hierarchy.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MemSystem {
-    pub l2: Cache,
-    l2_banks: usize,
+    /// Address-interleaved L2: `slice = line % slices.len()`.
+    slices: Vec<MemSlice>,
     l2_hit_ps: u64,
     l2_service_ps: u64,
     dram_ps: u64,
     /// ps to move one line across the DRAM channel.
     dram_line_ps: u64,
     line_bytes: usize,
-    /// Reservation clocks.
-    bank_next_free_ps: Vec<u64>,
+    /// DRAM channel reservation clock (one shared channel).
     dram_next_free_ps: u64,
     /// Counters.
     pub l2_accesses: u64,
@@ -134,9 +216,14 @@ pub struct MemSystem {
 impl MemSystem {
     pub fn new(cfg: &GpuConfig) -> Self {
         let line = cfg.l1_line;
+        let n_slices = cfg.l2_banks.max(1);
         MemSystem {
-            l2: Cache::new(cfg.l2_bytes, line, cfg.l2_ways),
-            l2_banks: cfg.l2_banks.max(1),
+            slices: (0..n_slices)
+                .map(|_| MemSlice {
+                    cache: Cache::new(cfg.l2_bytes / n_slices, line, cfg.l2_ways),
+                    next_free_ps: 0,
+                })
+                .collect(),
             l2_hit_ps: super::ns_to_ps(cfg.l2_hit_ns),
             l2_service_ps: super::ns_to_ps(cfg.l2_service_ns),
             dram_ps: super::ns_to_ps(cfg.dram_ns),
@@ -144,7 +231,6 @@ impl MemSystem {
                 .round()
                 .max(1.0) as u64,
             line_bytes: line,
-            bank_next_free_ps: vec![0; cfg.l2_banks.max(1)],
             dram_next_free_ps: 0,
             l2_accesses: 0,
             dram_accesses: 0,
@@ -157,15 +243,19 @@ impl MemSystem {
     /// Returns (total latency in ps, deepest level touched).
     pub fn access(&mut self, line: u64, now_ps: u64) -> (u64, MemLevel) {
         self.l2_accesses += 1;
-        let bank = (line as usize) % self.l2_banks;
-        // Reserve the bank: queueing delay if it is busy.
-        let start = self.bank_next_free_ps[bank].max(now_ps);
-        self.bank_next_free_ps[bank] = start + self.l2_service_ps;
+        let n = self.slices.len() as u64;
+        let slice = &mut self.slices[(line % n) as usize];
+        // Reserve the slice: queueing delay if it is busy.
+        let start = slice.next_free_ps.max(now_ps);
+        slice.next_free_ps = start + self.l2_service_ps;
         let queue = start - now_ps;
         let depth = (queue / self.l2_service_ps.max(1)) as usize;
         self.l2_queue_depth_hist[depth.min(QUEUE_DEPTH_BUCKETS - 1)] += 1;
 
-        if self.l2.access(line) {
+        // Slice-local line address: within a slice, `line / n` is
+        // unique per global line, and the induced set index matches the
+        // old monolithic mapping whenever n divides the set count.
+        if slice.cache.access(line / n) {
             (queue + self.l2_hit_ps, MemLevel::L2)
         } else {
             self.dram_accesses += 1;
@@ -177,10 +267,10 @@ impl MemSystem {
             let ddepth = (dqueue / self.dram_line_ps.max(1)) as usize;
             self.dram_queue_depth_hist[ddepth.min(QUEUE_DEPTH_BUCKETS - 1)] += 1;
             // Row-buffer locality variance: DRAM latency varies ±30% per
-            // line (address-keyed, so identical across re-executions at
-            // different frequencies — required by the oracle regression).
-            // This de-synchronizes wavefront convoys the way real DRAM
-            // timing jitter does.
+            // line (address-keyed on the *global* line, so identical
+            // across re-executions at different frequencies — required
+            // by the oracle regression).  This de-synchronizes wavefront
+            // convoys the way real DRAM timing jitter does.
             let jitter =
                 0.7 + 0.6 * (crate::util::mix(line) >> 11) as f64 / (1u64 << 53) as f64;
             let dram = (self.dram_ps as f64 * jitter) as u64;
@@ -188,16 +278,38 @@ impl MemSystem {
         }
     }
 
+    /// Resolve one deferred [`MemRequest`]: the completion time is the
+    /// issue time plus the slowest lane — the CU-side floor or any of
+    /// the L1-missing lines, serviced here in lane order.
+    pub fn service(&mut self, req: &MemRequest) -> u64 {
+        let mut lat = req.local_lat_ps;
+        for &line in &req.lines {
+            let (l, _) = self.access(line, req.issued_ps);
+            lat = lat.max(l);
+        }
+        req.issued_ps + lat
+    }
+
     pub fn line_bytes(&self) -> usize {
         self.line_bytes
+    }
+
+    /// Aggregate L2 hits across slices (fixed slice order).
+    pub fn l2_hits(&self) -> u64 {
+        self.slices.iter().map(|s| s.cache.hits).sum()
+    }
+
+    /// Aggregate L2 misses across slices (fixed slice order).
+    pub fn l2_misses(&self) -> u64 {
+        self.slices.iter().map(|s| s.cache.misses).sum()
     }
 
     /// Snapshot the memory-side deterministic counters (obs channel 1).
     pub fn obs_counters(&self) -> crate::obs::MemCounters {
         crate::obs::MemCounters {
             l2_accesses: self.l2_accesses,
-            l2_hits: self.l2.hits,
-            l2_misses: self.l2.misses,
+            l2_hits: self.l2_hits(),
+            l2_misses: self.l2_misses(),
             dram_accesses: self.dram_accesses,
             l2_queue_depth_hist: self.l2_queue_depth_hist.clone(),
             dram_queue_depth_hist: self.dram_queue_depth_hist.clone(),
@@ -207,7 +319,9 @@ impl MemSystem {
     /// Kernel-boundary flush (cold caches per kernel, like the paper's
     /// distinct kernel launches).
     pub fn flush(&mut self) {
-        self.l2.flush();
+        for s in &mut self.slices {
+            s.cache.flush();
+        }
     }
 }
 
@@ -285,7 +399,7 @@ mod tests {
     #[test]
     fn bank_contention_queues() {
         let mut m = MemSystem::new(&cfg());
-        // Same line (same bank), back-to-back at the same instant: the
+        // Same line (same slice), back-to-back at the same instant: the
         // second access must queue behind the first's service slot.
         let (a, _) = m.access(7, 0);
         let (b, _) = m.access(7, 0);
@@ -303,13 +417,13 @@ mod tests {
         m.access(1, 0);
         let (a, _) = m.access(0, 1_000_000);
         let (b, _) = m.access(1, 1_000_000);
-        assert_eq!(a, b, "independent banks must not interfere");
+        assert_eq!(a, b, "independent slices must not interfere");
     }
 
     #[test]
     fn dram_bandwidth_queues_under_burst() {
         let mut m = MemSystem::new(&cfg());
-        // Unique lines in distinct banks, all missing to DRAM at t=0:
+        // Unique lines in distinct slices, all missing to DRAM at t=0:
         // later ones must see growing channel queue delay.
         let first = m.access(0, 0).0;
         let mut last = first;
@@ -322,7 +436,7 @@ mod tests {
     #[test]
     fn queue_depth_histograms_see_contention() {
         let mut m = MemSystem::new(&cfg());
-        // 64 back-to-back accesses to one bank at t=0: queue depth grows
+        // 64 back-to-back accesses to one slice at t=0: queue depth grows
         // monotonically, so buckets past 0 must fill (capped at the top).
         for _ in 0..64 {
             m.access(7, 0);
@@ -356,5 +470,116 @@ mod tests {
         b.access(4, 0);
         assert_eq!(a.l2_accesses, 1);
         assert_eq!(b.l2_accesses, 2);
+    }
+
+    #[test]
+    fn slice_interleave_matches_monolithic_set_mapping() {
+        // With the default config the slice count (16) divides the old
+        // monolithic set count (4096), so distinct lines that collided
+        // in one old set must still collide in one (slice, set') and
+        // lines from distinct old sets must stay apart.  Probe with an
+        // eviction experiment: default ways = 16, so 17 lines mapping
+        // to the same old set must thrash while 16 stay resident.
+        let c = cfg();
+        let old_sets = (c.l2_bytes / c.l1_line / c.l2_ways) as u64;
+        let mut m = MemSystem::new(&c);
+        // 16 same-set lines: fill, then re-touch — all hits
+        for l in 0..16u64 {
+            m.access(l * old_sets + 5, 0);
+        }
+        for l in 0..16u64 {
+            m.access(l * old_sets + 5, 0);
+        }
+        assert_eq!(m.l2_hits(), 16, "16-way set must hold 16 lines");
+        // a 17th same-set line must evict
+        m.access(16 * old_sets + 5, 0);
+        assert_eq!(m.l2_misses(), 17);
+    }
+
+    #[test]
+    fn direct_port_resolves_at_issue_time() {
+        let c = cfg();
+        let mut m = MemSystem::new(&c);
+        let mut port = DirectPort(&mut m);
+        let at = port.submit(MemRequest {
+            seq: 0,
+            issued_ps: 1000,
+            slot: 0,
+            is_store: false,
+            leading: true,
+            local_lat_ps: 10,
+            lines: vec![42],
+        });
+        let at = at.expect("DirectPort must resolve synchronously");
+        assert!(at > 1000 + 10, "a DRAM miss must dominate the local floor");
+        assert_eq!(m.l2_accesses, 1);
+    }
+
+    #[test]
+    fn queue_port_defers_then_service_matches_direct() {
+        let c = cfg();
+        let reqs: Vec<MemRequest> = (0..8u64)
+            .map(|i| MemRequest {
+                seq: i,
+                issued_ps: i * 100,
+                slot: (i % 4) as u8,
+                is_store: i % 2 == 0,
+                leading: i == 0,
+                local_lat_ps: 7,
+                lines: vec![i * 3, i * 3 + 1],
+            })
+            .collect();
+
+        // direct: serviced one by one at issue time
+        let mut m_direct = MemSystem::new(&c);
+        let direct: Vec<u64> = reqs
+            .iter()
+            .map(|r| {
+                DirectPort(&mut m_direct)
+                    .submit(r.clone())
+                    .expect("synchronous")
+            })
+            .collect();
+
+        // queued: buffered, then drained in issue order at the barrier
+        let mut m_queued = MemSystem::new(&c);
+        let mut q = QueuePort::default();
+        for r in &reqs {
+            assert!(q.submit(r.clone()).is_none(), "QueuePort must defer");
+        }
+        assert_eq!(q.pending.len(), reqs.len());
+        let queued: Vec<u64> = q.pending.drain(..).map(|r| m_queued.service(&r)).collect();
+
+        // same request order => identical completion times and state
+        assert_eq!(direct, queued);
+        assert_eq!(m_direct, m_queued);
+    }
+
+    #[test]
+    fn service_floors_at_local_latency() {
+        let mut m = MemSystem::new(&cfg());
+        // warm the line so the memory-side latency is a cheap L2 hit
+        m.access(9, 0);
+        let at = m.service(&MemRequest {
+            seq: 1,
+            issued_ps: 1_000_000,
+            slot: 0,
+            is_store: false,
+            leading: false,
+            local_lat_ps: 50_000_000, // 50 µs floor dwarfs any L2 hit
+            lines: vec![9],
+        });
+        assert_eq!(at, 1_000_000 + 50_000_000);
+        // and a request with no missing lines is purely the local floor
+        let at2 = m.service(&MemRequest {
+            seq: 2,
+            issued_ps: 500,
+            slot: 0,
+            is_store: true,
+            leading: false,
+            local_lat_ps: 80,
+            lines: vec![],
+        });
+        assert_eq!(at2, 580);
     }
 }

@@ -1,0 +1,149 @@
+//! Deterministic intra-simulation parallelism acceptance gates:
+//!
+//! 1. A sweep's stats CSV and both byte-deterministic obs sidecars
+//!    (`counters.json`, `decisions.csv`) are byte-identical for
+//!    `--sim-threads 1` vs `--sim-threads 4` vs a rerun — CU threads
+//!    may only move wall-clock, never results.
+//! 2. The oracle policy's snapshot → pre-execute → restore loop is
+//!    bit-identical under threading (`f64::to_bits` on ED²P / energy /
+//!    instructions), including `--sim-threads 0` (machine-wide).
+//! 3. `gpu.sim_threads` is excluded from run identity: a cache warmed
+//!    at one thread count serves a rerun at another with zero
+//!    executions and zero cache misses.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pcstall::config::SimConfig;
+use pcstall::dvfs::manager::{DvfsManager, Policy, RunMode};
+use pcstall::dvfs::objective::Objective;
+use pcstall::exec::{Engine, ShardSpec};
+use pcstall::harness::sweep::{run_sweep, SweepPlan};
+use pcstall::harness::{ExpOptions, Scale};
+use pcstall::obs::ObsRecorder;
+use pcstall::workloads;
+
+/// A mixed catalog + synth population over a reactive and an
+/// oracle-laddered design: exercises CU stepping, the quantum barrier,
+/// snapshot/restore pre-execution, and the decision trace at once.
+const PLAN: &str = r#"
+name = "pargate"
+epoch_ns = [1000]
+cus_per_domain = [1]
+workloads = ["comd", "synth:5"]
+designs = ["pcstall", "oracle"]
+epochs = 8
+"#;
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pcstall_par_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Run the gate plan with obs on and an explicit `--sim-threads`;
+/// returns (sweep CSV bytes, run dir).
+fn run_once(tag: &str, sim_threads: usize) -> (Vec<u8>, PathBuf) {
+    let dir = fresh_dir(tag);
+    let rec = Arc::new(ObsRecorder::new(dir.join("obs")));
+    let mut engine = Engine::no_cache();
+    engine.set_obs(Some(rec.clone()));
+    let opts = ExpOptions {
+        scale: Scale::Quick,
+        out_dir: dir.clone(),
+        jobs: 2,
+        engine: Arc::new(engine),
+        obs: Some(rec.clone()),
+        sim_threads: Some(sim_threads),
+        ..Default::default()
+    };
+    let plan = SweepPlan::from_toml(PLAN).unwrap();
+    let csv_path = run_sweep(&opts, &plan, ShardSpec::whole()).unwrap();
+    let csv = std::fs::read(&csv_path).unwrap();
+    rec.write().unwrap();
+    (csv, dir)
+}
+
+#[test]
+fn thread_count_leaves_every_artifact_byte_identical() {
+    let (csv_1, d1) = run_once("t1", 1);
+    let (csv_4, d4) = run_once("t4", 4);
+    let (csv_r, dr) = run_once("t4_rerun", 4);
+
+    assert_eq!(csv_1, csv_4, "sweep CSV must not depend on --sim-threads");
+    assert_eq!(csv_4, csv_r, "sweep CSV must be byte-identical across reruns");
+
+    for sidecar in ["counters.json", "decisions.csv"] {
+        let read = |d: &PathBuf| std::fs::read(d.join("obs").join(sidecar)).unwrap();
+        let (a, b, c) = (read(&d1), read(&d4), read(&dr));
+        assert!(!a.is_empty(), "{sidecar} missing");
+        assert_eq!(a, b, "{sidecar} must not depend on --sim-threads");
+        assert_eq!(b, c, "{sidecar} must be byte-identical across reruns");
+    }
+
+    for d in [d1, d4, dr] {
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}
+
+/// Bit patterns of the headline metrics of one oracle run.
+fn oracle_bits(sim_threads: usize) -> (u64, u64, u64) {
+    let mut cfg = SimConfig::default();
+    cfg.gpu.n_cu = 4;
+    cfg.gpu.n_wf = 8;
+    cfg.gpu.sim_threads = sim_threads;
+    let spec = workloads::build("comd", 0.05);
+    let mut mgr = DvfsManager::from_launches(
+        cfg,
+        spec.launches(),
+        spec.rounds,
+        Policy::parse("oracle").unwrap(),
+        Objective::parse("ed2p").unwrap(),
+    );
+    let r = mgr.run(RunMode::Epochs(8), "comd");
+    (
+        r.ed2p().to_bits(),
+        r.total_energy_j.to_bits(),
+        r.total_instr.to_bits(),
+    )
+}
+
+#[test]
+fn oracle_snapshot_restore_is_bit_identical_under_threading() {
+    let serial = oracle_bits(1);
+    assert_eq!(serial, oracle_bits(4), "pinned width must match serial");
+    assert_eq!(serial, oracle_bits(0), "machine-wide must match serial");
+}
+
+#[test]
+fn cache_warmed_serial_serves_threaded_rerun() {
+    let dir = fresh_dir("warm");
+    let plan = SweepPlan::from_toml(PLAN).unwrap();
+    let run_with = |tag: &str, sim_threads: usize| {
+        let engine = Arc::new(Engine::with_cache_dir(dir.join("cache")));
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            out_dir: dir.join(tag),
+            jobs: 2,
+            engine: engine.clone(),
+            sim_threads: Some(sim_threads),
+            ..Default::default()
+        };
+        let csv_path = run_sweep(&opts, &plan, ShardSpec::whole()).unwrap();
+        (engine, std::fs::read(csv_path).unwrap())
+    };
+
+    let (cold, csv_cold) = run_with("cold", 1);
+    assert!(cold.executed() > 0, "cold run must execute");
+
+    // a different thread count must hash to the same RunKeys
+    let (warm, csv_warm) = run_with("warm", 4);
+    assert_eq!(warm.executed(), 0, "warm cache must not execute");
+    let st = warm.cache_stats();
+    assert_eq!(st.misses, 0, "sim_threads must not perturb run identity");
+    assert!(st.hits > 0);
+    assert_eq!(csv_cold, csv_warm, "cache-served rerun must emit identical CSV");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
