@@ -296,9 +296,13 @@ impl SimConfig {
     /// with execution-only keys (`gpu.sim_threads`) skipped.  RunKey
     /// fingerprints hash this text, so knobs that cannot change results
     /// cannot perturb cache identity.  Because the skipped key sits at
-    /// its section's tail, this text is byte-identical to what
-    /// `to_toml` produced before the key existed — every previously
-    /// cached RunKey stays valid.
+    /// its section's tail, this text is byte-identical to a
+    /// serialization that never knew the key.  (Tail placement alone is
+    /// only enough to preserve old cache entries when a knob is added
+    /// *without* changing results; the quantum-barrier refactor that
+    /// introduced `sim_threads` also changed observable semantics, so
+    /// [`crate::exec::key::SCHEMA_VERSION`] was bumped to orphan
+    /// pre-refactor entries.)
     pub fn identity_toml(&self) -> String {
         self.render_toml(true)
     }
@@ -477,7 +481,8 @@ mod tests {
     fn identity_toml_matches_pre_sim_threads_serialization() {
         // the identity text must be exactly the full text minus the one
         // sim_threads line (tail of [gpu]) — the invariant that keeps
-        // every RunKey minted before the key existed valid
+        // execution-only knobs from ever perturbing run identity
+        // (cross-version invalidation is SCHEMA_VERSION's job)
         let c = SimConfig::default();
         let full: Vec<&str> = c.to_toml().lines().collect();
         let ident: Vec<&str> = c.identity_toml().lines().collect();

@@ -17,7 +17,13 @@ use crate::dvfs::objective::Objective;
 
 /// Bump whenever the `RunResult` serialization or the simulator's
 /// observable semantics change: old cache entries become unreachable.
-pub const SCHEMA_VERSION: u32 = 1;
+///
+/// v2: the MemPort/quantum-barrier refactor. Deferred memory responses
+/// now resolve no earlier than the quantum barrier (previously they
+/// could wake wavefronts mid-quantum at issue time), which shifts cycle
+/// counts, stall intervals, and downstream request streams — v1 entries
+/// hold old-semantics results and must not mix with new ones.
+pub const SCHEMA_VERSION: u32 = 2;
 
 /// A fully-resolved run request fingerprint.
 #[derive(Debug, Clone, PartialEq)]

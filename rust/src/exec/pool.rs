@@ -30,10 +30,18 @@ pub fn default_jobs() -> usize {
 /// a batch big enough to fill the worker pool runs serial sims (between-
 /// cell parallelism already saturates the machine), while a smaller
 /// batch hands the idle cores to each simulation.
+///
+/// `plan_width` is the widest per-cell width any cell in the batch will
+/// actually run with beyond the budgeted one — cells whose sweep plan
+/// pinned `gpu.sim_threads` via `[set]` keep their own value instead of
+/// the budgeted width (0 = no such cells).  The worker pool shrinks to
+/// fit the widest cell, so a plan-pinned batch can never multiply out
+/// to `jobs x plan_width > nproc`.
 pub fn thread_budget(
     n_cells: usize,
     jobs: usize,
     requested: Option<usize>,
+    plan_width: usize,
     nproc: usize,
 ) -> (usize, usize) {
     let n = n_cells.max(1);
@@ -44,7 +52,8 @@ pub fn thread_budget(
         None if n >= jobs.max(1) => 1,
         None => (nproc / n).max(1),
     };
-    let j = jobs.clamp(1, n).min((nproc / st.min(nproc)).max(1));
+    let widest = st.max(plan_width);
+    let j = jobs.clamp(1, n).min((nproc / widest.min(nproc)).max(1));
     (j, st)
 }
 
@@ -206,17 +215,21 @@ mod tests {
         for n_cells in [1usize, 2, 5, 16, 100] {
             for jobs in [1usize, 4, 16, 64] {
                 for req in [None, Some(0), Some(1), Some(4), Some(32)] {
-                    for nproc in [1usize, 4, 16] {
-                        let (j, st) = thread_budget(n_cells, jobs, req, nproc);
-                        assert!(j >= 1 && st >= 1);
-                        assert!(j <= n_cells.max(1));
-                        // explicit widths may exceed nproc on their own
-                        // (the user asked), but the pool never multiplies
-                        // the machine out: jobs shrink to compensate.
-                        assert!(
-                            j * st.min(nproc) <= nproc,
-                            "oversubscribed: {n_cells} cells, {jobs} jobs, {req:?}, {nproc} cores -> ({j}, {st})"
-                        );
+                    for plan in [0usize, 4, 32] {
+                        for nproc in [1usize, 4, 16] {
+                            let (j, st) = thread_budget(n_cells, jobs, req, plan, nproc);
+                            assert!(j >= 1 && st >= 1);
+                            assert!(j <= n_cells.max(1));
+                            // explicit widths may exceed nproc on their
+                            // own (the user asked), but the pool never
+                            // multiplies the machine out: jobs shrink to
+                            // cover the widest cell the batch can run.
+                            let widest = st.max(plan);
+                            assert!(
+                                j * widest.min(nproc) <= nproc,
+                                "oversubscribed: {n_cells} cells, {jobs} jobs, {req:?}, plan {plan}, {nproc} cores -> ({j}, {st})"
+                            );
+                        }
                     }
                 }
             }
@@ -226,17 +239,28 @@ mod tests {
     #[test]
     fn thread_budget_auto_policy() {
         // big batch, default request: fill the pool with serial sims
-        assert_eq!(thread_budget(100, 16, None, 16), (16, 1));
+        assert_eq!(thread_budget(100, 16, None, 0, 16), (16, 1));
         // small batch: idle cores flow into each simulation
-        assert_eq!(thread_budget(4, 16, None, 16), (4, 4));
+        assert_eq!(thread_budget(4, 16, None, 0, 16), (4, 4));
         // single Full-scale run: one job, machine-wide sim
-        assert_eq!(thread_budget(1, 16, None, 16), (1, 16));
+        assert_eq!(thread_budget(1, 16, None, 0, 16), (1, 16));
         // explicit width caps the worker pool
-        assert_eq!(thread_budget(100, 16, Some(4), 16), (4, 4));
+        assert_eq!(thread_budget(100, 16, Some(4), 0, 16), (4, 4));
         // --sim-threads 0: as wide as the machine, one job at a time
-        assert_eq!(thread_budget(100, 16, Some(0), 16), (1, 16));
+        assert_eq!(thread_budget(100, 16, Some(0), 0, 16), (1, 16));
         // explicit serial: unchanged pool behavior
-        assert_eq!(thread_budget(100, 16, Some(1), 16), (16, 1));
+        assert_eq!(thread_budget(100, 16, Some(1), 0, 16), (16, 1));
+    }
+
+    #[test]
+    fn thread_budget_respects_plan_pinned_width() {
+        // cells pinned at width 4 by a plan's `[set] gpu.sim_threads`
+        // shrink the pool even though the budgeted width stays serial
+        assert_eq!(thread_budget(100, 16, None, 4, 16), (4, 1));
+        // pinned wider than the machine: one cell at a time
+        assert_eq!(thread_budget(100, 16, None, 64, 16), (1, 1));
+        // plan width never *widens* the pool past the budgeted width
+        assert_eq!(thread_budget(4, 16, None, 2, 16), (4, 4));
     }
 
     #[test]

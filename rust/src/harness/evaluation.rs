@@ -198,11 +198,30 @@ pub(crate) fn run_cells_resolved(
     // wide with serial sims; small batches hand idle cores to each sim.
     // sim_threads is execution-only, so budgeting it here cannot perturb
     // any cell's RunKey.
+    let nproc = crate::exec::pool::default_jobs();
+    // Cells whose plan set `gpu.sim_threads` via `[set]` keep their own
+    // width below; the pool must budget for the widest of them or
+    // jobs x plan width could oversubscribe the machine.  An explicit
+    // --sim-threads overwrites every cell, making plan widths moot.
+    let plan_width = if opts.sim_threads.is_some() {
+        0
+    } else {
+        cells
+            .iter()
+            .map(|(c, _)| match c.cfg.gpu.sim_threads {
+                0 => nproc, // 0 = as wide as the machine
+                w => w,
+            })
+            .filter(|&w| w != 1)
+            .max()
+            .unwrap_or(0)
+    };
     let (jobs, sim_threads) = crate::exec::pool::thread_budget(
         cells.len(),
         opts.jobs.max(1),
         opts.sim_threads,
-        crate::exec::pool::default_jobs(),
+        plan_width,
+        nproc,
     );
     let batch: Vec<_> = cells
         .into_iter()

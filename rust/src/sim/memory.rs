@@ -23,7 +23,9 @@
 //! global structure is a plain `Vec` of independent slices.  Slice-local
 //! line addresses (`line / n_slices`) keep the per-slice set mapping a
 //! bijection of the old single-cache set mapping whenever the slice
-//! count divides the set count, which it does for all shipped configs.
+//! count divides the set count ([`slice_interleave_is_exact`] — true
+//! for all shipped configs, and [`MemSystem::new`] warns when a `--set`
+//! override breaks it).
 
 use crate::config::GpuConfig;
 
@@ -213,10 +215,43 @@ pub struct MemSystem {
     pub dram_queue_depth_hist: Vec<u64>,
 }
 
+/// True when `l2_banks` divides both the monolithic L2 set count and
+/// `l2_bytes` — the precondition under which the per-slice interleave
+/// reproduces the monolithic cache's set mapping (a bijection) and
+/// splits its capacity exactly.  Holds for every shipped config; a
+/// `--set` override can break it, in which case the slice-local set
+/// mapping diverges from the monolithic one and `l2_bytes / l2_banks`
+/// truncates capacity.
+pub fn slice_interleave_is_exact(cfg: &GpuConfig) -> bool {
+    let line = cfg.l1_line.max(1);
+    let n = cfg.l2_banks.max(1);
+    // Mirror Cache::new's geometry derivation for the monolithic cache.
+    let lines = (cfg.l2_bytes / line).max(1);
+    let ways = cfg.l2_ways.min(lines).max(1);
+    let sets = (lines / ways).max(1);
+    sets % n == 0 && cfg.l2_bytes % n == 0
+}
+
 impl MemSystem {
     pub fn new(cfg: &GpuConfig) -> Self {
         let line = cfg.l1_line;
         let n_slices = cfg.l2_banks.max(1);
+        if !slice_interleave_is_exact(cfg) {
+            // Warn (once per process) instead of silently remapping:
+            // results stay deterministic, but they no longer match a
+            // monolithic cache of the configured geometry.
+            static WARNED: std::sync::Once = std::sync::Once::new();
+            WARNED.call_once(|| {
+                eprintln!(
+                    "warning: gpu.l2_banks = {} does not divide the L2 set count and/or \
+                     gpu.l2_bytes = {}; per-slice capacity truncates to {} bytes and the \
+                     sliced set mapping diverges from the monolithic cache",
+                    n_slices,
+                    cfg.l2_bytes,
+                    cfg.l2_bytes / n_slices,
+                );
+            });
+        }
         MemSystem {
             slices: (0..n_slices)
                 .map(|_| MemSlice {
@@ -494,6 +529,32 @@ mod tests {
         // a 17th same-set line must evict
         m.access(16 * old_sets + 5, 0);
         assert_eq!(m.l2_misses(), 17);
+    }
+
+    #[test]
+    fn slice_interleave_exactness_is_detected() {
+        // shipped configs split exactly
+        assert!(slice_interleave_is_exact(&cfg()));
+        assert!(slice_interleave_is_exact(
+            &crate::config::SimConfig::default().gpu
+        ));
+        assert!(slice_interleave_is_exact(
+            &crate::config::SimConfig::small().gpu
+        ));
+        // a bank count that divides neither the set count nor the byte
+        // count is flagged (3 never divides a power-of-two geometry)
+        let mut c = cfg();
+        c.l2_banks = 3;
+        assert!(!slice_interleave_is_exact(&c));
+        // dividing the bytes but not the sets is still inexact: the
+        // default is 4 MiB / 64 B lines / 16 ways = 4096 sets, so 64
+        // banks divides both but 8192 banks exceeds the set count while
+        // still dividing the byte count
+        let mut c = cfg();
+        c.l2_banks = 64;
+        assert!(slice_interleave_is_exact(&c));
+        c.l2_banks = 8192;
+        assert!(!slice_interleave_is_exact(&c));
     }
 
     #[test]
