@@ -127,12 +127,59 @@ impl DvfsConfig {
     }
 }
 
+/// Serve-mode parameters: the arrival process and deadline policy for
+/// continuous-traffic runs ([`crate::harness::serve`]).  Every field is
+/// a registry key (`serve.*`) so offered-load and deadline axes are
+/// sweepable `[axis]` grid dimensions like any other config knob.
+///
+/// The arrival process is a seeded two-state modulated Poisson stream:
+/// exponential inter-arrival gaps at `arrival_rate` launches/µs, with a
+/// burst state that multiplies the rate by `burst_factor` and persists
+/// for an exponential dwell of mean `burst_dwell_us`.
+/// `burst_factor = 1.0` degenerates exactly to a pure Poisson process
+/// (the state modulation becomes a no-op on the gap distribution).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Number of kernel launches in the arrival stream.
+    pub launches: usize,
+    /// Mean arrival rate in launches per µs.
+    pub arrival_rate: f64,
+    /// Per-launch completion deadline in µs (queueing + service).
+    pub deadline_us: f64,
+    /// Burst-state rate multiplier (1.0 = pure Poisson).
+    pub burst_factor: f64,
+    /// Mean dwell time of each burst/calm state in µs.
+    pub burst_dwell_us: f64,
+    /// Deadline-risk threshold: when the most urgent outstanding
+    /// launch's remaining-deadline fraction drops below this, the
+    /// deadline objective falls back to max-performance.
+    pub risk_frac: f64,
+    /// Slowdown bound (vs max-perf prediction) the deadline objective
+    /// tolerates while minimizing energy outside the risk region.
+    pub slack_slowdown: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            launches: 24,
+            arrival_rate: 0.02,
+            deadline_us: 400.0,
+            burst_factor: 1.0,
+            burst_dwell_us: 50.0,
+            risk_frac: 0.25,
+            slack_slowdown: 0.5,
+        }
+    }
+}
+
 /// Top-level simulation configuration.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct SimConfig {
     pub gpu: GpuConfig,
     pub dvfs: DvfsConfig,
     pub power: PowerParams,
+    pub serve: ServeConfig,
     /// Master seed for workload generation.
     pub seed: u64,
 }
@@ -186,6 +233,13 @@ macro_rules! config_fields {
         $apply!("power.eta0", f64, $self.power.eta0, "IVR efficiency at the lowest state");
         $apply!("power.eta_slope", f64, $self.power.eta_slope, "IVR efficiency rise across the ladder");
         $apply!("power.rail_cj", f64, $self.power.rail_cj, "Rail charge constant for transition energy (J per V)");
+        $apply!("serve.launches", usize, $self.serve.launches, "Serve mode: kernel launches in the arrival stream");
+        $apply!("serve.arrival_rate", f64, $self.serve.arrival_rate, "Serve mode: mean arrival rate (launches per microsecond)");
+        $apply!("serve.deadline_us", f64, $self.serve.deadline_us, "Serve mode: per-launch completion deadline (microseconds)");
+        $apply!("serve.burst_factor", f64, $self.serve.burst_factor, "Serve mode: burst-state rate multiplier (1.0 = pure Poisson)");
+        $apply!("serve.burst_dwell_us", f64, $self.serve.burst_dwell_us, "Serve mode: mean burst/calm state dwell (microseconds)");
+        $apply!("serve.risk_frac", f64, $self.serve.risk_frac, "Serve mode: remaining-deadline fraction triggering max-perf fallback");
+        $apply!("serve.slack_slowdown", f64, $self.serve.slack_slowdown, "Serve mode: slowdown bound the deadline objective tolerates off-risk");
         $apply!("seed", u64, $self.seed, "Master seed for workload generation");
     };
 }
@@ -303,6 +357,12 @@ impl SimConfig {
     /// introduced `sim_threads` also changed observable semantics, so
     /// [`crate::exec::key::SCHEMA_VERSION`] was bumped to orphan
     /// pre-refactor entries.)
+    ///
+    /// The `[serve]` section *is* part of identity: serve keys select
+    /// the arrival stream and deadline policy of `RunMode::Serve` cells,
+    /// so they must fingerprint.  Adding the section changed this text
+    /// for every config — one of the two reasons `SCHEMA_VERSION` moved
+    /// to 3 (see the versioning policy on the constant).
     pub fn identity_toml(&self) -> String {
         self.render_toml(true)
     }
@@ -510,6 +570,31 @@ mod tests {
         // 0 = auto is an admissible value
         c.apply_override("gpu.sim_threads=0").unwrap();
         assert_eq!(c.gpu.sim_threads, 0);
+    }
+
+    #[test]
+    fn serve_keys_round_trip_and_enter_identity() {
+        let mut c = SimConfig::default();
+        c.apply_override("serve.arrival_rate=0.05").unwrap();
+        c.apply_override("serve.deadline_us=250").unwrap();
+        c.apply_override("serve.launches=12").unwrap();
+        assert!((c.serve.arrival_rate - 0.05).abs() < 1e-12);
+        assert!((c.serve.deadline_us - 250.0).abs() < 1e-9);
+        assert_eq!(c.serve.launches, 12);
+        let c2 = SimConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(c, c2);
+        // serve keys select the arrival stream, so they must fingerprint
+        let base = SimConfig::default();
+        assert_ne!(base.identity_toml(), c.identity_toml());
+        assert!(c.identity_toml().contains("[serve]"));
+    }
+
+    #[test]
+    fn burst_factor_one_is_the_default_pure_poisson() {
+        let c = SimConfig::default();
+        assert_eq!(c.serve.burst_factor, 1.0);
+        assert!(c.serve.arrival_rate > 0.0);
+        assert!(c.serve.deadline_us > 0.0);
     }
 
     #[test]

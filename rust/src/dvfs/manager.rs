@@ -30,8 +30,14 @@ use crate::obs::{DecisionSample, EpochSample, NoopSink, ObsSink, RunCounters, Ru
 use crate::power::params::{freq_index, FREQS_GHZ, N_FREQ};
 use crate::predictors::{OracleSampler, PcTables, ReactiveState};
 use crate::sim::gpu::{EpochObservation, Gpu, KernelLaunch};
-use crate::stats::{EpochRecord, RunResult};
+use crate::stats::{EpochRecord, RunResult, ServeStats};
+use crate::util::{hash2, SplitMix64};
 use crate::workloads::WorkloadSpec;
+
+/// Domain-separation tag for the serve-mode arrival RNG ("serve" in
+/// ASCII): the arrival stream is a pure function of `(seed, tag)` and is
+/// therefore identical across policies, objectives and sim widths.
+const SERVE_TAG: u64 = 0x73_6572_7665;
 
 /// The DVFS designs of paper Table III (plus static baselines).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -119,6 +125,10 @@ pub enum RunMode {
     /// Run until the workload completes (fixed-work ED^nP experiments),
     /// bounded by a safety cap.
     Completion { max_epochs: u64 },
+    /// Continuous-traffic serving: a seeded arrival process re-launches
+    /// the loaded workload `cfg.serve.launches` times, queueing launches
+    /// while the GPU is busy, until all launches drain or the cap hits.
+    Serve { max_epochs: u64 },
 }
 
 /// The manager.
@@ -143,6 +153,10 @@ pub struct DvfsManager {
     /// default [`NoopSink`] reports `enabled() == false`, so the loop
     /// pays one virtual call per epoch and builds no samples.
     obs_sink: Box<dyn ObsSink>,
+    /// Serve-mode inter-arrival override (µs): when set, gaps are read
+    /// from this list (cycled) instead of drawn from the seeded arrival
+    /// process — the trace-derived arrival path of `pcstall serve`.
+    arrival_gaps_us: Option<Vec<f64>>,
 }
 
 impl DvfsManager {
@@ -209,6 +223,7 @@ impl DvfsManager {
             last_sample: None,
             epoch_idx: 0,
             obs_sink: Box::new(NoopSink),
+            arrival_gaps_us: None,
             gpu,
             cfg,
             policy,
@@ -222,6 +237,7 @@ impl DvfsManager {
         let max = match mode {
             RunMode::Epochs(n) => n,
             RunMode::Completion { max_epochs } => max_epochs,
+            RunMode::Serve { max_epochs } => return self.run_serve(max_epochs, workload_name),
         };
         let mut records = Vec::new();
         let mut total_energy = 0f64;
@@ -261,17 +277,7 @@ impl DvfsManager {
 
         // Obs channel 1: run-cumulative counters (memory + PC table)
         // only make sense as whole-run totals.
-        if self.obs_sink.enabled() {
-            let (pc_hits, pc_misses, pc_evictions) = self.pc.counts();
-            let end = RunEndSample {
-                mem: self.gpu.mem_counters(),
-                pc_hits,
-                pc_misses,
-                pc_evictions,
-                n_domains: self.gpu.n_domains(),
-            };
-            self.obs_sink.on_run_end(&end);
-        }
+        self.emit_run_end_obs();
         RunResult {
             workload: workload_name.to_string(),
             policy: self.policy.name(),
@@ -286,6 +292,239 @@ impl DvfsManager {
             },
             pc_hit_rate: self.pc.hit_rate(),
             completed,
+            serve: None,
+            records,
+        }
+    }
+
+    /// Whole-run counter flush (obs channel 1) shared by the batch and
+    /// serve run loops.
+    fn emit_run_end_obs(&mut self) {
+        if self.obs_sink.enabled() {
+            let (pc_hits, pc_misses, pc_evictions) = self.pc.counts();
+            let end = RunEndSample {
+                mem: self.gpu.mem_counters(),
+                pc_hits,
+                pc_misses,
+                pc_evictions,
+                n_domains: self.gpu.n_domains(),
+            };
+            self.obs_sink.on_run_end(&end);
+        }
+    }
+
+    /// Install a trace-derived inter-arrival gap list (µs) for serve
+    /// mode, replacing the seeded synthetic arrival process.  The list
+    /// is cycled if shorter than `serve.launches`.
+    pub fn set_arrival_gaps(&mut self, gaps_us: Option<Vec<f64>>) {
+        self.arrival_gaps_us = gaps_us;
+    }
+
+    /// Absolute arrival times (µs) of every launch in the stream: either
+    /// the cycled trace-derived gap list, or a seeded two-state modulated
+    /// Poisson process (MMPP-2) that degenerates to pure Poisson at
+    /// `serve.burst_factor == 1.0`.
+    fn arrival_times_us(&self) -> Vec<f64> {
+        let s = &self.cfg.serve;
+        assert!(s.launches > 0, "serve.launches must be positive");
+        let mut out = Vec::with_capacity(s.launches);
+        let mut t = 0f64;
+        if let Some(gaps) = &self.arrival_gaps_us {
+            assert!(!gaps.is_empty(), "arrival-gap trace must be non-empty");
+            for i in 0..s.launches {
+                t += gaps[i % gaps.len()].max(0.0);
+                out.push(t);
+            }
+            return out;
+        }
+        assert!(s.arrival_rate > 0.0, "serve.arrival_rate must be positive");
+        assert!(s.burst_factor >= 1.0, "serve.burst_factor must be >= 1");
+        let mut rng = SplitMix64::new(hash2(self.cfg.seed, SERVE_TAG));
+        if s.burst_factor == 1.0 {
+            // Pure Poisson: exactly one draw per arrival.
+            for _ in 0..s.launches {
+                t += exp_gap(&mut rng, s.arrival_rate);
+                out.push(t);
+            }
+            return out;
+        }
+        // MMPP-2: exponential dwell times (mean `burst_dwell_us`)
+        // alternate a calm state (base rate) with a burst state (rate ×
+        // burst_factor).  A gap that overruns the current dwell advances
+        // to the state flip and redraws — unbiased by memorylessness.
+        assert!(s.burst_dwell_us > 0.0, "serve.burst_dwell_us must be positive");
+        let mut in_burst = false;
+        let mut dwell_left = exp_gap(&mut rng, 1.0 / s.burst_dwell_us);
+        for _ in 0..s.launches {
+            loop {
+                let rate = if in_burst {
+                    s.arrival_rate * s.burst_factor
+                } else {
+                    s.arrival_rate
+                };
+                let gap = exp_gap(&mut rng, rate);
+                if gap <= dwell_left {
+                    dwell_left -= gap;
+                    t += gap;
+                    out.push(t);
+                    break;
+                }
+                t += dwell_left;
+                in_burst = !in_burst;
+                dwell_left = exp_gap(&mut rng, 1.0 / s.burst_dwell_us);
+            }
+        }
+        out
+    }
+
+    /// The serve loop: a seeded arrival process re-launches the loaded
+    /// workload (the "template") `serve.launches` times; launches queue
+    /// FIFO while the GPU is busy, and the DVFS boundary protocol keeps
+    /// running across launch and idle gaps alike (predictor state is
+    /// never reset — serving is one long run).
+    ///
+    /// Under [`Objective::Deadline`] the per-epoch objective is phase-
+    /// switched: an `EnergyBound` with `serve.slack_slowdown` while every
+    /// outstanding launch has comfortable slack, tightened to a zero
+    /// bound (max-perf) once the most urgent remaining-deadline fraction
+    /// drops below `serve.risk_frac`.
+    fn run_serve(&mut self, max_epochs: u64, workload_name: &str) -> RunResult {
+        let scfg = self.cfg.serve.clone();
+        assert!(scfg.deadline_us > 0.0, "serve.deadline_us must be positive");
+
+        // Capture the launch template, then restart from an idle GPU so
+        // the constructor-loaded copy doesn't run before the first
+        // arrival (launch 0 pays its queueing delay like every other).
+        let template: Vec<KernelLaunch> = self.gpu.loaded_kernels().to_vec();
+        let rounds = self.gpu.loaded_rounds().max(1);
+        self.gpu = Gpu::new(self.cfg.clone());
+        if let Policy::Static(idx) = self.policy {
+            self.gpu.set_all_frequencies(FREQS_GHZ[idx]);
+        }
+
+        let arrivals_us = self.arrival_times_us();
+        let n = arrivals_us.len();
+        let epoch_us = self.cfg.dvfs.epoch_ns / 1000.0;
+        let deadline_objective = self.objective == Objective::Deadline;
+
+        let mut next_arrival = 0usize;
+        let mut queue: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
+        let mut in_service: Option<usize> = None;
+        // NaN = not completed before the epoch cap (counted as a miss,
+        // excluded from the latency percentiles).
+        let mut latency_us = vec![f64::NAN; n];
+        let mut queue_depth_sum = 0f64;
+
+        let mut records = Vec::new();
+        let mut total_energy = 0f64;
+        let mut total_instr = 0f64;
+        let mut acc_sum = 0f64;
+        let mut acc_n = 0u64;
+        const ACC_WARMUP: u64 = 2;
+
+        while (records.len() as u64) < max_epochs {
+            let t_us = records.len() as f64 * epoch_us;
+
+            // Launch-queue service point (epoch boundary): enqueue every
+            // arrival due by now, then dispatch the head if idle.
+            while next_arrival < n && arrivals_us[next_arrival] <= t_us {
+                queue.push_back(next_arrival);
+                next_arrival += 1;
+            }
+            if in_service.is_none() {
+                if let Some(j) = queue.pop_front() {
+                    self.gpu.dispatch_workload(template.clone(), rounds);
+                    in_service = Some(j);
+                }
+            }
+            if in_service.is_none() && queue.is_empty() && next_arrival >= n {
+                break; // stream drained
+            }
+            queue_depth_sum += queue.len() as f64 + in_service.is_some() as u64 as f64;
+
+            if deadline_objective {
+                let mut min_frac = f64::INFINITY;
+                for &j in in_service.iter().chain(queue.iter()) {
+                    let remain = arrivals_us[j] + scfg.deadline_us - t_us;
+                    min_frac = min_frac.min(remain / scfg.deadline_us);
+                }
+                let bound = if min_frac < scfg.risk_frac {
+                    0.0 // at risk: max-perf
+                } else {
+                    scfg.slack_slowdown
+                };
+                self.objective = Objective::EnergyBound { max_slowdown: bound };
+            }
+            let rec = self.step_epoch();
+            if deadline_objective {
+                self.objective = Objective::Deadline;
+            }
+
+            total_energy += rec.energy_j;
+            total_instr += rec.instr;
+            if rec.accuracy.is_finite() && rec.epoch >= ACC_WARMUP {
+                acc_sum += rec.accuracy;
+                acc_n += 1;
+            }
+            records.push(rec);
+
+            if in_service.is_some() && self.gpu.workload_done() {
+                let j = in_service.take().unwrap();
+                // Exact completion time: the last commit freezes when the
+                // launch drains, even though the epoch runs to its end.
+                let done_us = self.gpu.last_commit_ns() / 1000.0;
+                latency_us[j] = (done_us - arrivals_us[j]).max(0.0);
+            }
+        }
+        let all_done = in_service.is_none() && queue.is_empty() && next_arrival >= n;
+
+        let mut lats: Vec<f64> = latency_us.iter().copied().filter(|l| l.is_finite()).collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let completed_launches = lats.len() as u64;
+        let misses = latency_us
+            .iter()
+            .filter(|l| !(l.is_finite() && **l <= scfg.deadline_us))
+            .count();
+        let sim_ms = records.len() as f64 * self.cfg.dvfs.epoch_ns * 1e-6;
+        let serve = ServeStats {
+            launches: n as u64,
+            completed_launches,
+            p50_us: percentile_nearest_rank(&lats, 0.50),
+            p99_us: percentile_nearest_rank(&lats, 0.99),
+            mean_latency_us: if lats.is_empty() {
+                f64::NAN
+            } else {
+                lats.iter().sum::<f64>() / lats.len() as f64
+            },
+            deadline_miss_rate: misses as f64 / n as f64,
+            throughput_per_ms: if sim_ms > 0.0 {
+                completed_launches as f64 / sim_ms
+            } else {
+                0.0
+            },
+            mean_queue_depth: if records.is_empty() {
+                0.0
+            } else {
+                queue_depth_sum / records.len() as f64
+            },
+        };
+
+        self.emit_run_end_obs();
+        RunResult {
+            workload: workload_name.to_string(),
+            policy: self.policy.name(),
+            objective: self.objective.name(),
+            total_energy_j: total_energy,
+            total_time_ns: records.len() as f64 * self.cfg.dvfs.epoch_ns,
+            total_instr,
+            mean_accuracy: if acc_n > 0 {
+                acc_sum / acc_n as f64
+            } else {
+                f64::NAN
+            },
+            pc_hit_rate: self.pc.hit_rate(),
+            completed: all_done,
+            serve: Some(serve),
             records,
         }
     }
@@ -676,6 +915,22 @@ impl DvfsManager {
     }
 }
 
+/// One exponential inter-event gap at `rate` events per µs (inverse-CDF
+/// sampling; `u ∈ [0,1)` keeps the argument of `ln` in `(0,1]`).
+fn exp_gap(rng: &mut SplitMix64, rate: f64) -> f64 {
+    -(1.0 - rng.next_f64()).ln() / rate
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (NaN if empty).
+/// Monotone in `p` by construction, so p99 ≥ p50 always holds.
+fn percentile_nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let k = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[k - 1]
+}
+
 /// Extract one domain's N_FREQ-row from a flattened grid.
 fn grid_row(grid: &[f32], d: usize) -> [f64; N_FREQ] {
     let mut row = [0f64; N_FREQ];
@@ -872,6 +1127,82 @@ mod tests {
             "trace mean {} vs RunResult {}",
             acc_sum / n as f64,
             r.mean_accuracy
+        );
+    }
+
+    fn serve_cfg(launches: usize, rate: f64) -> SimConfig {
+        let mut c = small_cfg();
+        c.serve.launches = launches;
+        c.serve.arrival_rate = rate;
+        c
+    }
+
+    #[test]
+    fn serve_mode_drains_the_stream_and_reports_latencies() {
+        let wl = workloads::build("comd", 0.02);
+        let mut m = DvfsManager::new(
+            serve_cfg(3, 0.1),
+            &wl,
+            Policy::Static(4),
+            Objective::Deadline,
+        );
+        let r = m.run(RunMode::Serve { max_epochs: 50_000 }, "comd");
+        let s = r.serve.as_ref().expect("serve run must carry ServeStats");
+        assert!(r.completed, "stream did not drain: {s:?}");
+        assert_eq!(s.launches, 3);
+        assert_eq!(s.completed_launches, 3);
+        assert!(s.p50_us > 0.0);
+        assert!(s.p99_us >= s.p50_us, "p99 {} < p50 {}", s.p99_us, s.p50_us);
+        assert!(s.mean_latency_us > 0.0);
+        assert!(s.throughput_per_ms > 0.0);
+        assert!(s.mean_queue_depth > 0.0);
+        assert!((0.0..=1.0).contains(&s.deadline_miss_rate));
+        assert!(r.total_energy_j > 0.0, "idle + service epochs burn energy");
+    }
+
+    #[test]
+    fn serve_runs_are_deterministic_and_seeded() {
+        let wl = workloads::build("comd", 0.02);
+        let run = |seed: u64| {
+            let mut c = serve_cfg(3, 0.1);
+            c.seed = seed;
+            let mut m = DvfsManager::new(c, &wl, Policy::PcStall, Objective::Deadline);
+            m.run(RunMode::Serve { max_epochs: 50_000 }, "comd")
+        };
+        let a = run(7);
+        let b = run(7);
+        assert_eq!(a.serve, b.serve, "same seed must reproduce bit-exactly");
+        assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+        assert_eq!(a.records.len(), b.records.len());
+        let c = run(8);
+        assert_ne!(
+            a.serve.as_ref().unwrap().p50_us.to_bits(),
+            c.serve.as_ref().unwrap().p50_us.to_bits(),
+            "the seed must move the arrival stream"
+        );
+    }
+
+    #[test]
+    fn arrival_streams_burst_cycle_and_stay_seeded() {
+        let wl = workloads::build("comd", 0.02);
+        let mk = |burst: f64| {
+            let mut c = serve_cfg(8, 0.05);
+            c.serve.burst_factor = burst;
+            DvfsManager::new(c, &wl, Policy::Static(4), Objective::Ed2p)
+        };
+        let poisson = mk(1.0).arrival_times_us();
+        let bursty = mk(3.0).arrival_times_us();
+        assert_eq!(poisson.len(), 8);
+        assert!(poisson.windows(2).all(|w| w[1] >= w[0]), "times ascend");
+        assert_ne!(poisson, bursty, "burst modulation must reshape the stream");
+        assert_eq!(bursty, mk(3.0).arrival_times_us(), "bursty stream is seeded");
+        // trace-derived gaps replace the synthetic process, cycled to
+        // cover all launches
+        let mut m = mk(1.0);
+        m.set_arrival_gaps(Some(vec![10.0, 20.0]));
+        assert_eq!(
+            m.arrival_times_us(),
+            vec![10.0, 30.0, 40.0, 60.0, 70.0, 90.0, 100.0, 120.0]
         );
     }
 

@@ -17,6 +17,14 @@ pub enum Objective {
     /// Minimize energy subject to ≤ `max_slowdown` (e.g. 0.05) predicted
     /// performance degradation vs the top state (paper §6.4).
     EnergyBound { max_slowdown: f64 },
+    /// Serve mode: minimize energy subject to per-launch completion
+    /// deadlines.  The slack/risk phase logic lives in the manager's
+    /// serve loop (which swaps in an [`Objective::EnergyBound`] whose
+    /// bound tracks queue urgency — `serve.slack_slowdown` when slack,
+    /// `0` when a deadline is at risk); standalone `select` (regret
+    /// attribution, non-serve runs) behaves as the risk phase:
+    /// an `EnergyBound` with a zero bound — the deadline-safe default.
+    Deadline,
 }
 
 impl Objective {
@@ -27,6 +35,7 @@ impl Objective {
             Objective::EnergyBound { max_slowdown } => {
                 format!("E@{:.0}%", max_slowdown * 100.0)
             }
+            Objective::Deadline => "DEADLINE".into(),
         }
     }
 
@@ -38,6 +47,7 @@ impl Objective {
         Ok(match lower.as_str() {
             "edp" => Objective::Edp,
             "ed2p" => Objective::Ed2p,
+            "deadline" => Objective::Deadline,
             _ => {
                 if let Some(pct) = lower.strip_prefix("energy@") {
                     let p: f64 = pct.trim_end_matches('%').parse().map_err(|_| {
@@ -54,7 +64,7 @@ impl Objective {
                         max_slowdown: p / 100.0,
                     }
                 } else {
-                    anyhow::bail!("unknown objective '{s}' (edp|ed2p|energy@<pct>)");
+                    anyhow::bail!("unknown objective '{s}' (edp|ed2p|energy@<pct>|deadline)");
                 }
             }
         })
@@ -66,7 +76,8 @@ impl Objective {
         match self {
             Objective::Edp => 2.0,
             Objective::Ed2p => 3.0,
-            Objective::EnergyBound { .. } => 1.0, // P/r = energy per work
+            // P/r = energy per work for both bounded forms
+            Objective::EnergyBound { .. } | Objective::Deadline => 1.0,
         }
     }
 
@@ -78,6 +89,12 @@ impl Objective {
     pub fn select(&self, pred_instr: &[f64; N_FREQ], _power_w: &[f64; N_FREQ], ednp: &[f64; N_FREQ]) -> usize {
         match self {
             Objective::Edp | Objective::Ed2p => argmin(ednp),
+            // Standalone Deadline selection is the risk phase: a zero
+            // slowdown bound (the serve loop swaps in slack-aware bounds
+            // per epoch before selection ever reaches this point).
+            Objective::Deadline => {
+                Objective::EnergyBound { max_slowdown: 0.0 }.select(pred_instr, _power_w, ednp)
+            }
             Objective::EnergyBound { max_slowdown } => {
                 let perf_floor = pred_instr[N_FREQ - 1] * (1.0 - max_slowdown);
                 // Lowest-energy state meeting the performance floor; the
@@ -262,5 +279,26 @@ mod tests {
             Objective::EnergyBound { max_slowdown: 0.1 }.name(),
             "E@10%"
         );
+        assert_eq!(Objective::Deadline.name(), "DEADLINE");
+    }
+
+    #[test]
+    fn deadline_parses_and_selects_like_a_zero_bound() {
+        assert_eq!(Objective::parse("deadline").unwrap(), Objective::Deadline);
+        assert_eq!(Objective::parse("DEADLINE").unwrap(), Objective::Deadline);
+        assert_eq!(Objective::Deadline.n_exp(), 1.0);
+        let zero = Objective::EnergyBound { max_slowdown: 0.0 };
+        for s in [0.0, 500.0, 8_000.0, 40_000.0] {
+            let (i, p, e) = grids(s, 300.0, Objective::Deadline);
+            assert_eq!(
+                Objective::Deadline.select(&i, &p, &e),
+                zero.select(&i, &p, &e),
+                "sens {s}"
+            );
+        }
+        // memory-bound: rate is flat in f, so even a zero slowdown bound
+        // admits every state and the lowest-energy one wins
+        let (i, p, e) = grids(0.0, 800.0, Objective::Deadline);
+        assert_eq!(Objective::Deadline.select(&i, &p, &e), 0);
     }
 }

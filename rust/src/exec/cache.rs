@@ -326,6 +326,7 @@ mod tests {
             mean_accuracy: 0.5,
             pc_hit_rate: 0.9,
             completed: false,
+            serve: None,
         }
     }
 

@@ -18,12 +18,39 @@ use crate::dvfs::objective::Objective;
 /// Bump whenever the `RunResult` serialization or the simulator's
 /// observable semantics change: old cache entries become unreachable.
 ///
+/// ## Versioning policy
+///
+/// The constant salts every [`RunKey::canonical`] string, so a bump
+/// **orphans** the whole result cache: old entries stay on disk (until
+/// `pcstall cache clear` collects them) but no new run can address
+/// them, and nothing is corrupted or silently mixed.  Bump it when:
+///
+/// * the simulator's *observable semantics* change — the same request
+///   now produces a different `RunResult` (timing model, arbitration,
+///   energy math), so cached results are stale even though their keys
+///   still parse;
+/// * the `RunResult` *serialization* gains/changes fields that readers
+///   of old entries would mis-, partially-, or default-decode in a way
+///   that changes downstream CSVs;
+/// * the config identity text ([`SimConfig::identity_toml`]) changes
+///   shape for *existing* configs (a new section/field that renders for
+///   every config) — every `cfg_fp` moves anyway, and the bump makes
+///   the orphaning explicit and debuggable instead of incidental.
+///
+/// Do **not** bump for execution-only knobs (`gpu.sim_threads`-style
+/// keys excluded from `identity_toml`) or output-formatting changes
+/// that leave cached payloads exact.
+///
 /// v2: the MemPort/quantum-barrier refactor. Deferred memory responses
 /// now resolve no earlier than the quantum barrier (previously they
 /// could wake wavefronts mid-quantum at issue time), which shifts cycle
 /// counts, stall intervals, and downstream request streams — v1 entries
 /// hold old-semantics results and must not mix with new ones.
-pub const SCHEMA_VERSION: u32 = 2;
+///
+/// v3: serve mode. The `[serve]` config section joined
+/// `identity_toml` (moving every config fingerprint), and `RunResult`
+/// grew an optional `serve` stats object in its cache serialization.
+pub const SCHEMA_VERSION: u32 = 3;
 
 /// A fully-resolved run request fingerprint.
 #[derive(Debug, Clone, PartialEq)]
@@ -33,7 +60,7 @@ pub struct RunKey {
     /// `reactive:<model>`, `pcstall`, ...
     pub policy: String,
     pub objective: String,
-    /// `epochs:<n>` or `completion:<cap>`.
+    /// `epochs:<n>`, `completion:<cap>`, or `serve:<cap>`.
     pub mode: String,
     /// `native` or `pjrt`.
     pub backend: String,
@@ -70,6 +97,7 @@ pub fn objective_id(o: Objective) -> String {
         Objective::Edp => "edp".into(),
         Objective::Ed2p => "ed2p".into(),
         Objective::EnergyBound { max_slowdown } => format!("energy@{max_slowdown:?}"),
+        Objective::Deadline => "deadline".into(),
     }
 }
 
@@ -78,6 +106,7 @@ pub fn mode_id(m: RunMode) -> String {
     match m {
         RunMode::Epochs(n) => format!("epochs:{n}"),
         RunMode::Completion { max_epochs } => format!("completion:{max_epochs}"),
+        RunMode::Serve { max_epochs } => format!("serve:{max_epochs}"),
     }
 }
 
@@ -427,6 +456,26 @@ mod tests {
         for n in [2usize, 3, 7] {
             assert_eq!(serial.shard_of(n), wide.shard_of(n));
         }
+    }
+
+    #[test]
+    fn serve_cells_fingerprint_mode_objective_and_serve_keys() {
+        let key_of = |cfg: &SimConfig, obj: Objective, mode: RunMode| {
+            RunKey::new(cfg, "quick", "native", "comd", Policy::PcStall, obj, mode, 0.05)
+        };
+        let cfg = SimConfig::small();
+        let batch = key_of(&cfg, Objective::Ed2p, RunMode::Epochs(24));
+        let serve = key_of(&cfg, Objective::Deadline, RunMode::Serve { max_epochs: 24 });
+        assert_ne!(batch.hash_hex(), serve.hash_hex());
+        assert_eq!(serve.mode, "serve:24");
+        assert_eq!(serve.objective, "deadline");
+        // offered load is a config identity: sweeping serve.arrival_rate
+        // must give distinct cache addresses per grid value
+        let mut loaded = SimConfig::small();
+        loaded.serve.arrival_rate = 0.05;
+        let hot = key_of(&loaded, Objective::Deadline, RunMode::Serve { max_epochs: 24 });
+        assert_ne!(serve.cfg_fp, hot.cfg_fp);
+        assert_ne!(serve.hash_hex(), hot.hash_hex());
     }
 
     #[test]

@@ -297,6 +297,7 @@ mod tests {
             mean_accuracy: f64::NAN,
             pc_hit_rate: 0.0,
             completed: true,
+            serve: None,
         }
     }
 

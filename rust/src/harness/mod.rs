@@ -9,6 +9,7 @@
 
 pub mod characterization;
 pub mod evaluation;
+pub mod serve;
 pub mod sweep;
 
 use std::path::PathBuf;

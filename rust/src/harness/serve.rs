@@ -1,0 +1,287 @@
+//! Serve-mode harness: continuous-traffic DVFS under deadlines.
+//!
+//! The paper evaluates DVFS policies on *fixed-work* runs (a workload
+//! executes once; ED²P over that span).  Datacenter GPUs instead see a
+//! continuous launch stream, and the figure of merit becomes "energy
+//! saved at a fixed tail-latency target".  `pcstall serve` drives one
+//! long-horizon simulation per policy: a seeded arrival process
+//! ([`crate::dvfs::manager::DvfsManager::run`] with
+//! [`RunMode::Serve`]) offers `serve.launches` copies of the workload,
+//! the policy runs throughout (idle epochs included), and the run
+//! reports per-launch p50/p99 latency, deadline-miss rate, throughput
+//! and energy in one CSV row per policy.
+//!
+//! Two execution paths:
+//!
+//! * **Synthetic arrivals** (Poisson / bursty MMPP-2, selected by
+//!   `serve.burst_factor`): the arrival stream is derived from
+//!   `cfg.seed` + the `serve.*` config keys, all of which are part of
+//!   run identity — so serve cells ride the ordinary [`Cell`] batch
+//!   machinery (dedup, `--jobs` fan-out, the content-addressed result
+//!   cache, `--obs`) unchanged.
+//! * **Trace-derived arrivals** (`--arrival-trace <file>`: one
+//!   inter-arrival gap in µs per line): the gap list lives outside the
+//!   config, hence outside the [`RunKey`](crate::exec::key::RunKey)
+//!   fingerprint — these runs bypass the cache and execute directly,
+//!   like `pcstall simulate`.
+//!
+//! Load and deadline axes sweep through the ordinary plan grammar
+//! (`[axis] serve.arrival_rate = [..]` etc.; see the `serve_load`
+//! preset), not through this single-point driver.
+
+use std::path::PathBuf;
+
+use crate::config::registry::canonical_f64;
+use crate::config::SimConfig;
+use crate::dvfs::manager::{DvfsManager, Policy, RunMode};
+use crate::dvfs::objective::Objective;
+use crate::stats::emit::CsvTable;
+use crate::stats::RunResult;
+use crate::workloads::WorkloadSource;
+
+use super::evaluation::{completion, run_cells, Cell};
+use super::ExpOptions;
+
+/// One `pcstall serve` invocation: a workload under an arrival process,
+/// compared across policies at a single operating point.
+#[derive(Debug, Clone)]
+pub struct ServeSpec {
+    /// Workload spec (catalog name, `trace:<path>`, `synth:<seed>`).
+    pub workload: String,
+    /// Policies compared side by side (one CSV row each).
+    pub policies: Vec<Policy>,
+    /// DVFS objective for every policy (default: `deadline`).
+    pub objective: Objective,
+    /// `--arrival-trace`: explicit inter-arrival gaps (µs), cycled if
+    /// shorter than the launch count.  `None` = synthetic arrivals.
+    pub arrival_gaps_us: Option<Vec<f64>>,
+}
+
+/// The serve run mode at this epoch length: same epoch-scaled safety
+/// cap as a completion run (the serve loop stops early once the stream
+/// drains, exactly like completion mode stops at `workload_done`).
+pub fn serve_mode(epoch_ns: f64) -> RunMode {
+    match completion(epoch_ns) {
+        RunMode::Completion { max_epochs } => RunMode::Serve { max_epochs },
+        _ => unreachable!("completion() always yields RunMode::Completion"),
+    }
+}
+
+/// Column schema of `serve.csv` — one row per policy.  Order and
+/// formatting are stable (CI `cmp`-gates rerun determinism on the
+/// bytes).
+pub const SERVE_HEADER: [&str; 16] = [
+    "workload",
+    "policy",
+    "objective",
+    "arrival_per_us",
+    "deadline_us",
+    "burst_factor",
+    "launches",
+    "completed",
+    "p50_us",
+    "p99_us",
+    "mean_us",
+    "miss_rate",
+    "throughput_per_ms",
+    "queue_depth",
+    "energy_j",
+    "time_ms",
+];
+
+fn serve_row(cfg: &SimConfig, spec: &ServeSpec, policy: Policy, r: &RunResult) -> Vec<String> {
+    let mut row = vec![
+        spec.workload.clone(),
+        policy.name(),
+        spec.objective.name(),
+        canonical_f64(cfg.serve.arrival_rate),
+        canonical_f64(cfg.serve.deadline_us),
+        canonical_f64(cfg.serve.burst_factor),
+    ];
+    match &r.serve {
+        Some(s) => row.extend([
+            s.launches.to_string(),
+            s.completed_launches.to_string(),
+            format!("{:.3}", s.p50_us),
+            format!("{:.3}", s.p99_us),
+            format!("{:.3}", s.mean_latency_us),
+            format!("{:.4}", s.deadline_miss_rate),
+            format!("{:.4}", s.throughput_per_ms),
+            format!("{:.3}", s.mean_queue_depth),
+        ]),
+        None => row.extend(std::iter::repeat("-".to_string()).take(8)),
+    }
+    row.extend([
+        format!("{:.4e}", r.total_energy_j),
+        format!("{:.4}", r.total_time_ns / 1e6),
+    ]);
+    row
+}
+
+/// Run one serve operating point and emit `<out>/serve.csv` (one row
+/// per policy, [`SERVE_HEADER`] schema).  `cfg` is the fully-overridden
+/// simulator config (`--set serve.arrival_rate=0.05` etc. already
+/// applied); returns the written CSV path.
+pub fn run_serve(opts: &ExpOptions, cfg: SimConfig, spec: &ServeSpec) -> anyhow::Result<PathBuf> {
+    anyhow::ensure!(!spec.policies.is_empty(), "serve needs at least one --policy");
+    let mode = serve_mode(cfg.dvfs.epoch_ns);
+    let source = WorkloadSource::parse(&spec.workload)?;
+    // trace sources carry their recorded geometry (run_cells normalizes
+    // their waves the same way)
+    let waves = match &source {
+        WorkloadSource::Catalog(_) => opts.waves_scale(),
+        _ => 1.0,
+    };
+
+    let results: Vec<RunResult> = match &spec.arrival_gaps_us {
+        // Synthetic arrivals: identity-complete, so ride the engine
+        // (cache + dedup + --jobs + --obs).
+        None => {
+            let cells: Vec<Cell> = spec
+                .policies
+                .iter()
+                .map(|&p| {
+                    Cell::with_cfg(cfg.clone(), &spec.workload, p, spec.objective, mode, waves)
+                })
+                .collect();
+            run_cells(opts, cells)?
+        }
+        // Trace-derived arrivals: the gap list is not part of the
+        // RunKey, so never cache these — execute directly.
+        Some(gaps) => {
+            anyhow::ensure!(
+                !gaps.is_empty(),
+                "--arrival-trace: no inter-arrival gaps (need one µs value per line)"
+            );
+            let resolved = source.resolve()?;
+            let (launches, rounds) = resolved.lower(waves);
+            spec.policies
+                .iter()
+                .map(|&p| {
+                    let mut mgr = DvfsManager::from_launches(
+                        cfg.clone(),
+                        launches.clone(),
+                        rounds,
+                        p,
+                        spec.objective,
+                    );
+                    mgr.set_arrival_gaps(Some(gaps.clone()));
+                    mgr.run(mode, &resolved.display)
+                })
+                .collect()
+        }
+    };
+
+    let mut table = CsvTable::new(&SERVE_HEADER);
+    for (&policy, r) in spec.policies.iter().zip(&results) {
+        table.push(serve_row(&cfg, spec, policy, r));
+    }
+    let title = format!(
+        "serve {}: {} launches at {}/µs, deadline {} µs",
+        spec.workload,
+        cfg.serve.launches,
+        canonical_f64(cfg.serve.arrival_rate),
+        canonical_f64(cfg.serve.deadline_us),
+    );
+    opts.emit("serve", &title, &table);
+    Ok(opts.out_dir.join("serve.csv"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::Scale;
+
+    fn tmp_out(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("pcstall_serve_{tag}_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        dir
+    }
+
+    fn quick_opts(out: PathBuf) -> ExpOptions {
+        ExpOptions {
+            scale: Scale::Quick,
+            out_dir: out,
+            ..Default::default()
+        }
+    }
+
+    fn small_spec() -> (SimConfig, ServeSpec) {
+        let mut cfg = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        }
+        .base_cfg();
+        cfg.serve.launches = 2;
+        cfg.serve.arrival_rate = 0.05;
+        let spec = ServeSpec {
+            workload: "comd".into(),
+            policies: vec![Policy::Reactive(crate::models::EstModel::Crisp), Policy::PcStall],
+            objective: Objective::Deadline,
+            arrival_gaps_us: None,
+        };
+        (cfg, spec)
+    }
+
+    #[test]
+    fn serve_mode_carries_the_completion_cap() {
+        let RunMode::Serve { max_epochs } = serve_mode(1000.0) else {
+            panic!("serve_mode must be Serve")
+        };
+        let RunMode::Completion { max_epochs: cap } = completion(1000.0) else {
+            unreachable!()
+        };
+        assert_eq!(max_epochs, cap, "same epoch-scaled safety cap as completion runs");
+    }
+
+    #[test]
+    fn serve_csv_has_one_row_per_policy_and_stable_bytes() {
+        let (cfg, spec) = small_spec();
+        let out_a = tmp_out("a");
+        let out_b = tmp_out("b");
+        let path_a = run_serve(&quick_opts(out_a.clone()), cfg.clone(), &spec).unwrap();
+        let path_b = run_serve(&quick_opts(out_b.clone()), cfg, &spec).unwrap();
+        let a = std::fs::read(&path_a).unwrap();
+        let b = std::fs::read(&path_b).unwrap();
+        assert_eq!(a, b, "serve.csv must be byte-identical across reruns");
+        let text = String::from_utf8(a).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next().unwrap(), SERVE_HEADER.join(","));
+        let rows: Vec<&str> = lines.collect();
+        assert_eq!(rows.len(), 2, "one row per policy");
+        assert!(rows[0].starts_with("comd,CRISP,DEADLINE,"));
+        assert!(rows[1].starts_with("comd,PCSTALL,DEADLINE,"));
+        let _ = std::fs::remove_dir_all(&out_a);
+        let _ = std::fs::remove_dir_all(&out_b);
+    }
+
+    #[test]
+    fn trace_derived_arrivals_run_uncached_and_complete() {
+        let (cfg, mut spec) = small_spec();
+        spec.policies = vec![Policy::PcStall];
+        spec.arrival_gaps_us = Some(vec![5.0, 15.0]);
+        let out = tmp_out("gaps");
+        let path = run_serve(&quick_opts(out.clone()), cfg, &spec).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let row = text.lines().nth(1).expect("one data row");
+        let cols: Vec<&str> = row.split(',').collect();
+        assert_eq!(cols.len(), SERVE_HEADER.len());
+        // launches offered == completed for a tiny stream
+        assert_eq!(cols[6], "2");
+        assert_eq!(cols[7], "2");
+        let _ = std::fs::remove_dir_all(&out);
+    }
+
+    #[test]
+    fn empty_policies_or_gaps_error() {
+        let (cfg, mut spec) = small_spec();
+        spec.policies.clear();
+        let out = tmp_out("err");
+        assert!(run_serve(&quick_opts(out.clone()), cfg.clone(), &spec).is_err());
+        let (_, mut spec) = small_spec();
+        spec.arrival_gaps_us = Some(Vec::new());
+        assert!(run_serve(&quick_opts(out.clone()), cfg, &spec).is_err());
+        let _ = std::fs::remove_dir_all(&out);
+    }
+}

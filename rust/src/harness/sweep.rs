@@ -12,7 +12,7 @@
 //!   `trace:<path>`, `synth:<seed>`),
 //! * **synth-seed population** (`seed`: expands the bare `synth`
 //!   workload template into one `synth:<seed>` source per seed),
-//! * **objective** (`edp` / `ed2p` / `energy@<pct>`),
+//! * **objective** (`edp` / `ed2p` / `energy@<pct>` / `deadline`),
 //! * **predictor design** (any [`Policy`]),
 //! * **any config key** (`[axis]`: every key in the typed registry,
 //!   [`crate::config::registry`], can be swept as a grid dimension —
@@ -48,6 +48,7 @@
 //! objectives = ["ed2p", "energy@5"]      # default: ed2p
 //! baseline = "static:1.7"                # improvement reference
 //! epochs = 40                            # fixed-epoch mode; default: completion
+//! mode = "serve"                         # continuous-arrival serve cells
 //! [set]                                  # config overrides for every cell
 //! gpu.n_wf = 16                          # (grid axes override [set] keys)
 //! [axis]                                 # config-key grid dimensions
@@ -79,6 +80,18 @@
 //! so seed-axis shards stay disjoint and cache-compatible exactly like
 //! every other axis.  `pcstall sweep plot` ([`crate::stats::plot`])
 //! aggregates the merged CSV over the population (mean ± min/max band).
+//!
+//! ## Serve plans (`mode = "serve"`)
+//!
+//! A serve plan runs every cell through the continuous-arrival loop
+//! ([`crate::harness::serve`]): the workload becomes a launch *stream*
+//! under the seeded arrival process configured by the `serve.*` config
+//! keys, which — being ordinary registry keys — sweep as `[axis]`
+//! dimensions (`serve.arrival_rate` for offered load,
+//! `serve.deadline_us` for the latency target, `serve.burst_factor`
+//! for burstiness).  The CSV appends the [`SERVE_COLS`] latency tail
+//! (`p50_us`, `p99_us`, `miss_rate`) after the base metrics; batch-plan
+//! CSVs are byte-unchanged.  See the `serve_load` preset.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -212,6 +225,12 @@ pub struct SweepPlan {
     /// `Some(n)`: run exactly `n` epochs; `None`: run to completion
     /// (with the standard epoch-scaled safety cap).
     pub epochs: Option<u64>,
+    /// `mode = "serve"`: every cell runs the continuous-arrival serve
+    /// loop ([`RunMode::Serve`]) instead of a single fixed-work pass,
+    /// and the CSV grows the [`SERVE_COLS`] latency tail.  The `serve.*`
+    /// config keys (offered load, deadline, burstiness) then make
+    /// natural `[set]`/`[axis]` entries.
+    pub serve: bool,
     /// `[set]` config overrides applied to every cell before the grid
     /// axes (axes win on conflict).
     pub overrides: Vec<(String, Value)>,
@@ -236,6 +255,7 @@ impl Default for SweepPlan {
             objectives: vec![Objective::Ed2p],
             baseline: Policy::Static(F_STATIC_IDX),
             epochs: None,
+            serve: false,
             overrides: Vec::new(),
             config_axes: Vec::new(),
         }
@@ -250,6 +270,7 @@ pub fn preset_names() -> Vec<&'static str> {
         "granularity_sweep",
         "seed_population",
         "transition_latency",
+        "serve_load",
     ]
 }
 
@@ -321,6 +342,33 @@ impl SweepPlan {
                 )
                 .expect("preset axis is registry-valid")],
                 epochs: Some(24),
+                ..SweepPlan::default()
+            }),
+            // The serve-mode headline: energy saved at a fixed p99
+            // target across offered-load levels.  One workload under a
+            // seeded Poisson arrival stream, the offered load swept as a
+            // `serve.arrival_rate` config axis (launches per µs, from
+            // light load to past saturation at quick scale), crisp vs
+            // pcstall vs oracle under the deadline objective.  Plot with
+            // `pcstall sweep plot --metric p99_us` (or miss_rate /
+            // energy_j) from the merged CSV.
+            "serve_load" => Some(SweepPlan {
+                name: name.into(),
+                epoch_ns: vec![1_000.0],
+                cus_per_domain: vec![1],
+                workloads: WorkloadAxis::Explicit(vec!["comd".into()]),
+                objectives: vec![Objective::Deadline],
+                serve: true,
+                config_axes: vec![ConfigAxis::new(
+                    "serve.arrival_rate",
+                    &[
+                        Value::Float(0.005),
+                        Value::Float(0.01),
+                        Value::Float(0.02),
+                        Value::Float(0.04),
+                    ],
+                )
+                .expect("preset axis is registry-valid")],
                 ..SweepPlan::default()
             }),
             _ => None,
@@ -434,6 +482,18 @@ impl SweepPlan {
                     anyhow::ensure!(n > 0, "epochs must be positive");
                     plan.epochs = Some(n as u64);
                 }
+                "mode" => {
+                    let s = value.as_str().ok_or_else(|| {
+                        anyhow::anyhow!("mode must be a string (\"batch\" or \"serve\")")
+                    })?;
+                    plan.serve = match s {
+                        "batch" => false,
+                        "serve" => true,
+                        other => anyhow::bail!(
+                            "mode must be \"batch\" or \"serve\", got \"{other}\""
+                        ),
+                    };
+                }
                 _ => {
                     if let Some(cfg_key) = key.strip_prefix("axis.") {
                         let items = value.as_arr().ok_or_else(|| {
@@ -460,7 +520,7 @@ impl SweepPlan {
                         anyhow::bail!(
                             "unknown plan key '{key}' (axes: epoch_ns, cus_per_domain, \
                              workloads, workloads_add, seed, designs, objectives; scalars: \
-                             name, baseline, epochs; config overrides go under [set], \
+                             name, baseline, epochs, mode; config overrides go under [set], \
                              config-key grid dimensions under [axis])"
                         );
                     }
@@ -528,9 +588,13 @@ impl SweepPlan {
             self.objectives.iter().map(|o| o.name()).collect::<Vec<_>>().join(", ")
         ));
         out.push(format!("baseline: {}", self.baseline.name()));
-        out.push(match self.epochs {
-            Some(n) => format!("epochs: {n} (fixed)"),
-            None => "epochs: run to completion".to_string(),
+        if self.serve {
+            out.push("mode: serve (continuous arrivals, p50/p99/miss columns)".to_string());
+        }
+        out.push(match (self.serve, self.epochs) {
+            (_, Some(n)) => format!("epochs: {n} (fixed)"),
+            (false, None) => "epochs: run to completion".to_string(),
+            (true, None) => "epochs: run until the arrival stream drains".to_string(),
         });
         out
     }
@@ -682,9 +746,13 @@ impl SweepPlan {
                                     let mut cfg = combo_cfg.clone();
                                     cfg.dvfs.epoch_ns = epoch_ns;
                                     cfg.dvfs.cus_per_domain = gran;
-                                    let mode = match self.epochs {
-                                        Some(n) => RunMode::Epochs(n),
-                                        None => completion(epoch_ns),
+                                    let mode = match (self.serve, self.epochs) {
+                                        (false, Some(n)) => RunMode::Epochs(n),
+                                        (false, None) => completion(epoch_ns),
+                                        // serve plans always run the arrival
+                                        // loop; `epochs` becomes the safety cap
+                                        (true, Some(n)) => RunMode::Serve { max_epochs: n },
+                                        (true, None) => super::serve::serve_mode(epoch_ns),
                                     };
                                     let waves = opts.waves_scale();
                                     let mut baseline_cell = Cell::with_cfg(
@@ -723,6 +791,7 @@ impl SweepPlan {
         Ok(SweepGrid {
             name: self.name.clone(),
             config_keys: self.config_axes.iter().map(|a| a.key.clone()).collect(),
+            serve: self.serve,
             points,
         })
     }
@@ -781,6 +850,8 @@ pub struct SweepGrid {
     pub name: String,
     /// Config-axis key paths, in plan order — one CSV column each.
     pub config_keys: Vec<String>,
+    /// `mode = "serve"` plans append the [`SERVE_COLS`] metric tail.
+    pub serve: bool,
     pub points: Vec<SweepPoint>,
 }
 
@@ -807,29 +878,41 @@ pub const SWEEP_HEADER: [&str; 11] = [
 /// (`improvement_pct..`).
 const CONFIG_COL_AT: usize = 6;
 
+/// Extra metric columns of a `mode = "serve"` plan, appended *after*
+/// the base metrics so batch-plan CSVs keep their exact historical
+/// bytes.  `pcstall sweep plot --metric p99_us` selects them by name
+/// like any other column.
+pub const SERVE_COLS: [&str; 3] = ["p50_us", "p99_us", "miss_rate"];
+
 /// The dynamic CSV schema for a grid with `config_keys` config axes —
 /// one column per key, named by the key path.  With no config axes this
-/// is exactly [`SWEEP_HEADER`], so legacy plans emit byte-identical
-/// CSVs.
-pub fn sweep_header(config_keys: &[String]) -> Vec<String> {
+/// is exactly [`SWEEP_HEADER`] (plus the [`SERVE_COLS`] tail for serve
+/// plans), so legacy plans emit byte-identical CSVs.
+pub fn sweep_header(config_keys: &[String], serve: bool) -> Vec<String> {
     let mut header: Vec<String> =
         SWEEP_HEADER[..CONFIG_COL_AT].iter().map(|s| s.to_string()).collect();
     header.extend(config_keys.iter().cloned());
     header.extend(SWEEP_HEADER[CONFIG_COL_AT..].iter().map(|s| s.to_string()));
+    if serve {
+        header.extend(SERVE_COLS.iter().map(|s| s.to_string()));
+    }
     header
 }
 
 /// The objective's scalar figure of merit (lower is better): ED^nP for
-/// EDP/ED²P points, plain energy for energy-bound points.
+/// EDP/ED²P points, plain energy for energy-bound and deadline points
+/// (the deadline objective's latency side is reported directly by the
+/// serve columns, not folded into the merit scalar).
 fn merit(objective: Objective, r: &RunResult) -> f64 {
     match objective {
         Objective::Edp => r.edp(),
         Objective::Ed2p => r.ed2p(),
         Objective::EnergyBound { .. } => r.total_energy_j,
+        Objective::Deadline => r.total_energy_j,
     }
 }
 
-fn render_row(p: &SweepPoint, base: &RunResult, r: &RunResult) -> Vec<String> {
+fn render_row(p: &SweepPoint, base: &RunResult, r: &RunResult, serve: bool) -> Vec<String> {
     let norm = merit(p.objective, r) / merit(p.objective, base);
     let mut row = vec![
         format!("{}", p.epoch_ns / 1000.0),
@@ -850,13 +933,23 @@ fn render_row(p: &SweepPoint, base: &RunResult, r: &RunResult) -> Vec<String> {
         format!("{:.4}", r.total_time_ns / 1e6),
         format!("{:.3}", r.mean_accuracy),
     ]);
+    if serve {
+        match &r.serve {
+            Some(s) => row.extend([
+                format!("{:.3}", s.p50_us),
+                format!("{:.3}", s.p99_us),
+                format!("{:.4}", s.deadline_miss_rate),
+            ]),
+            None => row.extend(std::iter::repeat("-".to_string()).take(SERVE_COLS.len())),
+        }
+    }
     row
 }
 
 impl SweepGrid {
     /// This grid's CSV schema (see [`sweep_header`]).
     pub fn header(&self) -> Vec<String> {
-        sweep_header(&self.config_keys)
+        sweep_header(&self.config_keys, self.serve)
     }
 
     /// The subset of the grid a shard owns, in row order.
@@ -883,7 +976,7 @@ impl SweepGrid {
         let results = run_cells_resolved(opts, cells);
         let mut out = Vec::with_capacity(points.len());
         for (p, pair) in points.iter().zip(results.chunks(2)) {
-            out.push((p.row, render_row(p, &pair[0], &pair[1])));
+            out.push((p.row, render_row(p, &pair[0], &pair[1], self.serve)));
         }
         Ok(out)
     }
@@ -1232,6 +1325,8 @@ dvfs.pc_update_alpha = [0.5, 1.0]
             ("objectives = [\"nope\"]\n", "unknown objective"),
             ("designs = []\n", "empty designs"),
             ("epochs = 0\n", "zero epochs"),
+            ("mode = \"nope\"\n", "unknown mode"),
+            ("mode = 1\n", "non-string mode"),
             (
                 "workloads = [\"comd\"]\nworkloads_add = [\"synth:1\"]\n",
                 "exclusive workload keys",
@@ -1627,15 +1722,24 @@ dvfs.pc_update_alpha = [0.5, 1.0]
         );
         assert!(grid.points.iter().all(|p| p.config.is_empty()));
         // every preset still compiles with an unchanged base schema,
-        // except the one that declares a config axis
+        // except the ones that declare a config axis (and the serve
+        // preset's latency tail)
         for name in preset_names() {
             let preset = SweepPlan::preset(name).unwrap();
             let grid = preset.compile(&opts).unwrap();
-            if name == "transition_latency" {
-                assert_eq!(grid.config_keys, vec!["dvfs.transition_ns"]);
-            } else {
-                assert!(grid.config_keys.is_empty(), "{name} grew a config axis");
-                assert_eq!(grid.header().len(), SWEEP_HEADER.len(), "{name}");
+            match name {
+                "transition_latency" => {
+                    assert_eq!(grid.config_keys, vec!["dvfs.transition_ns"]);
+                }
+                "serve_load" => {
+                    assert_eq!(grid.config_keys, vec!["serve.arrival_rate"]);
+                    assert!(grid.serve);
+                }
+                _ => {
+                    assert!(grid.config_keys.is_empty(), "{name} grew a config axis");
+                    assert_eq!(grid.header().len(), SWEEP_HEADER.len(), "{name}");
+                    assert!(!grid.serve, "{name} became a serve plan");
+                }
             }
         }
     }
@@ -1667,6 +1771,100 @@ dvfs.pc_update_alpha = [0.5, 1.0]
             let applied = p.baseline_cell.cfg.dvfs.transition_ns;
             assert_eq!(crate::config::registry::canonical_f64(applied), p.config[0]);
         }
+    }
+
+    #[test]
+    fn serve_plans_append_the_latency_tail_and_run_the_arrival_loop() {
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        };
+        let plan = SweepPlan::from_toml(
+            "epoch_ns = [1000]\ncus_per_domain = [1]\nworkloads = [\"comd\"]\n\
+             designs = [\"pcstall\"]\nobjectives = [\"deadline\"]\nmode = \"serve\"\n\
+             [axis]\nserve.arrival_rate = [0.01, 0.04]\n",
+        )
+        .unwrap();
+        assert!(plan.serve);
+        let grid = plan.compile(&opts).unwrap();
+        assert!(grid.serve);
+        let header = grid.header();
+        let tail: Vec<&str> =
+            header[header.len() - SERVE_COLS.len()..].iter().map(|s| s.as_str()).collect();
+        assert_eq!(tail, SERVE_COLS);
+        assert_eq!(grid.points.len(), 2, "2 offered-load levels");
+        for p in &grid.points {
+            assert!(
+                matches!(p.baseline_cell.mode, RunMode::Serve { .. }),
+                "serve plans must compile serve cells, got {:?}",
+                p.baseline_cell.mode
+            );
+            assert_eq!(p.objective, Objective::Deadline);
+        }
+        // the axis coordinate reaches the simulated config
+        let rates: Vec<f64> =
+            grid.points.iter().map(|p| p.baseline_cell.cfg.serve.arrival_rate).collect();
+        assert_eq!(rates, vec![0.01, 0.04]);
+        // batch plans never carry the tail
+        let batch = SweepPlan::from_toml(
+            "epoch_ns = [1000]\ncus_per_domain = [1]\nworkloads = [\"comd\"]\n\
+             designs = [\"pcstall\"]\nepochs = 4\nmode = \"batch\"\n",
+        )
+        .unwrap();
+        let grid = batch.compile(&opts).unwrap();
+        assert!(!grid.serve);
+        assert_eq!(grid.header().len(), SWEEP_HEADER.len());
+        // an explicit `epochs` cap on a serve plan stays a serve run
+        let capped = SweepPlan::from_toml(
+            "epoch_ns = [1000]\ncus_per_domain = [1]\nworkloads = [\"comd\"]\n\
+             designs = [\"pcstall\"]\nmode = \"serve\"\nepochs = 64\n",
+        )
+        .unwrap()
+        .compile(&opts)
+        .unwrap();
+        assert!(matches!(
+            capped.points[0].baseline_cell.mode,
+            RunMode::Serve { max_epochs: 64 }
+        ));
+    }
+
+    #[test]
+    fn preset_serve_load_covers_the_offered_load_axis() {
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        };
+        let plan = SweepPlan::preset("serve_load").unwrap();
+        assert!(plan.serve);
+        assert_eq!(plan.objectives, vec![Objective::Deadline]);
+        let grid = plan.compile(&opts).unwrap();
+        assert_eq!(grid.config_keys, vec!["serve.arrival_rate"]);
+        let rates: std::collections::BTreeSet<String> =
+            grid.points.iter().map(|p| p.config[0].clone()).collect();
+        assert!(rates.len() >= 4, "offered-load levels: {rates:?}");
+        let designs: std::collections::BTreeSet<String> =
+            grid.points.iter().map(|p| p.design.name()).collect();
+        assert!(designs.len() >= 3, "crisp vs pcstall vs oracle: {designs:?}");
+        let desc = plan.describe().join("\n");
+        assert!(desc.contains("mode: serve"), "{desc}");
+    }
+
+    #[test]
+    fn deadline_merit_is_energy() {
+        let r = RunResult {
+            workload: "w".into(),
+            policy: "p".into(),
+            objective: "deadline".into(),
+            records: Vec::new(),
+            total_energy_j: 2.5,
+            total_time_ns: 1e6,
+            total_instr: 1.0,
+            mean_accuracy: f64::NAN,
+            pc_hit_rate: 0.0,
+            completed: true,
+            serve: None,
+        };
+        assert_eq!(merit(Objective::Deadline, &r), 2.5);
     }
 
     #[test]

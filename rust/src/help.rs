@@ -1,0 +1,181 @@
+//! The `pcstall` CLI help text, as a library constant.
+//!
+//! Living in the library (not `main.rs`) so tests can cross-check it:
+//! `tests/cli_docs.rs` gates `docs/cli.md` against this text — every
+//! verb and `--flag` mentioned here must be documented there, so the
+//! CLI reference cannot silently drift from the binary.
+
+/// `pcstall help` output.  One source of truth for the CLI surface.
+pub const HELP: &str = r#"pcstall — PC-based fine-grain DVFS for GPUs (paper reproduction)
+
+USAGE:
+  pcstall simulate --workload <spec> --policy <p> [options]
+  pcstall serve [--workload <spec>] [--policy <p> ...] [options]
+  pcstall run <id|all> [--quick|--full] [--out dir] [--pjrt]
+                       [--jobs N] [--no-cache] [--seed s]
+                       [--workload <spec> ...]
+  pcstall experiment ...   (alias of `run`)
+  pcstall sweep <plan.toml|preset> [run options] [--shard i/N]
+  pcstall sweep merge <dir>
+  pcstall sweep plot <merged.csv> [--metric col] [--band minmax|iqr] [--out dir]
+  pcstall sweep list
+  pcstall trace record <spec> [--out file] [--waves-scale x] [--binary]
+  pcstall trace replay <file> [simulate options]
+  pcstall trace gen [--seed s] [--out file] [--binary]
+  pcstall trace info <file>
+  pcstall trace ingest <accel-sim-file> [--out file] [--binary]
+  pcstall cache stats [--dir results/cache]
+  pcstall cache clear [--dir results/cache] [--max-age days] [--max-bytes MB]
+  pcstall obs report [<dir>]
+  pcstall obs diff <dirA> <dirB>
+  pcstall obs plot [<dir>] [--out dir]
+  pcstall list
+  pcstall config dump [--set k=v ...]
+  pcstall config keys
+  pcstall table1
+
+WORKLOAD SPECS (accepted wherever a workload name is):
+  <name>                catalog workload from `pcstall list`
+  trace:<path>          instruction-trace file (text or binary encoding)
+  synth:<seed>          seeded synthesized trace workload
+
+RUN OPTIONS:
+  --quick | --full      scale preset (default: 8 CUs, all workloads)
+  --out <dir>           output directory               (default results/)
+  --jobs <n>            sweep worker threads   (default: all CPU cores)
+  --sim-threads <n>     CU-stepping threads inside each simulation
+                        (0 = as wide as the machine; default: auto —
+                        batches big enough to fill --jobs run serial
+                        sims, smaller batches hand idle cores to each
+                        sim).  Results are byte-identical for every
+                        value; jobs x sim-threads never oversubscribes
+  --no-cache            recompute everything; do not read or write the
+                        content-addressed result cache (<out>/cache/)
+  --pjrt                use the PJRT artifact backend when available
+  --seed <s>            master workload seed
+  --workload <spec>     replace the experiment's workload set (repeatable)
+  --obs <dir>           record observability artifacts into <dir>:
+                        byte-deterministic per-cell counters
+                        (counters.json / counters.csv — stall breakdown,
+                        queue-depth histograms, PC-table and DVFS traffic),
+                        per-epoch decision traces (decisions.csv /
+                        decisions.ndjson — predicted vs actual
+                        instructions, chosen ladder state, counterfactual
+                        regret) and a Chrome-trace span timeline
+                        (timeline.ndjson).  Cells served by the result
+                        cache carry no obs records (a stderr warning names
+                        the count) — pair with --no-cache for complete
+                        sidecars
+  --progress            periodic stderr progress (cells done/total, cells
+                        served by cache, ETA); stdout and every emitted
+                        artifact stay byte-identical
+
+SIMULATE / REPLAY OPTIONS:
+  --workload <spec>     workload spec (required for simulate)
+  --policy <p>          stall|lead|crit|crisp|accreac|pcstall|accpc|oracle|static:<ghz>
+  --objective <o>       edp|ed2p|energy@<pct>|deadline  (default ed2p)
+  --epochs <n>          run exactly n epochs      (default: run to completion)
+  --epoch-ns <x>        epoch duration override
+  --waves-scale <x>     workload length multiplier
+                        (default 0.1 for catalog, 1.0 for traces)
+  --config <file>       TOML config
+  --set k=v             config override (repeatable)
+  --backend native|pjrt compute backend            (default native)
+  --json <file>         dump the run result as JSON
+  --sim-threads <n>     CU-stepping threads (0 = all cores; default 1);
+                        results are byte-identical for every value
+
+SERVE OPTIONS (continuous-traffic DVFS under deadlines):
+  serve drives one long-horizon simulation per policy: a seeded arrival
+  process offers serve.launches copies of the workload, the DVFS policy
+  runs throughout (idle epochs included), launches queue FIFO while the
+  GPU is busy, and <out>/serve.csv reports one row per policy with
+  p50_us/p99_us latency, miss_rate against serve.deadline_us,
+  throughput, queue depth, and energy.  The arrival stream is derived
+  from --seed + the serve.* config keys (set them with --set; see
+  `pcstall config keys`): serve.arrival_rate (launches per µs),
+  serve.deadline_us, serve.burst_factor (1.0 = pure Poisson, >1 = bursty
+  two-state MMPP), serve.burst_dwell_us, serve.launches,
+  serve.risk_frac, serve.slack_slowdown.  Synthetic-arrival runs ride
+  the result cache and --jobs like any experiment; sweep load levels
+  with `pcstall sweep serve_load` or an `[axis] serve.arrival_rate`
+  plan.  Accepts all RUN OPTIONS plus:
+  --workload <spec>     the served workload       (default comd; one spec)
+  --policy <p>          policy to compare (repeatable; default crisp and
+                        pcstall — each adds one serve.csv row)
+  --objective <o>       objective for every policy (default deadline:
+                        energy-min while deadlines are safe, max-perf
+                        fallback when a launch's remaining slack drops
+                        below serve.risk_frac)
+  --epoch-ns <x>        epoch duration override
+  --arrival-trace <f>   replace the synthetic arrival process with
+                        inter-arrival gaps read from <f> (one µs value
+                        per line, cycled); these runs bypass the result
+                        cache (the gap list is outside the run identity)
+
+SWEEP COMMANDS:
+  <plan.toml|preset>    run a declarative sweep plan (grid over epoch
+                        length x cus_per_domain x workload source x
+                        synth-seed population x objective x design x any
+                        [axis] config key); presets: epoch_x_granularity,
+                        epoch_sweep, granularity_sweep, seed_population,
+                        transition_latency, serve_load.  A `mode =
+                        "serve"` plan runs every cell through the
+                        continuous-arrival serve loop and appends
+                        p50_us/p99_us/miss_rate columns.  Accepts all
+                        RUN OPTIONS plus:
+    --shard i/N         run only partition i of N (deterministic split by
+                        RunKey fingerprint; shards are disjoint and
+                        cache-compatible).  Writes
+                        <out>/sweep_<name>.part<i>of<N>.csv
+  merge <dir>           combine a complete part set into
+                        <out>/sweep_<name>.csv (byte-identical to an
+                        unsharded run)
+  plot <merged.csv>     emit a self-contained gnuplot script + matplotlib
+                        fallback from a merged sweep CSV: x = the most-
+                        varying grid axis (config axes win ties), one
+                        panel per (objective, other axes), one series per
+                        design, mean inside a band over the seed/workload
+                        population.  --metric picks the column (default
+                        accuracy; serve plans add p50_us/p99_us/
+                        miss_rate); --band picks the envelope (minmax |
+                        iqr, default minmax); --out redirects the scripts
+  list                  show presets (axes derived from the plans
+                        themselves) and the plan TOML grammar
+
+OBS COMMANDS:
+  report [<dir>]        summarize a --obs directory (default results/obs):
+                        counter totals across cells, the top wall-clock
+                        spans from the timeline, and — when decision
+                        traces are present — a prediction-accuracy
+                        histogram, the worst-regret epochs, and a per-PC
+                        mispredict leaderboard.  Load timeline.ndjson in
+                        Perfetto / chrome://tracing for the full picture.
+  diff <dirA> <dirB>    align two decision traces by (cell, epoch, domain)
+                        and report where the policies diverge, with regret
+                        attribution per side (greppable
+                        `divergent pairs    : N` line); same-policy cells
+                        pair with themselves, leftover policies pair in
+                        sorted order (e.g. CRISP-only run vs PCSTALL-only
+                        run over the same workloads)
+  plot [<dir>]          emit a gnuplot script + matplotlib fallback
+                        rendering accuracy and mean chosen frequency vs
+                        epoch, one panel per cell, from <dir>/decisions.csv
+                        (--out redirects the scripts)
+
+CONFIG COMMANDS:
+  dump                  print the effective TOML config (with --set)
+  keys                  print the typed config-key registry: every key
+                        usable in --set, plan [set] tables, and plan
+                        [axis] grid dimensions (key, type, default, doc)
+
+TRACE COMMANDS:
+  record <spec>         capture a workload's executed stream to a file
+                        (default traces/<name>.trace; --binary for the
+                        length-prefixed binary encoding; --waves-scale
+                        is baked into the written geometry)
+  replay <file>         simulate a trace file (same options as simulate)
+  gen                   synthesize a randomized trace (--seed, default 1)
+  info <file>           print header, per-kernel stats, content hash
+  ingest <file>         lower an accel-sim-style kernel trace
+"#;

@@ -35,7 +35,13 @@
 //! * [`harness`] — one experiment per paper figure/table (see DESIGN.md),
 //!   plus declarative sweep plans ([`harness::sweep`]): N-dimensional
 //!   epoch × granularity × workload-source × objective × design grids,
-//!   shardable across machines by run-key fingerprint.
+//!   shardable across machines by run-key fingerprint — and the
+//!   continuous-traffic serve harness ([`harness::serve`]): seeded
+//!   arrival streams, deadline objectives, p50/p99 latency reporting.
+//!
+//! The repo-level ARCHITECTURE.md walks the same modules top-down
+//! (data flow, determinism contract, cache versioning); docs/cli.md is
+//! the full CLI reference, drift-gated against [`help::HELP`].
 
 // Style allowances for the simulator's index-heavy kernels (CI runs
 // clippy with `-D warnings`).
@@ -45,6 +51,7 @@ pub mod config;
 pub mod dvfs;
 pub mod exec;
 pub mod harness;
+pub mod help;
 pub mod models;
 pub mod obs;
 pub mod power;

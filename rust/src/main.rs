@@ -7,6 +7,8 @@
 //!                   [--epochs N | --completion] [--epoch-ns X]
 //!                   [--config file.toml] [--set k=v ...]
 //!                   [--backend native|pjrt] [--json out.json]
+//! pcstall serve     [--workload <spec>] [--policy p ...] [--objective o]
+//!                   [--set serve.arrival_rate=0.02 ...] [--arrival-trace f]
 //! pcstall run <id|all> [--quick|--full] [--out results/] [--pjrt]
 //!                      [--jobs N] [--no-cache] [--workload <spec> ...]
 //! pcstall experiment ...   (alias of `run`)
@@ -57,6 +59,7 @@ fn run() -> Result<()> {
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "simulate" => simulate(&args[1..]),
+        "serve" => serve(&args[1..]),
         "run" | "experiment" => experiment(&args[1..]),
         "sweep" => sweep_cmd(&args[1..]),
         "trace" => trace_cmd(&args[1..]),
@@ -66,152 +69,12 @@ fn run() -> Result<()> {
         "config" => config_cmd(&args[1..]),
         "table1" => run_experiment("table1", &ExpOptions::default()),
         "help" | "--help" | "-h" => {
-            print!("{}", HELP);
+            print!("{}", pcstall::help::HELP);
             Ok(())
         }
         other => anyhow::bail!("unknown command '{other}' (try `pcstall help`)"),
     }
 }
-
-const HELP: &str = r#"pcstall — PC-based fine-grain DVFS for GPUs (paper reproduction)
-
-USAGE:
-  pcstall simulate --workload <spec> --policy <p> [options]
-  pcstall run <id|all> [--quick|--full] [--out dir] [--pjrt]
-                       [--jobs N] [--no-cache] [--seed s]
-                       [--workload <spec> ...]
-  pcstall experiment ...   (alias of `run`)
-  pcstall sweep <plan.toml|preset> [run options] [--shard i/N]
-  pcstall sweep merge <dir>
-  pcstall sweep plot <merged.csv> [--metric col] [--band minmax|iqr] [--out dir]
-  pcstall sweep list
-  pcstall trace record <spec> [--out file] [--waves-scale x] [--binary]
-  pcstall trace replay <file> [simulate options]
-  pcstall trace gen [--seed s] [--out file] [--binary]
-  pcstall trace info <file>
-  pcstall trace ingest <accel-sim-file> [--out file] [--binary]
-  pcstall cache stats [--dir results/cache]
-  pcstall cache clear [--dir results/cache] [--max-age days] [--max-bytes MB]
-  pcstall obs report [<dir>]
-  pcstall obs diff <dirA> <dirB>
-  pcstall obs plot [<dir>] [--out dir]
-  pcstall list
-  pcstall config dump [--set k=v ...]
-  pcstall config keys
-  pcstall table1
-
-WORKLOAD SPECS (accepted wherever a workload name is):
-  <name>                catalog workload from `pcstall list`
-  trace:<path>          instruction-trace file (text or binary encoding)
-  synth:<seed>          seeded synthesized trace workload
-
-RUN OPTIONS:
-  --quick | --full      scale preset (default: 8 CUs, all workloads)
-  --out <dir>           output directory               (default results/)
-  --jobs <n>            sweep worker threads   (default: all CPU cores)
-  --sim-threads <n>     CU-stepping threads inside each simulation
-                        (0 = as wide as the machine; default: auto —
-                        batches big enough to fill --jobs run serial
-                        sims, smaller batches hand idle cores to each
-                        sim).  Results are byte-identical for every
-                        value; jobs x sim-threads never oversubscribes
-  --no-cache            recompute everything; do not read or write the
-                        content-addressed result cache (<out>/cache/)
-  --pjrt                use the PJRT artifact backend when available
-  --seed <s>            master workload seed
-  --workload <spec>     replace the experiment's workload set (repeatable)
-  --obs <dir>           record observability artifacts into <dir>:
-                        byte-deterministic per-cell counters
-                        (counters.json / counters.csv — stall breakdown,
-                        queue-depth histograms, PC-table and DVFS traffic),
-                        per-epoch decision traces (decisions.csv /
-                        decisions.ndjson — predicted vs actual
-                        instructions, chosen ladder state, counterfactual
-                        regret) and a Chrome-trace span timeline
-                        (timeline.ndjson).  Cells served by the result
-                        cache carry no obs records (a stderr warning names
-                        the count) — pair with --no-cache for complete
-                        sidecars
-  --progress            periodic stderr progress (cells done/total, cells
-                        served by cache, ETA); stdout and every emitted
-                        artifact stay byte-identical
-
-SIMULATE / REPLAY OPTIONS:
-  --workload <spec>     workload spec (required for simulate)
-  --policy <p>          stall|lead|crit|crisp|accreac|pcstall|accpc|oracle|static:<ghz>
-  --objective <o>       edp|ed2p|energy@<pct>     (default ed2p)
-  --epochs <n>          run exactly n epochs      (default: run to completion)
-  --epoch-ns <x>        epoch duration override
-  --waves-scale <x>     workload length multiplier
-                        (default 0.1 for catalog, 1.0 for traces)
-  --config <file>       TOML config
-  --set k=v             config override (repeatable)
-  --backend native|pjrt compute backend            (default native)
-  --json <file>         dump the run result as JSON
-  --sim-threads <n>     CU-stepping threads (0 = all cores; default 1);
-                        results are byte-identical for every value
-
-SWEEP COMMANDS:
-  <plan.toml|preset>    run a declarative sweep plan (grid over epoch
-                        length x cus_per_domain x workload source x
-                        synth-seed population x objective x design x any
-                        [axis] config key); presets: epoch_x_granularity,
-                        epoch_sweep, granularity_sweep, seed_population,
-                        transition_latency.  Accepts all RUN OPTIONS plus:
-    --shard i/N         run only partition i of N (deterministic split by
-                        RunKey fingerprint; shards are disjoint and
-                        cache-compatible).  Writes
-                        <out>/sweep_<name>.part<i>of<N>.csv
-  merge <dir>           combine a complete part set into
-                        <out>/sweep_<name>.csv (byte-identical to an
-                        unsharded run)
-  plot <merged.csv>     emit a self-contained gnuplot script + matplotlib
-                        fallback from a merged sweep CSV: x = the most-
-                        varying grid axis (config axes win ties), one
-                        panel per (objective, other axes), one series per
-                        design, mean inside a band over the seed/workload
-                        population.  --metric picks the column (default
-                        accuracy); --band picks the envelope (minmax |
-                        iqr, default minmax); --out redirects the scripts
-  list                  show presets (axes derived from the plans
-                        themselves) and the plan TOML grammar
-
-OBS COMMANDS:
-  report [<dir>]        summarize a --obs directory (default results/obs):
-                        counter totals across cells, the top wall-clock
-                        spans from the timeline, and — when decision
-                        traces are present — a prediction-accuracy
-                        histogram, the worst-regret epochs, and a per-PC
-                        mispredict leaderboard.  Load timeline.ndjson in
-                        Perfetto / chrome://tracing for the full picture.
-  diff <dirA> <dirB>    align two decision traces by (cell, epoch, domain)
-                        and report where the policies diverge, with regret
-                        attribution per side (greppable
-                        `divergent pairs    : N` line); same-policy cells
-                        pair with themselves, leftover policies pair in
-                        sorted order (e.g. CRISP-only run vs PCSTALL-only
-                        run over the same workloads)
-  plot [<dir>]          emit a gnuplot script + matplotlib fallback
-                        rendering accuracy and mean chosen frequency vs
-                        epoch, one panel per cell, from <dir>/decisions.csv
-                        (--out redirects the scripts)
-
-CONFIG COMMANDS:
-  dump                  print the effective TOML config (with --set)
-  keys                  print the typed config-key registry: every key
-                        usable in --set, plan [set] tables, and plan
-                        [axis] grid dimensions (key, type, default, doc)
-
-TRACE COMMANDS:
-  record <spec>         capture a workload's executed stream to a file
-                        (default traces/<name>.trace; --binary for the
-                        length-prefixed binary encoding; --waves-scale
-                        is baked into the written geometry)
-  replay <file>         simulate a trace file (same options as simulate)
-  gen                   synthesize a randomized trace (--seed, default 1)
-  info <file>           print header, per-kernel stats, content hash
-  ingest <file>         lower an accel-sim-style kernel trace
-"#;
 
 /// Pull `--key value` / `--flag` options out of an arg list.
 struct Opts {
@@ -268,6 +131,87 @@ fn simulate(args: &[String]) -> Result<()> {
         .take("--workload")
         .ok_or_else(|| anyhow::anyhow!("--workload is required"))?;
     run_one(&workload, o)
+}
+
+/// `pcstall serve`: continuous-traffic DVFS under deadlines (see
+/// `pcstall help`, SERVE OPTIONS).  One serve simulation per `--policy`
+/// at a single operating point; load/deadline *axes* go through
+/// `pcstall sweep` (`serve_load` preset or `[axis] serve.*` plans).
+fn serve(args: &[String]) -> Result<()> {
+    use pcstall::harness::serve::{run_serve, ServeSpec};
+
+    let mut o = Opts::new(args);
+    let workload = o.take("--workload").unwrap_or_else(|| "comd".into());
+    let policies = {
+        let named = o.take_all("--policy");
+        if named.is_empty() {
+            vec![
+                Policy::Reactive(pcstall::models::EstModel::Crisp),
+                Policy::PcStall,
+            ]
+        } else {
+            named
+                .iter()
+                .map(|s| Policy::parse(s))
+                .collect::<Result<Vec<_>>>()?
+        }
+    };
+    let objective =
+        Objective::parse(&o.take("--objective").unwrap_or_else(|| "deadline".into()))?;
+    let epoch_ns = o.take("--epoch-ns").map(|s| s.parse::<f64>()).transpose()?;
+    let sets = o.take_all("--set");
+    let arrival_gaps_us = match o.take("--arrival-trace") {
+        None => None,
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("reading --arrival-trace {path}: {e}"))?;
+            let gaps: Vec<f64> = text
+                .lines()
+                .map(str::trim)
+                .filter(|l| !l.is_empty() && !l.starts_with('#'))
+                .map(|l| {
+                    l.parse::<f64>().map_err(|_| {
+                        anyhow::anyhow!(
+                            "--arrival-trace {path}: bad inter-arrival gap '{l}' \
+                             (expected one µs value per line)"
+                        )
+                    })
+                })
+                .collect::<Result<_>>()?;
+            Some(gaps)
+        }
+    };
+    let opts = exp_options_from(&mut o)?;
+    let rest = o.finish()?;
+    anyhow::ensure!(
+        rest.is_empty(),
+        "unexpected argument(s): {} (serve takes options only)",
+        rest.join(" ")
+    );
+
+    let mut cfg = opts.base_cfg();
+    for s in sets {
+        cfg.apply_override(&s)?;
+    }
+    if let Some(e) = epoch_ns {
+        cfg.dvfs.epoch_ns = e;
+    }
+    if let Some(st) = opts.sim_threads {
+        cfg.gpu.sim_threads = st;
+    }
+
+    let spec = ServeSpec {
+        workload,
+        policies,
+        objective,
+        arrival_gaps_us,
+    };
+    let t0 = std::time::Instant::now();
+    let path = run_serve(&opts, cfg, &spec)?;
+    flush_obs(&opts)?;
+    println!("\n{}", opts.engine.summary(opts.jobs));
+    println!("[serve done in {:.1?}] wrote {}", t0.elapsed(), path.display());
+    Ok(())
 }
 
 /// Shared engine of `simulate` and `trace replay`: run one workload spec
@@ -480,9 +424,10 @@ fn sweep_cmd(args: &[String]) -> Result<()> {
                  workloads_add = [\"synth:7\"]              # or: scale's sweep set + extras\n\
                  seed = [2, 3, 5]                         # synth-seed population axis\n\
                  designs = [\"crisp\", \"pcstall\", \"oracle\"]  # predictor-design axis\n\
-                 objectives = [\"ed2p\"]                    # edp | ed2p | energy@<pct>\n\
+                 objectives = [\"ed2p\"]                    # edp | ed2p | energy@<pct> | deadline\n\
                  baseline = \"static:1.7\"                  # improvement reference\n\
                  epochs = 40                              # fixed epochs (default: completion)\n\
+                 mode = \"serve\"                           # continuous-arrival serve cells\n\
                  [set]                                    # config overrides for every cell\n\
                  gpu.n_wf = 16\n\
                  [axis]                                   # config-key grid dimensions\n\
@@ -491,7 +436,11 @@ fn sweep_cmd(args: &[String]) -> Result<()> {
                  any `pcstall config keys` entry can be an [axis] dimension (one CSV\n\
                  column per key); a key under both [set] and [axis] is a parse error.\n\
                  with a seed axis, workloads defaults to the bare \"synth\" template\n\
-                 (each grid point runs synth:<seed>); the CSV carries a seed column\n\
+                 (each grid point runs synth:<seed>); the CSV carries a seed column.\n\
+                 mode = \"serve\" runs every cell through the continuous-arrival serve\n\
+                 loop (sweep serve.* keys as [axis] dimensions — e.g. the serve_load\n\
+                 preset's serve.arrival_rate axis) and appends p50_us/p99_us/miss_rate\n\
+                 columns to the CSV\n\
                  \n\
                  run:   pcstall sweep <plan> [--quick|--full] [--jobs N] [--shard i/N]\n\
                  merge: pcstall sweep merge <dir>\n\

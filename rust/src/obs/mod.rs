@@ -608,6 +608,7 @@ mod tests {
             mean_accuracy: 1.0,
             pc_hit_rate: 0.0,
             completed: true,
+            serve: None,
         }
     }
 

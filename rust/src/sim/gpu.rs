@@ -105,6 +105,24 @@ impl Gpu {
         self.advance_kernel_queue();
     }
 
+    /// Queue a workload onto a GPU that may have been idle: like
+    /// [`Self::load_workload`], but first synchronizes every CU clock to
+    /// the global clock.  A CU that has never run a program keeps
+    /// `now_ps = 0` while idle epochs advance `Gpu::now_ps` (its
+    /// `run_until` returns immediately without a program), so a serve-
+    /// mode launch arriving at t > 0 would otherwise replay the CU from
+    /// time zero — committing work "in the past" and corrupting both
+    /// the epoch's instruction counts and the launch's latency.  CUs
+    /// that already ran stay synced on their own (a drained CU burns
+    /// empty issue cycles and tracks time without committing), so the
+    /// `max` is a no-op for them.
+    pub fn dispatch_workload(&mut self, kernels: Vec<KernelLaunch>, rounds: u32) {
+        for cu in &mut self.cus {
+            cu.now_ps = cu.now_ps.max(self.now_ps);
+        }
+        self.load_workload(kernels, rounds);
+    }
+
     /// If the resident kernel is finished on all CUs, launch the next one.
     fn advance_kernel_queue(&mut self) {
         let all_done = self.cus.iter().all(|c| c.kernel_done());
@@ -597,6 +615,37 @@ mod tests {
         assert_eq!(g1.mem_counters(), g4.mem_counters());
         assert_eq!(g1.mem_counters(), g0.mem_counters());
         assert_eq!(g1.now_ps, g4.now_ps);
+    }
+
+    #[test]
+    fn dispatch_after_idle_starts_at_the_global_clock() {
+        // serve mode: the GPU idles (epochs advance, no workload) until
+        // the first arrival; the dispatched kernel must start at the
+        // global clock, not replay the CUs from time zero
+        let mut g = Gpu::new(small_cfg());
+        for _ in 0..3 {
+            g.run_epoch(); // idle epochs
+        }
+        assert_eq!(g.now_ps, ns_to_ps(3000.0));
+        assert_eq!(g.total_instr(), 0);
+        assert!(g.workload_done(), "an empty queue counts as done");
+        g.dispatch_workload(vec![compute_kernel(50)], 1);
+        for cu in &g.cus {
+            assert_eq!(cu.now_ps, ns_to_ps(3000.0), "CU clock must sync to dispatch time");
+        }
+        let mut epochs = 0;
+        while !g.workload_done() && epochs < 1000 {
+            g.run_epoch();
+            epochs += 1;
+        }
+        assert!(g.workload_done());
+        assert!(g.total_instr() > 0);
+        // no instruction committed before the dispatch timestamp
+        assert!(
+            g.last_commit_ns() >= 3000.0,
+            "work committed in the past: {}",
+            g.last_commit_ns()
+        );
     }
 
     #[test]

@@ -327,7 +327,7 @@ impl RunResult {
     /// Serialize for the result cache.  Non-finite floats are emitted as
     /// `null` by the renderer, keeping the document valid JSON.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("workload", Json::Str(self.workload.clone())),
             ("policy", Json::Str(self.policy.clone())),
             ("objective", Json::Str(self.objective.clone())),
@@ -337,11 +337,29 @@ impl RunResult {
             ("mean_accuracy", Json::Num(self.mean_accuracy)),
             ("pc_hit_rate", Json::Num(self.pc_hit_rate)),
             ("completed", Json::Bool(self.completed)),
-            (
-                "records",
-                Json::Arr(self.records.iter().map(record_to_json).collect()),
-            ),
-        ])
+        ];
+        // The serve object is present only for serve-mode runs: batch
+        // documents keep their v2-era shape byte-for-byte.
+        if let Some(s) = &self.serve {
+            fields.push((
+                "serve",
+                Json::obj(vec![
+                    ("launches", Json::Num(s.launches as f64)),
+                    ("completed_launches", Json::Num(s.completed_launches as f64)),
+                    ("p50_us", Json::Num(s.p50_us)),
+                    ("p99_us", Json::Num(s.p99_us)),
+                    ("mean_latency_us", Json::Num(s.mean_latency_us)),
+                    ("deadline_miss_rate", Json::Num(s.deadline_miss_rate)),
+                    ("throughput_per_ms", Json::Num(s.throughput_per_ms)),
+                    ("mean_queue_depth", Json::Num(s.mean_queue_depth)),
+                ]),
+            ));
+        }
+        fields.push((
+            "records",
+            Json::Arr(self.records.iter().map(record_to_json).collect()),
+        ));
+        Json::obj(fields)
     }
 
     /// Inverse of [`RunResult::to_json`].
@@ -373,6 +391,19 @@ impl RunResult {
                 .get("completed")
                 .and_then(|v| v.as_bool())
                 .ok_or_else(|| "missing 'completed'".to_string())?,
+            serve: match j.get("serve") {
+                None => None,
+                Some(s) => Some(crate::stats::ServeStats {
+                    launches: num_field(s, "launches")? as u64,
+                    completed_launches: num_field(s, "completed_launches")? as u64,
+                    p50_us: num_field(s, "p50_us")?,
+                    p99_us: num_field(s, "p99_us")?,
+                    mean_latency_us: num_field(s, "mean_latency_us")?,
+                    deadline_miss_rate: num_field(s, "deadline_miss_rate")?,
+                    throughput_per_ms: num_field(s, "throughput_per_ms")?,
+                    mean_queue_depth: num_field(s, "mean_queue_depth")?,
+                }),
+            },
         })
     }
 }
@@ -412,6 +443,7 @@ mod tests {
             mean_accuracy: f64::NAN,
             pc_hit_rate: 0.0,
             completed: false,
+            serve: None,
         }
     }
 
@@ -442,6 +474,36 @@ mod tests {
             }
             assert_eq!(a.dom_sens, b.dom_sens);
         }
+    }
+
+    #[test]
+    fn serve_stats_roundtrip_and_stay_optional() {
+        // batch documents carry no "serve" key at all (cache back-compat
+        // within a schema version)
+        let batch = sample();
+        assert!(!batch.to_json().render().contains("\"serve\""));
+        assert!(RunResult::from_json(&Json::parse(&batch.to_json().render()).unwrap())
+            .unwrap()
+            .serve
+            .is_none());
+        // serve documents round-trip every latency field, incl. NaN p50
+        // for a run where nothing completed (renders as null)
+        let mut r = sample();
+        r.serve = Some(crate::stats::ServeStats {
+            launches: 24,
+            completed_launches: 23,
+            p50_us: 120.5,
+            p99_us: 380.25,
+            mean_latency_us: 140.0,
+            deadline_miss_rate: 1.0 / 24.0,
+            throughput_per_ms: 0.75,
+            mean_queue_depth: 1.5,
+        });
+        let back = RunResult::from_json(&Json::parse(&r.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back.serve, r.serve);
+        r.serve.as_mut().unwrap().p50_us = f64::NAN;
+        let back = RunResult::from_json(&Json::parse(&r.to_json().render()).unwrap()).unwrap();
+        assert!(back.serve.unwrap().p50_us.is_nan());
     }
 
     #[test]

@@ -26,6 +26,31 @@ pub struct EpochRecord {
     pub dom_sens: Vec<f32>,
 }
 
+/// Queue/latency summary of a serve-mode run (continuous arrival
+/// traffic).  `None` for batch (epochs/completion) runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeStats {
+    /// Launches offered by the arrival process.
+    pub launches: u64,
+    /// Launches that finished before the run's epoch cap.
+    pub completed_launches: u64,
+    /// Median per-launch latency (arrival → last commit), µs.  Only
+    /// completed launches contribute; NaN when none completed.
+    pub p50_us: f64,
+    /// 99th-percentile per-launch latency (nearest-rank), µs.
+    pub p99_us: f64,
+    /// Mean per-launch latency over completed launches, µs.
+    pub mean_latency_us: f64,
+    /// Fraction of offered launches that missed `serve.deadline_us`
+    /// (unfinished launches count as misses).
+    pub deadline_miss_rate: f64,
+    /// Completed launches per simulated millisecond.
+    pub throughput_per_ms: f64,
+    /// Mean queue depth sampled at epoch boundaries (dispatched job
+    /// included), a congestion indicator.
+    pub mean_queue_depth: f64,
+}
+
 /// Whole-run summary.
 #[derive(Debug, Clone)]
 pub struct RunResult {
@@ -42,6 +67,8 @@ pub struct RunResult {
     pub pc_hit_rate: f64,
     /// Did the workload run to completion (fixed-work runs)?
     pub completed: bool,
+    /// Serve-mode latency/queue summary (`RunMode::Serve` runs only).
+    pub serve: Option<ServeStats>,
 }
 
 impl RunResult {
@@ -128,6 +155,7 @@ mod tests {
             mean_accuracy: 0.9,
             pc_hit_rate: 0.0,
             completed: true,
+            serve: None,
         }
     }
 

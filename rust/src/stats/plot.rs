@@ -868,7 +868,8 @@ mod tests {
     /// A config-axis CSV (schema from `sweep_header`): 2 transition
     /// latencies x 2 epochs x 2 workloads, 1 design.
     fn transition_table() -> CsvTable {
-        let mut t = CsvTable::with_header(sweep_header(&["dvfs.transition_ns".to_string()]));
+        let mut t =
+            CsvTable::with_header(sweep_header(&["dvfs.transition_ns".to_string()], false));
         for lat in ["5.0", "1000.0"] {
             for epoch in ["1", "10"] {
                 for wl in ["comd", "synth:11"] {

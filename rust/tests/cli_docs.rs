@@ -1,0 +1,114 @@
+//! Drift gates between the CLI surface and its documentation.
+//!
+//! `docs/cli.md` is the long-form CLI reference; `pcstall::help::HELP`
+//! is what the binary prints.  These tests cross-check them so the
+//! reference cannot silently fall behind the binary: every verb and
+//! every `--flag` in the help text must appear in `docs/cli.md`, and
+//! every `serve.*` registry key must be documented there too.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+/// Repo-relative documentation file (the crate lives in `rust/`).
+fn doc_path(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join(rel)
+}
+
+fn read_doc(rel: &str) -> String {
+    let p = doc_path(rel);
+    std::fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("missing documentation file {}: {e}", p.display()))
+}
+
+/// Every `--flag` token in `text` (two dashes followed by a lowercase
+/// kebab-case word, not preceded by a word character).
+fn flag_tokens(text: &str) -> BTreeSet<String> {
+    let b = text.as_bytes();
+    let mut out = BTreeSet::new();
+    let mut i = 0;
+    while i + 2 < b.len() {
+        let boundary = i == 0 || !(b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'-');
+        if boundary && b[i] == b'-' && b[i + 1] == b'-' && b[i + 2].is_ascii_lowercase() {
+            let mut j = i + 2;
+            while j < b.len() && (b[j].is_ascii_lowercase() || b[j] == b'-') {
+                j += 1;
+            }
+            out.insert(text[i..j].trim_end_matches('-').to_string());
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+#[test]
+fn every_help_flag_is_in_the_cli_reference() {
+    let help_flags = flag_tokens(pcstall::help::HELP);
+    assert!(
+        help_flags.contains("--workload") && help_flags.contains("--arrival-trace"),
+        "flag scanner is broken: {help_flags:?}"
+    );
+    let doc = read_doc("docs/cli.md");
+    let doc_flags = flag_tokens(&doc);
+    let missing: Vec<&String> = help_flags.difference(&doc_flags).collect();
+    assert!(
+        missing.is_empty(),
+        "flags in `pcstall help` but not documented in docs/cli.md: {missing:?}"
+    );
+}
+
+#[test]
+fn every_verb_is_in_help_and_the_cli_reference() {
+    let verbs = [
+        "simulate", "serve", "run", "experiment", "sweep", "trace", "cache", "obs",
+        "list", "config", "table1",
+    ];
+    let doc = read_doc("docs/cli.md");
+    for v in verbs {
+        let usage = format!("pcstall {v}");
+        assert!(
+            pcstall::help::HELP.contains(&usage),
+            "verb '{v}' missing from pcstall help"
+        );
+        assert!(doc.contains(&usage), "verb '{v}' missing from docs/cli.md");
+    }
+}
+
+#[test]
+fn every_serve_config_key_is_documented() {
+    let doc = read_doc("docs/cli.md");
+    let schema = pcstall::config::registry::key_schema();
+    let serve_keys: Vec<&str> = schema
+        .keys()
+        .iter()
+        .map(|d| d.path)
+        .filter(|p| p.starts_with("serve."))
+        .collect();
+    assert!(
+        serve_keys.len() >= 7,
+        "expected the serve.* registry keys, found {serve_keys:?}"
+    );
+    for key in serve_keys {
+        assert!(
+            pcstall::help::HELP.contains(key),
+            "serve key '{key}' missing from pcstall help"
+        );
+        assert!(doc.contains(key), "serve key '{key}' missing from docs/cli.md");
+    }
+}
+
+#[test]
+fn architecture_doc_exists_and_is_linked() {
+    let arch = read_doc("ARCHITECTURE.md");
+    for section in ["Module map", "Data flow", "Determinism contract", "Result cache"] {
+        assert!(arch.contains(section), "ARCHITECTURE.md lost its '{section}' section");
+    }
+    // the determinism contract names its gating test files
+    for gate in ["sim_parallel.rs", "sweep_shard.rs", "serve_mode.rs", "obs_overhead.rs"] {
+        assert!(arch.contains(gate), "determinism contract must cite {gate}");
+    }
+    let readme = read_doc("README.md");
+    assert!(readme.contains("ARCHITECTURE.md"), "README must link ARCHITECTURE.md");
+    assert!(readme.contains("docs/cli.md"), "README must link docs/cli.md");
+}

@@ -1,0 +1,180 @@
+//! Serve-mode acceptance gates (continuous-traffic DVFS under deadlines):
+//!
+//! 1. Serve runs are seeded and deterministic: same seed → bit-identical
+//!    latency stats and energy, different seed → a different arrival
+//!    stream (and different per-launch latencies once launches queue).
+//! 2. Percentiles are ordered (p99 ≥ p50 by nearest-rank construction)
+//!    and the reported stream accounting is internally consistent.
+//! 3. Deadline misses and queueing are monotone in offered load under a
+//!    pinned-frequency policy: more launches per µs can only queue more.
+//! 4. The `serve.csv` the harness emits is byte-identical across
+//!    `--jobs` and `--sim-threads` — execution knobs never leak into
+//!    serve artifacts.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pcstall::config::SimConfig;
+use pcstall::dvfs::manager::{DvfsManager, Policy, RunMode};
+use pcstall::dvfs::objective::Objective;
+use pcstall::exec::Engine;
+use pcstall::harness::serve::{run_serve, ServeSpec};
+use pcstall::harness::{ExpOptions, Scale};
+use pcstall::stats::{RunResult, ServeStats};
+use pcstall::workloads;
+
+/// Small serve config: 4 CUs, a short comd stream, arrivals configured
+/// per test.
+fn serve_cfg(launches: usize, arrival_rate: f64) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.gpu.n_cu = 4;
+    cfg.gpu.n_wf = 8;
+    cfg.serve.launches = launches;
+    cfg.serve.arrival_rate = arrival_rate;
+    cfg
+}
+
+fn serve_run(cfg: SimConfig, policy: Policy) -> RunResult {
+    let spec = workloads::build("comd", 0.02);
+    let mut mgr = DvfsManager::from_launches(
+        cfg,
+        spec.launches(),
+        spec.rounds,
+        policy,
+        Objective::Deadline,
+    );
+    mgr.run(RunMode::Serve { max_epochs: 50_000 }, "comd")
+}
+
+fn stats(r: &RunResult) -> &ServeStats {
+    r.serve.as_ref().expect("serve runs carry ServeStats")
+}
+
+#[test]
+fn serve_runs_are_bit_deterministic_and_seeded() {
+    let a = serve_run(serve_cfg(4, 0.05), Policy::PcStall);
+    let b = serve_run(serve_cfg(4, 0.05), Policy::PcStall);
+    assert_eq!(
+        stats(&a).p50_us.to_bits(),
+        stats(&b).p50_us.to_bits(),
+        "same seed must reproduce per-launch latencies bit-for-bit"
+    );
+    assert_eq!(stats(&a).p99_us.to_bits(), stats(&b).p99_us.to_bits());
+    assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+    assert_eq!(a.records.len(), b.records.len());
+
+    let mut other = serve_cfg(4, 0.05);
+    other.seed = 9;
+    let c = serve_run(other, Policy::PcStall);
+    let fingerprint = |r: &RunResult| {
+        (
+            stats(r).p50_us.to_bits(),
+            stats(r).mean_latency_us.to_bits(),
+            r.records.len(),
+        )
+    };
+    assert_ne!(
+        fingerprint(&a),
+        fingerprint(&c),
+        "a different master seed must draw a different arrival stream"
+    );
+}
+
+#[test]
+fn percentiles_are_ordered_and_accounting_is_consistent() {
+    let r = serve_run(serve_cfg(5, 0.04), Policy::PcStall);
+    let s = stats(&r);
+    assert_eq!(s.launches, 5, "every offered launch is accounted for");
+    assert!(s.completed_launches <= s.launches);
+    assert!(s.completed_launches > 0, "the stream must make progress");
+    assert!(s.p99_us >= s.p50_us, "p99 {} < p50 {}", s.p99_us, s.p50_us);
+    assert!(s.p50_us > 0.0 && s.p50_us.is_finite());
+    assert!(s.mean_latency_us > 0.0);
+    assert!((0.0..=1.0).contains(&s.deadline_miss_rate));
+    assert!(s.throughput_per_ms > 0.0);
+    assert!(s.mean_queue_depth > 0.0);
+    assert!(r.total_energy_j > 0.0, "energy accrues across the whole horizon");
+}
+
+#[test]
+fn misses_and_queueing_are_monotone_in_offered_load() {
+    // Pinned-frequency policy: service times are load-independent, so
+    // raising the offered load can only add queueing delay.
+    let run_at = |rate: f64| serve_run(serve_cfg(5, rate), Policy::Static(4));
+    let light = run_at(0.004);
+    let mid = run_at(0.02);
+    let heavy = run_at(0.1);
+    let (l, m, h) = (stats(&light), stats(&mid), stats(&heavy));
+    assert!(
+        l.deadline_miss_rate <= m.deadline_miss_rate + 1e-12
+            && m.deadline_miss_rate <= h.deadline_miss_rate + 1e-12,
+        "miss rate must be monotone in load: {} {} {}",
+        l.deadline_miss_rate,
+        m.deadline_miss_rate,
+        h.deadline_miss_rate
+    );
+    assert!(
+        h.mean_queue_depth > l.mean_queue_depth,
+        "25x the offered load must congest the queue: light {} heavy {}",
+        l.mean_queue_depth,
+        h.mean_queue_depth
+    );
+    assert!(
+        h.mean_latency_us >= l.mean_latency_us,
+        "queueing delay only adds latency: light {} heavy {}",
+        l.mean_latency_us,
+        h.mean_latency_us
+    );
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pcstall_servegate_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn serve_csv_is_byte_identical_across_jobs_and_sim_threads() {
+    let run_with = |tag: &str, jobs: usize, sim_threads: Option<usize>| {
+        let dir = fresh_dir(tag);
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            out_dir: dir.clone(),
+            jobs,
+            engine: Arc::new(Engine::no_cache()),
+            sim_threads,
+            ..Default::default()
+        };
+        let mut cfg = opts.base_cfg();
+        cfg.serve.launches = 3;
+        cfg.serve.arrival_rate = 0.05;
+        let spec = ServeSpec {
+            workload: "comd".into(),
+            policies: vec![
+                Policy::parse("crisp").unwrap(),
+                Policy::PcStall,
+            ],
+            objective: Objective::Deadline,
+            arrival_gaps_us: None,
+        };
+        let path = run_serve(&opts, cfg, &spec).unwrap();
+        let bytes = std::fs::read(path).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        bytes
+    };
+
+    let serial = run_with("serial", 1, Some(1));
+    let wide_jobs = run_with("jobs", 4, Some(1));
+    let wide_sim = run_with("sim", 1, Some(4));
+    assert!(!serial.is_empty());
+    assert_eq!(serial, wide_jobs, "serve.csv must not depend on --jobs");
+    assert_eq!(serial, wide_sim, "serve.csv must not depend on --sim-threads");
+
+    let text = String::from_utf8(serial).unwrap();
+    let header = text.lines().next().unwrap();
+    for col in ["p50_us", "p99_us", "miss_rate", "energy_j"] {
+        assert!(header.contains(col), "serve.csv header lost '{col}': {header}");
+    }
+    assert_eq!(text.lines().count(), 3, "header + one row per policy");
+}
