@@ -390,6 +390,36 @@ mod tests {
     }
 
     #[test]
+    fn exec_kernel_and_size_parameters_key_distinctly() {
+        // `exec:` workloads resolve to `trace:<content-hash>` ids, so a
+        // kernel-name or size-parameter change must move the cache
+        // address, while re-resolving the same spec must not.
+        use crate::workloads::WorkloadSource;
+        let cfg = SimConfig::small();
+        let key_of = |spec: &str| {
+            let id = WorkloadSource::parse(spec).unwrap().resolve().unwrap().id;
+            assert!(id.starts_with("trace:"), "{spec} -> {id}");
+            RunKey::new(
+                &cfg,
+                "quick",
+                "native",
+                &id,
+                Policy::PcStall,
+                Objective::Ed2p,
+                RunMode::Epochs(8),
+                1.0,
+            )
+        };
+        let a = key_of("exec:vectoradd:4096");
+        let a2 = key_of("exec:vectoradd:4096");
+        assert_eq!(a, a2, "re-lowering the same spec must reproduce the key");
+        let bigger = key_of("exec:vectoradd:8192");
+        let other = key_of("exec:matmul:64");
+        assert_ne!(a.hash_hex(), bigger.hash_hex(), "size change must move the key");
+        assert_ne!(a.hash_hex(), other.hash_hex(), "kernel change must move the key");
+    }
+
+    #[test]
     fn config_axis_overrides_fingerprint_canonically() {
         // A sweep-plan `[axis]` dimension reaches the key through the
         // cell config: distinct axis values must give distinct cache

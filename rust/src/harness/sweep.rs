@@ -9,7 +9,7 @@
 //! * **epoch length** (`epoch_ns`),
 //! * **V/f-domain granularity** (`cus_per_domain`),
 //! * **workload source** (any [`WorkloadSource`] spec: catalog name,
-//!   `trace:<path>`, `synth:<seed>`),
+//!   `trace:<path>`, `synth:<seed>`, `exec:<kernel>:<size>`),
 //! * **synth-seed population** (`seed`: expands the bare `synth`
 //!   workload template into one `synth:<seed>` source per seed),
 //! * **objective** (`edp` / `ed2p` / `energy@<pct>` / `deadline`),
@@ -649,8 +649,8 @@ impl SweepPlan {
             anyhow::ensure!(
                 wl == "synth",
                 "plan seed axis: workload '{wl}' is not a synth source — seed = [..] \
-                 expands only bare 'synth' templates (catalog and trace: sources carry \
-                 no seed)"
+                 expands only bare 'synth' templates (catalog, trace:, and exec: \
+                 sources carry no seed)"
             );
         }
         // every entry validated to be the one template — collapse repeats
@@ -1441,6 +1441,43 @@ dvfs.pc_update_alpha = [0.5, 1.0]
             ..Default::default()
         };
         assert!(plan.compile(&opts).is_err());
+    }
+
+    #[test]
+    fn exec_workload_axis_compiles_to_content_hashed_points() {
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        };
+        let plan = SweepPlan::from_toml(
+            "epoch_ns = [1000, 10000]\ncus_per_domain = [1]\n\
+             workloads = [\"exec:vectoradd:4096\", \"exec:stencil2d:128\"]\n\
+             designs = [\"pcstall\"]\nepochs = 4\n",
+        )
+        .unwrap();
+        let grid = plan.compile(&opts).unwrap();
+        assert_eq!(grid.points.len(), 4);
+        assert!(grid.points.iter().all(|p| p.workload.starts_with("exec:")));
+        // a typoed size fails at compile, not at run
+        let bad = SweepPlan::from_toml(
+            "epoch_ns = [1000]\nworkloads = [\"exec:vectoradd:4097\"]\n",
+        )
+        .unwrap();
+        assert!(bad.compile(&opts).is_err());
+    }
+
+    #[test]
+    fn seed_axis_rejects_exec_workloads() {
+        let opts = ExpOptions {
+            scale: Scale::Quick,
+            ..Default::default()
+        };
+        let plan = SweepPlan::from_toml(
+            "workloads = [\"exec:matmul:128\"]\nseed = [1, 2]\n",
+        )
+        .unwrap();
+        let err = plan.compile(&opts).unwrap_err().to_string();
+        assert!(err.contains("exec:"), "error should mention exec sources: {err}");
     }
 
     #[test]

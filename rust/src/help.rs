@@ -24,6 +24,8 @@ USAGE:
   pcstall trace gen [--seed s] [--out file] [--binary]
   pcstall trace info <file>
   pcstall trace ingest <accel-sim-file> [--out file] [--binary]
+  pcstall trace diff <a> <b>
+  pcstall workloads list
   pcstall cache stats [--dir results/cache]
   pcstall cache clear [--dir results/cache] [--max-age days] [--max-bytes MB]
   pcstall obs report [<dir>]
@@ -38,6 +40,10 @@ WORKLOAD SPECS (accepted wherever a workload name is):
   <name>                catalog workload from `pcstall list`
   trace:<path>          instruction-trace file (text or binary encoding)
   synth:<seed>          seeded synthesized trace workload
+  exec:<kernel>[:<size>]  executable library kernel (matmul, transpose,
+                        vectoradd, reduce, stencil2d, spmv-ella), run
+                        under instrumentation and lowered to a trace;
+                        `pcstall workloads list` shows size ranges
 
 RUN OPTIONS:
   --quick | --full      scale preset (default: 8 CUs, all workloads)
@@ -178,4 +184,13 @@ TRACE COMMANDS:
   gen                   synthesize a randomized trace (--seed, default 1)
   info <file>           print header, per-kernel stats, content hash
   ingest <file>         lower an accel-sim-style kernel trace
+  diff <a> <b>          compare two trace files structurally: per-kernel
+                        opcode mix, stride histogram, and length deltas,
+                        ending in a greppable `divergent: N` line
+                        (0 = structurally identical)
+
+WORKLOADS COMMANDS:
+  list                  one table of catalog workloads, exec kernels
+                        (with size ranges and defaults), and the accepted
+                        workload spec grammars
 "#;

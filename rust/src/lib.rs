@@ -11,7 +11,9 @@
 //!   an L1/L2/DRAM hierarchy and quantum-coupled cross-CU contention.
 //! * [`workloads`] — seeded synthetic generators reproducing the phase
 //!   character of the paper's Table II applications (ECP proxies +
-//!   DeepBench/DNNMark kernels).
+//!   DeepBench/DNNMark kernels), plus [`workloads::exec`]: a library of
+//!   executable Rust kernels run over instrumented device arrays and
+//!   lowered to content-hashed traces (`exec:<kernel>:<size>` specs).
 //! * [`power`] — the CV²Af + leakage + IVR-efficiency power model shared
 //!   (constant-for-constant) with the Python/Pallas artifact.
 //! * [`models`] — frequency-sensitivity estimation models: STALL, LEAD,
@@ -30,8 +32,9 @@
 //!   counters collected through an epoch-boundary `ObsSink`, plus a
 //!   wall-clock span timeline (`--obs <dir>`, `pcstall obs report`).
 //! * [`trace`] — wavefront instruction traces as first-class workloads:
-//!   a versioned text/binary format, simulator capture, accel-sim-style
-//!   ingest, and a seeded trace synthesizer.
+//!   a versioned text/binary format, simulator + recorded-kernel
+//!   capture, accel-sim-style ingest, a seeded trace synthesizer, and a
+//!   structural trace differ (`pcstall trace diff`).
 //! * [`harness`] — one experiment per paper figure/table (see DESIGN.md),
 //!   plus declarative sweep plans ([`harness::sweep`]): N-dimensional
 //!   epoch × granularity × workload-source × objective × design grids,

@@ -65,6 +65,7 @@ fn run() -> Result<()> {
         "trace" => trace_cmd(&args[1..]),
         "cache" => cache_cmd(&args[1..]),
         "obs" => obs_cmd(&args[1..]),
+        "workloads" => workloads_cmd(&args[1..]),
         "list" => list(),
         "config" => config_cmd(&args[1..]),
         "table1" => run_experiment("table1", &ExpOptions::default()),
@@ -420,7 +421,7 @@ fn sweep_cmd(args: &[String]) -> Result<()> {
                  name = \"my_sweep\"\n\
                  epoch_ns = [1000, 10000, 50000, 100000]  # epoch-length axis (ns)\n\
                  cus_per_domain = [1, 2, 4]               # V/f-domain granularity axis\n\
-                 workloads = [\"comd\", \"trace:t.trace\", \"synth:7\"]  # workload-source axis\n\
+                 workloads = [\"comd\", \"trace:t.trace\", \"synth:7\", \"exec:matmul:512\"]  # workload-source axis\n\
                  workloads_add = [\"synth:7\"]              # or: scale's sweep set + extras\n\
                  seed = [2, 3, 5]                         # synth-seed population axis\n\
                  designs = [\"crisp\", \"pcstall\", \"oracle\"]  # predictor-design axis\n\
@@ -558,7 +559,17 @@ fn trace_cmd(args: &[String]) -> Result<()> {
             trace_info(Path::new(file))
         }
         "ingest" => trace_ingest(&args[1..]),
-        _ => anyhow::bail!("usage: pcstall trace record|replay|gen|info|ingest ..."),
+        "diff" => {
+            let (a, b) = match (args.get(1), args.get(2)) {
+                (Some(a), Some(b)) => (a, b),
+                _ => anyhow::bail!("usage: pcstall trace diff <a> <b>"),
+            };
+            let ta = Trace::load(Path::new(a))?;
+            let tb = Trace::load(Path::new(b))?;
+            print!("{}", pcstall::trace::diff(&ta, &tb).render(a, b));
+            Ok(())
+        }
+        _ => anyhow::bail!("usage: pcstall trace record|replay|gen|info|ingest|diff ..."),
     }
 }
 
@@ -605,6 +616,10 @@ fn trace_record(args: &[String]) -> Result<()> {
         WorkloadSource::Synth(seed) => scale_trace(synthesize(seed), waves_flag),
         // re-encode an existing file (text <-> binary conversion)
         WorkloadSource::TraceFile(path) => scale_trace(Trace::load(&path)?, waves_flag),
+        // lower the kernel, then bake any waves multiplier in
+        WorkloadSource::Exec { kernel, size } => {
+            scale_trace(workloads::exec::lower(&kernel, size)?, waves_flag)
+        }
     };
     save_and_report(&trace, out, binary)
 }
@@ -789,8 +804,46 @@ fn list() -> Result<()> {
     for e in all_experiments() {
         println!("  {e}");
     }
-    println!("\nworkload specs: any name above, trace:<path>, synth:<seed>");
+    println!(
+        "\nworkload specs: any name above, trace:<path>, synth:<seed>, \
+         exec:<kernel>[:<size>] (see `pcstall workloads list`)"
+    );
     Ok(())
+}
+
+fn workloads_cmd(args: &[String]) -> Result<()> {
+    let verb = args.first().map(|s| s.as_str()).unwrap_or("list");
+    match verb {
+        "list" => {
+            let o = Opts::new(&args[1..]);
+            let rest = o.finish()?;
+            anyhow::ensure!(rest.is_empty(), "usage: pcstall workloads list");
+            println!("catalog workloads (paper Table II generators):");
+            for w in workloads::names() {
+                let spec = workloads::build(w, 1.0);
+                println!("  {:<10} {} kernel(s)", w, spec.kernels.len());
+            }
+            println!("\nexec kernels (executable Rust kernels, lowered to traces on demand):");
+            println!(
+                "  {:<10} {:<22} {:>9} {:>9} {:>9}  {}",
+                "name", "size parameter", "min", "max", "default", "about"
+            );
+            for k in workloads::exec::kernels() {
+                println!(
+                    "  {:<10} {:<22} {:>9} {:>9} {:>9}  {}",
+                    k.name, k.size_doc, k.min_size, k.max_size, k.default_size, k.about
+                );
+            }
+            println!("  (sizes are powers of two; `exec:<kernel>` uses the default)");
+            println!("\nworkload spec grammar (accepted wherever a workload is named):");
+            println!("  <name>                  catalog workload above");
+            println!("  trace:<path>            trace file, text or binary (`pcstall trace`)");
+            println!("  synth:<seed>            seeded synthesized trace");
+            println!("  exec:<kernel>[:<size>]  executable kernel at <size>");
+            Ok(())
+        }
+        _ => anyhow::bail!("usage: pcstall workloads list"),
+    }
 }
 
 fn config_cmd(args: &[String]) -> Result<()> {

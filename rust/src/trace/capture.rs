@@ -10,12 +10,18 @@
 //! run bit-for-bit (epoch instruction counts, energy, ED²P), which
 //! `tests/trace_roundtrip.rs` asserts.
 //!
-//! Two capture points are provided: [`capture_workload`] records a
-//! workload spec as dispatched, and [`capture_gpu`] hooks a live
-//! simulator and records whatever kernel queue is currently loaded.
+//! Three capture points are provided: [`capture_workload`] records a
+//! workload spec as dispatched, [`capture_gpu`] hooks a live simulator
+//! and records whatever kernel queue is currently loaded, and
+//! [`capture_recorded`] assembles the event stream of an instrumented
+//! execution (the `workloads::exec` frontend) into a valid trace,
+//! inserting the waitcnt discipline and loop pairing the format
+//! requires.
 
 use crate::sim::gpu::Gpu;
-use crate::trace::format::{sanitize_name, Trace, TraceKernel};
+use crate::sim::isa::{Op, MAX_LOOP_DEPTH};
+use crate::trace::format::{sanitize_name, sanitize_source, Trace, TraceKernel};
+use crate::trace::ingest::{classify_pattern, normalize_waves, WAIT_EVERY};
 use crate::workloads::WorkloadSpec;
 
 /// Record a workload spec's full dispatch stream.
@@ -73,6 +79,165 @@ pub fn capture_named(name: &str, waves: f64) -> anyhow::Result<Trace> {
     let mut t = capture_workload(&crate::workloads::build(name, waves));
     t.source = format!("capture:{name}@waves={waves}");
     Ok(t)
+}
+
+/// One event recorded by an instrumented execution.  The stream is the
+/// *representative wavefront's* first pass through the kernel: loop
+/// bodies are recorded once with their executed trip counts, memory
+/// events reference a static site (so classification can pool address
+/// observations across every execution of that site), and arithmetic is
+/// recorded per warp-wide operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecEvent {
+    /// Arithmetic: a vector op of `cycles` issue cost, or a scalar op.
+    Alu { vector: bool, cycles: u8 },
+    /// A warp memory access at static site `site` (index into the
+    /// kernel's site table); `fan` = distinct 64-byte lines the lanes
+    /// touched on the recorded execution.
+    Mem { store: bool, site: u32, fan: u8 },
+    Barrier,
+    /// Loop prologue (`trips` = executed iterations); nesting depth and
+    /// the back-edge target are derived during assembly.
+    LoopBegin { trips: u16 },
+    LoopEnd,
+}
+
+/// Classification summary of one static memory site, pooled over every
+/// execution the recorder observed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemSite {
+    pub region: u8,
+    /// Inferred per-access address advance in bytes (already clamped to
+    /// the 4..=4096 range the classifier expects).
+    pub stride: u32,
+    /// Footprint of the backing allocation in bytes.
+    pub working_set: u32,
+}
+
+/// One kernel's recorded stream plus its launch geometry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RecordedKernel {
+    pub name: String,
+    /// Total 64-lane wavefronts the launch covers (normalized to
+    /// waves-per-CU during assembly).
+    pub total_waves: u64,
+    pub events: Vec<RecEvent>,
+    pub sites: Vec<MemSite>,
+}
+
+/// Assemble recorded kernel streams into a validated [`Trace`].
+///
+/// The assembly owns the format's structural obligations so recorders
+/// don't have to: memory runs are bounded by inserting `waitcnt 16`
+/// every [`WAIT_EVERY`] memory ops, outstanding memory is drained
+/// (`waitcnt 0`) before barriers, loop back-edges, and program end, and
+/// loop markers are paired with their depth and target derived from the
+/// open-loop stack.
+pub fn capture_recorded(
+    name: &str,
+    source: &str,
+    recorded: &[RecordedKernel],
+) -> anyhow::Result<Trace> {
+    anyhow::ensure!(!recorded.is_empty(), "capture_recorded: no kernels");
+    let kernels = recorded
+        .iter()
+        .enumerate()
+        .map(|(i, k)| assemble_recorded(k, i as u32))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let trace = Trace {
+        name: sanitize_name(name),
+        source: sanitize_source(source),
+        rounds: 1,
+        kernels,
+    };
+    trace
+        .validate()
+        .map_err(|e| anyhow::anyhow!("recorded trace '{name}' invalid: {e}"))?;
+    Ok(trace)
+}
+
+fn assemble_recorded(k: &RecordedKernel, kernel_id: u32) -> anyhow::Result<TraceKernel> {
+    let mut out: Vec<Op> = Vec::with_capacity(k.events.len() + 8);
+    let mut mem_run = 0usize;
+    // pc of each open LoopBegin; stack depth = loop nesting depth
+    let mut open: Vec<u32> = Vec::new();
+    fn drain(out: &mut Vec<Op>, mem_run: &mut usize) {
+        if *mem_run > 0 {
+            out.push(Op::WaitCnt { max: 0 });
+            *mem_run = 0;
+        }
+    }
+    for (i, ev) in k.events.iter().enumerate() {
+        match *ev {
+            RecEvent::Alu { vector: true, cycles } => out.push(Op::VAlu { cycles: cycles.max(1) }),
+            RecEvent::Alu { vector: false, .. } => out.push(Op::SAlu),
+            RecEvent::Mem { store, site, fan } => {
+                let s = k.sites.get(site as usize).ok_or_else(|| {
+                    anyhow::anyhow!("kernel {}: event {i} references unknown site {site}", k.name)
+                })?;
+                let pattern = classify_pattern(s.region, s.stride, s.working_set);
+                let fan = fan.clamp(1, 16);
+                out.push(if store {
+                    Op::Store { pattern, fan }
+                } else {
+                    Op::Load { pattern, fan }
+                });
+                mem_run += 1;
+                if mem_run >= WAIT_EVERY {
+                    out.push(Op::WaitCnt { max: 16 });
+                    mem_run = 0;
+                }
+            }
+            RecEvent::Barrier => {
+                drain(&mut out, &mut mem_run);
+                out.push(Op::Barrier);
+            }
+            RecEvent::LoopBegin { trips } => {
+                anyhow::ensure!(
+                    open.len() < MAX_LOOP_DEPTH,
+                    "kernel {}: loop nesting exceeds depth {MAX_LOOP_DEPTH}",
+                    k.name
+                );
+                open.push(out.len() as u32);
+                out.push(Op::LoopBegin {
+                    depth: open.len() as u8 - 1,
+                    trips: trips.max(1),
+                    divergence: 0,
+                });
+            }
+            RecEvent::LoopEnd => {
+                let begin = open.pop().ok_or_else(|| {
+                    anyhow::anyhow!("kernel {}: event {i}: LoopEnd without open loop", k.name)
+                })?;
+                anyhow::ensure!(
+                    out.len() as u32 > begin + 1,
+                    "kernel {}: empty loop body at pc {begin}",
+                    k.name
+                );
+                // a loop body that issued memory must drain inside the
+                // body (the format bounds outstanding memory per trip)
+                drain(&mut out, &mut mem_run);
+                out.push(Op::LoopEnd {
+                    depth: open.len() as u8,
+                    target: begin + 1,
+                });
+            }
+        }
+    }
+    anyhow::ensure!(
+        open.is_empty(),
+        "kernel {}: {} unterminated loop(s)",
+        k.name,
+        open.len()
+    );
+    drain(&mut out, &mut mem_run);
+    out.push(Op::EndPgm);
+    Ok(TraceKernel {
+        kernel_id,
+        name: sanitize_name(&k.name),
+        waves_per_cu: normalize_waves(k.total_waves),
+        records: out,
+    })
 }
 
 #[cfg(test)]
@@ -134,5 +299,110 @@ mod tests {
     fn capture_named_rejects_unknown() {
         assert!(capture_named("nope", 1.0).is_err());
         assert!(capture_named("comd", 0.1).is_ok());
+    }
+
+    fn site() -> MemSite {
+        MemSite { region: 1, stride: 64, working_set: 1 << 20 }
+    }
+
+    #[test]
+    fn recorded_stream_assembles_with_waitcnt_discipline() {
+        let k = RecordedKernel {
+            name: "rec".into(),
+            total_waves: 128,
+            events: vec![
+                RecEvent::Alu { vector: true, cycles: 4 },
+                RecEvent::LoopBegin { trips: 10 },
+                RecEvent::Mem { store: false, site: 0, fan: 4 },
+                RecEvent::Alu { vector: false, cycles: 0 },
+                RecEvent::Mem { store: true, site: 0, fan: 1 },
+                RecEvent::LoopEnd,
+                RecEvent::Barrier,
+            ],
+            sites: vec![site()],
+        };
+        let t = capture_recorded("rec", "exec:rec:1", &[k]).unwrap();
+        let ops = &t.kernels[0].records;
+        use Op::*;
+        assert!(matches!(ops[0], VAlu { cycles: 4 }));
+        assert!(matches!(ops[1], LoopBegin { depth: 0, trips: 10, .. }));
+        assert!(matches!(ops[2], Load { fan: 4, .. }));
+        assert!(matches!(ops[3], SAlu));
+        assert!(matches!(ops[4], Store { fan: 1, .. }));
+        // body issued memory: drained inside the body before the back-edge
+        assert!(matches!(ops[5], WaitCnt { max: 0 }));
+        assert!(matches!(ops[6], LoopEnd { depth: 0, target: 2 }));
+        assert!(matches!(ops[7], Barrier));
+        assert!(matches!(ops[8], EndPgm));
+        // 128 total waves on 64 CUs = 2 per CU
+        assert_eq!(t.kernels[0].waves_per_cu, 2);
+    }
+
+    #[test]
+    fn long_recorded_mem_runs_are_bounded() {
+        let k = RecordedKernel {
+            name: "runs".into(),
+            total_waves: 64,
+            events: (0..40)
+                .map(|_| RecEvent::Mem { store: false, site: 0, fan: 16 })
+                .collect(),
+            sites: vec![site()],
+        };
+        let t = capture_recorded("runs", "exec:runs:1", &[k]).unwrap();
+        let waits = t.kernels[0]
+            .records
+            .iter()
+            .filter(|op| matches!(op, Op::WaitCnt { .. }))
+            .count();
+        // 40 loads: waitcnt 16 at 16 and 32, drain before endpgm
+        assert_eq!(waits, 3);
+    }
+
+    #[test]
+    fn recorded_random_sites_classify_random() {
+        let k = RecordedKernel {
+            name: "gather".into(),
+            total_waves: 64,
+            events: vec![RecEvent::Mem { store: false, site: 0, fan: 16 }],
+            sites: vec![MemSite { region: 2, stride: 4096, working_set: 1 << 22 }],
+        };
+        let t = capture_recorded("gather", "exec:gather:1", &[k]).unwrap();
+        assert!(matches!(
+            t.kernels[0].records[0],
+            Op::Load { pattern: crate::sim::isa::Pattern::Random { .. }, .. }
+        ));
+    }
+
+    #[test]
+    fn recorded_stream_structural_errors() {
+        let bad_site = RecordedKernel {
+            name: "k".into(),
+            total_waves: 1,
+            events: vec![RecEvent::Mem { store: false, site: 9, fan: 1 }],
+            sites: vec![site()],
+        };
+        assert!(capture_recorded("k", "exec:k:1", &[bad_site]).is_err());
+        let unbalanced = RecordedKernel {
+            name: "k".into(),
+            total_waves: 1,
+            events: vec![RecEvent::LoopBegin { trips: 2 }],
+            sites: vec![],
+        };
+        assert!(capture_recorded("k", "exec:k:1", &[unbalanced]).is_err());
+        let stray_end = RecordedKernel {
+            name: "k".into(),
+            total_waves: 1,
+            events: vec![RecEvent::LoopEnd],
+            sites: vec![],
+        };
+        assert!(capture_recorded("k", "exec:k:1", &[stray_end]).is_err());
+        let empty_body = RecordedKernel {
+            name: "k".into(),
+            total_waves: 1,
+            events: vec![RecEvent::LoopBegin { trips: 2 }, RecEvent::LoopEnd],
+            sites: vec![],
+        };
+        assert!(capture_recorded("k", "exec:k:1", &[empty_body]).is_err());
+        assert!(capture_recorded("empty", "exec:e:1", &[]).is_err());
     }
 }

@@ -1,0 +1,262 @@
+//! Structural comparison of two traces.
+//!
+//! `pcstall trace diff <a> <b>` aligns kernels by position and compares
+//! each pair on three axes: opcode mix (the [`KernelStats`] counters),
+//! a stride histogram of memory ops (power-of-two buckets plus a
+//! `random` bucket), and lengths (static records, dynamic instructions
+//! per wave, waves per CU).  The rendering ends with a greppable
+//! `divergent: N` summary line — `0` means structurally identical
+//! streams, which is how CI asserts `exec:` lowering determinism.
+
+use std::collections::BTreeMap;
+
+use crate::sim::isa::{Op, Pattern};
+use crate::trace::format::{KernelStats, Trace, TraceKernel};
+
+/// Bucket label for one memory op's access pattern.
+fn stride_bucket(op: &Op) -> Option<String> {
+    let pattern = match op {
+        Op::Load { pattern, .. } | Op::Store { pattern, .. } => pattern,
+        _ => return None,
+    };
+    Some(match pattern {
+        Pattern::Random { .. } => "random".to_string(),
+        Pattern::Strided { stride, .. } => {
+            format!("<={}", stride.next_power_of_two().max(4))
+        }
+    })
+}
+
+/// Stride histogram of a kernel's memory ops: bucket label -> count.
+fn stride_histogram(k: &TraceKernel) -> BTreeMap<String, usize> {
+    let mut h = BTreeMap::new();
+    for op in &k.records {
+        if let Some(b) = stride_bucket(op) {
+            *h.entry(b).or_insert(0) += 1;
+        }
+    }
+    h
+}
+
+/// Comparison of one aligned kernel pair (or an unpaired extra).
+pub struct KernelDiff {
+    pub index: usize,
+    pub a_name: Option<String>,
+    pub b_name: Option<String>,
+    /// Human-readable mismatch axes; empty = structurally identical.
+    pub mismatches: Vec<String>,
+    lines: Vec<String>,
+}
+
+/// Full diff of two traces.
+pub struct TraceDiff {
+    pub kernels: Vec<KernelDiff>,
+    pub rounds: (u32, u32),
+    /// Divergent kernel pairs + unpaired extras + a rounds mismatch.
+    pub divergent: usize,
+}
+
+fn fmt_stats(a: &KernelStats, b: &KernelStats) -> (String, bool) {
+    let fields = [
+        ("valu", a.valu, b.valu),
+        ("salu", a.salu, b.salu),
+        ("load", a.loads, b.loads),
+        ("store", a.stores, b.stores),
+        ("wait", a.waitcnts, b.waitcnts),
+        ("barrier", a.barriers, b.barriers),
+        ("loop", a.loops, b.loops),
+    ];
+    let mut same = true;
+    let mut parts = Vec::new();
+    for (name, x, y) in fields {
+        if x == y {
+            parts.push(format!("{name} {x}"));
+        } else {
+            same = false;
+            parts.push(format!("{name} {x}->{y}"));
+        }
+    }
+    (parts.join(" "), same)
+}
+
+fn fmt_hist(a: &BTreeMap<String, usize>, b: &BTreeMap<String, usize>) -> (String, bool) {
+    let mut keys: Vec<&String> = a.keys().chain(b.keys()).collect();
+    keys.sort();
+    keys.dedup();
+    if keys.is_empty() {
+        return ("(no memory ops)".to_string(), true);
+    }
+    let mut same = true;
+    let mut parts = Vec::new();
+    for k in keys {
+        let (x, y) = (a.get(k).copied().unwrap_or(0), b.get(k).copied().unwrap_or(0));
+        if x == y {
+            parts.push(format!("{k}:{x}"));
+        } else {
+            same = false;
+            parts.push(format!("{k}:{x}->{y}"));
+        }
+    }
+    (parts.join(" "), same)
+}
+
+fn diff_pair(index: usize, a: &TraceKernel, b: &TraceKernel) -> KernelDiff {
+    let mut mismatches = Vec::new();
+    let mut lines = Vec::new();
+    if a.name != b.name {
+        mismatches.push("name".to_string());
+    }
+    let (mix, mix_same) = fmt_stats(&a.stats(), &b.stats());
+    if !mix_same {
+        mismatches.push("opcode mix".to_string());
+    }
+    lines.push(format!("  opcode mix : {mix}"));
+    let (hist, hist_same) = fmt_hist(&stride_histogram(a), &stride_histogram(b));
+    if !hist_same {
+        mismatches.push("stride histogram".to_string());
+    }
+    lines.push(format!("  strides    : {hist}"));
+    let (sa, sb) = (a.stats(), b.stats());
+    let lens = [
+        ("static", sa.static_records as u64, sb.static_records as u64),
+        ("dyn/wave", sa.dyn_per_wave, sb.dyn_per_wave),
+        ("waves/cu", a.waves_per_cu, b.waves_per_cu),
+    ];
+    let mut len_parts = Vec::new();
+    let mut len_same = true;
+    for (name, x, y) in lens {
+        if x == y {
+            len_parts.push(format!("{name} {x}"));
+        } else {
+            len_same = false;
+            len_parts.push(format!("{name} {x}->{y}"));
+        }
+    }
+    if !len_same {
+        mismatches.push("length".to_string());
+    }
+    lines.push(format!("  length     : {}", len_parts.join(" ")));
+    KernelDiff {
+        index,
+        a_name: Some(a.name.clone()),
+        b_name: Some(b.name.clone()),
+        mismatches,
+        lines,
+    }
+}
+
+/// Compare two traces kernel-by-kernel (aligned by position).
+pub fn diff(a: &Trace, b: &Trace) -> TraceDiff {
+    let n = a.kernels.len().max(b.kernels.len());
+    let mut kernels = Vec::with_capacity(n);
+    for i in 0..n {
+        match (a.kernels.get(i), b.kernels.get(i)) {
+            (Some(ka), Some(kb)) => kernels.push(diff_pair(i, ka, kb)),
+            (Some(ka), None) => kernels.push(KernelDiff {
+                index: i,
+                a_name: Some(ka.name.clone()),
+                b_name: None,
+                mismatches: vec!["only in a".to_string()],
+                lines: Vec::new(),
+            }),
+            (None, Some(kb)) => kernels.push(KernelDiff {
+                index: i,
+                a_name: None,
+                b_name: Some(kb.name.clone()),
+                mismatches: vec!["only in b".to_string()],
+                lines: Vec::new(),
+            }),
+            (None, None) => unreachable!(),
+        }
+    }
+    let mut divergent = kernels.iter().filter(|k| !k.mismatches.is_empty()).count();
+    if a.rounds != b.rounds {
+        divergent += 1;
+    }
+    TraceDiff { kernels, rounds: (a.rounds, b.rounds), divergent }
+}
+
+impl TraceDiff {
+    /// Render the human-facing report; the final line is always
+    /// `divergent: N`.
+    pub fn render(&self, a_label: &str, b_label: &str) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("trace diff: {a_label} vs {b_label}\n"));
+        for k in &self.kernels {
+            let names = match (&k.a_name, &k.b_name) {
+                (Some(a), Some(b)) if a == b => format!("'{a}'"),
+                (Some(a), Some(b)) => format!("'{a}' vs '{b}'"),
+                (Some(a), None) => format!("'{a}' (only in a)"),
+                (None, Some(b)) => format!("'{b}' (only in b)"),
+                (None, None) => String::new(),
+            };
+            let verdict = if k.mismatches.is_empty() {
+                "identical".to_string()
+            } else {
+                format!("DIVERGES: {}", k.mismatches.join(", "))
+            };
+            out.push_str(&format!("kernel {} {names}: {verdict}\n", k.index));
+            for l in &k.lines {
+                out.push_str(l);
+                out.push('\n');
+            }
+        }
+        if self.rounds.0 == self.rounds.1 {
+            out.push_str(&format!("rounds: {}\n", self.rounds.0));
+        } else {
+            out.push_str(&format!("rounds: {} -> {} (DIVERGES)\n", self.rounds.0, self.rounds.1));
+        }
+        out.push_str(&format!("divergent: {}\n", self.divergent));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::capture::capture_workload;
+
+    #[test]
+    fn self_diff_is_zero_divergent() {
+        let t = capture_workload(&crate::workloads::build("dgemm", 0.05));
+        let d = diff(&t, &t);
+        assert_eq!(d.divergent, 0);
+        let text = d.render("a", "b");
+        assert!(text.ends_with("divergent: 0\n"), "{text}");
+        assert!(text.contains("identical"));
+    }
+
+    #[test]
+    fn structural_changes_are_counted_and_named() {
+        // two-kernel trace, so dropping one leaves an unpaired extra
+        let t = crate::workloads::exec::lower("reduce", 4096).unwrap();
+        let mut edited = t.clone();
+        edited.kernels[0].waves_per_cu += 1;
+        edited.kernels.pop();
+        edited.rounds += 1;
+        let d = diff(&t, &edited);
+        // kernel 0 length mismatch + one unpaired kernel + rounds
+        assert_eq!(d.divergent, 3, "{}", d.render("a", "b"));
+        let text = d.render("a", "b");
+        assert!(text.contains("DIVERGES: length"));
+        assert!(text.contains("only in a"));
+        assert!(text.ends_with("divergent: 3\n"));
+    }
+
+    #[test]
+    fn different_workloads_diverge_on_mix() {
+        let a = capture_workload(&crate::workloads::build("dgemm", 0.05));
+        let b = capture_workload(&crate::workloads::build("comd", 0.05));
+        let d = diff(&a, &b);
+        assert!(d.divergent > 0);
+    }
+
+    #[test]
+    fn exec_lowerings_self_compare_clean() {
+        let a = crate::workloads::exec::lower("stencil2d", 128).unwrap();
+        let b = crate::workloads::exec::lower("stencil2d", 128).unwrap();
+        assert_eq!(diff(&a, &b).divergent, 0);
+        let c = crate::workloads::exec::lower("stencil2d", 256).unwrap();
+        assert!(diff(&a, &c).divergent > 0, "size change must show up");
+    }
+}

@@ -43,6 +43,41 @@ pub const WAVES_PER_CU_CAP: u64 = 128;
 /// CU count used to normalize grid geometry to waves-per-CU.
 const NORM_CUS: u64 = 64;
 
+/// Classify a memory site from an inferred per-access stride.  Strides
+/// at or beyond 2048 bytes are effectively uncorrelated from the cache's
+/// point of view and are modelled as [`Pattern::Random`]; anything
+/// tighter stays [`Pattern::Strided`] (floored at 4 bytes, one word).
+/// Shared by the accel-sim ingest path and the `workloads::exec`
+/// recorder so both lowerings agree on what "random" means.
+pub fn classify_pattern(region: u8, stride_guess: u32, working_set: u32) -> Pattern {
+    if stride_guess >= 2048 {
+        Pattern::Random { region, working_set }
+    } else {
+        Pattern::Strided {
+            region,
+            stride: stride_guess.max(4),
+            working_set,
+        }
+    }
+}
+
+/// Memory divergence of one warp access: distinct 64-byte lines among
+/// the observed lane addresses, clamped to the simulator's 1..=16 fan
+/// range (no observations coalesce to a single line).
+pub fn fan_from_addrs(addrs: &[u64]) -> u8 {
+    let mut lines: Vec<u64> = addrs.iter().map(|a| a >> 6).collect();
+    lines.sort_unstable();
+    lines.dedup();
+    lines.len().clamp(1, 16) as u8
+}
+
+/// Normalize a total 64-lane wavefront count to a waves-per-CU figure
+/// on the reference 64-CU part, capped at [`WAVES_PER_CU_CAP`] so huge
+/// grids stay simulable.
+pub fn normalize_waves(total_waves: u64) -> u64 {
+    (total_waves.max(1).div_ceil(NORM_CUS)).clamp(1, WAVES_PER_CU_CAP)
+}
+
 /// An ingested trace plus non-fatal notes (truncations, defaults used).
 #[derive(Debug)]
 pub struct Ingested {
@@ -203,7 +238,7 @@ impl Section {
         let threads_per_block = (self.block.0 * self.block.1 * self.block.2).max(1);
         let blocks = (self.grid.0 * self.grid.1 * self.grid.2).max(1);
         let waves = blocks.saturating_mul(threads_per_block.div_ceil(64));
-        (waves.div_ceil(NORM_CUS)).clamp(1, WAVES_PER_CU_CAP)
+        normalize_waves(waves)
     }
 
     fn push(&mut self, op: Op) {
@@ -276,12 +311,7 @@ impl Section {
             }
         }
         // memory divergence: distinct 64-byte lines among listed lanes
-        let fan = {
-            let mut lines: Vec<u64> = addrs.iter().map(|a| a >> 6).collect();
-            lines.sort_unstable();
-            lines.dedup();
-            lines.len().clamp(1, 16) as u8
-        };
+        let fan = fan_from_addrs(&addrs);
 
         let base = opcode.split('.').next().unwrap_or(opcode);
         let op = classify(base, self.pattern(), fan);
@@ -298,19 +328,7 @@ impl Section {
         };
         let working_set = span.clamp(1 << 20, 256 << 20) as u32;
         let region = (self.kernel_id.unwrap_or(0) % 250) as u8;
-        if self.stride_guess >= 2048 {
-            // effectively uncorrelated accesses
-            Pattern::Random {
-                region,
-                working_set,
-            }
-        } else {
-            Pattern::Strided {
-                region,
-                stride: self.stride_guess.max(4),
-                working_set,
-            }
-        }
+        classify_pattern(region, self.stride_guess, working_set)
     }
 
     fn finish(mut self, fallback_id: u32, warnings: &mut Vec<String>) -> Result<TraceKernel, String> {
@@ -510,6 +528,31 @@ warp = 0
         assert_eq!(ing.trace.kernels[0].name, "alpha");
         assert_eq!(ing.trace.kernels[1].name, "beta");
         assert_eq!(ing.trace.rounds, 1);
+    }
+
+    #[test]
+    fn shared_classifier_helpers() {
+        assert_eq!(
+            classify_pattern(3, 64, 1 << 20),
+            Pattern::Strided { region: 3, stride: 64, working_set: 1 << 20 }
+        );
+        assert_eq!(
+            classify_pattern(3, 0, 1 << 20),
+            Pattern::Strided { region: 3, stride: 4, working_set: 1 << 20 }
+        );
+        assert_eq!(
+            classify_pattern(7, 2048, 1 << 20),
+            Pattern::Random { region: 7, working_set: 1 << 20 }
+        );
+        assert_eq!(fan_from_addrs(&[]), 1);
+        assert_eq!(fan_from_addrs(&[0, 4, 8, 60]), 1); // one 64B line
+        assert_eq!(fan_from_addrs(&[0, 64, 128]), 3);
+        let scattered: Vec<u64> = (0..64).map(|i| i * 4096).collect();
+        assert_eq!(fan_from_addrs(&scattered), 16); // clamped
+        assert_eq!(normalize_waves(0), 1);
+        assert_eq!(normalize_waves(64), 1);
+        assert_eq!(normalize_waves(65), 2);
+        assert_eq!(normalize_waves(1 << 40), WAVES_PER_CU_CAP);
     }
 
     #[test]

@@ -9,25 +9,31 @@
 //! * [`format`] — the versioned trace model with a hand-authorable text
 //!   encoding and a length-prefixed binary encoding, structural
 //!   validation, and content hashing;
-//! * [`capture`] — record any workload's executed stream (from a spec or
-//!   from a live simulator) to a trace;
+//! * [`capture`] — record any workload's executed stream (from a spec,
+//!   from a live simulator, or from an instrumented `workloads::exec`
+//!   kernel execution) to a trace;
 //! * [`ingest`] — lower external accel-sim-style kernel traces onto the
 //!   [`crate::sim::isa`] micro-ISA;
 //! * [`synth`] — seeded generator fuzzing randomized trace workloads for
-//!   scenario diversity.
+//!   scenario diversity;
+//! * [`diff`] — structural comparison of two traces (opcode mix, stride
+//!   histograms, lengths) with a greppable `divergent: N` summary.
 //!
 //! Traces plug into everything that accepts a workload name via
 //! [`crate::workloads::WorkloadSource`] (`trace:<path>` /
-//! `synth:<seed>` specs), and the sweep engine fingerprints the trace
-//! *content hash* in its [`crate::exec::key::RunKey`]s, so cached
-//! results can never be served for an edited trace file.
+//! `synth:<seed>` / `exec:<kernel>:<size>` specs), and the sweep engine
+//! fingerprints the trace *content hash* in its
+//! [`crate::exec::key::RunKey`]s, so cached results can never be served
+//! for an edited trace file.
 
 pub mod capture;
+pub mod diff;
 pub mod format;
 pub mod ingest;
 pub mod synth;
 
-pub use capture::{capture_gpu, capture_named, capture_workload};
+pub use capture::{capture_gpu, capture_named, capture_recorded, capture_workload};
+pub use diff::diff;
 pub use format::{Trace, TraceKernel};
 pub use ingest::parse_accelsim;
 pub use synth::synthesize;

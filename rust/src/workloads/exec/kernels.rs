@@ -1,0 +1,403 @@
+//! The executable-kernel library: each builder runs its algorithm over
+//! instrumented device arrays and returns the recorded kernel streams.
+//!
+//! Conventions: all sizes are powers of two (so grids divide exactly
+//! and torus wrap-around is a mask), one representative wavefront
+//! executes per kernel, and waves own *contiguous* chunk ranges so
+//! iteration-to-iteration strides model streaming access rather than
+//! the giant grid-stride hops a round-robin split would record.  Array
+//! fills are seeded by [`crate::util::mix`], so contents — and for
+//! `spmv-ella`, the gather addresses derived from them — are
+//! deterministic.
+
+use super::{record_kernel, Device, RecordedKernel};
+use crate::util::mix;
+
+/// Deterministic fill value for element `i` of a seeded array.
+fn f32_at(seed: u64, i: usize) -> f32 {
+    ((mix(seed ^ (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)) >> 40) as f32)
+        / (1u64 << 24) as f32
+}
+
+/// Split `chunks` contiguous 64-element chunks between waves: each wave
+/// owns `trips` consecutive chunks.  Returns `(waves, trips)`; both
+/// divide exactly because everything is a power of two, and `trips` is
+/// kept >= 8 where possible so the stride estimator sees several
+/// iteration deltas per site.
+fn grid_1d(chunks: u64, max_waves: u64) -> (u64, u64) {
+    let waves = (chunks / 8).clamp(1, max_waves);
+    (waves, chunks / waves)
+}
+
+/// `c[i] = a[i] + b[i]` over `n` elements: the canonical streaming,
+/// memory-bound kernel (2 coalesced loads + 1 store per element).
+pub(super) fn vectoradd(n: u32) -> Vec<RecordedKernel> {
+    let n = n as u64;
+    let mut dev = Device::new();
+    let a = dev.alloc("a", n as usize, |i| f32_at(1, i));
+    let b = dev.alloc("b", n as usize, |i| f32_at(2, i));
+    let mut c = dev.alloc("c", n as usize, |_| 0.0f32);
+    let (waves, trips) = grid_1d(n / 64, 4096);
+    let k = record_kernel("vectoradd", waves, |ctx| {
+        // wave 0 owns chunks 0..trips
+        ctx.for_n(trips, |ctx, t| {
+            let e0 = t * 64;
+            ctx.salu(2);
+            let av = ctx.load("a", &a, |l| e0 + l as u64);
+            let bv = ctx.load("b", &b, |l| e0 + l as u64);
+            ctx.fp(1);
+            ctx.store("c", &mut c, |l| e0 + l as u64, |l| {
+                av[l as usize] + bv[l as usize]
+            });
+        });
+    });
+    vec![k]
+}
+
+/// Dense `n*n` matmul: each wave computes one 8x8 output tile, lane `l`
+/// owns element `(l/8, l%8)`; the k-loop walks A rows (unit stride) and
+/// B columns (stride `4n`) — the classic compute-bound mix.
+pub(super) fn matmul(n: u32) -> Vec<RecordedKernel> {
+    let n = n as u64;
+    let mut dev = Device::new();
+    let a = dev.alloc("a", (n * n) as usize, |i| f32_at(3, i));
+    let b = dev.alloc("b", (n * n) as usize, |i| f32_at(4, i));
+    let mut c = dev.alloc("c", (n * n) as usize, |_| 0.0f32);
+    let waves = (n / 8) * (n / 8);
+    let k = record_kernel("matmul", waves, |ctx| {
+        // wave 0 computes the tile at (0, 0)
+        let mut acc = [0.0f32; 64];
+        ctx.for_n(n / 8, |ctx, kb| {
+            for kk in 0..8u64 {
+                let kidx = kb * 8 + kk;
+                let av = ctx.load("a", &a, |l| (l as u64 / 8) * n + kidx);
+                let bv = ctx.load("b", &b, |l| kidx * n + (l as u64 % 8));
+                ctx.fp(1);
+                for l in 0..64 {
+                    acc[l] += av[l] * bv[l];
+                }
+            }
+            ctx.salu(1);
+        });
+        ctx.store("c", &mut c, |l| (l as u64 / 8) * n + (l as u64 % 8), |l| {
+            acc[l as usize]
+        });
+    });
+    vec![k]
+}
+
+/// Naive `n*n` transpose: coalesced row reads, column writes scattered
+/// across `n` cache lines (fan 16) — a bandwidth/divergence stressor.
+pub(super) fn transpose(n: u32) -> Vec<RecordedKernel> {
+    let n = n as u64;
+    let mut dev = Device::new();
+    let a = dev.alloc("a", (n * n) as usize, |i| f32_at(5, i));
+    let mut b = dev.alloc("b", (n * n) as usize, |_| 0.0f32);
+    let (waves, trips) = grid_1d(n * n / 64, 2048);
+    let k = record_kernel("transpose", waves, |ctx| {
+        ctx.for_n(trips, |ctx, t| {
+            let e0 = t * 64;
+            ctx.salu(2);
+            let av = ctx.load("a", &a, |l| e0 + l as u64);
+            ctx.store(
+                "b",
+                &mut b,
+                |l| {
+                    let e = e0 + l as u64;
+                    (e % n) * n + e / n
+                },
+                |l| av[l as usize],
+            );
+        });
+    });
+    vec![k]
+}
+
+/// Two-kernel sum reduction: `reduce_partial` accumulates per-lane
+/// partials over the input, `reduce_final` folds the partial array and
+/// the 64 lanes down with a barrier-separated tree — a multi-kernel
+/// workload with a wide then narrow launch.
+pub(super) fn reduce(n: u32) -> Vec<RecordedKernel> {
+    let n = n as u64;
+    let mut dev = Device::new();
+    let a = dev.alloc("a", n as usize, |i| f32_at(6, i));
+    let (waves, trips) = grid_1d(n / 64, 1024);
+    let mut partial = dev.alloc("partial", (waves * 64) as usize, |_| 0.0f32);
+    let mut out = dev.alloc("out", 64, |_| 0.0f32);
+    let k0 = record_kernel("reduce_partial", waves, |ctx| {
+        let mut acc = [0.0f32; 64];
+        ctx.for_n(trips, |ctx, t| {
+            let e0 = t * 64;
+            let av = ctx.load("a", &a, |l| e0 + l as u64);
+            ctx.fp(1);
+            for l in 0..64 {
+                acc[l] += av[l];
+            }
+        });
+        ctx.salu(1);
+        ctx.store("partial", &mut partial, |l| l as u64, |l| acc[l as usize]);
+    });
+    let k1 = record_kernel("reduce_final", 1, |ctx| {
+        let mut acc = [0.0f32; 64];
+        ctx.for_n(waves, |ctx, w| {
+            let av = ctx.load("partial", &partial, |l| w * 64 + l as u64);
+            ctx.fp(1);
+            for l in 0..64 {
+                acc[l] += av[l];
+            }
+        });
+        let mut s = 32;
+        while s >= 1 {
+            ctx.barrier();
+            ctx.fp(1);
+            for l in 0..s {
+                acc[l] += acc[l + s];
+            }
+            s /= 2;
+        }
+        ctx.store("out", &mut out, |l| l as u64, |l| acc[l as usize]);
+    });
+    vec![k0, k1]
+}
+
+/// 5-point stencil on an `n*n` torus (wrap-around is a pow2 mask):
+/// five spatially-correlated loads per point, moderate arithmetic.
+pub(super) fn stencil2d(n: u32) -> Vec<RecordedKernel> {
+    let n = n as u64;
+    let m = n - 1;
+    let mut dev = Device::new();
+    let a = dev.alloc("a", (n * n) as usize, |i| f32_at(7, i));
+    let mut b = dev.alloc("b", (n * n) as usize, |_| 0.0f32);
+    let (waves, trips) = grid_1d(n * n / 64, 2048);
+    let k = record_kernel("stencil2d", waves, |ctx| {
+        ctx.for_n(trips, |ctx, t| {
+            let e0 = t * 64;
+            ctx.salu(4);
+            let cv = ctx.load("center", &a, |l| e0 + l as u64);
+            let wv = ctx.load("west", &a, |l| {
+                let e = e0 + l as u64;
+                (e / n) * n + ((e % n + m) & m)
+            });
+            let ev = ctx.load("east", &a, |l| {
+                let e = e0 + l as u64;
+                (e / n) * n + ((e % n + 1) & m)
+            });
+            let nv = ctx.load("north", &a, |l| {
+                let e = e0 + l as u64;
+                ((e / n + m) & m) * n + e % n
+            });
+            let sv = ctx.load("south", &a, |l| {
+                let e = e0 + l as u64;
+                ((e / n + 1) & m) * n + e % n
+            });
+            ctx.fp(2);
+            ctx.store("b", &mut b, |l| e0 + l as u64, |l| {
+                let i = l as usize;
+                0.25 * (wv[i] + ev[i] + nv[i] + sv[i]) - cv[i]
+            });
+        });
+    });
+    vec![k]
+}
+
+/// Nonzeros per row in the ELLPACK layout.
+const ELL_K: u64 = 8;
+
+/// ELLPACK SpMV over `n` rows, diagonal-at-a-time: the outer loop walks
+/// the ELL_K nonzero slots, the inner loop streams this wave's row
+/// chunks, accumulating into `y` (read-modify-write).  `cols`, `vals`,
+/// and `y` stay coalesced and streaming; `x[cols[..]]` is a seeded
+/// random gather — the irregular, latency-bound end of the library.
+pub(super) fn spmv_ella(n: u32) -> Vec<RecordedKernel> {
+    let n = n as u64;
+    let mut dev = Device::new();
+    let cols = dev.alloc("cols", (n * ELL_K) as usize, |i| (mix(0xe11 ^ i as u64) % n) as u32);
+    let vals = dev.alloc("vals", (n * ELL_K) as usize, |i| f32_at(8, i));
+    let x = dev.alloc("x", n as usize, |i| f32_at(9, i));
+    let mut y = dev.alloc("y", n as usize, |_| 0.0f32);
+    let (waves, trips) = grid_1d(n / 64, 1024);
+    let k = record_kernel("spmv_ella", waves, |ctx| {
+        ctx.for_n(ELL_K, |ctx, kk| {
+            ctx.for_n(trips, |ctx, t| {
+                let row0 = t * 64;
+                ctx.salu(2);
+                let cv = ctx.load("cols", &cols, |l| kk * n + row0 + l as u64);
+                let vv = ctx.load("vals", &vals, |l| kk * n + row0 + l as u64);
+                let xv = ctx.load("x", &x, |l| cv[l as usize] as u64);
+                let yv = ctx.load("y_in", &y, |l| row0 + l as u64);
+                ctx.fp(1);
+                ctx.store("y_out", &mut y, |l| row0 + l as u64, |l| {
+                    let i = l as usize;
+                    yv[i] + vv[i] * xv[i]
+                });
+            });
+        });
+    });
+    vec![k]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{kernels, lower};
+    use super::*;
+    use crate::sim::isa::{Op, Pattern};
+
+    #[test]
+    fn every_library_kernel_lowers_to_a_valid_trace_at_min_and_default() {
+        for k in kernels() {
+            for size in [k.min_size, k.default_size] {
+                let t = lower(k.name, size)
+                    .unwrap_or_else(|e| panic!("{}:{size}: {e}", k.name));
+                t.validate()
+                    .unwrap_or_else(|e| panic!("{}:{size} invalid: {e}", k.name));
+                assert_eq!(t.source, format!("exec:{}:{size}", k.name));
+                assert_eq!(t.rounds, 1);
+                for tk in &t.kernels {
+                    let st = tk.stats();
+                    assert!(st.loads + st.stores > 0, "{}: no memory ops", k.name);
+                    assert!(st.valu > 0, "{}: no arithmetic", k.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vectoradd_computes_and_streams() {
+        let mut dev = Device::new();
+        let n = 4096u64;
+        let a = dev.alloc("a", n as usize, |i| f32_at(1, i));
+        let b = dev.alloc("b", n as usize, |i| f32_at(2, i));
+        let mut c = dev.alloc("c", n as usize, |_| 0.0f32);
+        let (_, trips) = grid_1d(n / 64, 4096);
+        record_kernel("vectoradd", 1, |ctx| {
+            ctx.for_n(trips, |ctx, t| {
+                let e0 = t * 64;
+                let av = ctx.load("a", &a, |l| e0 + l as u64);
+                let bv = ctx.load("b", &b, |l| e0 + l as u64);
+                ctx.store("c", &mut c, |l| e0 + l as u64, |l| {
+                    av[l as usize] + bv[l as usize]
+                });
+            });
+        });
+        // the representative wave computed real sums over its chunks
+        for e in 0..(trips * 64) as usize {
+            assert_eq!(c.host()[e], a.host()[e] + b.host()[e]);
+        }
+        // and the lowered trace models streaming loads
+        let t = lower("vectoradd", 4096).unwrap();
+        let strided_loads = t.kernels[0]
+            .records
+            .iter()
+            .filter(|op| {
+                matches!(op, Op::Load { pattern: Pattern::Strided { stride, .. }, .. } if *stride < 2048)
+            })
+            .count();
+        assert_eq!(strided_loads, 2, "a and b loads should classify strided");
+    }
+
+    #[test]
+    fn matmul_tile_matches_reference() {
+        let n = 64u32;
+        let nn = n as u64;
+        let mut dev = Device::new();
+        let a = dev.alloc("a", (nn * nn) as usize, |i| f32_at(3, i));
+        let b = dev.alloc("b", (nn * nn) as usize, |i| f32_at(4, i));
+        let mut c = dev.alloc("c", (nn * nn) as usize, |_| 0.0f32);
+        record_kernel("matmul", 1, |ctx| {
+            let mut acc = [0.0f32; 64];
+            ctx.for_n(nn / 8, |ctx, kb| {
+                for kk in 0..8u64 {
+                    let kidx = kb * 8 + kk;
+                    let av = ctx.load("a", &a, |l| (l as u64 / 8) * nn + kidx);
+                    let bv = ctx.load("b", &b, |l| kidx * nn + (l as u64 % 8));
+                    for l in 0..64 {
+                        acc[l] += av[l] * bv[l];
+                    }
+                }
+            });
+            ctx.store("c", &mut c, |l| (l as u64 / 8) * nn + (l as u64 % 8), |l| {
+                acc[l as usize]
+            });
+        });
+        for r in 0..8usize {
+            for col in 0..8usize {
+                let mut want = 0.0f32;
+                for k in 0..n as usize {
+                    want += a.host()[r * n as usize + k] * b.host()[k * n as usize + col];
+                }
+                let got = c.host()[r * n as usize + col];
+                assert!(
+                    (got - want).abs() <= want.abs() * 1e-4 + 1e-5,
+                    "c[{r}][{col}] = {got}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spmv_gather_classifies_random_and_cols_stay_coalesced() {
+        let t = lower("spmv-ella", 16384).unwrap();
+        let loads: Vec<&Op> = t.kernels[0]
+            .records
+            .iter()
+            .filter(|op| matches!(op, Op::Load { .. }))
+            .collect();
+        assert_eq!(loads.len(), 4); // cols, vals, x gather, y read
+        let randoms = loads
+            .iter()
+            .filter(|op| matches!(op, Op::Load { pattern: Pattern::Random { .. }, .. }))
+            .count();
+        assert_eq!(randoms, 1, "exactly the x gather should classify random");
+    }
+
+    #[test]
+    fn transpose_write_fans_wide() {
+        let t = lower("transpose", 512).unwrap();
+        let store_fan = t.kernels[0]
+            .records
+            .iter()
+            .find_map(|op| match op {
+                Op::Store { fan, .. } => Some(*fan),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(store_fan, 16, "column writes should hit the fan cap");
+    }
+
+    #[test]
+    fn reduce_is_a_two_kernel_workload() {
+        let t = lower("reduce", 65536).unwrap();
+        assert_eq!(t.kernels.len(), 2);
+        assert_eq!(t.kernels[0].name, "reduce_partial");
+        assert_eq!(t.kernels[1].name, "reduce_final");
+        assert_eq!(t.kernels[1].waves_per_cu, 1);
+        let barriers = t.kernels[1].stats().barriers;
+        assert_eq!(barriers, 6, "log2(64) tree steps");
+    }
+
+    #[test]
+    fn nested_loops_stay_within_depth_and_pair_up() {
+        let t = lower("spmv-ella", 4096).unwrap();
+        let k = &t.kernels[0];
+        let begins = k
+            .records
+            .iter()
+            .filter(|op| matches!(op, Op::LoopBegin { .. }))
+            .count();
+        let ends = k
+            .records
+            .iter()
+            .filter(|op| matches!(op, Op::LoopEnd { .. }))
+            .count();
+        assert_eq!(begins, 2);
+        assert_eq!(ends, 2);
+        assert!(k
+            .records
+            .iter()
+            .any(|op| matches!(op, Op::LoopBegin { depth: 0, trips: 8, .. })));
+        assert!(k
+            .records
+            .iter()
+            .any(|op| matches!(op, Op::LoopBegin { depth: 1, .. })));
+    }
+}

@@ -1,0 +1,490 @@
+//! Executable kernels as first-class workloads.
+//!
+//! Kernels here are plain Rust functions over *instrumented device
+//! arrays*: [`Device::alloc`] hands out [`DeviceArray`]s with a region
+//! id and a virtual base address, and every indexed warp access through
+//! [`KernelCtx::load`] / [`KernelCtx::store`] both moves real data and
+//! records the access (addresses of all 64 lanes, static site identity,
+//! line fan-out).  The harness tracks loop trips ([`KernelCtx::for_n`]),
+//! arithmetic ops, and barriers, then lowers the recorded stream
+//! through [`crate::trace::capture::capture_recorded`] into the
+//! versioned trace format — so `exec:matmul:512` behaves exactly like a
+//! `trace:` workload everywhere (simulate, sweep plans, serve), with
+//! RunKeys fingerprinting the lowered trace's content hash.
+//!
+//! Recording model: one representative wavefront executes the kernel.
+//! Each [`KernelCtx::for_n`] loop *records* its first iteration and
+//! *executes* the rest with event emission suppressed; suppressed
+//! iterations still feed first-lane addresses into the per-site stride
+//! estimator, so classification (via the shared ingest classifier,
+//! [`crate::trace::ingest::classify_pattern`]) reflects the whole
+//! access stream, not the first trip.  Addresses are integer-derived,
+//! so lowering is bit-deterministic: the same `exec:<kernel>:<size>`
+//! spec always produces a byte-identical trace and content hash.
+
+use std::collections::HashMap;
+
+use crate::sim::isa::MAX_LOOP_DEPTH;
+use crate::trace::capture::{capture_recorded, MemSite, RecEvent, RecordedKernel};
+use crate::trace::format::Trace;
+use crate::trace::ingest::fan_from_addrs;
+
+mod kernels;
+
+/// Lanes per wavefront (mirrors the simulator's warp width).
+pub const LANES: usize = 64;
+
+/// Virtual-address allocator for a workload's device arrays.  Shared
+/// across the kernels of one workload so arrays passed from kernel to
+/// kernel keep their region and base.
+pub struct Device {
+    next_region: u8,
+    next_base: u64,
+}
+
+impl Device {
+    pub fn new() -> Device {
+        Device { next_region: 0, next_base: 0x1000_0000 }
+    }
+
+    /// Allocate a device array, filling element `i` with `fill(i)`.
+    pub fn alloc<T: Copy>(
+        &mut self,
+        name: &'static str,
+        len: usize,
+        mut fill: impl FnMut(usize) -> T,
+    ) -> DeviceArray<T> {
+        assert!(len > 0, "device array '{name}' must be non-empty");
+        assert!(self.next_region < 250, "too many device arrays");
+        let region = self.next_region;
+        self.next_region += 1;
+        let base = self.next_base;
+        let bytes = (len * std::mem::size_of::<T>()) as u64;
+        self.next_base = (base + bytes + 4095) & !4095;
+        DeviceArray { name, region, base, data: (0..len).map(&mut fill).collect() }
+    }
+}
+
+impl Default for Device {
+    fn default() -> Self {
+        Device::new()
+    }
+}
+
+/// A device allocation: real host data plus the (region, base) identity
+/// the recorder uses to turn element indices into byte addresses.
+pub struct DeviceArray<T> {
+    name: &'static str,
+    region: u8,
+    base: u64,
+    data: Vec<T>,
+}
+
+impl<T: Copy> DeviceArray<T> {
+    /// Host view of the array contents (for correctness checks).
+    pub fn host(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    fn working_set(&self) -> u32 {
+        ((self.data.len() * std::mem::size_of::<T>()) as u64).clamp(64, 256 << 20) as u32
+    }
+}
+
+/// Per-site address observations, pooled across every execution of the
+/// site (recorded and suppressed loop iterations alike).
+struct SiteObs {
+    region: u8,
+    working_set: u32,
+    last_first_lane: Option<u64>,
+    /// First-lane address deltas between consecutive executions.  The
+    /// final stride is their *median*: robust against the one large
+    /// jump per enclosing-loop trip that a mean would smear in.
+    deltas: Vec<u64>,
+    /// Within-warp fallback estimate from the first observation (used
+    /// when a site executes only once).
+    lane_delta: u32,
+}
+
+/// Recorder for one kernel of one workload: owns the event stream, the
+/// site table, and the loop bookkeeping.
+pub struct KernelCtx {
+    total_waves: u64,
+    events: Vec<RecEvent>,
+    sites: Vec<SiteObs>,
+    site_ids: HashMap<(u8, &'static str), u32>,
+    /// > 0 while any enclosing loop is past its first iteration:
+    /// events are suppressed but addresses still observed.
+    suppressed: u32,
+    depth: usize,
+}
+
+impl KernelCtx {
+    fn new(total_waves: u64) -> KernelCtx {
+        KernelCtx {
+            total_waves: total_waves.max(1),
+            events: Vec::new(),
+            sites: Vec::new(),
+            site_ids: HashMap::new(),
+            suppressed: 0,
+            depth: 0,
+        }
+    }
+
+    fn recording(&self) -> bool {
+        self.suppressed == 0
+    }
+
+    /// Warp-wide load: lane `l` reads element `idx(l)`.  `tag` names
+    /// the static access site (one tag per source-level access).
+    pub fn load<T: Copy>(
+        &mut self,
+        tag: &'static str,
+        a: &DeviceArray<T>,
+        mut idx: impl FnMut(u32) -> u64,
+    ) -> [T; LANES] {
+        let idxs: [u64; LANES] = std::array::from_fn(|l| idx(l as u32));
+        self.observe(tag, a.region, a.base, a.working_set(), std::mem::size_of::<T>(), false, &idxs);
+        std::array::from_fn(|l| {
+            let i = idxs[l] as usize;
+            assert!(i < a.data.len(), "{}[{i}] read out of bounds (len {})", a.name, a.data.len());
+            a.data[i]
+        })
+    }
+
+    /// Warp-wide store: lane `l` writes `val(l)` to element `idx(l)`.
+    pub fn store<T: Copy>(
+        &mut self,
+        tag: &'static str,
+        a: &mut DeviceArray<T>,
+        mut idx: impl FnMut(u32) -> u64,
+        mut val: impl FnMut(u32) -> T,
+    ) {
+        let idxs: [u64; LANES] = std::array::from_fn(|l| idx(l as u32));
+        self.observe(tag, a.region, a.base, a.working_set(), std::mem::size_of::<T>(), true, &idxs);
+        for (l, &i) in idxs.iter().enumerate() {
+            let i = i as usize;
+            assert!(i < a.data.len(), "{}[{i}] write out of bounds (len {})", a.name, a.data.len());
+            a.data[i] = val(l as u32);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn observe(
+        &mut self,
+        tag: &'static str,
+        region: u8,
+        base: u64,
+        working_set: u32,
+        elem_size: usize,
+        store: bool,
+        idxs: &[u64; LANES],
+    ) {
+        let addrs: Vec<u64> = idxs.iter().map(|&i| base + i * elem_size as u64).collect();
+        let key = (region, tag);
+        let id = match self.site_ids.get(&key) {
+            Some(&i) => i,
+            None => {
+                let i = self.sites.len() as u32;
+                self.sites.push(SiteObs {
+                    region,
+                    working_set,
+                    last_first_lane: None,
+                    deltas: Vec::new(),
+                    lane_delta: 0,
+                });
+                self.site_ids.insert(key, i);
+                i
+            }
+        };
+        let s = &mut self.sites[id as usize];
+        let first = addrs[0];
+        if let Some(prev) = s.last_first_lane {
+            let d = first.abs_diff(prev);
+            if d > 0 {
+                s.deltas.push(d);
+            }
+        }
+        s.last_first_lane = Some(first);
+        if s.lane_delta == 0 {
+            let (mn, mx) = addrs.iter().fold((u64::MAX, 0u64), |(a, b), &x| (a.min(x), b.max(x)));
+            if mx > mn {
+                s.lane_delta = ((mx - mn) / (LANES as u64 - 1)).clamp(1, 1 << 20) as u32;
+            }
+        }
+        if self.recording() {
+            let fan = fan_from_addrs(&addrs);
+            self.events.push(RecEvent::Mem { store, site: id, fan });
+        }
+    }
+
+    /// `count` vector-ALU ops of `cycles` issue cost each.
+    pub fn valu(&mut self, cycles: u8, count: u32) {
+        if self.recording() {
+            for _ in 0..count {
+                self.events.push(RecEvent::Alu { vector: true, cycles });
+            }
+        }
+    }
+
+    /// Floating-point vector ops (4-cycle, the ingest FFMA cost).
+    pub fn fp(&mut self, count: u32) {
+        self.valu(4, count);
+    }
+
+    /// Integer/move vector ops (1-cycle).
+    pub fn int(&mut self, count: u32) {
+        self.valu(1, count);
+    }
+
+    /// `count` scalar ops (index arithmetic, control flow).
+    pub fn salu(&mut self, count: u32) {
+        if self.recording() {
+            for _ in 0..count {
+                self.events.push(RecEvent::Alu { vector: false, cycles: 1 });
+            }
+        }
+    }
+
+    pub fn barrier(&mut self) {
+        if self.recording() {
+            self.events.push(RecEvent::Barrier);
+        }
+    }
+
+    /// A counted loop: records the first iteration (with the executed
+    /// trip count), executes all of them.
+    pub fn for_n(&mut self, trips: u64, mut body: impl FnMut(&mut KernelCtx, u64)) {
+        let trips = trips.max(1);
+        assert!(trips <= u16::MAX as u64, "loop trip count {trips} exceeds u16::MAX");
+        assert!(self.depth < MAX_LOOP_DEPTH, "loop nesting exceeds depth {MAX_LOOP_DEPTH}");
+        if self.recording() {
+            self.events.push(RecEvent::LoopBegin { trips: trips as u16 });
+        }
+        self.depth += 1;
+        for i in 0..trips {
+            if i == 1 {
+                self.suppressed += 1;
+            }
+            body(self, i);
+        }
+        if trips > 1 {
+            self.suppressed -= 1;
+        }
+        self.depth -= 1;
+        if self.recording() {
+            self.events.push(RecEvent::LoopEnd);
+        }
+    }
+
+    fn finish(self, name: String) -> RecordedKernel {
+        let sites = self
+            .sites
+            .into_iter()
+            .map(|mut s| {
+                let stride = if !s.deltas.is_empty() {
+                    s.deltas.sort_unstable();
+                    s.deltas[s.deltas.len() / 2].clamp(4, 4096) as u32
+                } else if s.lane_delta > 0 {
+                    u64::from(s.lane_delta).clamp(4, 4096) as u32
+                } else {
+                    64
+                };
+                MemSite { region: s.region, stride, working_set: s.working_set }
+            })
+            .collect();
+        RecordedKernel { name, total_waves: self.total_waves, events: self.events, sites }
+    }
+}
+
+/// Run `f` under a fresh recorder and return the recorded kernel.
+pub fn record_kernel(
+    name: impl Into<String>,
+    total_waves: u64,
+    f: impl FnOnce(&mut KernelCtx),
+) -> RecordedKernel {
+    let mut ctx = KernelCtx::new(total_waves);
+    f(&mut ctx);
+    ctx.finish(name.into())
+}
+
+/// One entry in the executable-kernel library.
+pub struct ExecKernel {
+    pub name: &'static str,
+    pub about: &'static str,
+    /// What the `<size>` parameter means for this kernel.
+    pub size_doc: &'static str,
+    pub default_size: u32,
+    /// Valid sizes are powers of two in `min_size..=max_size`.
+    pub min_size: u32,
+    pub max_size: u32,
+    build: fn(u32) -> Vec<RecordedKernel>,
+}
+
+static KERNELS: [ExecKernel; 6] = [
+    ExecKernel {
+        name: "vectoradd",
+        about: "streaming c[i] = a[i] + b[i]",
+        size_doc: "element count",
+        default_size: 65536,
+        min_size: 4096,
+        max_size: 1 << 22,
+        build: kernels::vectoradd,
+    },
+    ExecKernel {
+        name: "matmul",
+        about: "dense n*n matmul, 8x8 output tile per wave",
+        size_doc: "matrix dimension n",
+        default_size: 256,
+        min_size: 64,
+        max_size: 1024,
+        build: kernels::matmul,
+    },
+    ExecKernel {
+        name: "transpose",
+        about: "naive n*n transpose (coalesced reads, scattered writes)",
+        size_doc: "matrix dimension n",
+        default_size: 512,
+        min_size: 128,
+        max_size: 2048,
+        build: kernels::transpose,
+    },
+    ExecKernel {
+        name: "reduce",
+        about: "two-kernel sum reduction (partials, then a tree fold)",
+        size_doc: "element count",
+        default_size: 65536,
+        min_size: 4096,
+        max_size: 1 << 22,
+        build: kernels::reduce,
+    },
+    ExecKernel {
+        name: "stencil2d",
+        about: "5-point stencil on an n*n torus",
+        size_doc: "grid dimension n",
+        default_size: 512,
+        min_size: 128,
+        max_size: 2048,
+        build: kernels::stencil2d,
+    },
+    ExecKernel {
+        name: "spmv-ella",
+        about: "ELLPACK SpMV, 8 nonzeros/row, random x gather",
+        size_doc: "row count",
+        default_size: 16384,
+        min_size: 4096,
+        max_size: 1 << 20,
+        build: kernels::spmv_ella,
+    },
+];
+
+/// The executable-kernel library, in listing order.
+pub fn kernels() -> &'static [ExecKernel] {
+    &KERNELS
+}
+
+/// Look up a kernel by name.
+pub fn find(name: &str) -> Option<&'static ExecKernel> {
+    KERNELS.iter().find(|k| k.name == name)
+}
+
+/// Validate a kernel name + size pair, returning the library entry.
+pub fn validate(kernel: &str, size: u32) -> anyhow::Result<&'static ExecKernel> {
+    let k = find(kernel).ok_or_else(|| {
+        let names: Vec<&str> = KERNELS.iter().map(|k| k.name).collect();
+        anyhow::anyhow!(
+            "unknown exec kernel '{kernel}' (available: {}; see `pcstall workloads list`)",
+            names.join(", ")
+        )
+    })?;
+    anyhow::ensure!(
+        size.is_power_of_two() && (k.min_size..=k.max_size).contains(&size),
+        "exec:{kernel}: size {size} invalid ({}; power of two in [{}, {}])",
+        k.size_doc,
+        k.min_size,
+        k.max_size
+    );
+    Ok(k)
+}
+
+/// Execute a library kernel at `size` under instrumentation and lower
+/// the recording to a validated trace.
+pub fn lower(kernel: &str, size: u32) -> anyhow::Result<Trace> {
+    let k = validate(kernel, size)?;
+    let recorded = (k.build)(size);
+    capture_recorded(&format!("{}{}", k.name, size), &format!("exec:{}:{}", k.name, size), &recorded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn library_sizes_are_well_formed() {
+        assert!(KERNELS.len() >= 5);
+        for k in kernels() {
+            assert!(k.min_size.is_power_of_two(), "{}", k.name);
+            assert!(k.max_size.is_power_of_two(), "{}", k.name);
+            assert!(
+                k.default_size.is_power_of_two()
+                    && (k.min_size..=k.max_size).contains(&k.default_size),
+                "{}: bad default",
+                k.name
+            );
+            validate(k.name, k.default_size).unwrap();
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_names_and_sizes() {
+        assert!(validate("nope", 256).is_err());
+        assert!(validate("matmul", 255).is_err()); // not a power of two
+        assert!(validate("matmul", 32).is_err()); // below min
+        assert!(validate("matmul", 2048).is_err()); // above max
+        assert!(validate("matmul", 256).is_ok());
+    }
+
+    #[test]
+    fn recorder_suppresses_after_first_iteration_but_observes_strides() {
+        let mut dev = Device::new();
+        let a = dev.alloc("a", 64 * 8, |i| i as u32);
+        let rec = record_kernel("k", 64, |ctx| {
+            ctx.for_n(8, |ctx, t| {
+                ctx.load("a", &a, |l| t * 64 + l as u64);
+                ctx.fp(1);
+            });
+        });
+        // one load + one fp recorded, inside one loop marker pair
+        let mems = rec
+            .events
+            .iter()
+            .filter(|e| matches!(e, RecEvent::Mem { .. }))
+            .count();
+        assert_eq!(mems, 1);
+        assert_eq!(rec.events.len(), 4); // LoopBegin, Mem, Alu, LoopEnd
+        // 8 executions, first-lane deltas of 256 bytes each
+        assert_eq!(rec.sites.len(), 1);
+        assert_eq!(rec.sites[0].stride, 256);
+    }
+
+    #[test]
+    fn device_arrays_get_distinct_regions_and_aligned_bases() {
+        let mut dev = Device::new();
+        let a = dev.alloc("a", 100, |_| 0u32);
+        let b = dev.alloc("b", 100, |_| 0.0f32);
+        assert_ne!(a.region, b.region);
+        assert_ne!(a.base, b.base);
+        assert_eq!(a.base % 4096, 0);
+        assert_eq!(b.base % 4096, 0);
+        assert_eq!(a.len(), 100);
+        assert!(!a.is_empty());
+    }
+}

@@ -9,6 +9,7 @@
 //! thrashing, …).  DESIGN.md §2.2 documents the substitution per app.
 
 pub mod catalog;
+pub mod exec;
 pub mod source;
 pub mod spec;
 

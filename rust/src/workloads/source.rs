@@ -4,7 +4,9 @@
 //!
 //! * a catalog name (`comd`, `dgemm`, …) — the Table-II generators;
 //! * `trace:<path>` — a recorded/hand-authored/ingested trace file;
-//! * `synth:<seed>` — a synthesized trace (see [`crate::trace::synth`]).
+//! * `synth:<seed>` — a synthesized trace (see [`crate::trace::synth`]);
+//! * `exec:<kernel>[:<size>]` — an executable kernel from the
+//!   [`crate::workloads::exec`] library, lowered to a trace on resolve.
 //!
 //! [`WorkloadSource::parse`] validates the spec, [`WorkloadSource::resolve`]
 //! loads it (reading and validating trace files), and
@@ -28,6 +30,8 @@ pub enum WorkloadSource {
     TraceFile(PathBuf),
     /// Seeded synthesized trace.
     Synth(u64),
+    /// Executable library kernel at a size parameter.
+    Exec { kernel: String, size: u32 },
 }
 
 impl WorkloadSource {
@@ -41,6 +45,35 @@ impl WorkloadSource {
                 .parse()
                 .map_err(|_| anyhow::anyhow!("'synth:' spec needs an integer seed, got '{seed}'"))?;
             Ok(WorkloadSource::Synth(seed))
+        } else if let Some(rest) = spec.strip_prefix("exec:") {
+            anyhow::ensure!(
+                !rest.is_empty(),
+                "'exec:' spec needs a kernel name (exec:<kernel>[:<size>]); \
+                 see `pcstall workloads list`"
+            );
+            let (kernel, size) = match rest.split_once(':') {
+                Some((k, s)) => {
+                    let size: u32 = s.parse().map_err(|_| {
+                        anyhow::anyhow!("'exec:{k}:' needs an integer size, got '{s}'")
+                    })?;
+                    (k, Some(size))
+                }
+                None => (rest, None),
+            };
+            // validate at parse time so bad specs fail before any run
+            let entry = crate::workloads::exec::find(kernel).ok_or_else(|| {
+                let names: Vec<&str> = crate::workloads::exec::kernels()
+                    .iter()
+                    .map(|k| k.name)
+                    .collect();
+                anyhow::anyhow!(
+                    "unknown exec kernel '{kernel}' (available: {}; see `pcstall workloads list`)",
+                    names.join(", ")
+                )
+            })?;
+            let size = size.unwrap_or(entry.default_size);
+            crate::workloads::exec::validate(kernel, size)?;
+            Ok(WorkloadSource::Exec { kernel: kernel.to_string(), size })
         } else if spec == "synth" {
             // the bare template is only meaningful inside a sweep plan,
             // where the plan-level seed axis instantiates it
@@ -48,11 +81,23 @@ impl WorkloadSource {
                 "bare 'synth' needs a seed (synth:<seed>); in a sweep plan, a plan-level \
                  seed = [..] axis supplies one per grid point"
             )
+        } else if spec == "exec" {
+            anyhow::bail!(
+                "bare 'exec' needs a kernel (exec:<kernel>[:<size>]); \
+                 see `pcstall workloads list`"
+            )
+        } else if let Some((scheme, _)) = spec.split_once(':') {
+            // a scheme-shaped spec with an unknown scheme must not fall
+            // through to catalog lookup (typos like 'exce:matmul:512')
+            anyhow::bail!(
+                "unknown workload spec scheme '{scheme}:' (valid schemes: 'trace:<path>', \
+                 'synth:<seed>', 'exec:<kernel>[:<size>]'; see `pcstall workloads list`)"
+            )
         } else {
             anyhow::ensure!(
                 crate::workloads::names().iter().any(|n| *n == spec),
-                "unknown workload '{spec}' (catalog name, 'trace:<path>', or 'synth:<seed>'; \
-                 see `pcstall list`)"
+                "unknown workload '{spec}' (catalog name, 'trace:<path>', 'synth:<seed>', or \
+                 'exec:<kernel>[:<size>]'; see `pcstall list` and `pcstall workloads list`)"
             );
             Ok(WorkloadSource::Catalog(spec.to_string()))
         }
@@ -72,6 +117,10 @@ impl WorkloadSource {
             }
             WorkloadSource::Synth(seed) => {
                 let trace = crate::trace::synth::synthesize(*seed);
+                Ok(ResolvedWorkload::from_trace(trace))
+            }
+            WorkloadSource::Exec { kernel, size } => {
+                let trace = crate::workloads::exec::lower(kernel, *size)?;
                 Ok(ResolvedWorkload::from_trace(trace))
             }
         }
@@ -153,6 +202,53 @@ mod tests {
         // must say so instead of "unknown workload"
         let err = WorkloadSource::parse("synth").unwrap_err().to_string();
         assert!(err.contains("seed = [..]"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn exec_specs_parse_validate_and_default() {
+        assert_eq!(
+            WorkloadSource::parse("exec:matmul:512").unwrap(),
+            WorkloadSource::Exec { kernel: "matmul".into(), size: 512 }
+        );
+        // omitted size falls back to the library default
+        assert_eq!(
+            WorkloadSource::parse("exec:matmul").unwrap(),
+            WorkloadSource::Exec { kernel: "matmul".into(), size: 256 }
+        );
+        // bad kernel / size / shape fail at parse time
+        assert!(WorkloadSource::parse("exec:").is_err());
+        assert!(WorkloadSource::parse("exec").is_err());
+        assert!(WorkloadSource::parse("exec:nope:512").is_err());
+        assert!(WorkloadSource::parse("exec:matmul:513").is_err());
+        assert!(WorkloadSource::parse("exec:matmul:banana").is_err());
+    }
+
+    #[test]
+    fn exec_specs_resolve_to_content_hash_ids() {
+        let a = WorkloadSource::parse("exec:vectoradd:4096").unwrap().resolve().unwrap();
+        let b = WorkloadSource::parse("exec:vectoradd:4096").unwrap().resolve().unwrap();
+        let c = WorkloadSource::parse("exec:vectoradd:8192").unwrap().resolve().unwrap();
+        let d = WorkloadSource::parse("exec:stencil2d:128").unwrap().resolve().unwrap();
+        assert_eq!(a.id, b.id, "same spec must give a stable cache id");
+        assert_ne!(a.id, c.id, "size change must change the cache id");
+        assert_ne!(a.id, d.id, "kernel change must change the cache id");
+        assert!(a.id.starts_with("trace:"));
+        assert!(a.trace().is_some());
+        let (launches, rounds) = a.lower(1.0);
+        assert!(!launches.is_empty());
+        assert_eq!(rounds, 1);
+    }
+
+    #[test]
+    fn unknown_schemes_do_not_fall_through_to_catalog_lookup() {
+        let err = WorkloadSource::parse("exce:matmul:512").unwrap_err().to_string();
+        assert!(
+            err.contains("unknown workload spec scheme 'exce:'"),
+            "typoed scheme must name itself: {err}"
+        );
+        assert!(err.contains("exec:<kernel>"), "error must list valid schemes: {err}");
+        // catalog names (no colon) still resolve through the catalog arm
+        assert!(WorkloadSource::parse("comd").is_ok());
     }
 
     #[test]

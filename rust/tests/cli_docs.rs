@@ -62,7 +62,7 @@ fn every_help_flag_is_in_the_cli_reference() {
 fn every_verb_is_in_help_and_the_cli_reference() {
     let verbs = [
         "simulate", "serve", "run", "experiment", "sweep", "trace", "cache", "obs",
-        "list", "config", "table1",
+        "list", "config", "table1", "workloads",
     ];
     let doc = read_doc("docs/cli.md");
     for v in verbs {
@@ -96,6 +96,28 @@ fn every_serve_config_key_is_documented() {
         );
         assert!(doc.contains(key), "serve key '{key}' missing from docs/cli.md");
     }
+}
+
+#[test]
+fn every_exec_kernel_is_documented() {
+    // the executable-kernel library is CLI surface: `exec:<kernel>` specs
+    // and `pcstall workloads list` expose every name, so the help text
+    // and the CLI reference must keep up with the registry
+    let doc = read_doc("docs/cli.md");
+    let kernels = pcstall::workloads::exec::kernels();
+    assert!(kernels.len() >= 5, "exec kernel library shrank: {}", kernels.len());
+    for k in kernels {
+        assert!(
+            pcstall::help::HELP.contains(k.name),
+            "exec kernel '{}' missing from pcstall help",
+            k.name
+        );
+        assert!(doc.contains(k.name), "exec kernel '{}' missing from docs/cli.md", k.name);
+    }
+    assert!(
+        doc.contains("exec:<kernel>"),
+        "docs/cli.md must document the exec:<kernel>[:<size>] spec grammar"
+    );
 }
 
 #[test]

@@ -1,0 +1,182 @@
+//! `workloads::exec` integration: executable kernels lower to
+//! deterministic traces, fingerprint by content in the result cache,
+//! and round-trip through `trace record` / `trace replay` exactly.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use pcstall::config::SimConfig;
+use pcstall::dvfs::manager::{DvfsManager, Policy, RunMode};
+use pcstall::dvfs::objective::Objective;
+use pcstall::exec::Engine;
+use pcstall::harness::evaluation::{run_cells, Cell};
+use pcstall::harness::{ExpOptions, Scale};
+use pcstall::trace::Trace;
+use pcstall::workloads::{exec, WorkloadSource};
+
+fn small_cfg() -> SimConfig {
+    let mut c = SimConfig::small();
+    c.gpu.n_cu = 4;
+    c.gpu.n_wf = 8;
+    c
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pcstall_exec_wl_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Lowering is a pure function of (kernel, size): re-running the
+/// instrumented kernel yields a byte-identical trace text and the same
+/// content hash — including when lowerings race on worker threads, the
+/// way a `--jobs N` sweep resolves exec cells.
+#[test]
+fn lowering_is_deterministic_across_reruns_and_threads() {
+    for k in exec::kernels() {
+        let a = exec::lower(k.name, k.default_size).unwrap();
+        let b = exec::lower(k.name, k.default_size).unwrap();
+        assert_eq!(a.to_text(), b.to_text(), "{}: rerun text diverged", k.name);
+        assert_eq!(a.content_hash(), b.content_hash(), "{}", k.name);
+    }
+    let reference = exec::lower("stencil2d", 256).unwrap().to_text();
+    let texts: Vec<String> = (0..4)
+        .map(|_| std::thread::spawn(|| exec::lower("stencil2d", 256).unwrap().to_text()))
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .collect();
+    for t in texts {
+        assert_eq!(t, reference, "concurrent lowering must be byte-identical");
+    }
+}
+
+/// Kernel-name and size-parameter changes reach the cache identity:
+/// every distinct (kernel, size) resolves to a distinct
+/// `trace:<content-hash>` id, and the same spec resolves reproducibly.
+#[test]
+fn exec_ids_fingerprint_kernel_and_size() {
+    let id_of = |spec: &str| {
+        let r = WorkloadSource::parse(spec).unwrap().resolve().unwrap();
+        assert!(r.id.starts_with("trace:"), "{spec} -> {}", r.id);
+        r.id
+    };
+    assert_eq!(id_of("exec:matmul:128"), id_of("exec:matmul:128"));
+    let mut ids: Vec<String> = exec::kernels()
+        .iter()
+        .flat_map(|k| {
+            [k.min_size, k.default_size].map(|s| id_of(&format!("exec:{}:{s}", k.name)))
+        })
+        .collect();
+    let n = ids.len();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "every (kernel, size) must get its own id");
+}
+
+/// Exec cells ride the content-addressed result cache: a warm rerun of
+/// the same specs executes zero simulations.
+#[test]
+fn warm_exec_rerun_executes_zero_simulations() {
+    let dir = fresh_dir("cache");
+    let opts_with = |engine: Arc<Engine>| ExpOptions {
+        scale: Scale::Quick,
+        out_dir: dir.clone(),
+        engine,
+        ..Default::default()
+    };
+    let cells = |opts: &ExpOptions| {
+        ["exec:vectoradd:4096", "exec:matmul:64"]
+            .iter()
+            .map(|spec| {
+                Cell::at(
+                    opts,
+                    spec,
+                    Policy::PcStall,
+                    Objective::Ed2p,
+                    1000.0,
+                    RunMode::Epochs(3),
+                    1.0,
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+
+    let cold = Arc::new(Engine::with_cache_dir(dir.join("cache")));
+    let opts = opts_with(cold.clone());
+    let results = run_cells(&opts, cells(&opts)).unwrap();
+    assert_eq!(results.len(), 2);
+    assert_eq!(cold.executed(), 2);
+
+    let warm = Arc::new(Engine::with_cache_dir(dir.join("cache")));
+    let opts = opts_with(warm.clone());
+    let rerun = run_cells(&opts, cells(&opts)).unwrap();
+    assert_eq!(warm.executed(), 0, "warm exec rerun must be fully cached");
+    for (a, b) in results.iter().zip(&rerun) {
+        assert_eq!(a.total_instr, b.total_instr);
+        assert_eq!(a.ed2p(), b.ed2p());
+    }
+
+    // a size bump is a different workload — it must miss the cache
+    let after = Arc::new(Engine::with_cache_dir(dir.join("cache")));
+    let opts = opts_with(after.clone());
+    let bumped = vec![Cell::at(
+        &opts,
+        "exec:vectoradd:8192",
+        Policy::PcStall,
+        Objective::Ed2p,
+        1000.0,
+        RunMode::Epochs(3),
+        1.0,
+    )];
+    run_cells(&opts, bumped).unwrap();
+    assert_eq!(after.executed(), 1, "size change must move the cache key");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `trace record exec:...` then `trace replay` reproduces the direct
+/// in-memory run exactly: per-epoch instruction counts and ED²P, through
+/// an on-disk round trip of both encodings.
+#[test]
+fn exec_record_replay_round_trips_exactly() {
+    let dir = fresh_dir("replay");
+    let trace = exec::lower("stencil2d", 128).unwrap();
+
+    let direct = {
+        let mut m = DvfsManager::from_launches(
+            small_cfg(),
+            trace.launches_scaled(1.0),
+            trace.rounds,
+            Policy::PcStall,
+            Objective::Ed2p,
+        );
+        m.run(RunMode::Epochs(8), "stencil2d128")
+    };
+
+    for (file, binary) in [("stencil.trace", false), ("stencil.tracebin", true)] {
+        let path = dir.join(file);
+        trace.save(&path, binary).unwrap();
+        let loaded = Trace::load(&path).unwrap();
+        assert_eq!(loaded.content_hash(), trace.content_hash(), "{file}");
+        let mut m = DvfsManager::from_launches(
+            small_cfg(),
+            loaded.launches_scaled(1.0),
+            loaded.rounds,
+            Policy::PcStall,
+            Objective::Ed2p,
+        );
+        let replayed = m.run(RunMode::Epochs(8), "stencil2d128");
+        assert_eq!(
+            direct.records.len(),
+            replayed.records.len(),
+            "{file}: epoch count diverged"
+        );
+        for (a, b) in direct.records.iter().zip(&replayed.records) {
+            assert_eq!(a.instr, b.instr, "{file}: epoch {} instr diverged", a.epoch);
+        }
+        assert_eq!(direct.ed2p(), replayed.ed2p(), "{file}: ED²P diverged");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
